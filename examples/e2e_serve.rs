@@ -1,0 +1,83 @@
+//! End-to-end driver (DESIGN.md "End-to-end validation"): load the REAL
+//! tiny Qwen3-style model compiled AOT from JAX+Pallas, and serve batched
+//! requests from rust through PJRT — measuring real wall-clock TTFT, TBT
+//! and throughput for the prefill-first baseline vs DuetServe-style
+//! decode-priority look-ahead scheduling.
+//!
+//! Prerequisite: `make artifacts` (python runs once, never at serving
+//! time).
+//!
+//!     cargo run --release --example e2e_serve
+
+use duetserve::runtime::{artifacts, RealEngine, RealPolicy, RealRequest, TinyRuntime};
+use duetserve::util::tablefmt::Table;
+
+fn requests(n: usize) -> Vec<RealRequest> {
+    (0..n)
+        .map(|i| RealRequest {
+            id: i as u64,
+            // Deterministic pseudo-prompts over the tiny vocab.
+            prompt: (0..12 + (i % 20))
+                .map(|j| ((i * 131 + j * 17 + 7) % 2048) as i32)
+                .collect(),
+            max_new_tokens: 24,
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts::artifacts_available() {
+        eprintln!("artifacts not found — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    println!("loading AOT artifacts (HLO text -> PJRT CPU)...");
+
+    let mut table = Table::new(vec![
+        "policy",
+        "done",
+        "wall(s)",
+        "req/s",
+        "out-tok",
+        "dec-tok/s",
+        "ttft-mean(ms)",
+        "ttft-p99(ms)",
+        "tbt-mean(ms)",
+        "tbt-p99(ms)",
+    ]);
+
+    let n = 24;
+    for policy in [
+        RealPolicy::PrefillFirst,
+        RealPolicy::DuetInterleave { lookahead: 4 },
+    ] {
+        let rt = TinyRuntime::load_default()?;
+        if matches!(policy, RealPolicy::PrefillFirst) {
+            println!("platform: {}", rt.platform());
+        }
+        let mut engine = RealEngine::new(rt, policy);
+        let stats = engine.serve(requests(n))?;
+        assert_eq!(stats.completed, n, "all requests must complete");
+        table.row(vec![
+            stats.policy.to_string(),
+            format!("{}", stats.completed),
+            format!("{:.2}", stats.wall_s),
+            format!("{:.2}", stats.throughput_rps),
+            format!("{}", stats.output_tokens),
+            format!("{:.1}", stats.decode_tokens_per_s),
+            format!("{:.1}", stats.ttft.mean * 1e3),
+            format!("{:.1}", stats.ttft.p99 * 1e3),
+            format!("{:.1}", stats.tbt.mean * 1e3),
+            format!("{:.1}", stats.tbt.p99 * 1e3),
+        ]);
+    }
+    println!();
+    table.print();
+    println!(
+        "\nAll layers composed: Pallas kernel -> JAX model -> HLO text ->\n\
+         PJRT CPU executable -> rust continuous-batching coordinator.\n\
+         (Weights stay device-resident across calls; the coordinator owns\n\
+         the KV cache and pads decode batches to the captured graph size,\n\
+         exactly like CUDA-Graph serving.)"
+    );
+    Ok(())
+}

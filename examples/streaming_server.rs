@@ -1,0 +1,56 @@
+//! Streaming front-end demo: concurrent clients submit requests to the
+//! threaded serving router and stream tokens back while the engine
+//! thread runs continuous batching over the real PJRT model.
+//!
+//!     cargo run --release --example streaming_server
+
+use std::time::Instant;
+
+use duetserve::runtime::{artifacts, TinyRuntime};
+use duetserve::server::Server;
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts::artifacts_available() {
+        eprintln!("artifacts not found — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    println!("starting engine thread (loads AOT artifacts)...");
+    let server = Server::start(|| TinyRuntime::load_default(), 4);
+
+    // 3 concurrent "client" threads, 4 requests each.
+    let t0 = Instant::now();
+    let server_ref = &server;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..3u64 {
+            let h = scope.spawn(move || {
+                let mut results = Vec::new();
+                for r in 0..4u64 {
+                    let prompt: Vec<i32> =
+                        (0..10).map(|j| ((c * 977 + r * 131 + j * 13) % 2048) as i32).collect();
+                    let stream = server_ref.submit(prompt, 12);
+                    let start = stream.submitted_at;
+                    let toks = stream.collect();
+                    results.push((c, r, toks.len(), start.elapsed()));
+                }
+                results
+            });
+            handles.push(h);
+        }
+        for h in handles {
+            for (c, r, n, dur) in h.join().unwrap() {
+                println!(
+                    "client {c} request {r}: {n} tokens in {:.0} ms",
+                    dur.as_secs_f64() * 1e3
+                );
+            }
+        }
+    });
+    println!(
+        "12 requests served concurrently in {:.2}s total",
+        t0.elapsed().as_secs_f64()
+    );
+    server.shutdown()?;
+    println!("engine thread drained and stopped cleanly");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Replay a Table-1-calibrated trace (Azure-Code / Azure-Conv / Mooncake)
+//! across all five systems at a chosen QPS on the simulated testbed.
+//!
+//!     cargo run --release --example trace_replay -- [trace] [qps] [n]
+//!     cargo run --release --example trace_replay -- mooncake 4 300
+
+use duetserve::config::{Policy, ServingConfig};
+use duetserve::engine::{engine_for, DisaggEngine};
+use duetserve::metrics::Report;
+use duetserve::util::tablefmt::Table;
+use duetserve::workload::traces::{generate, trace_by_name, TraceKind};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let trace = args
+        .get(1)
+        .and_then(|s| trace_by_name(s))
+        .unwrap_or(TraceKind::AzureConv);
+    let qps: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8.0);
+    let n: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(400);
+
+    let workload = generate(trace, Some(n), qps, 2026);
+    let stats = workload.stats();
+    println!(
+        "trace {}: {} requests, mean ISL {:.0}, mean OSL {:.0}, qps {qps}\n",
+        workload.name, stats.n_requests, stats.mean_isl, stats.mean_osl
+    );
+
+    let base = ServingConfig::default_8b();
+    let mut table = Table::new(Report::header());
+    for policy in [
+        Policy::VllmChunked,
+        Policy::SglangDefault,
+        Policy::SglangChunked,
+        Policy::Duet,
+    ] {
+        let mut e = engine_for(base.clone().with_policy(policy), 1);
+        table.row(e.run(workload.clone()).row(qps));
+    }
+    // Dynamo 1P+1D on two GPUs.
+    let mut disagg = DisaggEngine::new(
+        base.clone().with_policy(Policy::DisaggPD {
+            prefill_gpus: 1,
+            decode_gpus: 1,
+        }),
+        1,
+        1,
+        1,
+    );
+    table.row(disagg.run(workload).row(qps));
+    table.print();
+}

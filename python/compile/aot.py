@@ -1,0 +1,136 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts that the
+rust runtime loads via the PJRT C API.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Emits:
+    prefill_s64.hlo.txt          prefill over a 64-token padded prompt
+    decode_b{1,2,4,8}.hlo.txt    one decode step per batch-size variant
+    weights.bin                  all weights, f32 LE, manifest order
+    weights.manifest.txt         name shape offset_bytes size_bytes
+    artifacts.meta.txt           model shape constants for the rust side
+
+HLO text (NOT serialized protos) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids, which the crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Weights are *runtime inputs* (flat list, manifest order), not baked
+constants — this keeps the HLO text small and lets the rust side own the
+parameter memory.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_prefill(cfg: M.TinyConfig):
+    wspecs = [
+        jax.ShapeDtypeStruct(M.weight_shapes(cfg)[n], jnp.float32)
+        for n in M.weight_names(cfg)
+    ]
+    tok = jax.ShapeDtypeStruct((cfg.prefill_seq,), jnp.int32)
+
+    def fn(weights, tokens):
+        return M.prefill(weights, tokens, cfg)
+
+    return jax.jit(fn).lower(wspecs, tok)
+
+
+def lower_decode(cfg: M.TinyConfig, batch: int):
+    wspecs = [
+        jax.ShapeDtypeStruct(M.weight_shapes(cfg)[n], jnp.float32)
+        for n in M.weight_names(cfg)
+    ]
+    tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    cache = jax.ShapeDtypeStruct(
+        (cfg.layers, batch, cfg.max_context, cfg.kv_heads, cfg.head_dim),
+        jnp.float32,
+    )
+    lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+
+    def fn(weights, tokens, kc, vc, lengths):
+        return M.decode(weights, tokens, kc, vc, lengths, cfg)
+
+    return jax.jit(fn).lower(wspecs, tok, cache, cache, lens)
+
+
+def write_weights(cfg: M.TinyConfig, out_dir: str, seed: int = 0):
+    weights = M.init_weights(cfg, seed)
+    names = M.weight_names(cfg)
+    bin_path = os.path.join(out_dir, "weights.bin")
+    man_path = os.path.join(out_dir, "weights.manifest.txt")
+    offset = 0
+    with open(bin_path, "wb") as fb, open(man_path, "w") as fm:
+        fm.write("# name shape offset_bytes size_bytes (f32 little-endian)\n")
+        for name, w in zip(names, weights):
+            import numpy as np
+
+            arr = np.asarray(w, dtype="<f4")
+            data = arr.tobytes()
+            fb.write(data)
+            shape = "x".join(str(d) for d in arr.shape)
+            fm.write(f"{name} {shape} {offset} {len(data)}\n")
+            offset += len(data)
+    return bin_path, offset
+
+
+def write_meta(cfg: M.TinyConfig, out_dir: str):
+    with open(os.path.join(out_dir, "artifacts.meta.txt"), "w") as f:
+        f.write(
+            "# tiny-model serving constants (shared with rust runtime)\n"
+            f"hidden = {cfg.hidden}\n"
+            f"layers = {cfg.layers}\n"
+            f"heads = {cfg.heads}\n"
+            f"kv_heads = {cfg.kv_heads}\n"
+            f"head_dim = {cfg.head_dim}\n"
+            f"intermediate = {cfg.intermediate}\n"
+            f"vocab = {cfg.vocab}\n"
+            f"prefill_seq = {cfg.prefill_seq}\n"
+            f"max_context = {cfg.max_context}\n"
+            f"decode_batches = \"{','.join(str(b) for b in cfg.decode_batches)}\"\n"
+            f"n_weights = {len(M.weight_names(cfg))}\n"
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = M.TINY
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    path = os.path.join(args.out_dir, f"prefill_s{cfg.prefill_seq}.hlo.txt")
+    text = to_hlo_text(lower_prefill(cfg))
+    open(path, "w").write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+    for b in cfg.decode_batches:
+        path = os.path.join(args.out_dir, f"decode_b{b}.hlo.txt")
+        text = to_hlo_text(lower_decode(cfg, b))
+        open(path, "w").write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    bin_path, nbytes = write_weights(cfg, args.out_dir, args.seed)
+    print(f"wrote {bin_path} ({nbytes} bytes)")
+    write_meta(cfg, args.out_dir)
+    print("wrote artifacts.meta.txt")
+
+
+if __name__ == "__main__":
+    main()

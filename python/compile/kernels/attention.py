@@ -1,0 +1,166 @@
+"""Layer-1 Pallas attention kernels.
+
+Two kernels, matching the two serving phases the paper multiplexes:
+
+- ``prefill_attention``: FlashAttention-style causal attention with
+  online softmax. The TPU rethink of the paper's FA-3 dependency: KV is
+  streamed HBM->VMEM in ``BLOCK_K``-sized tiles via BlockSpec (the role
+  CUDA threadblock tiling into SRAM plays on H100), the q·kᵀ / p·v
+  contractions are MXU-shaped matmuls, and the causal structure is
+  expressed by skipping fully-masked KV tiles inside the kernel.
+
+- ``decode_attention``: single-token attention against a per-slot KV
+  cache (the DuetServe decode path that the rust coordinator replays
+  CUDA-Graph-style). Grid over batch slots; each program streams one
+  slot's cache through VMEM with a length mask.
+
+Both kernels MUST run ``interpret=True`` here: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and correctness (vs ``ref.py``) is what the
+AOT path needs. Real-TPU tiling estimates live in DESIGN.md
+§Hardware-Adaptation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# VMEM tile sizes. On a real TPU these would be tuned to ~16 MB VMEM; in
+# interpret mode they only shape the loop structure (kept small so tiny
+# test shapes divide evenly).
+BLOCK_Q = 16
+BLOCK_K = 16
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, seq_len, block_k):
+    """One (head, q-tile) program: online-softmax over KV tiles.
+
+    q_ref: [BLOCK_Q, d]; k_ref/v_ref: [S, d] (whole-row block for this
+    head); o_ref: [BLOCK_Q, d].
+    """
+    qi = pl.program_id(1)  # q-tile index
+    q = q_ref[...].astype(jnp.float32) * scale
+    block_q = q.shape[0]
+    d = q.shape[1]
+
+    acc = jnp.zeros((block_q, d), jnp.float32)
+    m = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l = jnp.zeros((block_q,), jnp.float32)
+
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)  # absolute q rows
+
+    def body(ki, carry):
+        acc, m, l = carry
+        k_tile = jax.lax.dynamic_slice_in_dim(k_ref[...], ki * block_k, block_k, 0)
+        v_tile = jax.lax.dynamic_slice_in_dim(v_ref[...], ki * block_k, block_k, 0)
+        k_pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+        s = q @ k_tile.astype(jnp.float32).T  # [BLOCK_Q, BLOCK_K] (MXU)
+        causal = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(causal, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        correction = jnp.exp(m - m_new)
+        l_new = l * correction + p.sum(axis=1)
+        acc_new = acc * correction[:, None] + p @ v_tile.astype(jnp.float32)
+        return acc_new, m_new, l_new
+
+    n_k_tiles = seq_len // block_k
+    acc, m, l = jax.lax.fori_loop(0, n_k_tiles, body, (acc, m, l))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def prefill_attention(q, k, v, *, block_q=BLOCK_Q, block_k=BLOCK_K, interpret=True):
+    """Causal GQA attention. q: [S, h_q, d], k/v: [S, h_kv, d] -> [S, h_q, d]."""
+    s, hq, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, "GQA ratio must be integral"
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    group = hq // hkv
+    scale = 1.0 / (d**0.5)
+
+    kernel = functools.partial(
+        _prefill_kernel, scale=scale, seq_len=s, block_k=block_k
+    )
+    grid = (hq, s // block_q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        # q is tiled over (head, q-block); k/v expose the whole row for the
+        # matching kv-head (index maps fold the GQA grouping). `None`
+        # entries squeeze the head dim inside the kernel.
+        in_specs=[
+            pl.BlockSpec((block_q, None, d), lambda h, i: (i, h, 0)),
+            pl.BlockSpec((s, None, d), lambda h, i: (0, h // group, 0)),
+            pl.BlockSpec((s, None, d), lambda h, i: (0, h // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, None, d), lambda h, i: (i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, hq, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, scale, ctx, block_k):
+    """One (batch-slot, head) program: masked attention over the cache.
+
+    q_ref: [1, d]; k_ref/v_ref: [C, d]; len_ref: [1] (valid positions);
+    o_ref: [1, d].
+    """
+    q = q_ref[...].astype(jnp.float32) * scale  # [1, d]
+    valid = len_ref[0]
+    d = q.shape[1]
+
+    acc = jnp.zeros((1, d), jnp.float32)
+    m = jnp.full((1,), NEG_INF, jnp.float32)
+    l = jnp.zeros((1,), jnp.float32)
+
+    def body(ki, carry):
+        acc, m, l = carry
+        k_tile = jax.lax.dynamic_slice_in_dim(k_ref[...], ki * block_k, block_k, 0)
+        v_tile = jax.lax.dynamic_slice_in_dim(v_ref[...], ki * block_k, block_k, 0)
+        pos = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+        s = q @ k_tile.astype(jnp.float32).T  # [1, BLOCK_K]
+        s = jnp.where((pos < valid)[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        correction = jnp.exp(m - m_new)
+        l_new = l * correction + p.sum(axis=1)
+        acc_new = acc * correction[:, None] + p @ v_tile.astype(jnp.float32)
+        return acc_new, m_new, l_new
+
+    acc, m, l = jax.lax.fori_loop(0, ctx // block_k, body, (acc, m, l))
+    # Fully-masked rows (valid == 0) would divide by zero; emit zeros.
+    safe_l = jnp.where(l > 0.0, l, 1.0)
+    o_ref[...] = (acc / safe_l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, block_k=BLOCK_K, interpret=True):
+    """Decode-step GQA attention against per-slot caches.
+
+    q: [B, h_q, d]; k_cache/v_cache: [B, C, h_kv, d]; lengths: [B] int32
+    (#valid positions incl. the just-inserted token). Returns [B, h_q, d].
+    """
+    b, hq, d = q.shape
+    c, hkv = k_cache.shape[1], k_cache.shape[2]
+    assert hq % hkv == 0
+    assert c % block_k == 0, (c, block_k)
+    group = hq // hkv
+    scale = 1.0 / (d**0.5)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, ctx=c, block_k=block_k)
+    grid = (b, hq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, 1, d), lambda bi, h: (bi, h, 0)),
+            pl.BlockSpec((None, c, None, d), lambda bi, h: (bi, 0, h // group, 0)),
+            pl.BlockSpec((None, c, None, d), lambda bi, h: (bi, 0, h // group, 0)),
+            pl.BlockSpec((1,), lambda bi, h: (bi,)),
+        ],
+        out_specs=pl.BlockSpec((None, 1, d), lambda bi, h: (bi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, d), q.dtype),
+        interpret=interpret,
+    )(q, k_cache, v_cache, lengths)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas attention kernels.
+
+These are the correctness ground truth: pytest checks every Pallas kernel
+against these implementations (allclose), and the model may swap them in
+via DUET_USE_REF=1 to isolate kernel bugs from model bugs.
+"""
+
+import jax.numpy as jnp
+
+
+def repeat_kv(x, n_rep: int):
+    """[.., h_kv, d] -> [.., h_kv * n_rep, d] (GQA head replication)."""
+    if n_rep == 1:
+        return x
+    return jnp.repeat(x, n_rep, axis=-2)
+
+
+def prefill_attention_ref(q, k, v, scale=None):
+    """Causal self-attention over one sequence.
+
+    q: [S, h_q, d], k/v: [S, h_kv, d]  ->  [S, h_q, d]
+    """
+    s, hq, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0
+    k = repeat_kv(k, hq // hkv)  # [S, hq, d]
+    v = repeat_kv(v, hq // hkv)
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    # [hq, S, S]
+    logits = jnp.einsum("qhd,khd->hqk", q, k) * scale
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(causal[None, :, :], logits, -1e30)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,khd->qhd", p, v)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, scale=None):
+    """Single-token decode attention against a per-slot KV cache.
+
+    q: [B, h_q, d]; k_cache/v_cache: [B, C, h_kv, d]; lengths: [B] — the
+    number of valid cache positions per slot *including* the current
+    token's K/V (callers insert the new K/V before attending).
+    Returns [B, h_q, d].
+    """
+    b, hq, d = q.shape
+    c = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    k = repeat_kv(k_cache, hq // hkv)  # [B, C, hq, d]
+    v = repeat_kv(v_cache, hq // hkv)
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    logits = jnp.einsum("bhd,bchd->bhc", q, k) * scale
+    mask = jnp.arange(c)[None, :] < lengths[:, None]  # [B, C]
+    logits = jnp.where(mask[:, None, :], logits, -1e30)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhc,bchd->bhd", p, v)

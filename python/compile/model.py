@@ -1,0 +1,264 @@
+"""Layer-2: Qwen3-style tiny transformer in JAX, calling the L1 Pallas
+kernels.
+
+The model's *shapes* mirror `rust/src/config/model.rs::ModelSpec::tiny()`
+(hidden 256, 4 layers, 8 q-heads / 4 kv-heads, head_dim 32, FFN 1024,
+vocab 2048): a ~5M-parameter Qwen3-flavoured decoder (RMSNorm, RoPE, GQA
+attention, SwiGLU MLP, untied LM head).
+
+Two entry points are lowered AOT (see aot.py):
+
+- ``prefill(weights, tokens[S]) -> (logits[S, V], k[L,S,hkv,dh], v[...])``
+- ``decode(weights, tokens[B], k[L,B,C,hkv,dh], v[...], lengths[B])
+    -> (logits[B, V], k', v')``
+
+Weights are passed as a flat list (not baked as constants) so the HLO
+stays small and the rust runtime feeds them from ``weights.bin``. The
+flat ordering is defined by ``weight_names()`` and checked in tests.
+
+Set DUET_USE_REF=1 to route attention through the pure-jnp oracle instead
+of the Pallas kernels (A/B debugging).
+"""
+
+import os
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as pallas_attn
+from .kernels import ref as attn_ref
+
+USE_REF = os.environ.get("DUET_USE_REF", "0") == "1"
+
+
+@dataclass(frozen=True)
+class TinyConfig:
+    hidden: int = 256
+    layers: int = 4
+    heads: int = 8
+    kv_heads: int = 4
+    head_dim: int = 32
+    intermediate: int = 1024
+    vocab: int = 2048
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+
+    # AOT serving shapes (the rust coordinator pads to these).
+    prefill_seq: int = 64
+    max_context: int = 320
+    decode_batches: tuple = (1, 2, 4, 8)
+
+
+TINY = TinyConfig()
+
+
+# --------------------------------------------------------------------------
+# Weights
+# --------------------------------------------------------------------------
+
+def weight_names(cfg: TinyConfig = TINY):
+    """Flat weight ordering shared with the rust runtime (manifest order)."""
+    names = ["tok_embedding"]
+    for i in range(cfg.layers):
+        names += [
+            f"l{i}.attn_norm",
+            f"l{i}.wq",
+            f"l{i}.wk",
+            f"l{i}.wv",
+            f"l{i}.wo",
+            f"l{i}.mlp_norm",
+            f"l{i}.w_gate",
+            f"l{i}.w_up",
+            f"l{i}.w_down",
+        ]
+    names += ["final_norm", "lm_head"]
+    return names
+
+
+def weight_shapes(cfg: TinyConfig = TINY):
+    d, dh = cfg.hidden, cfg.head_dim
+    hq, hkv, m, v = cfg.heads, cfg.kv_heads, cfg.intermediate, cfg.vocab
+    per_layer = {
+        "attn_norm": (d,),
+        "wq": (d, hq * dh),
+        "wk": (d, hkv * dh),
+        "wv": (d, hkv * dh),
+        "wo": (hq * dh, d),
+        "mlp_norm": (d,),
+        "w_gate": (d, m),
+        "w_up": (d, m),
+        "w_down": (m, d),
+    }
+    shapes = {"tok_embedding": (v, d)}
+    for i in range(cfg.layers):
+        for k, s in per_layer.items():
+            shapes[f"l{i}.{k}"] = s
+    shapes["final_norm"] = (d,)
+    shapes["lm_head"] = (d, v)
+    return shapes
+
+
+def init_weights(cfg: TinyConfig = TINY, seed: int = 0):
+    """Seeded random weights, returned as the flat ordered list."""
+    shapes = weight_shapes(cfg)
+    out = []
+    key = jax.random.PRNGKey(seed)
+    for name in weight_names(cfg):
+        key, sub = jax.random.split(key)
+        shape = shapes[name]
+        if name.endswith("norm"):
+            w = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            w = jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(
+                jnp.asarray(fan_in, jnp.float32)
+            )
+        out.append(w)
+    return out
+
+
+def _unflatten(cfg, weights):
+    names = weight_names(cfg)
+    assert len(weights) == len(names), (len(weights), len(names))
+    return dict(zip(names, weights))
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+def rms_norm(x, w, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, positions, theta):
+    """Rotary embedding. x: [..., n_heads, dh]; positions broadcastable to
+    x.shape[:-2]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., half]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention_prefill(q, k, v):
+    if USE_REF:
+        return attn_ref.prefill_attention_ref(q, k, v)
+    return pallas_attn.prefill_attention(q, k, v)
+
+
+def _attention_decode(q, kc, vc, lengths):
+    if USE_REF:
+        return attn_ref.decode_attention_ref(q, kc, vc, lengths)
+    return pallas_attn.decode_attention(q, kc, vc, lengths)
+
+
+# --------------------------------------------------------------------------
+# Prefill: whole (padded) prompt in one pass
+# --------------------------------------------------------------------------
+
+def prefill(weights, tokens, cfg: TinyConfig = TINY):
+    """tokens: int32 [S]. Returns (logits [S, V], k [L,S,hkv,dh], v [...]).
+
+    The rust coordinator right-pads prompts to S; causal masking keeps
+    positions < true length correct, and rust reads logits[len-1].
+    """
+    w = _unflatten(cfg, weights)
+    s = tokens.shape[0]
+    x = w["tok_embedding"][tokens]  # [S, d]
+    positions = jnp.arange(s)
+    ks, vs = [], []
+    for i in range(cfg.layers):
+        h = rms_norm(x, w[f"l{i}.attn_norm"], cfg.norm_eps)
+        q = (h @ w[f"l{i}.wq"]).reshape(s, cfg.heads, cfg.head_dim)
+        k = (h @ w[f"l{i}.wk"]).reshape(s, cfg.kv_heads, cfg.head_dim)
+        v = (h @ w[f"l{i}.wv"]).reshape(s, cfg.kv_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        o = _attention_prefill(q, k, v)  # L1 kernel
+        x = x + o.reshape(s, -1) @ w[f"l{i}.wo"]
+        h = rms_norm(x, w[f"l{i}.mlp_norm"], cfg.norm_eps)
+        x = x + (jax.nn.silu(h @ w[f"l{i}.w_gate"]) * (h @ w[f"l{i}.w_up"])) @ w[
+            f"l{i}.w_down"
+        ]
+        ks.append(k)
+        vs.append(v)
+    x = rms_norm(x, w["final_norm"], cfg.norm_eps)
+    logits = x @ w["lm_head"]  # [S, V]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+# --------------------------------------------------------------------------
+# Decode: one token per slot against the KV cache
+# --------------------------------------------------------------------------
+
+def decode(weights, tokens, k_cache, v_cache, lengths, cfg: TinyConfig = TINY):
+    """One decode step for a batch of slots.
+
+    tokens: int32 [B] (current input token per slot);
+    k_cache/v_cache: f32 [L, B, C, hkv, dh];
+    lengths: int32 [B] — valid cache positions BEFORE this token.
+    Returns (logits [B, V], k_cache', v_cache'); the new token's K/V is
+    written at position `lengths[b]`.
+    Inactive slots: lengths[b] = 0 with any token produce garbage logits
+    the coordinator ignores (no branching in the graph).
+    """
+    w = _unflatten(cfg, weights)
+    b = tokens.shape[0]
+    c = k_cache.shape[2]
+    x = w["tok_embedding"][tokens]  # [B, d]
+    positions = lengths  # 0-based position of the incoming token
+    new_ks, new_vs = [], []
+    for i in range(cfg.layers):
+        h = rms_norm(x, w[f"l{i}.attn_norm"], cfg.norm_eps)
+        q = (h @ w[f"l{i}.wq"]).reshape(b, cfg.heads, cfg.head_dim)
+        k = (h @ w[f"l{i}.wk"]).reshape(b, cfg.kv_heads, cfg.head_dim)
+        v = (h @ w[f"l{i}.wv"]).reshape(b, cfg.kv_heads, cfg.head_dim)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        # Insert new K/V at position lengths[b] for each slot.
+        kc = k_cache[i]
+        vc = v_cache[i]
+        onehot = (jnp.arange(c)[None, :] == lengths[:, None]).astype(kc.dtype)
+        kc = kc * (1.0 - onehot[..., None, None]) + onehot[..., None, None] * k[:, None]
+        vc = vc * (1.0 - onehot[..., None, None]) + onehot[..., None, None] * v[:, None]
+        o = _attention_decode(q, kc, vc, lengths + 1)  # L1 kernel
+        x = x + o.reshape(b, -1) @ w[f"l{i}.wo"]
+        h = rms_norm(x, w[f"l{i}.mlp_norm"], cfg.norm_eps)
+        x = x + (jax.nn.silu(h @ w[f"l{i}.w_gate"]) * (h @ w[f"l{i}.w_up"])) @ w[
+            f"l{i}.w_down"
+        ]
+        new_ks.append(kc)
+        new_vs.append(vc)
+    x = rms_norm(x, w["final_norm"], cfg.norm_eps)
+    logits = x @ w["lm_head"]
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+def greedy_generate_ref(weights, prompt, n_new, cfg: TinyConfig = TINY):
+    """Reference end-to-end generation (prefill + decode loop) used by
+    tests to validate the AOT artifacts' composition semantics."""
+    s = len(prompt)
+    pad = jnp.zeros(cfg.prefill_seq - s, jnp.int32)
+    tokens = jnp.concatenate([jnp.asarray(prompt, jnp.int32), pad])
+    logits, k, v = prefill(weights, tokens, cfg)
+    # Per-slot batched cache of size 1.
+    kc = jnp.zeros((cfg.layers, 1, cfg.max_context, cfg.kv_heads, cfg.head_dim))
+    vc = jnp.zeros_like(kc)
+    kc = kc.at[:, 0, :s].set(k[:, :s])
+    vc = vc.at[:, 0, :s].set(v[:, :s])
+    out = [int(jnp.argmax(logits[s - 1]))]
+    length = s
+    for _ in range(n_new - 1):
+        tok = jnp.asarray([out[-1]], jnp.int32)
+        logits, kc, vc = decode(
+            weights, tok, kc, vc, jnp.asarray([length], jnp.int32), cfg
+        )
+        out.append(int(jnp.argmax(logits[0])))
+        length += 1
+    return out

@@ -1,0 +1,75 @@
+"""AOT path: lowered HLO text must exist, parse, and execute (via jax's
+own CPU client) with results identical to eager execution. This is the
+python half of the interchange contract; the rust half is covered by
+`rust/tests/runtime_integration.rs`."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.TINY
+
+
+def test_prefill_hlo_text_parses_and_runs():
+    lowered = aot.lower_prefill(CFG)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "main" in text
+    # Round-trip through the HLO text parser + CPU client = what rust does.
+    client = xc.make_cpu_client()
+    comp = xc._xla.hlo_module_from_text(text)
+    # (Parsing alone exercises the id-reassignment path.)
+    assert comp is not None
+
+    # Execute via jax for ground truth comparison.
+    w = M.init_weights(CFG)
+    toks = jnp.asarray([9, 8, 7] + [0] * (CFG.prefill_seq - 3), jnp.int32)
+    eager_logits, _, _ = M.prefill(w, toks)
+    compiled = lowered.compile()
+    aot_logits, _, _ = compiled(w, toks)
+    np.testing.assert_allclose(aot_logits, eager_logits, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_variants_have_right_shapes():
+    for b in CFG.decode_batches:
+        lowered = aot.lower_decode(CFG, b)
+        text = aot.to_hlo_text(lowered)
+        assert f"f32[{CFG.layers},{b},{CFG.max_context}" in text.replace(" ", ""), (
+            f"decode_b{b} missing cache shape"
+        )
+
+
+def test_weights_bin_roundtrip(tmp_path):
+    out = str(tmp_path)
+    aot.write_weights(CFG, out, seed=0)
+    aot.write_meta(CFG, out)
+    man = open(os.path.join(out, "weights.manifest.txt")).read().strip().splitlines()
+    rows = [l.split() for l in man if not l.startswith("#")]
+    assert len(rows) == len(M.weight_names(CFG))
+    blob = open(os.path.join(out, "weights.bin"), "rb").read()
+    # Offsets tile the blob exactly.
+    total = sum(int(r[3]) for r in rows)
+    assert total == len(blob)
+    # Spot-check one tensor against init_weights.
+    w = M.init_weights(CFG, seed=0)
+    name, shape, off, size = rows[0][0], rows[0][1], int(rows[0][2]), int(rows[0][3])
+    assert name == "tok_embedding"
+    arr = np.frombuffer(blob[off : off + size], dtype="<f4").reshape(
+        [int(x) for x in shape.split("x")]
+    )
+    np.testing.assert_array_equal(arr, np.asarray(w[0]))
+
+
+def test_meta_file_contents(tmp_path):
+    out = str(tmp_path)
+    aot.write_meta(CFG, out)
+    meta = open(os.path.join(out, "artifacts.meta.txt")).read()
+    assert f"vocab = {CFG.vocab}" in meta
+    assert f"prefill_seq = {CFG.prefill_seq}" in meta
+    assert "decode_batches" in meta

@@ -1,0 +1,133 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py is the
+core correctness signal for the whole AOT path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------- prefill
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s_tiles=st.integers(1, 6),
+    hq_per_kv=st.sampled_from([1, 2, 4]),
+    hkv=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_prefill_matches_ref_across_shapes(s_tiles, hq_per_kv, hkv, dh, seed):
+    s = 16 * s_tiles
+    hq = hq_per_kv * hkv
+    q = rand(seed, (s, hq, dh))
+    k = rand(seed + 1, (s, hkv, dh))
+    v = rand(seed + 2, (s, hkv, dh))
+    out = A.prefill_attention(q, k, v)
+    ref = R.prefill_attention_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_prefill_is_causal():
+    # Changing future K/V must not affect earlier outputs.
+    s, hq, hkv, dh = 32, 4, 2, 16
+    q, k, v = rand(0, (s, hq, dh)), rand(1, (s, hkv, dh)), rand(2, (s, hkv, dh))
+    base = A.prefill_attention(q, k, v)
+    k2 = k.at[-1].set(100.0)
+    v2 = v.at[-1].set(-100.0)
+    pert = A.prefill_attention(q, k2, v2)
+    np.testing.assert_allclose(base[: s - 1], pert[: s - 1], rtol=1e-6)
+    assert not np.allclose(base[-1], pert[-1])
+
+
+def test_prefill_block_sizes_agree():
+    s, hq, hkv, dh = 64, 8, 4, 32
+    q, k, v = rand(3, (s, hq, dh)), rand(4, (s, hkv, dh)), rand(5, (s, hkv, dh))
+    a = A.prefill_attention(q, k, v, block_q=16, block_k=16)
+    b = A.prefill_attention(q, k, v, block_q=32, block_k=64)
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_prefill_rejects_ragged_shapes():
+    q, k, v = rand(0, (20, 4, 16)), rand(1, (20, 2, 16)), rand(2, (20, 2, 16))
+    with pytest.raises(AssertionError):
+        A.prefill_attention(q, k, v)  # 20 % 16 != 0
+
+
+# ---------------------------------------------------------------- decode
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4, 8]),
+    c_tiles=st.integers(1, 8),
+    hq_per_kv=st.sampled_from([1, 2]),
+    hkv=st.sampled_from([2, 4]),
+    dh=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_decode_matches_ref_across_shapes(b, c_tiles, hq_per_kv, hkv, dh, seed):
+    c = 16 * c_tiles
+    hq = hq_per_kv * hkv
+    rng = np.random.RandomState(seed)
+    q = rand(seed, (b, hq, dh))
+    kc = rand(seed + 1, (b, c, hkv, dh))
+    vc = rand(seed + 2, (b, c, hkv, dh))
+    lengths = jnp.asarray(rng.randint(1, c + 1, size=b), jnp.int32)
+    out = A.decode_attention(q, kc, vc, lengths)
+    ref = R.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_respects_length_mask():
+    # Positions beyond `lengths` must not influence the output.
+    b, c, hq, hkv, dh = 2, 64, 4, 2, 16
+    q = rand(0, (b, hq, dh))
+    kc = rand(1, (b, c, hkv, dh))
+    vc = rand(2, (b, c, hkv, dh))
+    lengths = jnp.asarray([10, 30], jnp.int32)
+    base = A.decode_attention(q, kc, vc, lengths)
+    kc2 = kc.at[:, 40:].set(1e3)
+    vc2 = vc.at[:, 40:].set(-1e3)
+    pert = A.decode_attention(q, kc2, vc2, lengths)
+    np.testing.assert_allclose(base, pert, rtol=1e-6)
+
+
+def test_decode_zero_length_slot_is_finite():
+    # An inactive slot (length 0) must not produce NaNs that poison XLA.
+    b, c, hq, hkv, dh = 2, 32, 4, 2, 16
+    q = rand(0, (b, hq, dh))
+    kc = rand(1, (b, c, hkv, dh))
+    vc = rand(2, (b, c, hkv, dh))
+    lengths = jnp.asarray([0, 16], jnp.int32)
+    out = A.decode_attention(q, kc, vc, lengths)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_decode_agrees_with_prefill_last_row():
+    # Decode over a cache holding a prefix == prefill's last-row attention.
+    s, hq, hkv, dh = 32, 4, 2, 16
+    q_all = rand(0, (s, hq, dh))
+    k_all = rand(1, (s, hkv, dh))
+    v_all = rand(2, (s, hkv, dh))
+    pre = A.prefill_attention(q_all, k_all, v_all)
+
+    c = 64
+    kc = jnp.zeros((1, c, hkv, dh)).at[0, :s].set(k_all)
+    vc = jnp.zeros((1, c, hkv, dh)).at[0, :s].set(v_all)
+    dec = A.decode_attention(
+        q_all[-1][None], kc, vc, jnp.asarray([s], jnp.int32)
+    )
+    np.testing.assert_allclose(dec[0], pre[-1], rtol=2e-5, atol=2e-5)

@@ -1,0 +1,117 @@
+"""L2 correctness: model shapes, prefill/decode cache consistency, and
+Pallas-vs-ref end-to-end agreement."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.TINY
+
+
+def test_weight_manifest_order_is_stable():
+    names = M.weight_names(CFG)
+    assert names[0] == "tok_embedding"
+    assert names[-1] == "lm_head"
+    assert names[-2] == "final_norm"
+    assert len(names) == 2 + 9 * CFG.layers + 1
+    shapes = M.weight_shapes(CFG)
+    assert set(names) == set(shapes.keys())
+
+
+def test_param_count_matches_rust_tiny():
+    # rust ModelSpec::tiny().param_count() counts emb + blocks + norms +
+    # lm_head with the same formulas; keep the two in the same ballpark.
+    shapes = M.weight_shapes(CFG)
+    total = sum(int(np.prod(s)) for s in shapes.values())
+    assert 4_000_000 < total < 8_000_000, total
+
+
+def test_prefill_shapes():
+    w = M.init_weights(CFG)
+    toks = jnp.zeros((CFG.prefill_seq,), jnp.int32)
+    logits, k, v = M.prefill(w, toks)
+    assert logits.shape == (CFG.prefill_seq, CFG.vocab)
+    assert k.shape == (CFG.layers, CFG.prefill_seq, CFG.kv_heads, CFG.head_dim)
+    assert v.shape == k.shape
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_decode_step_shapes_and_cache_update():
+    w = M.init_weights(CFG)
+    b = 2
+    kc = jnp.zeros((CFG.layers, b, CFG.max_context, CFG.kv_heads, CFG.head_dim))
+    vc = jnp.zeros_like(kc)
+    toks = jnp.asarray([3, 7], jnp.int32)
+    lens = jnp.asarray([0, 5], jnp.int32)
+    logits, kc2, vc2 = M.decode(w, toks, kc, vc, lens)
+    assert logits.shape == (b, CFG.vocab)
+    # new K/V written exactly at position lengths[b]
+    assert not np.allclose(kc2[:, 0, 0], 0.0)
+    assert np.allclose(kc2[:, 0, 1:], 0.0)
+    assert not np.allclose(kc2[:, 1, 5], 0.0)
+    assert np.allclose(kc2[:, 1, 6:], 0.0)
+    assert np.allclose(kc2[:, 1, :5], 0.0)  # untouched (was zero)
+
+
+def test_decode_matches_extended_prefill():
+    """Token t+1 from the decode path == argmax from prefill over the
+    extended prompt: the KV-cache state machine is consistent."""
+    w = M.init_weights(CFG)
+    prompt = [11, 500, 42, 1999, 8]
+    out = M.greedy_generate_ref(w, prompt, 4)
+    for i in range(1, 4):
+        ext = prompt + out[:i]
+        toks = jnp.asarray(
+            ext + [0] * (CFG.prefill_seq - len(ext)), jnp.int32
+        )
+        logits, _, _ = M.prefill(w, toks)
+        assert int(jnp.argmax(logits[len(ext) - 1])) == out[i], f"step {i}"
+
+
+def test_padding_does_not_change_logits():
+    w = M.init_weights(CFG)
+    prompt = [4, 8, 15, 16, 23, 42]
+    s = len(prompt)
+    t1 = jnp.asarray(prompt + [0] * (CFG.prefill_seq - s), jnp.int32)
+    t2 = jnp.asarray(prompt + [99] * (CFG.prefill_seq - s), jnp.int32)
+    l1, _, _ = M.prefill(w, t1)
+    l2, _, _ = M.prefill(w, t2)
+    np.testing.assert_allclose(l1[: s], l2[: s], rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_and_ref_models_agree():
+    """Whole-model A/B: attention via Pallas kernels vs via the oracle."""
+    w = M.init_weights(CFG)
+    toks = jnp.asarray([1, 2, 3] + [0] * (CFG.prefill_seq - 3), jnp.int32)
+    logits_pallas, k1, v1 = M.prefill(w, toks)
+
+    os.environ["DUET_USE_REF"] = "1"
+    try:
+        import importlib
+
+        importlib.reload(M)
+        w2 = M.init_weights(M.TINY)
+        logits_ref, k2, v2 = M.prefill(w2, toks)
+    finally:
+        os.environ["DUET_USE_REF"] = "0"
+        import importlib
+
+        importlib.reload(M)
+
+    np.testing.assert_allclose(logits_pallas, logits_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(k1, k2, rtol=1e-5, atol=1e-5)
+
+
+def test_deterministic_weights():
+    a = M.init_weights(CFG, seed=0)
+    b = M.init_weights(CFG, seed=0)
+    c = M.init_weights(CFG, seed=1)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert any(not np.allclose(x, y) for x, y in zip(a, c))

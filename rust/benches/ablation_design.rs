@@ -1,0 +1,141 @@
+//! Design-choice ablations beyond the paper's own (DESIGN.md):
+//!
+//! (a) Algorithm 1 *verbatim* vs the realized-gap strengthening this repo
+//!     ships (reject configs whose span/k exceeds the TBT SLO even though
+//!     each decode step satisfies it).
+//! (b) Look-ahead cap sensitivity (max k).
+//! (c) Heterogeneous disaggregation (Appendix B future work):
+//!     compute-optimized prefill + memory-optimized decode parts vs a
+//!     homogeneous H100 pair, and vs DuetServe on one H100.
+//!
+//!     cargo bench --bench ablation_design
+
+use duetserve::config::{GpuSpec, Policy, ServingConfig};
+use duetserve::engine::{engine_for, DisaggEngine, SimEngine};
+use duetserve::roofline::Predictor;
+use duetserve::sched::DuetScheduler;
+use duetserve::util::tablefmt::{banner, Table};
+use duetserve::workload::synthetic::fixed_workload;
+
+fn duet_engine(cfg: ServingConfig, verbatim: bool, max_k: u32, seed: u64) -> SimEngine {
+    let pred = Predictor::new(cfg.model.clone(), cfg.gpu.clone(), cfg.tp);
+    let mut sched = DuetScheduler::new(
+        pred,
+        cfg.token_budget as u64,
+        cfg.max_batch as usize,
+        cfg.kv_watermark,
+        cfg.tbt_slo,
+        max_k,
+    );
+    sched.verbatim_alg1 = verbatim;
+    SimEngine::new(cfg, Box::new(sched), seed)
+}
+
+fn ablation_a_and_b() {
+    banner("Ablation (a,b): Algorithm-1 variant x look-ahead cap (4096in/64out @ QPS 20)");
+    let base = ServingConfig::default_8b();
+    let mut t = Table::new(vec![
+        "variant",
+        "max-k",
+        "thpt(req/s)",
+        "tbt-mean(ms)",
+        "tbt-p99(ms)",
+        "spatial",
+    ]);
+    for &(verbatim, label) in &[(true, "verbatim"), (false, "realized-gap")] {
+        for &max_k in &[1u32, 4, 16, 64] {
+            let w = fixed_workload(160, 4096, 64, 20.0, 0xAB1A);
+            let mut e = duet_engine(base.clone(), verbatim, max_k, 1);
+            let rep = e.run(w);
+            t.row(vec![
+                label.to_string(),
+                format!("{max_k}"),
+                format!("{:.2}", rep.throughput_rps),
+                format!("{:.0}", rep.tbt.mean * 1e3),
+                format!("{:.0}", rep.tbt_p99 * 1e3),
+                format!("{}/{}", rep.spatial_iterations, rep.iterations),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "(the verbatim solver favors tiny decode partitions with k=1 whose\n\
+         realized inter-token gap equals the prefill span — the strengthened\n\
+         constraint is what holds p99 TBT near the SLO)"
+    );
+}
+
+fn ablation_c() {
+    banner("Ablation (c): heterogeneous PD disaggregation (8000in/200out @ QPS 5)");
+    let base = ServingConfig::default_8b();
+    let w = fixed_workload(80, 8000, 200, 5.0, 0xC0DE);
+    let mut t = Table::new(vec![
+        "topology",
+        "thpt(req/s)",
+        "tok/s",
+        "ttft(s)",
+        "tbt(ms)",
+    ]);
+
+    // Homogeneous 1P+1D on H100s.
+    let mut homo = DisaggEngine::new(
+        base.clone().with_policy(Policy::DisaggPD {
+            prefill_gpus: 1,
+            decode_gpus: 1,
+        }),
+        1,
+        1,
+        1,
+    );
+    let rh = homo.run(w.clone());
+    t.row(vec![
+        "H100-P + H100-D".to_string(),
+        format!("{:.2}", rh.throughput_rps),
+        format!("{:.0}", rh.token_throughput),
+        format!("{:.2}", rh.ttft.mean),
+        format!("{:.1}", rh.tbt.mean * 1e3),
+    ]);
+
+    // Heterogeneous: compute-optimized prefill + memory-optimized decode.
+    let mut het = DisaggEngine::new_hetero(
+        base.clone().with_policy(Policy::DisaggPD {
+            prefill_gpus: 1,
+            decode_gpus: 1,
+        }),
+        1,
+        GpuSpec::compute_optimized(),
+        1,
+        GpuSpec::memory_optimized(),
+        1,
+    );
+    let rx = het.run(w.clone());
+    t.row(vec![
+        "C-OPT-P + M-OPT-D".to_string(),
+        format!("{:.2}", rx.throughput_rps),
+        format!("{:.0}", rx.token_throughput),
+        format!("{:.2}", rx.ttft.mean),
+        format!("{:.1}", rx.tbt.mean * 1e3),
+    ]);
+
+    // DuetServe on a single H100 for reference.
+    let mut duet = engine_for(base.with_policy(Policy::Duet), 1);
+    let rd = duet.run(w);
+    t.row(vec![
+        "DuetServe (1x H100)".to_string(),
+        format!("{:.2}", rd.throughput_rps),
+        format!("{:.0}", rd.token_throughput),
+        format!("{:.2}", rd.ttft.mean),
+        format!("{:.1}", rd.tbt.mean * 1e3),
+    ]);
+    t.print();
+    println!(
+        "(phase-matched parts recover most of the homogeneous pair's\n\
+         throughput at lower nominal cost; DuetServe reaches comparable\n\
+         per-GPU efficiency on a single device — Appendix B's direction)"
+    );
+}
+
+fn main() {
+    ablation_a_and_b();
+    ablation_c();
+}

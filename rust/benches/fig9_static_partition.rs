@@ -1,0 +1,61 @@
+//! Figure 9 (Appendix A) — static SM partitioning ablation: fixed
+//! Sd22-Sp44 / Sd33-Sp33 / Sd44-Sp22 TPC splits vs DuetServe's adaptive
+//! partitioning, across the three workloads, Qwen3-8B (TP=1) and
+//! Qwen3-14B (TP=2).
+//!
+//! Paper shape: throughput varies across workloads for every static split
+//! (persistent imbalance) while adaptive DuetServe wins or matches the
+//! best static split on each workload.
+//!
+//!     cargo bench --bench fig9_static_partition
+
+use duetserve::config::{ModelSpec, Policy, ServingConfig};
+use duetserve::engine::engine_for;
+use duetserve::util::tablefmt::{banner, Table};
+use duetserve::workload::traces::{generate, TraceKind};
+
+fn main() {
+    let quick = std::env::var("DUET_BENCH_QUICK").is_ok();
+    let n = if quick { 100 } else { 250 };
+    let configs: &[(&str, ModelSpec, u32)] = &[
+        ("Qwen3-8B TP=1", ModelSpec::qwen3_8b(), 1),
+        ("Qwen3-14B TP=2", ModelSpec::qwen3_14b(), 2),
+    ];
+    let policies = [
+        Policy::StaticPartition { decode_tpcs: 22, prefill_tpcs: 44 },
+        Policy::StaticPartition { decode_tpcs: 33, prefill_tpcs: 33 },
+        Policy::StaticPartition { decode_tpcs: 44, prefill_tpcs: 22 },
+        Policy::Duet,
+    ];
+    // Saturating QPS per trace (same spirit as the paper's peak-load bars).
+    let traces = [
+        (TraceKind::AzureCode, 12.0),
+        (TraceKind::AzureConv, 12.0),
+        (TraceKind::Mooncake, 4.0),
+    ];
+    for (label, model, tp) in configs {
+        banner(&format!("Fig 9: throughput (req/s), {label}"));
+        let base = ServingConfig::default_8b().with_model(model.clone(), *tp);
+        let mut t = Table::new(vec![
+            "policy",
+            "Azure-Code",
+            "Azure-Conv",
+            "Mooncake",
+        ]);
+        for policy in &policies {
+            let mut row = vec![policy.name()];
+            for (trace, qps) in &traces {
+                let w = generate(*trace, Some(n), *qps, 99);
+                let mut e = engine_for(base.clone().with_policy(policy.clone()), 1);
+                let rep = e.run(w);
+                row.push(format!("{:.2}", rep.throughput_rps));
+            }
+            t.row(row);
+        }
+        t.print();
+    }
+    println!(
+        "\n(paper: no static split wins everywhere — adaptive reallocation\n\
+         avoids the idle-compute vs congestion imbalance)"
+    );
+}

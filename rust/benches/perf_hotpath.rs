@@ -1,0 +1,102 @@
+//! §Perf — hot-path microbenchmarks for the L3 coordinator.
+//!
+//! Times the pieces that sit on the per-iteration critical path:
+//! roofline prediction, the Algorithm-1 partition solve, chunked-batch
+//! construction, one simulated-executor forward, and whole engine
+//! iterations. Results + the optimization log live in EXPERIMENTS.md §Perf.
+//!
+//!     cargo bench --bench perf_hotpath
+
+use std::time::Instant;
+
+use duetserve::config::{GpuSpec, ModelSpec, Policy, ServingConfig};
+use duetserve::engine::engine_for;
+use duetserve::model::AttnShape;
+use duetserve::roofline::{BatchShape, Predictor};
+use duetserve::sched::optimize_partition;
+use duetserve::sim::{DispatchMode, GpuExecutor};
+use duetserve::util::stats::Summary;
+use duetserve::util::tablefmt::{banner, Table};
+use duetserve::workload::synthetic::fixed_workload;
+
+/// Time `f` over `iters` runs (after `warmup`), returning per-call stats.
+fn time_it<T>(warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64() * 1e6); // µs
+    }
+    Summary::of(&samples)
+}
+
+fn main() {
+    banner("§Perf: L3 hot-path microbenchmarks (all times in µs/call)");
+    let model = ModelSpec::qwen3_8b();
+    let gpu = GpuSpec::h100();
+    let pred = Predictor::new(model.clone(), gpu.clone(), 1);
+    let mut exec = GpuExecutor::new(model.clone(), gpu.clone(), 1, 1);
+
+    let decode_big =
+        BatchShape::from_shapes((0..256).map(|i| AttnShape { q: 1, c: 2048 + i * 8 }).collect());
+    let prefill = BatchShape::from_shapes(vec![AttnShape { q: 8192, c: 0 }]);
+    let mixed = {
+        let mut s = decode_big.shapes.clone();
+        s.extend(prefill.shapes.iter().copied());
+        BatchShape::from_shapes(s)
+    };
+
+    let mut t = Table::new(vec!["path", "mean", "p50", "p99", "max"]);
+    let mut bench = |name: &str, s: Summary| {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.1}", s.mean),
+            format!("{:.1}", s.p50),
+            format!("{:.1}", s.p99),
+            format!("{:.1}", s.max),
+        ]);
+    };
+
+    bench(
+        "roofline predict (256-req mixed batch)",
+        time_it(50, 500, || pred.predict_total(&mixed, 132)),
+    );
+    bench(
+        "algorithm-1 solve (256 dec + 8K prefill)",
+        time_it(20, 200, || {
+            optimize_partition(&pred, &decode_big, &prefill, 0.1, 16)
+        }),
+    );
+    bench(
+        "sim executor forward (mixed batch)",
+        time_it(20, 200, || {
+            exec.run(&mixed, 132, DispatchMode::Eager, None)
+        }),
+    );
+
+    // Whole-engine iteration throughput: iterations/second of simulated
+    // serving (scheduling + bookkeeping per simulated iteration).
+    let t0 = Instant::now();
+    let mut e = engine_for(ServingConfig::default_8b().with_policy(Policy::Duet), 1);
+    let rep = e.run(fixed_workload(120, 4096, 64, 12.0, 5));
+    let wall = t0.elapsed().as_secs_f64();
+    bench(
+        "full engine iteration (duet, incl sched)",
+        Summary::of(&[wall / rep.iterations as f64 * 1e6]),
+    );
+    t.print();
+    println!(
+        "\nengine: {} iterations ({} spatial) simulated in {:.2}s wall = {:.0} iters/s",
+        rep.iterations,
+        rep.spatial_iterations,
+        wall,
+        rep.iterations as f64 / wall
+    );
+    println!(
+        "CPU scheduling overhead per iteration: {:.1} µs (paper budget: <1 ms)",
+        rep.sched_overhead_per_iter * 1e6
+    );
+}

@@ -1,0 +1,35 @@
+//! Table 1 — workload trace statistics. Regenerates the published
+//! #requests / mean-ISL / mean-OSL rows from the calibrated synthetic
+//! trace generators (full published request counts).
+//!
+//!     cargo bench --bench table1_traces
+
+use duetserve::util::tablefmt::{banner, Table};
+use duetserve::workload::traces::{generate, TraceKind};
+
+fn main() {
+    banner("Table 1: workload traces");
+    let mut t = Table::new(vec![
+        "trace",
+        "#requests",
+        "ISL(meas)",
+        "OSL(meas)",
+        "ISL(paper)",
+        "OSL(paper)",
+    ]);
+    for kind in TraceKind::all() {
+        let (n, isl, osl, _, _) = kind.calibration();
+        // Sample at the published request count (QPS irrelevant to stats).
+        let w = generate(kind, Some(n), 10.0, 1);
+        let s = w.stats();
+        t.row(vec![
+            kind.name().to_string(),
+            format!("{}", s.n_requests),
+            format!("{:.0}", s.mean_isl),
+            format!("{:.0}", s.mean_osl),
+            format!("{isl:.0}"),
+            format!("{osl:.0}"),
+        ]);
+    }
+    t.print();
+}

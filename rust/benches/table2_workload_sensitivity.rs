@@ -1,0 +1,64 @@
+//! Table 2 (Appendix A) — workload sensitivity: fixed ISL 4096, varying
+//! OSL ∈ {64, 1024, 2048}, vLLM vs DuetServe at max serving capacity.
+//!
+//! Paper shape: prefill-heavy (short OSL) shows the largest gain
+//! (1.28x throughput, TBT 170→105 ms); decode-heavy approaches parity
+//! (1.04x) because DuetServe stays in aggregated mode when there is
+//! little prefill-decode contention.
+//!
+//!     cargo bench --bench table2_workload_sensitivity
+
+use duetserve::config::{Policy, ServingConfig};
+use duetserve::engine::engine_for;
+use duetserve::util::tablefmt::{banner, Table};
+use duetserve::workload::synthetic::fixed_workload;
+
+fn main() {
+    banner("Table 2: ISL 4096, OSL sweep — vLLM vs DuetServe at saturation");
+    let base = ServingConfig::default_8b();
+    let quick = std::env::var("DUET_BENCH_QUICK").is_ok();
+    let mut t = Table::new(vec![
+        "isl",
+        "osl",
+        "isl/osl",
+        "vllm req/s",
+        "duet req/s",
+        "vllm tbt(ms)",
+        "duet tbt(ms)",
+        "gain",
+        "spatial-iters",
+    ]);
+    // Saturating arrival rates per OSL (beyond capacity so throughput is
+    // engine-limited, like the paper's "maximum serving capacity").
+    for &(osl, qps, n) in &[
+        (64u64, 20.0f64, if quick { 120 } else { 240 }),
+        (1024, 12.0, if quick { 80 } else { 160 }),
+        (2048, 9.0, if quick { 60 } else { 120 }),
+    ] {
+        let w = fixed_workload(n, 4096, osl, qps, 0x7AB2);
+        let mut ev = engine_for(base.clone().with_policy(Policy::VllmChunked), 1);
+        let rv = ev.run(w.clone());
+        let mut ed = engine_for(base.clone().with_policy(Policy::Duet), 1);
+        let rd = ed.run(w);
+        t.row(vec![
+            "4096".to_string(),
+            format!("{osl}"),
+            format!("{:.0}", 4096.0 / osl as f64),
+            format!("{:.2}", rv.throughput_rps),
+            format!("{:.2}", rd.throughput_rps),
+            format!("{:.0}", rv.tbt.mean * 1e3),
+            format!("{:.0}", rd.tbt.mean * 1e3),
+            format!("{:.2}x", rd.throughput_rps / rv.throughput_rps),
+            format!(
+                "{}/{}",
+                rd.spatial_iterations, rd.iterations
+            ),
+        ]);
+    }
+    t.print();
+    println!(
+        "\n(paper: 1.28x at OSL 64, 1.11x at 1024, 1.04x at 2048 — gains\n\
+         shrink as the workload turns decode-dominant and DuetServe stays\n\
+         aggregated)"
+    );
+}

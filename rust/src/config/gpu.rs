@@ -1,0 +1,205 @@
+//! GPU hardware presets driving the simulator and the roofline model.
+//!
+//! The paper's testbed is NVIDIA H100 SXM (80 GB, NVLink); Fig. 1(a) also
+//! profiles A100. Only aggregate characteristics matter to the scheduler:
+//! peak dense-bf16 FLOP/s, HBM bandwidth, SM/TPC counts, and how achievable
+//! throughput/bandwidth scale with the number of *active* SMs (Fig. 3a).
+
+/// Static description of one GPU model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Streaming multiprocessors (H100 SXM: 132).
+    pub num_sms: u32,
+    /// SMs per TPC — the smallest partitioning unit (2 on H100/A100).
+    pub sms_per_tpc: u32,
+    /// Peak dense bf16/fp16 tensor-core throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// Peak HBM bandwidth, bytes/s.
+    pub hbm_bandwidth: f64,
+    /// HBM capacity, bytes.
+    pub hbm_capacity: f64,
+    /// Aggregate unidirectional NVLink bandwidth per GPU, bytes/s.
+    pub nvlink_bandwidth: f64,
+    /// Ring all-reduce startup latency, seconds (paper: ~3 µs on H100).
+    pub allreduce_alpha: f64,
+    /// Per-kernel CPU launch overhead, seconds (individual launch).
+    pub kernel_launch_overhead: f64,
+    /// CUDA-graph-style whole-graph replay overhead, seconds
+    /// (paper: < 0.5 ms per decode graph launch).
+    pub graph_launch_overhead: f64,
+    /// Bandwidth-scaling shape parameter: fraction-of-peak-BW achieved by a
+    /// fraction `x` of SMs is `x * (1 + k) / (x + k)` — super-linear, with
+    /// k calibrated so 20% of SMs reach ≈60% of peak (paper Fig. 3a).
+    pub bw_curve_k: f64,
+    /// GEMM saturation constant: large-matmul efficiency reaches 1-1/e of
+    /// its asymptote at this many tokens (tile/wave quantization — newer
+    /// GPUs with bigger tensor-core tiles saturate later, which is why
+    /// the Fig. 1a knee moves from ~2K on A100 to ~8K on H100).
+    pub gemm_nhalf: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA H100 SXM5 80 GB.
+    pub fn h100() -> GpuSpec {
+        GpuSpec {
+            name: "H100".to_string(),
+            num_sms: 132,
+            sms_per_tpc: 2,
+            peak_flops: 989e12,        // dense bf16
+            hbm_bandwidth: 3.35e12,    // HBM3
+            hbm_capacity: 80e9,
+            nvlink_bandwidth: 450e9,   // NVLink 4 unidirectional
+            allreduce_alpha: 3e-6,
+            kernel_launch_overhead: 6e-6,
+            graph_launch_overhead: 0.4e-3,
+            bw_curve_k: 0.2,
+            gemm_nhalf: 2700.0,
+        }
+    }
+
+    /// NVIDIA A100 SXM4 80 GB.
+    pub fn a100() -> GpuSpec {
+        GpuSpec {
+            name: "A100".to_string(),
+            num_sms: 108,
+            sms_per_tpc: 2,
+            peak_flops: 312e12,       // dense bf16
+            hbm_bandwidth: 2.0e12,    // HBM2e
+            hbm_capacity: 80e9,
+            nvlink_bandwidth: 300e9,
+            allreduce_alpha: 4e-6,
+            kernel_launch_overhead: 7e-6,
+            graph_launch_overhead: 0.5e-3,
+            bw_curve_k: 0.2,
+            gemm_nhalf: 680.0,
+        }
+    }
+
+    /// Hypothetical compute-optimized part (Appendix B's heterogeneous
+    /// deployment direction): H100-class MXU throughput, half the HBM
+    /// bandwidth — a good *prefill* worker.
+    pub fn compute_optimized() -> GpuSpec {
+        let mut g = GpuSpec::h100();
+        g.name = "C-OPT".to_string();
+        g.hbm_bandwidth = 1.7e12;
+        g
+    }
+
+    /// Hypothetical memory-optimized part: full HBM3 bandwidth, 40% of
+    /// the compute — a good *decode* worker.
+    pub fn memory_optimized() -> GpuSpec {
+        let mut g = GpuSpec::h100();
+        g.name = "M-OPT".to_string();
+        g.peak_flops = 0.4 * 989e12;
+        g
+    }
+
+    pub fn by_name(name: &str) -> Option<GpuSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "h100" => Some(GpuSpec::h100()),
+            "a100" => Some(GpuSpec::a100()),
+            "c-opt" | "compute" => Some(GpuSpec::compute_optimized()),
+            "m-opt" | "memory" => Some(GpuSpec::memory_optimized()),
+            _ => None,
+        }
+    }
+
+    /// Number of TPCs (partitioning units). H100: 66.
+    pub fn num_tpcs(&self) -> u32 {
+        self.num_sms / self.sms_per_tpc
+    }
+
+    /// Achievable compute throughput (FLOP/s) with `s` active SMs.
+    /// FLOPs scale ~linearly with SM count (Fig. 3a), with TPC-granular
+    /// quantization applied by the caller.
+    pub fn pi_sm(&self, s: u32) -> f64 {
+        let s = s.min(self.num_sms);
+        self.peak_flops * s as f64 / self.num_sms as f64
+    }
+
+    /// Achievable HBM bandwidth (bytes/s) with `s` active SMs.
+    /// Super-linear saturating curve: x(1+k)/(x+k); 20% of SMs already
+    /// reach ≈60% of peak with k = 0.2 (paper Fig. 3a).
+    pub fn b_hbm(&self, s: u32) -> f64 {
+        let s = s.min(self.num_sms);
+        if s == 0 {
+            return 0.0;
+        }
+        let x = s as f64 / self.num_sms as f64;
+        let k = self.bw_curve_k;
+        self.hbm_bandwidth * x * (1.0 + k) / (x + k)
+    }
+
+    /// Ridge point in FLOP/byte for the full GPU: ops per byte at which a
+    /// kernel transitions from memory- to compute-bound.
+    pub fn ridge(&self) -> f64 {
+        self.peak_flops / self.hbm_bandwidth
+    }
+
+    /// Achieved fraction of large-GEMM efficiency at `n` tokens:
+    /// `1 - exp(-n / gemm_nhalf)`. Reaches ~95% at ≈3·nhalf, putting the
+    /// Fig. 1a knees near 2K (A100) and 8K (H100) tokens.
+    pub fn gemm_eff(&self, n_tokens: u64) -> f64 {
+        1.0 - (-(n_tokens as f64) / self.gemm_nhalf).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h100_has_66_tpcs() {
+        assert_eq!(GpuSpec::h100().num_tpcs(), 66);
+    }
+
+    #[test]
+    fn flops_scale_linearly() {
+        let g = GpuSpec::h100();
+        let half = g.pi_sm(66);
+        assert!((half / g.peak_flops - 0.5).abs() < 1e-9);
+        assert_eq!(g.pi_sm(132), g.peak_flops);
+        // clamped above num_sms
+        assert_eq!(g.pi_sm(500), g.peak_flops);
+    }
+
+    #[test]
+    fn bandwidth_superlinear_20pct_gives_60pct() {
+        let g = GpuSpec::h100();
+        let s20 = (g.num_sms as f64 * 0.2).round() as u32;
+        let frac = g.b_hbm(s20) / g.hbm_bandwidth;
+        assert!(
+            (frac - 0.6).abs() < 0.02,
+            "20% SMs should give ~60% bandwidth, got {frac}"
+        );
+        // full allocation reaches peak
+        assert!((g.b_hbm(g.num_sms) / g.hbm_bandwidth - 1.0).abs() < 1e-9);
+        assert_eq!(g.b_hbm(0), 0.0);
+    }
+
+    #[test]
+    fn bandwidth_monotone_in_sms() {
+        let g = GpuSpec::h100();
+        let mut prev = 0.0;
+        for s in 1..=g.num_sms {
+            let b = g.b_hbm(s);
+            assert!(b > prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(GpuSpec::by_name("h100").unwrap().name, "H100");
+        assert_eq!(GpuSpec::by_name("A100").unwrap().name, "A100");
+        assert!(GpuSpec::by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn ridge_point_orders_generations() {
+        // H100's ridge (flops/byte) exceeds A100's — the knee moves right,
+        // which is exactly the Fig. 1(a) observation (2K -> 8K tokens).
+        assert!(GpuSpec::h100().ridge() > GpuSpec::a100().ridge());
+    }
+}

@@ -1,0 +1,12 @@
+//! Configuration layer: hardware presets, model-shape presets, serving
+//! policy config, and the launcher's TOML-subset parser.
+
+pub mod gpu;
+pub mod model;
+pub mod parse;
+pub mod serving;
+
+pub use gpu::GpuSpec;
+pub use model::ModelSpec;
+pub use parse::{Config, Value};
+pub use serving::{Policy, ServingConfig};

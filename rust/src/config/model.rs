@@ -1,0 +1,195 @@
+//! Transformer model-shape presets.
+//!
+//! The serving system's behaviour depends only on tensor shapes (embedding
+//! dim, layer count, GQA head counts, FFN width, vocab), not weights. The
+//! paper evaluates Qwen3-8B (TP=1), Qwen3-14B (TP=2) and Qwen3-32B (TP=8);
+//! `tiny()` is the ~25M-parameter model actually executed on the CPU PJRT
+//! path (examples/e2e_serve).
+
+/// Architecture hyper-parameters of a dense decoder-only transformer
+/// (Qwen3/Llama-style: GQA attention + SwiGLU MLP).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Embedding / hidden dimension `d`.
+    pub hidden: u32,
+    /// Number of transformer blocks `L`.
+    pub layers: u32,
+    /// Query heads `h_q`.
+    pub heads: u32,
+    /// Key/value heads `h_kv` (GQA).
+    pub kv_heads: u32,
+    /// Per-head dimension `d_h`.
+    pub head_dim: u32,
+    /// FFN intermediate dimension `m`.
+    pub intermediate: u32,
+    /// Vocabulary size (drives the final classifier cost).
+    pub vocab: u32,
+    /// Bytes per element (2 = bf16).
+    pub elem_bytes: u32,
+}
+
+impl ModelSpec {
+    pub fn qwen3_8b() -> ModelSpec {
+        ModelSpec {
+            name: "Qwen3-8B".into(),
+            hidden: 4096,
+            layers: 36,
+            heads: 32,
+            kv_heads: 8,
+            head_dim: 128,
+            intermediate: 12288,
+            vocab: 151_936,
+            elem_bytes: 2,
+        }
+    }
+
+    pub fn qwen3_14b() -> ModelSpec {
+        ModelSpec {
+            name: "Qwen3-14B".into(),
+            hidden: 5120,
+            layers: 40,
+            heads: 40,
+            kv_heads: 8,
+            head_dim: 128,
+            intermediate: 17408,
+            vocab: 151_936,
+            elem_bytes: 2,
+        }
+    }
+
+    pub fn qwen3_32b() -> ModelSpec {
+        ModelSpec {
+            name: "Qwen3-32B".into(),
+            hidden: 5120,
+            layers: 64,
+            heads: 64,
+            kv_heads: 8,
+            head_dim: 128,
+            intermediate: 25600,
+            vocab: 151_936,
+            elem_bytes: 2,
+        }
+    }
+
+    /// The tiny Qwen3-style model that is actually compiled through
+    /// JAX/Pallas and served via PJRT on CPU. Shapes must match
+    /// `python/compile/model.py::TINY`.
+    pub fn tiny() -> ModelSpec {
+        ModelSpec {
+            name: "Tiny-25M".into(),
+            hidden: 256,
+            layers: 4,
+            heads: 8,
+            kv_heads: 4,
+            head_dim: 32,
+            intermediate: 1024,
+            vocab: 2048,
+            elem_bytes: 4, // f32 on the CPU PJRT path
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "qwen3-8b" | "8b" => Some(ModelSpec::qwen3_8b()),
+            "qwen3-14b" | "14b" => Some(ModelSpec::qwen3_14b()),
+            "qwen3-32b" | "32b" => Some(ModelSpec::qwen3_32b()),
+            "tiny" | "tiny-25m" => Some(ModelSpec::tiny()),
+            _ => None,
+        }
+    }
+
+    /// Total parameter count (embedding + blocks + classifier).
+    pub fn param_count(&self) -> u64 {
+        let d = self.hidden as u64;
+        let m = self.intermediate as u64;
+        let dh = self.head_dim as u64;
+        let hq = self.heads as u64;
+        let hkv = self.kv_heads as u64;
+        let attn = d * hq * dh       // W_q
+            + 2 * d * hkv * dh       // W_k, W_v
+            + hq * dh * d;           // W_o
+        let mlp = 3 * d * m;         // gate, up, down
+        let norms = 2 * d;
+        let block = attn + mlp + norms;
+        let emb = self.vocab as u64 * d;
+        emb + self.layers as u64 * block + d /* final norm */ + emb /* lm head */
+    }
+
+    /// KV-cache bytes per token (all layers, both K and V).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        2 * self.layers as u64
+            * self.kv_heads as u64
+            * self.head_dim as u64
+            * self.elem_bytes as u64
+    }
+
+    /// Weight bytes on one GPU under tensor parallel degree `tp`
+    /// (weights divided; embeddings replicated for simplicity).
+    pub fn weight_bytes_per_gpu(&self, tp: u32) -> u64 {
+        let params = self.param_count();
+        let emb = 2 * self.vocab as u64 * self.hidden as u64;
+        let sharded = (params - emb) / tp as u64;
+        (sharded + emb) * self.elem_bytes as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qwen3_8b_param_count_in_range() {
+        let p = ModelSpec::qwen3_8b().param_count();
+        // ~8.2B params
+        assert!(
+            (7.0e9..9.5e9).contains(&(p as f64)),
+            "Qwen3-8B params = {p}"
+        );
+    }
+
+    #[test]
+    fn qwen3_14b_param_count_in_range() {
+        let p = ModelSpec::qwen3_14b().param_count();
+        assert!((13.0e9..16.5e9).contains(&(p as f64)), "14B params = {p}");
+    }
+
+    #[test]
+    fn tiny_model_is_tiny() {
+        let p = ModelSpec::tiny().param_count();
+        assert!((1e6..5e7).contains(&(p as f64)), "tiny params = {p}");
+    }
+
+    #[test]
+    fn kv_bytes_per_token_8b() {
+        // 2 * 36 layers * 8 kv heads * 128 dim * 2 bytes = 147456 B/token
+        assert_eq!(ModelSpec::qwen3_8b().kv_bytes_per_token(), 147_456);
+    }
+
+    #[test]
+    fn head_dims_consistent() {
+        for m in [
+            ModelSpec::qwen3_8b(),
+            ModelSpec::qwen3_14b(),
+            ModelSpec::qwen3_32b(),
+            ModelSpec::tiny(),
+        ] {
+            assert_eq!(m.heads % m.kv_heads, 0, "{}: GQA ratio integral", m.name);
+        }
+    }
+
+    #[test]
+    fn tp_reduces_weight_footprint() {
+        let m = ModelSpec::qwen3_14b();
+        assert!(m.weight_bytes_per_gpu(2) < m.weight_bytes_per_gpu(1));
+        // 14B bf16 on one GPU ~29 GB > H100 would still fit in 80GB
+        assert!(m.weight_bytes_per_gpu(1) > 25_000_000_000);
+    }
+
+    #[test]
+    fn by_name_aliases() {
+        assert_eq!(ModelSpec::by_name("8b").unwrap().name, "Qwen3-8B");
+        assert_eq!(ModelSpec::by_name("TINY").unwrap().name, "Tiny-25M");
+        assert!(ModelSpec::by_name("gpt-5").is_none());
+    }
+}

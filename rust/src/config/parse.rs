@@ -1,0 +1,238 @@
+//! Minimal TOML-subset parser for launcher config files (no serde in the
+//! offline vendor set).
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (`"..."`), integer, float, and boolean values, `#` comments, blank
+//! lines. That covers everything the launcher needs; nested tables and
+//! arrays are intentionally out of scope.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: `section.key` → value. Keys before any `[section]` live
+/// in the "" (root) section.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    map: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ParseError {
+    #[error("line {0}: malformed section header")]
+    BadSection(usize),
+    #[error("line {0}: expected `key = value`")]
+    BadLine(usize),
+    #[error("line {0}: unterminated string")]
+    BadString(usize),
+    #[error("line {0}: unparseable value `{1}`")]
+    BadValue(usize, String),
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, ParseError> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let lineno = i + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or(ParseError::BadSection(lineno))?
+                    .trim();
+                if name.is_empty() || name.contains(['[', ']']) {
+                    return Err(ParseError::BadSection(lineno));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or(ParseError::BadLine(lineno))?;
+            let key = line[..eq].trim();
+            let val = line[eq + 1..].trim();
+            if key.is_empty() || val.is_empty() {
+                return Err(ParseError::BadLine(lineno));
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            map.insert(full_key, parse_value(val, lineno)?);
+        }
+        Ok(Config { map })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+    pub fn int(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Value::as_int)
+    }
+    pub fn float(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_float)
+    }
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str(key).unwrap_or(default)
+    }
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.int(key).unwrap_or(default)
+    }
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.float(key).unwrap_or(default)
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.bool(key).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string must not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str, lineno: usize) -> Result<Value, ParseError> {
+    if let Some(rest) = v.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or(ParseError::BadString(lineno))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match v {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ParseError::BadValue(lineno, v.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(
+            r#"
+            # launcher config
+            name = "duet"          # inline comment
+            [engine]
+            token_budget = 8192
+            tbt_slo = 0.1
+            adaptive = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.str("name"), Some("duet"));
+        assert_eq!(cfg.int("engine.token_budget"), Some(8192));
+        assert_eq!(cfg.float("engine.tbt_slo"), Some(0.1));
+        assert_eq!(cfg.bool("engine.adaptive"), Some(true));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let cfg = Config::parse("x = 3").unwrap();
+        assert_eq!(cfg.float("x"), Some(3.0));
+    }
+
+    #[test]
+    fn defaults() {
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(cfg.int_or("missing", 7), 7);
+        assert_eq!(cfg.str_or("missing", "d"), "d");
+        assert!(cfg.bool_or("missing", true));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let cfg = Config::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(cfg.str("tag"), Some("a#b"));
+    }
+
+    #[test]
+    fn error_reports_line() {
+        assert_eq!(
+            Config::parse("a = 1\nbad line\n").unwrap_err(),
+            ParseError::BadLine(2)
+        );
+        assert_eq!(
+            Config::parse("[open\n").unwrap_err(),
+            ParseError::BadSection(1)
+        );
+        assert_eq!(
+            Config::parse("s = \"oops\n").unwrap_err(),
+            ParseError::BadString(1)
+        );
+        assert!(matches!(
+            Config::parse("v = 1.2.3\n").unwrap_err(),
+            ParseError::BadValue(1, _)
+        ));
+    }
+
+    #[test]
+    fn later_keys_override() {
+        let cfg = Config::parse("x = 1\nx = 2\n").unwrap();
+        assert_eq!(cfg.int("x"), Some(2));
+    }
+}

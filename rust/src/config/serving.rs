@@ -1,0 +1,171 @@
+//! Serving-engine configuration: scheduler policy, SLOs, budgets.
+
+use crate::config::gpu::GpuSpec;
+use crate::config::model::ModelSpec;
+
+/// Which scheduling policy an engine runs. Mirrors the paper's baselines
+/// (§5.1) plus the ablation configurations (Appendix A).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Policy {
+    /// vLLM v0.10-style chunked prefill with a fixed token budget.
+    VllmChunked,
+    /// SGLang default: throughput-oriented, runs prefill-only batches
+    /// opportunistically before draining decodes.
+    SglangDefault,
+    /// SGLang with `enable-mixed-chunk` (Sarathi-style chunked prefill).
+    SglangChunked,
+    /// Dynamo-style PD disaggregation (1 prefill GPU + 1 decode GPU, KV
+    /// transfer between them).
+    DisaggPD { prefill_gpus: u32, decode_gpus: u32 },
+    /// DuetServe: chunked prefill + roofline TBT check + adaptive SM
+    /// partitioning (Algorithm 1).
+    Duet,
+    /// Ablation: spatial multiplexing with a *static* SM split
+    /// (`Sd<d>-Sp<p>` in Fig. 9), in TPC units.
+    StaticPartition { decode_tpcs: u32, prefill_tpcs: u32 },
+}
+
+impl Policy {
+    pub fn name(&self) -> String {
+        match self {
+            Policy::VllmChunked => "vLLM".into(),
+            Policy::SglangDefault => "SGLang-Default".into(),
+            Policy::SglangChunked => "SGLang-Chunked".into(),
+            Policy::DisaggPD {
+                prefill_gpus,
+                decode_gpus,
+            } => format!("Dynamo-{prefill_gpus}P{decode_gpus}D"),
+            Policy::Duet => "DuetServe".into(),
+            Policy::StaticPartition {
+                decode_tpcs,
+                prefill_tpcs,
+            } => format!("Sd{decode_tpcs}-Sp{prefill_tpcs}"),
+        }
+    }
+}
+
+/// Full engine configuration.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub model: ModelSpec,
+    pub gpu: GpuSpec,
+    /// Tensor-parallel degree (GPUs in the aggregated group).
+    pub tp: u32,
+    pub policy: Policy,
+    /// Chunked-prefill token budget (paper: 8192 on H100, 2048 on A100).
+    pub token_budget: u32,
+    /// Decode TBT SLO in seconds (paper uses 100 ms as "typical").
+    pub tbt_slo: f64,
+    /// Maximum running batch size (paper baseline config: 1024).
+    pub max_batch: u32,
+    /// Fraction of HBM usable for KV cache after weights (paper: 0.9
+    /// utilization ratio overall).
+    pub gpu_mem_util: f64,
+    /// Paged KV cache block size in tokens (vLLM default 16).
+    pub kv_block_tokens: u32,
+    /// Upper bound on the look-ahead decode steps `k`.
+    pub max_lookahead: u32,
+    /// Scheduler admission: stop admitting prefill when free KV blocks drop
+    /// below this fraction.
+    pub kv_watermark: f64,
+}
+
+impl ServingConfig {
+    /// Paper's default: Qwen3-8B on one H100, DuetServe policy.
+    pub fn default_8b() -> ServingConfig {
+        ServingConfig {
+            model: ModelSpec::qwen3_8b(),
+            gpu: GpuSpec::h100(),
+            tp: 1,
+            policy: Policy::Duet,
+            token_budget: 8192,
+            tbt_slo: 0.100,
+            max_batch: 1024,
+            gpu_mem_util: 0.9,
+            kv_block_tokens: 16,
+            max_lookahead: 16,
+            kv_watermark: 0.02,
+        }
+    }
+
+    pub fn with_policy(mut self, policy: Policy) -> ServingConfig {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_model(mut self, model: ModelSpec, tp: u32) -> ServingConfig {
+        self.model = model;
+        self.tp = tp;
+        self
+    }
+
+    /// KV-cache capacity in tokens on this GPU group: (mem_util × HBM −
+    /// weights) / kv-bytes-per-token, across `tp` GPUs (cache is sharded by
+    /// kv-head under TP, so capacity scales with tp).
+    pub fn kv_capacity_tokens(&self) -> u64 {
+        let per_gpu_budget = self.gpu.hbm_capacity * self.gpu_mem_util;
+        let weights = self.model.weight_bytes_per_gpu(self.tp) as f64;
+        let free = (per_gpu_budget - weights).max(0.0) * self.tp as f64;
+        // Reserve ~5% for activations / workspace.
+        let usable = free * 0.95;
+        (usable / self.model.kv_bytes_per_token() as f64) as u64
+    }
+
+    /// Total KV blocks available.
+    pub fn kv_capacity_blocks(&self) -> u64 {
+        self.kv_capacity_tokens() / self.kv_block_tokens as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_capacity_positive_for_8b_on_h100() {
+        let c = ServingConfig::default_8b();
+        let toks = c.kv_capacity_tokens();
+        // 0.9*80GB - ~16.4GB weights ≈ 55GB → /147456 B/token ≈ ~350K tokens
+        assert!(
+            (200_000..600_000).contains(&toks),
+            "kv capacity tokens = {toks}"
+        );
+    }
+
+    #[test]
+    fn tp2_increases_capacity() {
+        let c1 = ServingConfig::default_8b().with_model(ModelSpec::qwen3_14b(), 1);
+        let c2 = ServingConfig::default_8b().with_model(ModelSpec::qwen3_14b(), 2);
+        assert!(c2.kv_capacity_tokens() > c1.kv_capacity_tokens());
+    }
+
+    #[test]
+    fn policy_names() {
+        assert_eq!(Policy::Duet.name(), "DuetServe");
+        assert_eq!(
+            Policy::DisaggPD {
+                prefill_gpus: 1,
+                decode_gpus: 1
+            }
+            .name(),
+            "Dynamo-1P1D"
+        );
+        assert_eq!(
+            Policy::StaticPartition {
+                decode_tpcs: 22,
+                prefill_tpcs: 44
+            }
+            .name(),
+            "Sd22-Sp44"
+        );
+    }
+
+    #[test]
+    fn blocks_are_tokens_over_block_size() {
+        let c = ServingConfig::default_8b();
+        assert_eq!(
+            c.kv_capacity_blocks(),
+            c.kv_capacity_tokens() / c.kv_block_tokens as u64
+        );
+    }
+}

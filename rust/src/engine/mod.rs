@@ -1,0 +1,604 @@
+//! Serving engines: the iteration loop tying scheduler, KV cache,
+//! executor and metrics together.
+//!
+//! [`SimEngine`] is the single-GPU-group engine (policy-generic via the
+//! [`Scheduler`] trait) used for vLLM / SGLang / DuetServe / static-split
+//! configurations. [`replicated::ReplicatedEngine`] runs N independent
+//! replicas under round-robin dispatch (the Fig. 2 "Agg" setup), and
+//! [`disagg::DisaggEngine`] implements Dynamo-style PD disaggregation
+//! with NVLink KV transfers (Fig. 2/7, Table 3).
+
+pub mod disagg;
+pub mod events;
+pub mod replicated;
+
+pub use disagg::DisaggEngine;
+pub use events::{IterEvent, IterKind};
+pub use replicated::ReplicatedEngine;
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::config::ServingConfig;
+use crate::kvcache::KvManager;
+use crate::metrics::{Recorder, Report};
+use crate::model::AttnShape;
+use crate::request::{Phase, Request, RequestId};
+use crate::roofline::BatchShape;
+use crate::sched::{IterationPlan, SchedInput, Scheduler};
+use crate::sim::{DispatchMode, GpuExecutor};
+use crate::workload::Workload;
+
+/// Hard cap on simulated time — a run that exceeds this has diverged
+/// (arrival rate above capacity with an unbounded queue).
+const MAX_SIM_TIME: f64 = 3.0e4;
+
+/// Single GPU-group serving engine over the simulated executor.
+pub struct SimEngine {
+    pub cfg: ServingConfig,
+    scheduler: Box<dyn Scheduler>,
+    executor: GpuExecutor,
+    kv: KvManager,
+    clock: f64,
+    /// Not yet arrived (sorted by arrival).
+    pending: VecDeque<Request>,
+    /// Arrived, not admitted.
+    waiting: VecDeque<Request>,
+    running: Vec<Request>,
+    pub finished: Vec<Request>,
+    pub metrics: Recorder,
+    /// Requests dropped because their prompt can never fit in KV.
+    pub dropped: u64,
+    /// Requests preempted (recompute-style) due to KV exhaustion.
+    pub preemptions: u64,
+    /// Detailed per-iteration log (Fig. 10); disabled by default.
+    pub log_events: bool,
+    pub events: Vec<IterEvent>,
+}
+
+impl SimEngine {
+    pub fn new(cfg: ServingConfig, scheduler: Box<dyn Scheduler>, seed: u64) -> SimEngine {
+        let kv = KvManager::new(cfg.kv_capacity_blocks(), cfg.kv_block_tokens);
+        let executor = GpuExecutor::new(cfg.model.clone(), cfg.gpu.clone(), cfg.tp, seed);
+        SimEngine {
+            cfg,
+            scheduler,
+            executor,
+            kv,
+            clock: 0.0,
+            pending: VecDeque::new(),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            finished: Vec::new(),
+            metrics: Recorder::new(),
+            dropped: 0,
+            preemptions: 0,
+            log_events: false,
+            events: Vec::new(),
+        }
+    }
+
+    pub fn policy_name(&self) -> String {
+        self.scheduler.name()
+    }
+
+    /// Run the whole workload to completion; returns the report.
+    pub fn run(&mut self, workload: Workload) -> Report {
+        self.pending = workload.requests.into();
+        while self.step() {}
+        self.metrics.duration = self.clock;
+        self.metrics.report(&self.scheduler.name())
+    }
+
+    /// One iteration. Returns false when all work is done.
+    pub fn step(&mut self) -> bool {
+        self.admit_arrivals();
+        if self.pending.is_empty() && self.waiting.is_empty() && self.running.is_empty() {
+            return false;
+        }
+        if self.clock > MAX_SIM_TIME {
+            // Diverged: drain bookkeeping and stop.
+            self.dropped += (self.pending.len() + self.waiting.len()) as u64;
+            self.pending.clear();
+            self.waiting.clear();
+            self.running.clear();
+            return false;
+        }
+
+        let sched_start = Instant::now();
+        let input = SchedInput {
+            running: &self.running,
+            waiting: self.waiting.make_contiguous(),
+            kv_free_tokens: self.kv.free_blocks() * self.kv.block_tokens() as u64,
+            kv_total_tokens: self.kv.total_blocks() * self.kv.block_tokens() as u64,
+        };
+        let plan = self.scheduler.plan(&input);
+        let sched_s = sched_start.elapsed().as_secs_f64();
+        self.metrics.sched_overhead += sched_s;
+
+        match plan {
+            IterationPlan::Idle => {
+                // Nothing schedulable now.
+                if let Some(next) = self.pending.front() {
+                    self.clock = self.clock.max(next.arrival);
+                    return true;
+                }
+                if !self.waiting.is_empty() && self.running.is_empty() {
+                    // Head request can never fit: drop it or we deadlock.
+                    let r = self.waiting.pop_front().unwrap();
+                    let _ = self.kv.release(r.id);
+                    self.dropped += 1;
+                    return true;
+                }
+                // Running exists but scheduler idles — should not happen;
+                // advance past to avoid livelock.
+                !self.running.is_empty()
+            }
+            IterationPlan::Aggregated { decode, prefill } => {
+                self.exec_aggregated(decode, prefill, sched_s);
+                true
+            }
+            IterationPlan::Spatial {
+                decode,
+                prefill,
+                plan,
+            } => {
+                self.exec_spatial(decode, prefill, plan, sched_s);
+                true
+            }
+        }
+    }
+
+    fn admit_arrivals(&mut self) {
+        while let Some(r) = self.pending.front() {
+            if r.arrival <= self.clock {
+                let mut r = self.pending.pop_front().unwrap();
+                r.phase = Phase::Waiting;
+                self.kv.register(r.id);
+                self.waiting.push_back(r);
+            } else {
+                break;
+            }
+        }
+        // If totally idle, jump to the next arrival.
+        if self.running.is_empty() && self.waiting.is_empty() {
+            if let Some(r) = self.pending.front() {
+                self.clock = self.clock.max(r.arrival);
+                let mut r = self.pending.pop_front().unwrap();
+                r.phase = Phase::Waiting;
+                self.kv.register(r.id);
+                self.waiting.push_back(r);
+            }
+        }
+    }
+
+    /// Move scheduled waiting requests into running (admission).
+    fn admit_scheduled(&mut self, prefill: &[crate::sched::PrefillChunk]) {
+        for c in prefill.iter().filter(|c| c.admit) {
+            if let Some(pos) = self.waiting.iter().position(|r| r.id == c.id) {
+                let r = self.waiting.remove(pos).unwrap();
+                self.running.push(r);
+            }
+        }
+    }
+
+    fn batch_shapes(
+        &self,
+        decode: &[RequestId],
+        prefill: &[crate::sched::PrefillChunk],
+    ) -> (BatchShape, BatchShape) {
+        let find = |id: RequestId| self.running.iter().find(|r| r.id == id);
+        let dec = decode
+            .iter()
+            .filter_map(|&id| find(id))
+            .map(|r| AttnShape {
+                q: 1,
+                c: r.context_len(),
+            })
+            .collect();
+        let pre = prefill
+            .iter()
+            .filter_map(|c| find(c.id).map(|r| (r, c.tokens)))
+            .map(|(r, q)| AttnShape {
+                q,
+                c: r.context_len(),
+            })
+            .collect();
+        (
+            BatchShape::from_shapes(dec),
+            BatchShape::from_shapes(pre),
+        )
+    }
+
+    /// KV-append with recompute-preemption on exhaustion: the most
+    /// recently admitted running request is evicted, reset, and requeued
+    /// (vLLM's recompute preemption policy).
+    fn kv_append_or_preempt(&mut self, id: RequestId, tokens: u64) -> bool {
+        loop {
+            match self.kv.append(id, tokens) {
+                Ok(()) => return true,
+                Err(_) => {
+                    // Evict the newest running request that is not `id`.
+                    let victim = self
+                        .running
+                        .iter()
+                        .rposition(|r| r.id != id && r.phase != Phase::Finished);
+                    match victim {
+                        Some(pos) => {
+                            let mut v = self.running.remove(pos);
+                            let _ = self.kv.release(v.id);
+                            self.preemptions += 1;
+                            // Recompute preemption: progress is lost.
+                            let fresh = Request::new(v.id, v.arrival, v.prompt_len, v.output_len);
+                            v = fresh;
+                            self.kv.register(v.id);
+                            self.waiting.push_front(v);
+                        }
+                        None => return false, // single request larger than KV
+                    }
+                }
+            }
+        }
+    }
+
+    fn exec_aggregated(
+        &mut self,
+        decode: Vec<RequestId>,
+        prefill: Vec<crate::sched::PrefillChunk>,
+        sched_s: f64,
+    ) {
+        self.admit_scheduled(&prefill);
+        let (dec_shape, pre_shape) = self.batch_shapes(&decode, &prefill);
+        let mut all = dec_shape.shapes.clone();
+        all.extend(pre_shape.shapes.iter().copied());
+        let batch = BatchShape::from_shapes(all);
+        // Decode-only batches replay captured graphs; any prefill in the
+        // batch forces eager dispatch (dynamic shapes — §4.3).
+        let mode = if pre_shape.is_empty() {
+            DispatchMode::Graph
+        } else {
+            DispatchMode::Eager
+        };
+        let res = self.executor.run(&batch, self.cfg.gpu.num_sms, mode, None);
+        // The virtual clock stays deterministic: measured CPU scheduling
+        // time is *reported* (metrics/events) but not added to simulated
+        // time — it is µs against ~100 ms iterations (Fig. 10).
+        let dur = res.total();
+        let t_end = self.clock + dur;
+
+        // KV appends + request state updates.
+        for &id in &decode {
+            if self.kv_append_or_preempt(id, 1) {
+                if let Some(r) = self.running.iter_mut().find(|r| r.id == id) {
+                    if r.phase == Phase::Decode {
+                        r.advance_decode(t_end);
+                    }
+                }
+            }
+        }
+        for c in &prefill {
+            if self.kv_append_or_preempt(c.id, c.tokens) {
+                if let Some(pos) = self.running.iter().position(|r| r.id == c.id) {
+                    let r = &mut self.running[pos];
+                    r.advance_prefill(c.tokens);
+                    if r.phase == Phase::Decode {
+                        // Prompt completed: this forward's logits produce
+                        // the first output token.
+                        let id = r.id;
+                        if self.kv_append_or_preempt(id, 1) {
+                            if let Some(r) = self.running.iter_mut().find(|r| r.id == id) {
+                                r.advance_decode(t_end);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        self.metrics
+            .record_util(res.gpu_time, res.sm_util, res.hbm_util);
+        self.metrics.busy_time += res.gpu_time;
+        self.metrics.iterations += 1;
+        if self.log_events {
+            self.events.push(IterEvent {
+                t_start: self.clock,
+                duration: dur,
+                kind: IterKind::Aggregated,
+                n_decode: decode.len() as u32,
+                prefill_tokens: pre_shape.n_tokens,
+                sched_s,
+                sm_util: res.sm_util,
+                hbm_util: res.hbm_util,
+            });
+        }
+        self.clock = t_end;
+        self.retire_finished();
+    }
+
+    fn exec_spatial(
+        &mut self,
+        decode: Vec<RequestId>,
+        prefill: Vec<crate::sched::PrefillChunk>,
+        plan: crate::hw::PartitionPlan,
+        sched_s: f64,
+    ) {
+        self.admit_scheduled(&prefill);
+        let (dec_shape, pre_shape) = self.batch_shapes(&decode, &prefill);
+        let res = self.executor.run_spatial(&dec_shape, &pre_shape, &plan);
+        let dur = res.span;
+        let t_end = self.clock + dur;
+        let k = plan.k.max(1);
+
+        // Look-ahead decode: reserve k slots per request up front (§4.3),
+        // then run k uninterrupted steps; step i completes at
+        // t0 + dispatch + (i+1)·t_step.
+        for &id in &decode {
+            let _ = self.kv.reserve(id, k as u64); // best-effort; append below enforces
+        }
+        let t0 = self.clock;
+        for i in 0..k {
+            let t_tok = t0 + res.dec.dispatch_time + (i + 1) as f64 * res.t_decode_step;
+            for &id in &decode {
+                let done = self
+                    .running
+                    .iter()
+                    .find(|r| r.id == id)
+                    .map(|r| r.phase != Phase::Decode)
+                    .unwrap_or(true);
+                if done {
+                    continue; // finished mid-look-ahead: slot wasted
+                }
+                if self.kv_append_or_preempt(id, 1) {
+                    if let Some(r) = self.running.iter_mut().find(|r| r.id == id) {
+                        r.advance_decode(t_tok.min(t_end));
+                    }
+                }
+            }
+        }
+
+        // Prefill side advances at the synchronization point.
+        for c in &prefill {
+            if self.kv_append_or_preempt(c.id, c.tokens) {
+                if let Some(pos) = self.running.iter().position(|r| r.id == c.id) {
+                    let r = &mut self.running[pos];
+                    r.advance_prefill(c.tokens);
+                    if r.phase == Phase::Decode {
+                        let id = r.id;
+                        if self.kv_append_or_preempt(id, 1) {
+                            if let Some(r) = self.running.iter_mut().find(|r| r.id == id) {
+                                r.advance_decode(t_end);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Utilization: weight each side by its busy time over its SM share.
+        let f_dec = plan.decode.fraction(&self.cfg.gpu);
+        let f_pre = plan.prefill.fraction(&self.cfg.gpu);
+        let busy_dec = (k as f64 * res.t_decode_step).min(res.span);
+        let busy_pre = res.t_prefill.min(res.span);
+        let sm = f_dec * res.dec.sm_util * busy_dec / res.span
+            + f_pre * res.pre.sm_util * busy_pre / res.span;
+        let hbm = res.dec.hbm_util * busy_dec / res.span
+            + res.pre.hbm_util * busy_pre / res.span;
+        self.metrics.record_util(res.span, sm, hbm);
+        self.metrics.busy_time += res.span;
+        self.metrics.iterations += 1;
+        self.metrics.spatial_iterations += 1;
+        if self.log_events {
+            self.events.push(IterEvent {
+                t_start: self.clock,
+                duration: dur,
+                kind: IterKind::Spatial {
+                    decode_tpcs: plan.decode.n_tpcs,
+                    prefill_tpcs: plan.prefill.n_tpcs,
+                    k,
+                },
+                n_decode: decode.len() as u32,
+                prefill_tokens: pre_shape.n_tokens,
+                sched_s,
+                sm_util: sm,
+                hbm_util: hbm,
+            });
+        }
+        self.clock = t_end;
+        self.retire_finished();
+    }
+
+    fn retire_finished(&mut self) {
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].phase == Phase::Finished {
+                let r = self.running.swap_remove(i);
+                let _ = self.kv.release(r.id);
+                self.metrics.record_finished(&r);
+                self.finished.push(r);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Engine-level invariants, used by property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.kv.check_invariants()?;
+        for r in &self.running {
+            if r.phase == Phase::Finished {
+                return Err(format!("finished request {} still running", r.id));
+            }
+            if r.generated > r.output_len {
+                return Err(format!("request {} over-generated", r.id));
+            }
+        }
+        for r in &self.finished {
+            if r.generated != r.output_len || r.phase != Phase::Finished {
+                return Err(format!("request {} retired unfinished", r.id));
+            }
+            let mut times = r.token_times.clone();
+            let mut sorted = times.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            if times != sorted {
+                return Err(format!("request {} token times not monotone", r.id));
+            }
+            times.dedup();
+            let _ = times;
+        }
+        Ok(())
+    }
+}
+
+/// Convenience: build an engine for a config (maps `cfg.policy` to a
+/// scheduler). Disaggregated policies must use [`DisaggEngine`] instead.
+pub fn engine_for(cfg: ServingConfig, seed: u64) -> SimEngine {
+    use crate::config::Policy;
+    use crate::roofline::Predictor;
+    use crate::sched::{ChunkedScheduler, DuetScheduler, SglangDefaultScheduler,
+        StaticPartitionScheduler};
+
+    let pred = Predictor::new(cfg.model.clone(), cfg.gpu.clone(), cfg.tp);
+    let sched: Box<dyn Scheduler> = match &cfg.policy {
+        Policy::VllmChunked => Box::new(
+            ChunkedScheduler::new(cfg.token_budget as u64, cfg.max_batch as usize, cfg.kv_watermark)
+                .labeled("vLLM"),
+        ),
+        Policy::SglangChunked => Box::new(
+            ChunkedScheduler::new(cfg.token_budget as u64, cfg.max_batch as usize, cfg.kv_watermark)
+                .labeled("SGLang-Chunked"),
+        ),
+        Policy::SglangDefault => Box::new(SglangDefaultScheduler::new(
+            2 * cfg.token_budget as u64,
+            cfg.max_batch as usize,
+        )),
+        Policy::Duet => Box::new(DuetScheduler::new(
+            pred,
+            cfg.token_budget as u64,
+            cfg.max_batch as usize,
+            cfg.kv_watermark,
+            cfg.tbt_slo,
+            cfg.max_lookahead,
+        )),
+        Policy::StaticPartition {
+            decode_tpcs,
+            prefill_tpcs,
+        } => Box::new(StaticPartitionScheduler::new(
+            pred,
+            cfg.token_budget as u64,
+            cfg.max_batch as usize,
+            *decode_tpcs,
+            *prefill_tpcs,
+        )),
+        Policy::DisaggPD { .. } => panic!("use DisaggEngine for disaggregated policies"),
+    };
+    SimEngine::new(cfg, sched, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Policy, ServingConfig};
+    use crate::workload::synthetic::fixed_workload;
+
+    fn small_cfg(policy: Policy) -> ServingConfig {
+        ServingConfig::default_8b().with_policy(policy)
+    }
+
+    #[test]
+    fn vllm_engine_completes_workload() {
+        let mut e = engine_for(small_cfg(Policy::VllmChunked), 1);
+        let w = fixed_workload(20, 2048, 16, 4.0, 1);
+        let rep = e.run(w);
+        assert_eq!(rep.completed, 20);
+        assert_eq!(e.dropped, 0);
+        assert!(rep.ttft.mean > 0.0);
+        assert!(rep.tbt.mean > 0.0);
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn duet_engine_completes_and_goes_spatial_under_load() {
+        let mut e = engine_for(small_cfg(Policy::Duet), 1);
+        // Long prompts + long-ish outputs at high rate: mixed batches
+        // will threaten the 100ms TBT SLO.
+        let w = fixed_workload(30, 8000, 64, 8.0, 2);
+        let rep = e.run(w);
+        assert_eq!(rep.completed, 30);
+        assert!(
+            rep.spatial_iterations > 0,
+            "duet should trigger spatial multiplexing under this load"
+        );
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn duet_tbt_beats_vllm_under_contention() {
+        // The paper's headline behaviour: under prefill pressure Duet's
+        // decode TBT stays bounded while vLLM's inflates.
+        let w = fixed_workload(40, 8000, 128, 6.0, 3);
+        let mut ev = engine_for(small_cfg(Policy::VllmChunked), 1);
+        let rv = ev.run(w.clone());
+        let mut ed = engine_for(small_cfg(Policy::Duet), 1);
+        let rd = ed.run(w);
+        assert!(
+            rd.tbt.mean < rv.tbt.mean,
+            "duet tbt {} should beat vllm {}",
+            rd.tbt.mean,
+            rv.tbt.mean
+        );
+    }
+
+    #[test]
+    fn finished_requests_have_full_output() {
+        let mut e = engine_for(small_cfg(Policy::VllmChunked), 5);
+        let w = fixed_workload(10, 500, 20, 10.0, 5);
+        e.run(w);
+        for r in &e.finished {
+            assert_eq!(r.generated, r.output_len);
+            assert_eq!(r.token_times.len(), r.output_len as usize);
+        }
+    }
+
+    #[test]
+    fn sglang_default_inflates_tbt() {
+        let w = fixed_workload(40, 4000, 128, 8.0, 4);
+        let mut es = engine_for(small_cfg(Policy::SglangDefault), 1);
+        let rs = es.run(w.clone());
+        let mut ed = engine_for(small_cfg(Policy::Duet), 1);
+        let rd = ed.run(w);
+        assert!(rs.completed == 40 && rd.completed == 40);
+        assert!(
+            rs.tbt.max > rd.tbt.max,
+            "sglang-default max tbt {} should exceed duet {}",
+            rs.tbt.max,
+            rd.tbt.max
+        );
+    }
+
+    #[test]
+    fn oversized_prompt_is_dropped_not_deadlocked() {
+        let mut cfg = small_cfg(Policy::VllmChunked);
+        cfg.gpu_mem_util = 0.25; // tiny KV space
+        let mut e = engine_for(cfg, 1);
+        // One prompt far larger than KV capacity.
+        let kv_tokens = e.cfg.kv_capacity_tokens();
+        let w = fixed_workload(1, kv_tokens * 2, 4, 1.0, 1);
+        let rep = e.run(w);
+        assert_eq!(rep.completed, 0);
+        assert_eq!(e.dropped, 1);
+    }
+
+    #[test]
+    fn events_logged_when_enabled() {
+        let mut e = engine_for(small_cfg(Policy::Duet), 1);
+        e.log_events = true;
+        let w = fixed_workload(10, 4000, 16, 8.0, 1);
+        e.run(w);
+        assert!(!e.events.is_empty());
+        // events must tile the timeline monotonically
+        assert!(e
+            .events
+            .windows(2)
+            .all(|w| w[1].t_start >= w[0].t_start));
+    }
+}

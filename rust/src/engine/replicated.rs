@@ -1,0 +1,81 @@
+//! N-replica aggregated serving under round-robin dispatch (the Fig. 2
+//! "Agg-vLLM on two GPUs" setup: both GPUs host identical model replicas).
+
+use crate::config::ServingConfig;
+use crate::metrics::{Recorder, Report};
+use crate::workload::Workload;
+
+use super::{engine_for, SimEngine};
+
+/// Round-robin front-end over N independent single-GPU engines.
+pub struct ReplicatedEngine {
+    pub engines: Vec<SimEngine>,
+}
+
+impl ReplicatedEngine {
+    pub fn new(cfg: ServingConfig, replicas: u32, seed: u64) -> ReplicatedEngine {
+        let engines = (0..replicas)
+            .map(|i| engine_for(cfg.clone(), seed + i as u64))
+            .collect();
+        ReplicatedEngine { engines }
+    }
+
+    /// Dispatch round-robin, run every replica to completion, merge
+    /// metrics. The end-to-end duration is the slowest replica's (the
+    /// system is done when all replicas drain).
+    pub fn run(&mut self, workload: Workload) -> Report {
+        let n = self.engines.len();
+        let mut shards: Vec<Vec<crate::request::Request>> = vec![Vec::new(); n];
+        for (i, r) in workload.requests.into_iter().enumerate() {
+            shards[i % n].push(r);
+        }
+        let mut merged = Recorder::new();
+        let mut max_dur = 0.0f64;
+        let mut name = String::new();
+        for (e, shard) in self.engines.iter_mut().zip(shards) {
+            let rep = e.run(Workload {
+                name: workload.name.clone(),
+                requests: shard,
+            });
+            name = format!("{}x{}", rep.system, n);
+            max_dur = max_dur.max(rep.duration);
+            for r in &e.finished {
+                merged.record_finished(r);
+            }
+            merged.merge_iteration_state(&e.metrics);
+        }
+        merged.duration = max_dur;
+        merged.report(&name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Policy, ServingConfig};
+    use crate::workload::synthetic::fixed_workload;
+
+    #[test]
+    fn two_replicas_complete_everything() {
+        let cfg = ServingConfig::default_8b().with_policy(Policy::VllmChunked);
+        let mut e = ReplicatedEngine::new(cfg, 2, 1);
+        let rep = e.run(fixed_workload(20, 2000, 16, 6.0, 1));
+        assert_eq!(rep.completed, 20);
+        assert!(rep.system.contains("x2"));
+    }
+
+    #[test]
+    fn two_replicas_roughly_double_throughput() {
+        let w = fixed_workload(40, 8000, 32, 20.0, 2);
+        let cfg = ServingConfig::default_8b().with_policy(Policy::VllmChunked);
+        let mut e1 = ReplicatedEngine::new(cfg.clone(), 1, 1);
+        let r1 = e1.run(w.clone());
+        let mut e2 = ReplicatedEngine::new(cfg, 2, 1);
+        let r2 = e2.run(w);
+        let speedup = r2.throughput_rps / r1.throughput_rps;
+        assert!(
+            speedup > 1.5,
+            "2 replicas should be ~2x at saturation, got {speedup}"
+        );
+    }
+}

@@ -1,0 +1,93 @@
+//! Simulated GPU hardware substrate.
+//!
+//! The paper partitions H100 SMs per CUDA stream with `libsmctrl`
+//! (driver-level SM masks, TPC granularity). No GPU exists in this
+//! environment, so this module provides the equivalent abstraction over
+//! the simulated device: TPC-granular [`SmMask`]s, a [`Gpu`] that exposes
+//! achievable Π_SM / B_HBM for a partition, and a multi-GPU [`Node`] with
+//! NVLink. The discrete-event executor in [`crate::sim`] consumes these.
+
+pub mod partition;
+
+pub use partition::{PartitionPlan, SmMask};
+
+use crate::config::GpuSpec;
+
+/// One simulated GPU device.
+#[derive(Debug, Clone)]
+pub struct Gpu {
+    pub spec: GpuSpec,
+    pub id: u32,
+}
+
+impl Gpu {
+    pub fn new(id: u32, spec: GpuSpec) -> Gpu {
+        Gpu { spec, id }
+    }
+
+    /// Achievable FLOP/s for a partition (TPC-quantized SM count).
+    pub fn pi(&self, mask: &SmMask) -> f64 {
+        self.spec.pi_sm(mask.num_sms(&self.spec))
+    }
+
+    /// Achievable HBM bandwidth for a partition. NOTE: when two partitions
+    /// run concurrently their *combined* demand is capped by the device
+    /// peak — the executor enforces that; this is the isolated-curve value.
+    pub fn bw(&self, mask: &SmMask) -> f64 {
+        self.spec.b_hbm(mask.num_sms(&self.spec))
+    }
+}
+
+/// A single-node multi-GPU server (the paper's testbed: 2×H100 NVLink,
+/// Table 3: 8×H100).
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub gpus: Vec<Gpu>,
+}
+
+impl Node {
+    pub fn new(n: u32, spec: GpuSpec) -> Node {
+        Node {
+            gpus: (0..n).map(|i| Gpu::new(i, spec.clone())).collect(),
+        }
+    }
+
+    pub fn n_gpus(&self) -> u32 {
+        self.gpus.len() as u32
+    }
+
+    /// Peer-to-peer KV transfer time over NVLink for `bytes` bytes
+    /// (disaggregated prefill→decode handoff).
+    pub fn p2p_transfer_time(&self, bytes: u64) -> f64 {
+        let bw = self.gpus[0].spec.nvlink_bandwidth;
+        // NIXL-style P2P achieves ~80% of link peak; plus a fixed setup.
+        20e-6 + bytes as f64 / (0.8 * bw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+
+    #[test]
+    fn gpu_partition_curves() {
+        let g = Gpu::new(0, GpuSpec::h100());
+        let full = SmMask::full(&g.spec);
+        let half = SmMask::tpcs(0, 33);
+        assert!((g.pi(&full) - g.spec.peak_flops).abs() < 1.0);
+        assert!((g.pi(&half) / g.spec.peak_flops - 0.5).abs() < 1e-9);
+        // bandwidth at half the SMs is way above half of peak (super-linear)
+        assert!(g.bw(&half) / g.spec.hbm_bandwidth > 0.8);
+    }
+
+    #[test]
+    fn node_p2p_time_scales() {
+        let node = Node::new(2, GpuSpec::h100());
+        let t_small = node.p2p_transfer_time(1 << 20);
+        let t_big = node.p2p_transfer_time(1 << 30);
+        assert!(t_big > t_small);
+        // 1 GiB over 0.8*450GB/s ≈ 3 ms
+        assert!((t_big - 3.0e-3).abs() < 1.0e-3);
+    }
+}

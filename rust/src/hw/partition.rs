@@ -1,0 +1,155 @@
+//! TPC-granular SM masks — the libsmctrl equivalent.
+//!
+//! `libsmctrl` (Bakita & Anderson 2023) masks TPCs visible to a kernel or
+//! stream at launch time; the smallest unit is one TPC (2 SMs on H100).
+//! [`SmMask`] models a contiguous TPC range (partitions in the paper are
+//! two disjoint sets; contiguity is irrelevant to the cost model), and
+//! [`PartitionPlan`] is the scheduler's chosen configuration
+//! `(S_p, S_d, k)` from Algorithm 1.
+
+use crate::config::GpuSpec;
+
+/// A set of TPCs assigned to one stream, `[start_tpc, start_tpc + n_tpcs)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SmMask {
+    pub start_tpc: u32,
+    pub n_tpcs: u32,
+}
+
+impl SmMask {
+    /// Mask covering a TPC range.
+    pub fn tpcs(start_tpc: u32, n_tpcs: u32) -> SmMask {
+        SmMask { start_tpc, n_tpcs }
+    }
+
+    /// The whole device.
+    pub fn full(spec: &GpuSpec) -> SmMask {
+        SmMask {
+            start_tpc: 0,
+            n_tpcs: spec.num_tpcs(),
+        }
+    }
+
+    /// Number of SMs this mask exposes on `spec`.
+    pub fn num_sms(&self, spec: &GpuSpec) -> u32 {
+        self.n_tpcs * spec.sms_per_tpc
+    }
+
+    /// Fraction of the device.
+    pub fn fraction(&self, spec: &GpuSpec) -> f64 {
+        self.n_tpcs as f64 / spec.num_tpcs() as f64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_tpcs == 0
+    }
+
+    /// Whether two masks overlap (must be disjoint for spatial sharing).
+    pub fn overlaps(&self, other: &SmMask) -> bool {
+        if self.is_empty() || other.is_empty() {
+            return false;
+        }
+        let a_end = self.start_tpc + self.n_tpcs;
+        let b_end = other.start_tpc + other.n_tpcs;
+        self.start_tpc < b_end && other.start_tpc < a_end
+    }
+}
+
+/// Algorithm 1's output: the spatial-sharing configuration `C* = (S_p,
+/// S_d, k)` plus the masks realizing it. `decode` gets the low TPCs,
+/// `prefill` the high ones.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartitionPlan {
+    pub decode: SmMask,
+    pub prefill: SmMask,
+    /// Look-ahead decode steps per prefill span.
+    pub k: u32,
+    /// Predicted decode step latency under this plan (seconds).
+    pub t_decode: f64,
+    /// Predicted prefill span latency under this plan (seconds).
+    pub t_prefill: f64,
+    /// Predicted token throughput ρ of this plan (tokens/second).
+    pub rho: f64,
+}
+
+impl PartitionPlan {
+    /// Construct a plan splitting `spec` into `decode_tpcs` low TPCs for
+    /// decode and the rest for prefill.
+    pub fn split(spec: &GpuSpec, decode_tpcs: u32, k: u32) -> PartitionPlan {
+        let total = spec.num_tpcs();
+        assert!(decode_tpcs <= total, "decode partition exceeds device");
+        PartitionPlan {
+            decode: SmMask::tpcs(0, decode_tpcs),
+            prefill: SmMask::tpcs(decode_tpcs, total - decode_tpcs),
+            k,
+            t_decode: 0.0,
+            t_prefill: 0.0,
+            rho: 0.0,
+        }
+    }
+
+    /// Predicted wall time of the spatial iteration:
+    /// `max(k · t_d, t_p)` (paper §4.2).
+    pub fn span(&self) -> f64 {
+        (self.k as f64 * self.t_decode).max(self.t_prefill)
+    }
+
+    /// Partition invariant: masks disjoint and exactly covering the device.
+    pub fn is_valid(&self, spec: &GpuSpec) -> bool {
+        !self.decode.overlaps(&self.prefill)
+            && self.decode.n_tpcs + self.prefill.n_tpcs <= spec.num_tpcs()
+            && self.k >= 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+
+    #[test]
+    fn mask_sm_count_and_fraction() {
+        let spec = GpuSpec::h100();
+        let m = SmMask::tpcs(0, 33);
+        assert_eq!(m.num_sms(&spec), 66);
+        assert!((m.fraction(&spec) - 0.5).abs() < 1e-9);
+        assert_eq!(SmMask::full(&spec).num_sms(&spec), 132);
+    }
+
+    #[test]
+    fn overlap_detection() {
+        let a = SmMask::tpcs(0, 20);
+        let b = SmMask::tpcs(20, 46);
+        let c = SmMask::tpcs(19, 2);
+        assert!(!a.overlaps(&b));
+        assert!(a.overlaps(&c));
+        assert!(b.overlaps(&c));
+        assert!(!a.overlaps(&SmMask::tpcs(5, 0)), "empty never overlaps");
+    }
+
+    #[test]
+    fn split_covers_device_disjointly() {
+        let spec = GpuSpec::h100();
+        for d in 1..spec.num_tpcs() {
+            let p = PartitionPlan::split(&spec, d, 3);
+            assert!(p.is_valid(&spec), "d={d}");
+            assert_eq!(p.decode.n_tpcs + p.prefill.n_tpcs, spec.num_tpcs());
+        }
+    }
+
+    #[test]
+    fn span_is_max_of_sides() {
+        let mut p = PartitionPlan::split(&GpuSpec::h100(), 9, 5);
+        p.t_decode = 0.01;
+        p.t_prefill = 0.04;
+        assert!((p.span() - 0.05).abs() < 1e-12); // 5*0.01 > 0.04
+        p.t_prefill = 0.08;
+        assert!((p.span() - 0.08).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_split_panics() {
+        PartitionPlan::split(&GpuSpec::h100(), 67, 1);
+    }
+}

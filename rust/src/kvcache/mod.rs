@@ -1,0 +1,305 @@
+//! Paged KV-cache management (vLLM-style; Kwon et al. 2023).
+//!
+//! The engines track KV memory at block granularity: a block holds
+//! `block_tokens` tokens of K+V for all layers. The allocator hands out
+//! physical block ids; [`KvManager`] maps each request to its block table
+//! and implements the look-ahead preallocation DuetServe's §4.3 engine
+//! needs (reserve `k` future decode slots up front so k decode steps can
+//! run without CPU synchronization).
+
+pub mod allocator;
+
+pub use allocator::BlockAllocator;
+
+use crate::request::RequestId;
+use std::collections::HashMap;
+
+/// Physical block id.
+pub type BlockId = u32;
+
+/// Errors surfaced to the scheduler (admission control reacts to these).
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum KvError {
+    #[error("out of KV blocks: need {need}, free {free}")]
+    OutOfBlocks { need: u64, free: u64 },
+    #[error("unknown request {0}")]
+    UnknownRequest(RequestId),
+}
+
+/// Per-request block table.
+#[derive(Debug, Clone, Default)]
+pub struct BlockTable {
+    pub blocks: Vec<BlockId>,
+    /// Tokens stored (≤ blocks.len() * block_tokens).
+    pub tokens: u64,
+    /// Tokens *reserved* ahead of time (look-ahead decode slots).
+    pub reserved_tokens: u64,
+}
+
+/// KV-cache manager: allocator + block tables + watermark admission.
+#[derive(Debug)]
+pub struct KvManager {
+    alloc: BlockAllocator,
+    block_tokens: u32,
+    tables: HashMap<RequestId, BlockTable>,
+}
+
+impl KvManager {
+    pub fn new(total_blocks: u64, block_tokens: u32) -> KvManager {
+        KvManager {
+            alloc: BlockAllocator::new(total_blocks),
+            block_tokens,
+            tables: HashMap::new(),
+        }
+    }
+
+    pub fn free_blocks(&self) -> u64 {
+        self.alloc.free()
+    }
+
+    pub fn total_blocks(&self) -> u64 {
+        self.alloc.total()
+    }
+
+    pub fn free_fraction(&self) -> f64 {
+        self.alloc.free() as f64 / self.alloc.total().max(1) as f64
+    }
+
+    pub fn block_tokens(&self) -> u32 {
+        self.block_tokens
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: u64) -> u64 {
+        tokens.div_ceil(self.block_tokens as u64)
+    }
+
+    /// Can `tokens` additional tokens be appended for `id` without
+    /// exceeding capacity? (Headroom in already-held blocks counts.)
+    pub fn can_append(&self, id: RequestId, tokens: u64) -> bool {
+        let headroom = self
+            .tables
+            .get(&id)
+            .map(|t| t.blocks.len() as u64 * self.block_tokens as u64 - t.tokens)
+            .unwrap_or(0);
+        let extra = tokens.saturating_sub(headroom);
+        extra == 0 || self.blocks_for(extra) <= self.alloc.free()
+    }
+
+    /// Register a request (no allocation yet).
+    pub fn register(&mut self, id: RequestId) {
+        self.tables.entry(id).or_default();
+    }
+
+    /// Append `tokens` tokens to `id`'s cache, allocating blocks as
+    /// needed. Fails atomically (no partial allocation) when blocks run
+    /// out.
+    pub fn append(&mut self, id: RequestId, tokens: u64) -> Result<(), KvError> {
+        let bt = self.block_tokens as u64;
+        let table = self
+            .tables
+            .get_mut(&id)
+            .ok_or(KvError::UnknownRequest(id))?;
+        let capacity = table.blocks.len() as u64 * bt;
+        let needed_tokens = (table.tokens + tokens).saturating_sub(capacity);
+        let need_blocks = needed_tokens.div_ceil(bt);
+        if need_blocks > 0 {
+            let got = self
+                .alloc
+                .allocate(need_blocks)
+                .map_err(|free| KvError::OutOfBlocks {
+                    need: need_blocks,
+                    free,
+                })?;
+            table.blocks.extend(got);
+        }
+        table.tokens += tokens;
+        table.reserved_tokens = table.reserved_tokens.saturating_sub(tokens);
+        Ok(())
+    }
+
+    /// Reserve room for `tokens` future tokens (look-ahead decode §4.3):
+    /// blocks are allocated now so `k` decode steps can append without
+    /// ever taking the allocator lock / syncing with the CPU.
+    pub fn reserve(&mut self, id: RequestId, tokens: u64) -> Result<(), KvError> {
+        let bt = self.block_tokens as u64;
+        let table = self
+            .tables
+            .get_mut(&id)
+            .ok_or(KvError::UnknownRequest(id))?;
+        let capacity = table.blocks.len() as u64 * bt;
+        let want = table.tokens + table.reserved_tokens + tokens;
+        let needed_tokens = want.saturating_sub(capacity);
+        let need_blocks = needed_tokens.div_ceil(bt);
+        if need_blocks > 0 {
+            let got = self
+                .alloc
+                .allocate(need_blocks)
+                .map_err(|free| KvError::OutOfBlocks {
+                    need: need_blocks,
+                    free,
+                })?;
+            table.blocks.extend(got);
+        }
+        table.reserved_tokens += tokens;
+        Ok(())
+    }
+
+    /// Release everything held by `id` (request finished or preempted).
+    pub fn release(&mut self, id: RequestId) -> Result<(), KvError> {
+        let table = self.tables.remove(&id).ok_or(KvError::UnknownRequest(id))?;
+        self.alloc.release(&table.blocks);
+        Ok(())
+    }
+
+    /// Tokens currently stored for `id`.
+    pub fn tokens_of(&self, id: RequestId) -> u64 {
+        self.tables.get(&id).map(|t| t.tokens).unwrap_or(0)
+    }
+
+    /// Blocks held by `id`.
+    pub fn blocks_of(&self, id: RequestId) -> u64 {
+        self.tables.get(&id).map(|t| t.blocks.len() as u64).unwrap_or(0)
+    }
+
+    /// Used blocks across all requests.
+    pub fn used_blocks(&self) -> u64 {
+        self.alloc.total() - self.alloc.free()
+    }
+
+    /// Invariant check used by property tests: allocator accounting must
+    /// match the sum of table holdings, and no block may appear twice.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = std::collections::HashSet::new();
+        let mut held = 0u64;
+        for (id, t) in &self.tables {
+            held += t.blocks.len() as u64;
+            for b in &t.blocks {
+                if !seen.insert(*b) {
+                    return Err(format!("block {b} double-owned (req {id})"));
+                }
+            }
+            let cap = t.blocks.len() as u64 * self.block_tokens as u64;
+            if t.tokens + t.reserved_tokens > cap {
+                return Err(format!(
+                    "req {id}: tokens {} + reserved {} exceed capacity {cap}",
+                    t.tokens, t.reserved_tokens
+                ));
+            }
+        }
+        if held + self.alloc.free() != self.alloc.total() {
+            return Err(format!(
+                "leak: held {held} + free {} != total {}",
+                self.alloc.free(),
+                self.alloc.total()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_allocates_blocks() {
+        let mut kv = KvManager::new(10, 16);
+        kv.register(1);
+        kv.append(1, 20).unwrap();
+        assert_eq!(kv.blocks_of(1), 2);
+        assert_eq!(kv.tokens_of(1), 20);
+        assert_eq!(kv.free_blocks(), 8);
+        kv.append(1, 12).unwrap(); // fits in existing block
+        assert_eq!(kv.blocks_of(1), 2);
+        kv.append(1, 1).unwrap(); // spills
+        assert_eq!(kv.blocks_of(1), 3);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn out_of_blocks_is_atomic() {
+        let mut kv = KvManager::new(2, 16);
+        kv.register(1);
+        kv.append(1, 16).unwrap();
+        let err = kv.append(1, 100).unwrap_err();
+        assert!(matches!(err, KvError::OutOfBlocks { .. }));
+        // failed append must not change state
+        assert_eq!(kv.tokens_of(1), 16);
+        assert_eq!(kv.free_blocks(), 1);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_returns_blocks() {
+        let mut kv = KvManager::new(8, 16);
+        kv.register(1);
+        kv.register(2);
+        kv.append(1, 64).unwrap();
+        kv.append(2, 32).unwrap();
+        assert_eq!(kv.free_blocks(), 2);
+        kv.release(1).unwrap();
+        assert_eq!(kv.free_blocks(), 6);
+        assert_eq!(kv.release(1).unwrap_err(), KvError::UnknownRequest(1));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reserve_then_append_consumes_reservation() {
+        let mut kv = KvManager::new(8, 16);
+        kv.register(1);
+        kv.append(1, 10).unwrap();
+        // reserve 8 look-ahead tokens: 10+8=18 -> needs 2 blocks total
+        kv.reserve(1, 8).unwrap();
+        assert_eq!(kv.blocks_of(1), 2);
+        let free_before = kv.free_blocks();
+        // appending within the reservation must not allocate
+        kv.append(1, 6).unwrap();
+        assert_eq!(kv.free_blocks(), free_before);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn free_fraction_for_watermark() {
+        let mut kv = KvManager::new(100, 16);
+        kv.register(1);
+        kv.append(1, 16 * 98).unwrap();
+        assert!((kv.free_fraction() - 0.02).abs() < 1e-9);
+    }
+
+    #[test]
+    fn property_no_leak_under_random_ops() {
+        use crate::util::proptest::check;
+        check(64, |g| {
+            let total = g.u64_range(4, 64);
+            let mut kv = KvManager::new(total, 16);
+            let mut live: Vec<RequestId> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..g.usize_range(5, 60) {
+                match g.u64_range(0, 3) {
+                    0 => {
+                        kv.register(next_id);
+                        live.push(next_id);
+                        next_id += 1;
+                    }
+                    1 if !live.is_empty() => {
+                        let id = *g.choose(&live);
+                        let _ = kv.append(id, g.u64_range(1, 64));
+                    }
+                    2 if !live.is_empty() => {
+                        let id = *g.choose(&live);
+                        let _ = kv.reserve(id, g.u64_range(1, 32));
+                    }
+                    3 if !live.is_empty() => {
+                        let idx = g.usize_range(0, live.len() - 1);
+                        let id = live.swap_remove(idx);
+                        kv.release(id).map_err(|e| e.to_string())?;
+                    }
+                    _ => {}
+                }
+                kv.check_invariants()?;
+            }
+            Ok(())
+        });
+    }
+}

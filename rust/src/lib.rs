@@ -1,0 +1,31 @@
+//! # DuetServe
+//!
+//! Reproduction of *"DuetServe: Harmonizing Prefill and Decode for LLM
+//! Serving via Adaptive GPU Multiplexing"* as a three-layer Rust + JAX +
+//! Pallas system. See `DESIGN.md` for the system inventory and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! Layer map:
+//! - L3 (this crate): serving coordinator — schedulers, roofline
+//!   predictor, SM-partition optimizer, paged KV cache, engines,
+//!   baselines, simulated-GPU substrate, PJRT runtime.
+//! - L2 (`python/compile/model.py`): JAX transformer lowered AOT to HLO
+//!   text in `artifacts/`.
+//! - L1 (`python/compile/kernels/`): Pallas attention kernels called by
+//!   L2 (interpret mode on CPU).
+
+pub mod cli;
+pub mod config;
+pub mod hw;
+pub mod kvcache;
+pub mod model;
+pub mod request;
+pub mod engine;
+pub mod metrics;
+pub mod sched;
+pub mod server;
+pub mod sim;
+pub mod roofline;
+pub mod runtime;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,210 @@
+//! DuetServe launcher.
+//!
+//! Subcommands:
+//!   serve      — run a simulated serving experiment (policy x workload)
+//!   traces     — print Table-1 statistics of the calibrated traces
+//!   partition  — inspect the Algorithm-1 optimizer for a batch shape
+//!   e2e        — serve the real AOT-compiled tiny model via PJRT
+//!   config     — dump the effective serving configuration
+//!
+//! Examples:
+//!   duetserve serve --policy duet --trace azure-conv --qps 10 --n 300
+//!   duetserve serve --policy vllm --isl 8000 --osl 200 --qps 6 --n 100
+//!   duetserve partition --decode 64 --ctx 8192 --prefill 8192
+//!   duetserve e2e --requests 16 --max-new 24
+
+use duetserve::cli::Args;
+use duetserve::config::{ModelSpec, Policy, ServingConfig};
+use duetserve::engine::{engine_for, DisaggEngine};
+use duetserve::metrics::Report;
+use duetserve::model::AttnShape;
+use duetserve::roofline::{BatchShape, Predictor};
+use duetserve::runtime::{artifacts, RealEngine, RealPolicy, RealRequest, TinyRuntime};
+use duetserve::sched::optimize_partition;
+use duetserve::util::tablefmt::Table;
+use duetserve::workload::synthetic::fixed_workload;
+use duetserve::workload::traces::{generate, trace_by_name, TraceKind};
+use duetserve::workload::Workload;
+
+fn policy_by_name(name: &str) -> Option<Policy> {
+    match name.to_ascii_lowercase().as_str() {
+        "vllm" => Some(Policy::VllmChunked),
+        "sglang" | "sglang-default" => Some(Policy::SglangDefault),
+        "sglang-chunked" => Some(Policy::SglangChunked),
+        "duet" | "duetserve" => Some(Policy::Duet),
+        "dynamo" | "disagg" => Some(Policy::DisaggPD {
+            prefill_gpus: 1,
+            decode_gpus: 1,
+        }),
+        _ => None,
+    }
+}
+
+fn build_config(args: &Args) -> ServingConfig {
+    let model =
+        ModelSpec::by_name(&args.str_or("model", "qwen3-8b")).unwrap_or_else(ModelSpec::qwen3_8b);
+    let tp = args.u32_or("tp", 1);
+    let mut cfg = ServingConfig::default_8b().with_model(model, tp);
+    cfg.token_budget = args.u32_or("budget", cfg.token_budget);
+    cfg.tbt_slo = args.f64_or("tbt-slo", cfg.tbt_slo);
+    cfg.max_batch = args.u32_or("max-batch", cfg.max_batch);
+    cfg.policy = policy_by_name(&args.str_or("policy", "duet")).unwrap_or(Policy::Duet);
+    cfg
+}
+
+fn build_workload(args: &Args, qps: f64, seed: u64) -> Workload {
+    let n = args.usize_or("n", 200);
+    if let Some(kind) = args.get("trace").and_then(trace_by_name) {
+        generate(kind, Some(n), qps, seed)
+    } else {
+        let isl = args.usize_or("isl", 4096) as u64;
+        let osl = args.usize_or("osl", 128) as u64;
+        fixed_workload(n, isl, osl, qps, seed)
+    }
+}
+
+fn cmd_serve(args: &Args) {
+    let cfg = build_config(args);
+    let qps = args.f64_or("qps", 8.0);
+    let seed = args.usize_or("seed", 1) as u64;
+    let w = build_workload(args, qps, seed);
+    println!(
+        "serving {} requests ({}) with {} (TP={})",
+        w.requests.len(),
+        w.name,
+        cfg.policy.name(),
+        cfg.tp
+    );
+    let rep = match cfg.policy {
+        Policy::DisaggPD {
+            prefill_gpus,
+            decode_gpus,
+        } => {
+            let mut e = DisaggEngine::new(cfg.clone(), prefill_gpus, decode_gpus, seed);
+            e.run(w)
+        }
+        _ => {
+            let mut e = engine_for(cfg, seed);
+            let rep = e.run(w);
+            if e.preemptions > 0 || e.dropped > 0 {
+                println!("preemptions: {}, dropped: {}", e.preemptions, e.dropped);
+            }
+            rep
+        }
+    };
+    let mut t = Table::new(Report::header());
+    t.row(rep.row(qps));
+    t.print();
+}
+
+fn cmd_traces() {
+    let mut t = Table::new(vec!["trace", "#requests", "mean-ISL", "mean-OSL"]);
+    for kind in TraceKind::all() {
+        let (n, _, _, _, _) = kind.calibration();
+        let w = generate(kind, Some(n.min(4000)), 10.0, 1);
+        let s = w.stats();
+        t.row(vec![
+            kind.name().to_string(),
+            format!("{n}"),
+            format!("{:.0}", s.mean_isl),
+            format!("{:.0}", s.mean_osl),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_partition(args: &Args) {
+    let cfg = build_config(args);
+    let pred = Predictor::new(cfg.model.clone(), cfg.gpu.clone(), cfg.tp);
+    let n_dec = args.usize_or("decode", 32) as u64;
+    let ctx = args.usize_or("ctx", 4096) as u64;
+    let pre_tok = args.usize_or("prefill", 8192) as u64;
+    let dec = BatchShape::from_shapes((0..n_dec).map(|_| AttnShape { q: 1, c: ctx }).collect());
+    let pre = BatchShape::from_shapes(vec![AttnShape { q: pre_tok, c: 0 }]);
+    match optimize_partition(&pred, &dec, &pre, cfg.tbt_slo, cfg.max_lookahead) {
+        Some(p) => println!(
+            "plan: Sd={} TPCs, Sp={} TPCs, k={}, t_d={:.1}ms, t_p={:.1}ms, \
+             rho={:.0} tok/s, span={:.1}ms",
+            p.decode.n_tpcs,
+            p.prefill.n_tpcs,
+            p.k,
+            p.t_decode * 1e3,
+            p.t_prefill * 1e3,
+            p.rho,
+            p.span() * 1e3
+        ),
+        None => println!("no feasible split under tbt_slo={}s", cfg.tbt_slo),
+    }
+}
+
+fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
+    if !artifacts::artifacts_available() {
+        anyhow::bail!("artifacts not found — run `make artifacts` first");
+    }
+    let n = args.usize_or("requests", 8);
+    let max_new = args.usize_or("max-new", 16);
+    let lookahead = args.u32_or("lookahead", 4);
+    let rt = TinyRuntime::load_default()?;
+    println!("platform: {}", rt.platform());
+    let reqs: Vec<RealRequest> = (0..n)
+        .map(|i| RealRequest {
+            id: i as u64,
+            prompt: (0..8 + i % 16)
+                .map(|j| ((i * 97 + j * 31 + 3) % 2048) as i32)
+                .collect(),
+            max_new_tokens: max_new,
+        })
+        .collect();
+    let mut engine = RealEngine::new(rt, RealPolicy::DuetInterleave { lookahead });
+    let s = engine.serve(reqs)?;
+    println!(
+        "{}: {} requests in {:.2}s = {:.2} req/s; decode {:.1} tok/s; \
+         ttft mean {:.0}ms; tbt mean {:.1}ms p99 {:.1}ms",
+        s.policy,
+        s.completed,
+        s.wall_s,
+        s.throughput_rps,
+        s.decode_tokens_per_s,
+        s.ttft.mean * 1e3,
+        s.tbt.mean * 1e3,
+        s.tbt.p99 * 1e3,
+    );
+    Ok(())
+}
+
+fn cmd_config(args: &Args) {
+    let cfg = build_config(args);
+    println!("{cfg:#?}");
+    println!("kv_capacity_tokens = {}", cfg.kv_capacity_tokens());
+    println!("kv_capacity_blocks = {}", cfg.kv_capacity_blocks());
+}
+
+const USAGE: &str = "\
+duetserve — adaptive prefill/decode GPU multiplexing (paper reproduction)
+
+USAGE: duetserve <serve|traces|partition|e2e|config> [--options]
+
+serve:      --policy vllm|sglang|sglang-chunked|duet|dynamo
+            --trace azure-code|azure-conv|mooncake | --isl N --osl N
+            --qps F --n N --model qwen3-8b|qwen3-14b|qwen3-32b --tp N
+            --budget N --tbt-slo F --seed N
+partition:  --decode N --ctx N --prefill N [--tbt-slo F]
+e2e:        --requests N --max-new N --lookahead N   (needs `make artifacts`)
+";
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("traces") => cmd_traces(),
+        Some("partition") => cmd_partition(&args),
+        Some("e2e") => {
+            if let Err(e) = cmd_e2e(&args) {
+                eprintln!("error: {e}");
+                std::process::exit(1);
+            }
+        }
+        Some("config") => cmd_config(&args),
+        _ => print!("{USAGE}"),
+    }
+}

@@ -1,0 +1,194 @@
+//! Serving metrics: TTFT, TBT, request throughput, GPU utilization
+//! (§5.1 "Metrics").
+
+use crate::request::Request;
+use crate::util::stats::{self, Summary};
+
+/// Per-run metrics recorder. Engines feed it finished requests and
+/// iteration-level utilization samples; benches read the report.
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    /// (duration-weighted) SM utilization samples: (weight_s, util).
+    sm_util: Vec<(f64, f64)>,
+    hbm_util: Vec<(f64, f64)>,
+    /// Wall-clock duration of the run (set at finish).
+    pub duration: f64,
+    pub iterations: u64,
+    pub spatial_iterations: u64,
+    ttft: Vec<f64>,
+    tbt: Vec<f64>,
+    e2e: Vec<f64>,
+    pub completed: u64,
+    pub output_tokens: u64,
+    pub total_tokens: u64,
+    /// Cumulative CPU scheduling overhead, seconds (Fig. 10 claims <1ms
+    /// per iteration).
+    pub sched_overhead: f64,
+    /// Cumulative GPU busy time, seconds (per-device sum; divide by
+    /// worker count × duration for average device utilization).
+    pub busy_time: f64,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn record_finished(&mut self, r: &Request) {
+        if let Some(t) = r.ttft() {
+            self.ttft.push(t);
+        }
+        self.tbt.extend(r.tbt_samples());
+        if let Some(t) = r.e2e_latency() {
+            self.e2e.push(t);
+        }
+        self.completed += 1;
+        self.output_tokens += r.generated;
+        self.total_tokens += r.prompt_len + r.generated;
+    }
+
+    /// Merge another recorder's iteration-level state (finished requests
+    /// are merged separately via `record_finished`). Used by multi-replica
+    /// front-ends.
+    pub fn merge_iteration_state(&mut self, other: &Recorder) {
+        self.sm_util.extend_from_slice(&other.sm_util);
+        self.hbm_util.extend_from_slice(&other.hbm_util);
+        self.iterations += other.iterations;
+        self.spatial_iterations += other.spatial_iterations;
+        self.sched_overhead += other.sched_overhead;
+        self.busy_time += other.busy_time;
+    }
+
+    pub fn record_util(&mut self, weight_s: f64, sm: f64, hbm: f64) {
+        if weight_s > 0.0 {
+            self.sm_util.push((weight_s, sm.clamp(0.0, 1.0)));
+            self.hbm_util.push((weight_s, hbm.clamp(0.0, 1.0)));
+        }
+    }
+
+    fn weighted_mean(samples: &[(f64, f64)]) -> f64 {
+        let w: f64 = samples.iter().map(|(w, _)| w).sum();
+        if w == 0.0 {
+            return 0.0;
+        }
+        samples.iter().map(|(w, v)| w * v).sum::<f64>() / w
+    }
+
+    pub fn report(&self, system: &str) -> Report {
+        Report {
+            system: system.to_string(),
+            completed: self.completed,
+            duration: self.duration,
+            throughput_rps: self.completed as f64 / self.duration.max(1e-9),
+            token_throughput: self.total_tokens as f64 / self.duration.max(1e-9),
+            ttft: Summary::of(&self.ttft),
+            tbt: Summary::of(&self.tbt),
+            e2e: Summary::of(&self.e2e),
+            mean_sm_util: Self::weighted_mean(&self.sm_util),
+            mean_hbm_util: Self::weighted_mean(&self.hbm_util),
+            iterations: self.iterations,
+            spatial_iterations: self.spatial_iterations,
+            sched_overhead_per_iter: self.sched_overhead / self.iterations.max(1) as f64,
+            tbt_p99: stats::percentile(&self.tbt, 99.0),
+            busy_frac: self.busy_time / self.duration.max(1e-9),
+        }
+    }
+}
+
+/// Final run report — the row a bench prints.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub system: String,
+    pub completed: u64,
+    pub duration: f64,
+    /// Completed requests / end-to-end duration (the paper's "output
+    /// request throughput").
+    pub throughput_rps: f64,
+    /// Total (prompt + output) tokens / duration.
+    pub token_throughput: f64,
+    pub ttft: Summary,
+    pub tbt: Summary,
+    pub e2e: Summary,
+    pub mean_sm_util: f64,
+    pub mean_hbm_util: f64,
+    pub iterations: u64,
+    pub spatial_iterations: u64,
+    pub sched_overhead_per_iter: f64,
+    pub tbt_p99: f64,
+    /// GPU busy time / wall time (sum across workers; divide by worker
+    /// count for the average per-device utilization).
+    pub busy_frac: f64,
+}
+
+impl Report {
+    pub fn header() -> Vec<&'static str> {
+        vec![
+            "system", "qps", "done", "thpt(req/s)", "tok/s", "ttft-mean(s)", "tbt-mean(ms)",
+            "tbt-p99(ms)", "sm-util", "hbm-util",
+        ]
+    }
+
+    pub fn row(&self, qps: f64) -> Vec<String> {
+        vec![
+            self.system.clone(),
+            format!("{qps:.1}"),
+            format!("{}", self.completed),
+            format!("{:.2}", self.throughput_rps),
+            format!("{:.0}", self.token_throughput),
+            format!("{:.2}", self.ttft.mean),
+            format!("{:.1}", self.tbt.mean * 1e3),
+            format!("{:.1}", self.tbt_p99 * 1e3),
+            format!("{:.2}", self.mean_sm_util),
+            format!("{:.2}", self.mean_hbm_util),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::Request;
+
+    fn finished_request() -> Request {
+        let mut r = Request::new(1, 0.0, 100, 3);
+        r.advance_prefill(100);
+        r.advance_decode(1.0);
+        r.advance_decode(1.1);
+        r.advance_decode(1.2);
+        r
+    }
+
+    #[test]
+    fn recorder_aggregates() {
+        let mut m = Recorder::new();
+        m.record_finished(&finished_request());
+        m.duration = 2.0;
+        m.iterations = 4;
+        let rep = m.report("test");
+        assert_eq!(rep.completed, 1);
+        assert!((rep.throughput_rps - 0.5).abs() < 1e-9);
+        assert!((rep.ttft.mean - 1.0).abs() < 1e-9);
+        assert!((rep.tbt.mean - 0.1).abs() < 1e-6);
+        assert_eq!(m.output_tokens, 3);
+        assert_eq!(m.total_tokens, 103);
+    }
+
+    #[test]
+    fn util_is_duration_weighted() {
+        let mut m = Recorder::new();
+        m.record_util(1.0, 1.0, 0.0);
+        m.record_util(3.0, 0.0, 1.0);
+        m.duration = 4.0;
+        let rep = m.report("u");
+        assert!((rep.mean_sm_util - 0.25).abs() < 1e-9);
+        assert!((rep.mean_hbm_util - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_row_width_matches_header() {
+        let mut m = Recorder::new();
+        m.duration = 1.0;
+        let rep = m.report("x");
+        assert_eq!(rep.row(1.0).len(), Report::header().len());
+    }
+}

@@ -1,0 +1,210 @@
+//! Operator-level FLOP / memory-byte formulas (§4.1 of the paper).
+//!
+//! Operators are categorized as *token-level* (cost depends only on total
+//! token count: linear projections, norms, activations), *sequence-level*
+//! (attention: depends on per-request query length q and cached length c),
+//! and *communication* (tensor-parallel AllReduce). The same formulas feed
+//! the scheduler's roofline predictor (`roofline`) and the simulated GPU
+//! executor (`sim`); the two differ only in efficiency/overhead modelling.
+
+use crate::config::ModelSpec;
+
+pub mod ops;
+
+pub use ops::{attn_bytes, attn_flops, linear_bytes, linear_flops, norm_bytes, OpCost, OpKind};
+
+/// Per-request attention workload descriptor: `q` scheduled query tokens
+/// against `c` cached KV tokens. Prefill: q>1,c=0; chunked prefill:
+/// q>1,c>0; decode: q=1,c>0.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttnShape {
+    pub q: u64,
+    pub c: u64,
+}
+
+/// The full per-layer cost breakdown for a batch, used to build iteration
+/// latency estimates.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BlockCost {
+    /// Token-level operator costs (one entry per fused op group).
+    pub token_ops: Vec<OpCost>,
+    /// Sequence-level (attention) cost per request.
+    pub attn_ops: Vec<OpCost>,
+    /// Output bytes of the two TP-synchronized linears (attn-out, mlp-down),
+    /// needed by the AllReduce model.
+    pub allreduce_bytes: u64,
+}
+
+/// Compute the cost of one transformer block for a batch with `n_tokens`
+/// total scheduled tokens and the given per-request attention shapes,
+/// under tensor-parallel degree `tp` (weights and heads sharded).
+pub fn block_cost(spec: &ModelSpec, n_tokens: u64, shapes: &[AttnShape], tp: u32) -> BlockCost {
+    let tp = tp.max(1) as u64;
+    let d = spec.hidden as u64;
+    let m = spec.intermediate as u64;
+    let b = spec.elem_bytes as u64;
+    let hq = spec.heads as u64 / tp;
+    let hkv = (spec.kv_heads as u64 / tp).max(1);
+    let dh = spec.head_dim as u64;
+    let n = n_tokens;
+
+    let mut token_ops = Vec::with_capacity(6);
+    // QKV projection: d -> (hq + 2*hkv) * dh  (sharded over tp)
+    let qkv_out = (hq + 2 * hkv) * dh;
+    token_ops.push(OpCost {
+        kind: OpKind::LinearQkv,
+        flops: linear_flops(n, d, qkv_out),
+        bytes: linear_bytes(n, d, qkv_out, b),
+    });
+    // Output projection: hq*dh -> d
+    token_ops.push(OpCost {
+        kind: OpKind::LinearO,
+        flops: linear_flops(n, hq * dh, d),
+        bytes: linear_bytes(n, hq * dh, d, b),
+    });
+    // Gate+Up projection: d -> 2m/tp
+    token_ops.push(OpCost {
+        kind: OpKind::LinearGateUp,
+        flops: linear_flops(n, d, 2 * m / tp),
+        bytes: linear_bytes(n, d, 2 * m / tp, b),
+    });
+    // Down projection: m/tp -> d
+    token_ops.push(OpCost {
+        kind: OpKind::LinearDown,
+        flops: linear_flops(n, m / tp, d),
+        bytes: linear_bytes(n, m / tp, d, b),
+    });
+    // Two RMSNorms + residual adds + SiLU: memory-bound elementwise traffic.
+    token_ops.push(OpCost {
+        kind: OpKind::NormAct,
+        flops: 10 * n * d, // a few flops per element across norm/act/residual
+        bytes: norm_bytes(n, d, b) * 2 + 2 * n * (m / tp) * b,
+    });
+
+    let attn_ops = shapes
+        .iter()
+        .map(|s| OpCost {
+            kind: OpKind::Attention,
+            flops: attn_flops(s.q, s.c, hq, dh),
+            bytes: attn_bytes(s.q, s.c, hq, hkv, dh, b),
+        })
+        .collect();
+
+    BlockCost {
+        token_ops,
+        attn_ops,
+        // attn-out (n×d) and mlp-down (n×d) outputs are AllReduced under TP.
+        allreduce_bytes: 2 * n * d * b,
+    }
+}
+
+/// Final-classifier cost: linear d -> vocab over `n_logit_tokens`
+/// (only the last token of each sequence needs logits at serving time).
+pub fn classifier_cost(spec: &ModelSpec, n_logit_tokens: u64, tp: u32) -> OpCost {
+    let tp = tp.max(1) as u64;
+    let d = spec.hidden as u64;
+    let v = spec.vocab as u64 / tp;
+    let b = spec.elem_bytes as u64;
+    OpCost {
+        kind: OpKind::Classifier,
+        flops: linear_flops(n_logit_tokens, d, v),
+        bytes: linear_bytes(n_logit_tokens, d, v, b),
+    }
+}
+
+/// Total FLOPs of one block (convenience for utilization accounting).
+pub fn block_flops(cost: &BlockCost) -> f64 {
+    cost.token_ops.iter().map(|o| o.flops as f64).sum::<f64>()
+        + cost.attn_ops.iter().map(|o| o.flops as f64).sum::<f64>()
+}
+
+/// Total HBM bytes of one block.
+pub fn block_bytes(cost: &BlockCost) -> f64 {
+    cost.token_ops.iter().map(|o| o.bytes as f64).sum::<f64>()
+        + cost.attn_ops.iter().map(|o| o.bytes as f64).sum::<f64>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+
+    #[test]
+    fn prefill_flops_dominated_by_linears_at_short_context() {
+        let spec = ModelSpec::qwen3_8b();
+        let shapes = [AttnShape { q: 512, c: 0 }];
+        let c = block_cost(&spec, 512, &shapes, 1);
+        let lin: u64 = c.token_ops.iter().map(|o| o.flops).sum();
+        let attn: u64 = c.attn_ops.iter().map(|o| o.flops).sum();
+        assert!(lin > 10 * attn, "lin={lin} attn={attn}");
+    }
+
+    #[test]
+    fn attention_grows_quadratically_in_prompt() {
+        let spec = ModelSpec::qwen3_8b();
+        let f1 = attn_flops(1024, 0, spec.heads as u64, spec.head_dim as u64);
+        let f2 = attn_flops(2048, 0, spec.heads as u64, spec.head_dim as u64);
+        let ratio = f2 as f64 / f1 as f64;
+        assert!((3.8..4.2).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn decode_attention_bytes_scale_with_context() {
+        let spec = ModelSpec::qwen3_8b();
+        let hq = spec.heads as u64;
+        let hkv = spec.kv_heads as u64;
+        let dh = spec.head_dim as u64;
+        let b1 = attn_bytes(1, 1024, hq, hkv, dh, 2);
+        let b2 = attn_bytes(1, 8192, hq, hkv, dh, 2);
+        assert!(b2 as f64 / b1 as f64 > 6.0, "KV reads dominate decode");
+    }
+
+    #[test]
+    fn tp_divides_work() {
+        let spec = ModelSpec::qwen3_14b();
+        let shapes = [AttnShape { q: 256, c: 0 }];
+        let c1 = block_cost(&spec, 256, &shapes, 1);
+        let c2 = block_cost(&spec, 256, &shapes, 2);
+        let f1 = block_flops(&c1);
+        let f2 = block_flops(&c2);
+        assert!(
+            (f1 / f2 - 2.0).abs() < 0.2,
+            "TP=2 should halve per-GPU flops: {f1} vs {f2}"
+        );
+    }
+
+    #[test]
+    fn end_to_end_prefill_flops_sane() {
+        // Qwen3-8B, 2048-token prefill: ~2*8.2e9*2048 ≈ 3.4e13 total
+        // (block-level; embeddings excluded).
+        let spec = ModelSpec::qwen3_8b();
+        let shapes = [AttnShape { q: 2048, c: 0 }];
+        let c = block_cost(&spec, 2048, &shapes, 1);
+        let total = block_flops(&c) * spec.layers as f64;
+        let expect = 2.0 * 7.5e9 * 2048.0; // 2*N*T with non-embedding params
+        assert!(
+            (total / expect - 1.0).abs() < 0.35,
+            "total={total:.3e} expect≈{expect:.3e}"
+        );
+    }
+
+    #[test]
+    fn classifier_cost_uses_vocab() {
+        let spec = ModelSpec::qwen3_8b();
+        let c = classifier_cost(&spec, 4, 1);
+        assert_eq!(
+            c.flops,
+            2 * 4 * spec.hidden as u64 * spec.vocab as u64
+        );
+    }
+
+    #[test]
+    fn allreduce_bytes_track_tokens() {
+        let spec = ModelSpec::qwen3_8b();
+        let c = block_cost(&spec, 100, &[AttnShape { q: 100, c: 0 }], 2);
+        assert_eq!(
+            c.allreduce_bytes,
+            2 * 100 * spec.hidden as u64 * spec.elem_bytes as u64
+        );
+    }
+}

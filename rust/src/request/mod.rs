@@ -1,0 +1,186 @@
+//! Request lifecycle types shared by all engines.
+
+/// Unique request id.
+pub type RequestId = u64;
+
+/// Lifecycle of a request inside an engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Arrived, not yet admitted (waiting queue).
+    Waiting,
+    /// Prompt partially or fully unprocessed (chunked prefill in flight).
+    Prefill,
+    /// Prompt done; generating tokens.
+    Decode,
+    /// All output tokens produced.
+    Finished,
+}
+
+/// One inference request as tracked by the coordinator.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    /// Arrival time on the engine clock, seconds.
+    pub arrival: f64,
+    /// Prompt length (input sequence length).
+    pub prompt_len: u64,
+    /// Number of output tokens the request will generate. In a real
+    /// deployment this is unknown a priori; the trace supplies it and the
+    /// engine only *observes* it when EOS fires.
+    pub output_len: u64,
+    pub phase: Phase,
+    /// Prompt tokens already prefilled (chunked prefill progress).
+    pub prefilled: u64,
+    /// Output tokens generated so far.
+    pub generated: u64,
+    /// Time the first output token was produced (TTFT = first_token -
+    /// arrival).
+    pub first_token_at: Option<f64>,
+    /// Completion time.
+    pub finished_at: Option<f64>,
+    /// Timestamps of each generated token, for TBT accounting.
+    pub token_times: Vec<f64>,
+}
+
+impl Request {
+    pub fn new(id: RequestId, arrival: f64, prompt_len: u64, output_len: u64) -> Request {
+        assert!(prompt_len >= 1, "empty prompt");
+        assert!(output_len >= 1, "must generate at least one token");
+        Request {
+            id,
+            arrival,
+            prompt_len,
+            output_len,
+            phase: Phase::Waiting,
+            prefilled: 0,
+            generated: 0,
+            first_token_at: None,
+            finished_at: None,
+            token_times: Vec::new(),
+        }
+    }
+
+    /// Prompt tokens not yet prefilled.
+    pub fn remaining_prompt(&self) -> u64 {
+        self.prompt_len - self.prefilled
+    }
+
+    /// Context length currently held in KV cache (prefilled prompt +
+    /// generated tokens).
+    pub fn context_len(&self) -> u64 {
+        self.prefilled + self.generated
+    }
+
+    /// Record `n` prompt tokens prefilled; transitions to Decode when the
+    /// prompt completes.
+    pub fn advance_prefill(&mut self, n: u64) {
+        assert!(n <= self.remaining_prompt(), "prefill overrun");
+        self.prefilled += n;
+        self.phase = if self.prefilled == self.prompt_len {
+            Phase::Decode
+        } else {
+            Phase::Prefill
+        };
+    }
+
+    /// Record one generated token at time `now`. Returns true if the
+    /// request just finished.
+    pub fn advance_decode(&mut self, now: f64) -> bool {
+        assert_eq!(self.phase, Phase::Decode, "decode before prefill done");
+        assert!(self.generated < self.output_len);
+        self.generated += 1;
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(now);
+        }
+        self.token_times.push(now);
+        if self.generated == self.output_len {
+            self.phase = Phase::Finished;
+            self.finished_at = Some(now);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_at.map(|t| t - self.arrival)
+    }
+
+    /// Mean time between tokens (excluding the first token, which is TTFT
+    /// territory). None until ≥2 tokens.
+    pub fn mean_tbt(&self) -> Option<f64> {
+        if self.token_times.len() < 2 {
+            return None;
+        }
+        let spans: f64 = self
+            .token_times
+            .windows(2)
+            .map(|w| w[1] - w[0])
+            .sum();
+        Some(spans / (self.token_times.len() - 1) as f64)
+    }
+
+    /// All inter-token gaps.
+    pub fn tbt_samples(&self) -> Vec<f64> {
+        self.token_times.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+
+    pub fn e2e_latency(&self) -> Option<f64> {
+        self.finished_at.map(|t| t - self.arrival)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_transitions() {
+        let mut r = Request::new(1, 0.0, 100, 3);
+        assert_eq!(r.phase, Phase::Waiting);
+        r.advance_prefill(60);
+        assert_eq!(r.phase, Phase::Prefill);
+        assert_eq!(r.remaining_prompt(), 40);
+        r.advance_prefill(40);
+        assert_eq!(r.phase, Phase::Decode);
+        assert!(!r.advance_decode(1.0));
+        assert!(!r.advance_decode(1.1));
+        assert!(r.advance_decode(1.2));
+        assert_eq!(r.phase, Phase::Finished);
+        assert_eq!(r.ttft(), Some(1.0));
+        assert!((r.mean_tbt().unwrap() - 0.1).abs() < 1e-9);
+        assert_eq!(r.e2e_latency(), Some(1.2));
+    }
+
+    #[test]
+    fn context_len_tracks_both_phases() {
+        let mut r = Request::new(1, 0.0, 10, 5);
+        r.advance_prefill(10);
+        r.advance_decode(0.1);
+        r.advance_decode(0.2);
+        assert_eq!(r.context_len(), 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "prefill overrun")]
+    fn prefill_overrun_panics() {
+        let mut r = Request::new(1, 0.0, 10, 1);
+        r.advance_prefill(11);
+    }
+
+    #[test]
+    #[should_panic(expected = "decode before prefill done")]
+    fn decode_before_prefill_panics() {
+        let mut r = Request::new(1, 0.0, 10, 1);
+        r.advance_decode(0.5);
+    }
+
+    #[test]
+    fn tbt_none_for_single_token() {
+        let mut r = Request::new(1, 0.0, 4, 1);
+        r.advance_prefill(4);
+        r.advance_decode(0.5);
+        assert!(r.mean_tbt().is_none());
+        assert!(r.tbt_samples().is_empty());
+    }
+}

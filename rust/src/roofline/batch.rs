@@ -1,0 +1,126 @@
+//! Batch shape descriptor handed from the scheduler to the predictor and
+//! executor.
+
+use crate::model::AttnShape;
+use crate::request::{Phase, Request};
+
+/// The shape of one scheduled iteration: per-request attention shapes plus
+/// aggregate token counts. Weights/activations are irrelevant — only
+/// shapes drive cost.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BatchShape {
+    pub shapes: Vec<AttnShape>,
+    /// Total scheduled tokens (Σ q).
+    pub n_tokens: u64,
+    /// Number of sequences needing logits this iteration.
+    pub n_seqs: u64,
+}
+
+impl BatchShape {
+    pub fn from_shapes(shapes: Vec<AttnShape>) -> BatchShape {
+        let n_tokens = shapes.iter().map(|s| s.q).sum();
+        let n_seqs = shapes.len() as u64;
+        BatchShape {
+            shapes,
+            n_tokens,
+            n_seqs,
+        }
+    }
+
+    /// Build from scheduled (request, scheduled_tokens) pairs.
+    pub fn from_schedule(items: &[(&Request, u64)]) -> BatchShape {
+        let shapes = items
+            .iter()
+            .map(|(r, q)| AttnShape {
+                q: *q,
+                c: r.context_len(),
+            })
+            .collect();
+        BatchShape::from_shapes(shapes)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_tokens == 0
+    }
+
+    /// Split into (decode-only, prefill-only) sub-batches. Decode entries
+    /// are q == 1 with context (the paper splits R_mixed the same way in
+    /// Algorithm 1 line 6).
+    pub fn split_phases(&self) -> (BatchShape, BatchShape) {
+        let (dec, pre): (Vec<AttnShape>, Vec<AttnShape>) = self
+            .shapes
+            .iter()
+            .partition(|s| s.q == 1 && s.c > 0);
+        (
+            BatchShape::from_shapes(dec),
+            BatchShape::from_shapes(pre),
+        )
+    }
+
+    /// Decode tokens produced per step in this batch (`T_decode` in §4.2):
+    /// one per decode sequence.
+    pub fn decode_tokens_per_step(&self) -> u64 {
+        self.shapes.iter().filter(|s| s.q == 1 && s.c > 0).count() as u64
+    }
+
+    /// Prefill tokens in this batch (`T_prefill` in §4.2).
+    pub fn prefill_tokens(&self) -> u64 {
+        self.shapes
+            .iter()
+            .filter(|s| !(s.q == 1 && s.c > 0))
+            .map(|s| s.q)
+            .sum()
+    }
+}
+
+/// Helper: batch shape of a set of running decode requests.
+pub fn decode_batch_of(requests: &[&Request]) -> BatchShape {
+    let shapes = requests
+        .iter()
+        .filter(|r| r.phase == Phase::Decode)
+        .map(|r| AttnShape {
+            q: 1,
+            c: r.context_len(),
+        })
+        .collect();
+    BatchShape::from_shapes(shapes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregates_computed() {
+        let b = BatchShape::from_shapes(vec![
+            AttnShape { q: 100, c: 0 },
+            AttnShape { q: 1, c: 500 },
+            AttnShape { q: 1, c: 900 },
+        ]);
+        assert_eq!(b.n_tokens, 102);
+        assert_eq!(b.n_seqs, 3);
+        assert_eq!(b.decode_tokens_per_step(), 2);
+        assert_eq!(b.prefill_tokens(), 100);
+    }
+
+    #[test]
+    fn split_phases_partitions() {
+        let b = BatchShape::from_shapes(vec![
+            AttnShape { q: 64, c: 32 }, // chunked prefill continuation
+            AttnShape { q: 1, c: 500 },
+            AttnShape { q: 200, c: 0 },
+        ]);
+        let (dec, pre) = b.split_phases();
+        assert_eq!(dec.n_seqs, 1);
+        assert_eq!(pre.n_seqs, 2);
+        assert_eq!(dec.n_tokens + pre.n_tokens, b.n_tokens);
+    }
+
+    #[test]
+    fn from_schedule_uses_context() {
+        let mut r = Request::new(1, 0.0, 100, 5);
+        r.advance_prefill(40);
+        let b = BatchShape::from_schedule(&[(&r, 60)]);
+        assert_eq!(b.shapes[0], AttnShape { q: 60, c: 40 });
+    }
+}

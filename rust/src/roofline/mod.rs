@@ -1,0 +1,274 @@
+//! Attention-aware roofline analytical model (paper §4.1).
+//!
+//! Estimates model-forward latency from operator-level compute and memory
+//! characteristics: token-level operators (linear/norm/act — depend only
+//! on the total scheduled token count), sequence-level operators
+//! (attention — per-request `(q, c)` shapes), and communication operators
+//! (ring AllReduce under tensor parallelism). The scheduler uses this
+//! predictor to (a) detect imminent TBT violations and (b) drive the
+//! partitioning optimizer of Algorithm 1.
+//!
+//! The predictor is intentionally *idealized*: no kernel-launch overheads
+//! and no per-operator efficiency de-rating. The simulated hardware
+//! (`crate::sim`) models those, which is what produces the Fig. 8
+//! predictor-vs-profiled gap (conservative on small decode partitions).
+
+pub mod batch;
+
+pub use batch::BatchShape;
+
+use crate::config::{GpuSpec, ModelSpec};
+use crate::model::{block_cost, classifier_cost, ops::allreduce_latency};
+
+/// Latency breakdown of one iteration, seconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencyBreakdown {
+    pub token_ops: f64,
+    pub attention: f64,
+    pub comm: f64,
+    pub classifier: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.token_ops + self.attention + self.comm + self.classifier
+    }
+}
+
+/// The attention-aware roofline predictor. Π_SM(S) and B_HBM(S) are
+/// memoized per SM count at construction ("at initialization, DuetServe
+/// profiles the achievable compute throughput and memory bandwidth for
+/// each possible SM partition size" — §4.2).
+#[derive(Debug, Clone)]
+pub struct Predictor {
+    pub model: ModelSpec,
+    pub gpu: GpuSpec,
+    pub tp: u32,
+    /// pi[s] = Π_SM(s) for s active SMs, s in 0..=num_sms.
+    pi: Vec<f64>,
+    /// bw[s] = B_HBM(s).
+    bw: Vec<f64>,
+}
+
+impl Predictor {
+    pub fn new(model: ModelSpec, gpu: GpuSpec, tp: u32) -> Predictor {
+        let n = gpu.num_sms as usize;
+        let pi = (0..=n).map(|s| gpu.pi_sm(s as u32)).collect();
+        let bw = (0..=n).map(|s| gpu.b_hbm(s as u32)).collect();
+        Predictor {
+            model,
+            gpu,
+            tp,
+            pi,
+            bw,
+        }
+    }
+
+    #[inline]
+    pub fn pi_sm(&self, sms: u32) -> f64 {
+        self.pi[(sms as usize).min(self.pi.len() - 1)]
+    }
+
+    #[inline]
+    pub fn b_hbm(&self, sms: u32) -> f64 {
+        self.bw[(sms as usize).min(self.bw.len() - 1)]
+    }
+
+    /// Roofline latency of one operator: `max(F/Π, B/B_HBM)`.
+    #[inline]
+    fn op_latency(&self, flops: u64, bytes: u64, pi: f64, bw: f64) -> f64 {
+        let tc = flops as f64 / pi;
+        let tm = bytes as f64 / bw;
+        tc.max(tm)
+    }
+
+    /// Predict one full model forward over `batch` executing on `sms`
+    /// active SMs (per GPU, under `self.tp` tensor parallelism).
+    pub fn predict(&self, batch: &BatchShape, sms: u32) -> LatencyBreakdown {
+        if batch.is_empty() {
+            return LatencyBreakdown::default();
+        }
+        let pi = self.pi_sm(sms);
+        let bw = self.b_hbm(sms);
+        if pi == 0.0 || bw == 0.0 {
+            return LatencyBreakdown {
+                token_ops: f64::INFINITY,
+                ..Default::default()
+            };
+        }
+        let cost = block_cost(&self.model, batch.n_tokens, &batch.shapes, self.tp);
+
+        // Token-level: fused groups execute sequentially; each takes its
+        // roofline max.
+        let t_tok: f64 = cost
+            .token_ops
+            .iter()
+            .map(|o| self.op_latency(o.flops, o.bytes, pi, bw))
+            .sum();
+
+        // Sequence-level: "the estimator iterates over the batch, applies
+        // the roofline model to compute attention latency of each request
+        // and aggregates" (§4.1).
+        let t_attn: f64 = cost
+            .attn_ops
+            .iter()
+            .map(|o| self.op_latency(o.flops, o.bytes, pi, bw))
+            .sum();
+
+        // Communication: two AllReduces per block under TP.
+        let t_comm = if self.tp > 1 {
+            allreduce_latency(
+                self.tp,
+                cost.allreduce_bytes,
+                self.gpu.allreduce_alpha,
+                self.gpu.nvlink_bandwidth,
+                pi,
+            )
+        } else {
+            0.0
+        };
+
+        let l = self.model.layers as f64;
+        let cls = classifier_cost(&self.model, batch.n_seqs, self.tp);
+        let t_cls = self.op_latency(cls.flops, cls.bytes, pi, bw);
+
+        LatencyBreakdown {
+            token_ops: l * t_tok,
+            attention: l * t_attn,
+            comm: l * t_comm,
+            classifier: t_cls,
+        }
+    }
+
+    /// Total-latency convenience: `t_total = L·t_block + t_cls` (§4.1).
+    pub fn predict_total(&self, batch: &BatchShape, sms: u32) -> f64 {
+        self.predict(batch, sms).total()
+    }
+
+    /// Predict with the full device.
+    pub fn predict_full(&self, batch: &BatchShape) -> f64 {
+        self.predict_total(batch, self.gpu.num_sms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, ModelSpec};
+    use crate::model::AttnShape;
+
+    fn pred() -> Predictor {
+        Predictor::new(ModelSpec::qwen3_8b(), GpuSpec::h100(), 1)
+    }
+
+    fn prefill_batch(tokens: u64) -> BatchShape {
+        BatchShape::from_shapes(vec![AttnShape { q: tokens, c: 0 }])
+    }
+
+    fn decode_batch(n: u64, ctx: u64) -> BatchShape {
+        BatchShape::from_shapes((0..n).map(|_| AttnShape { q: 1, c: ctx }).collect())
+    }
+
+    #[test]
+    fn empty_batch_is_zero() {
+        assert_eq!(pred().predict_full(&BatchShape::default()), 0.0);
+    }
+
+    #[test]
+    fn prefill_8192_exceeds_typical_tbt_slo() {
+        // Fig. 1(b): a full 8192-token prefill iteration on H100 takes
+        // >100ms (paper measures ~180ms+; ideal roofline gives a lower
+        // bound above the 100ms SLO).
+        let t = pred().predict_full(&prefill_batch(8192));
+        assert!(t > 0.08, "t={t}");
+        assert!(t < 0.5, "t={t}");
+    }
+
+    #[test]
+    fn attention_share_grows_with_prompt() {
+        // Fig. 1(b): with one 8192-token prefill, attention ≈ 25% of
+        // forward latency; at short prompts it's negligible.
+        let p = pred();
+        let short = p.predict(&prefill_batch(512), 132);
+        let long = p.predict(&prefill_batch(8192), 132);
+        let share_short = short.attention / short.total();
+        let share_long = long.attention / long.total();
+        assert!(share_short < 0.08, "share_short={share_short}");
+        assert!(
+            (0.1..0.45).contains(&share_long),
+            "share_long={share_long}"
+        );
+        assert!(share_long > 2.0 * share_short);
+    }
+
+    #[test]
+    fn decode_latency_grows_with_context_at_fixed_budget() {
+        // Fig. 1(c): same token budget (8 decodes), >4x latency spread as
+        // context goes 1K -> 32K.
+        let p = pred();
+        let t1 = p.predict_full(&decode_batch(8, 1024));
+        let t2 = p.predict_full(&decode_batch(8, 32 * 1024));
+        assert!(t2 / t1 > 2.0, "ratio={}", t2 / t1);
+    }
+
+    #[test]
+    fn more_sms_never_slower() {
+        let p = pred();
+        let b = prefill_batch(4096);
+        let mut prev = f64::INFINITY;
+        for sms in (2..=132).step_by(2) {
+            let t = p.predict_total(&b, sms);
+            assert!(t <= prev + 1e-12, "sms={sms}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn decode_saturates_earlier_than_prefill() {
+        // Decode is bandwidth-bound: because B_HBM(S) is super-linear,
+        // decode at 40% of SMs should be within ~25% of full-device decode,
+        // while prefill at 40% of SMs is ~2.5x slower than full-device.
+        let p = pred();
+        let dec = decode_batch(64, 4096);
+        let pre = prefill_batch(8192);
+        let frac40 = (132.0_f64 * 0.4) as u32;
+        let dec_ratio = p.predict_total(&dec, frac40) / p.predict_full(&dec);
+        let pre_ratio = p.predict_total(&pre, frac40) / p.predict_full(&pre);
+        assert!(dec_ratio < 1.5, "dec_ratio={dec_ratio}");
+        assert!(pre_ratio > 2.0, "pre_ratio={pre_ratio}");
+    }
+
+    #[test]
+    fn tp2_adds_comm_but_reduces_compute() {
+        let m = ModelSpec::qwen3_14b();
+        let p1 = Predictor::new(m.clone(), GpuSpec::h100(), 1);
+        let p2 = Predictor::new(m, GpuSpec::h100(), 2);
+        let b = prefill_batch(8192);
+        let l1 = p1.predict(&b, 132);
+        let l2 = p2.predict(&b, 132);
+        assert_eq!(l1.comm, 0.0);
+        assert!(l2.comm > 0.0);
+        assert!(l2.token_ops < l1.token_ops);
+        // net: TP=2 faster per GPU for a large prefill
+        assert!(l2.total() < l1.total());
+    }
+
+    #[test]
+    fn zero_sms_is_infinite() {
+        let p = pred();
+        assert!(p.predict_total(&prefill_batch(128), 0).is_infinite());
+    }
+
+    #[test]
+    fn mixed_batch_additive() {
+        // Mixed batch ≈ prefill part + decode part (token ops merge, so
+        // only approximately).
+        let p = pred();
+        let mut shapes = vec![AttnShape { q: 2048, c: 0 }];
+        shapes.extend((0..32).map(|_| AttnShape { q: 1, c: 2048 }));
+        let mixed = BatchShape::from_shapes(shapes);
+        let t_mixed = p.predict_full(&mixed);
+        let t_pre = p.predict_full(&prefill_batch(2048));
+        assert!(t_mixed > t_pre);
+    }
+}

@@ -1,0 +1,197 @@
+//! Artifact-directory parsing: `weights.manifest.txt`, `weights.bin`,
+//! `artifacts.meta.txt` (all written by `python/compile/aot.py`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::parse::Config;
+
+/// One tensor in the weights blob.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size_bytes: usize,
+}
+
+/// Parsed `weights.manifest.txt`.
+#[derive(Debug, Clone, Default)]
+pub struct WeightManifest {
+    pub entries: Vec<WeightEntry>,
+}
+
+impl WeightManifest {
+    pub fn parse(text: &str) -> Result<WeightManifest> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 4 {
+                bail!("manifest line {}: expected 4 fields", i + 1);
+            }
+            let shape = parts[1]
+                .split('x')
+                .map(|d| d.parse::<usize>().context("bad shape dim"))
+                .collect::<Result<Vec<_>>>()?;
+            entries.push(WeightEntry {
+                name: parts[0].to_string(),
+                shape,
+                offset: parts[2].parse()?,
+                size_bytes: parts[3].parse()?,
+            });
+        }
+        // Entries must tile the blob contiguously.
+        let mut expect = 0usize;
+        for e in &entries {
+            if e.offset != expect {
+                bail!("manifest not contiguous at {}", e.name);
+            }
+            let elems: usize = e.shape.iter().product();
+            if elems * 4 != e.size_bytes {
+                bail!("{}: shape/size mismatch", e.name);
+            }
+            expect += e.size_bytes;
+        }
+        Ok(WeightManifest { entries })
+    }
+
+    pub fn load(path: &Path) -> Result<WeightManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        WeightManifest::parse(&text)
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.size_bytes).sum()
+    }
+}
+
+/// Parsed `artifacts.meta.txt` — the model constants the runtime needs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub prefill_seq: usize,
+    pub max_context: usize,
+    pub decode_batches: Vec<usize>,
+    pub n_weights: usize,
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<ArtifactMeta> {
+        let cfg = Config::parse(text).map_err(|e| anyhow::anyhow!("meta parse: {e}"))?;
+        let need = |k: &str| -> Result<usize> {
+            cfg.int(k)
+                .map(|v| v as usize)
+                .with_context(|| format!("meta missing `{k}`"))
+        };
+        let batches = cfg
+            .str("decode_batches")
+            .context("meta missing decode_batches")?
+            .split(',')
+            .map(|s| s.trim().parse::<usize>().context("bad batch"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactMeta {
+            hidden: need("hidden")?,
+            layers: need("layers")?,
+            heads: need("heads")?,
+            kv_heads: need("kv_heads")?,
+            head_dim: need("head_dim")?,
+            vocab: need("vocab")?,
+            prefill_seq: need("prefill_seq")?,
+            max_context: need("max_context")?,
+            decode_batches: batches,
+            n_weights: need("n_weights")?,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        ArtifactMeta::parse(&text)
+    }
+}
+
+/// Locate the artifacts directory: $DUET_ARTIFACTS or ./artifacts
+/// (relative to the workspace root).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("DUET_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // CARGO_MANIFEST_DIR works for tests/examples; fall back to cwd.
+    if let Ok(root) = std::env::var("CARGO_MANIFEST_DIR") {
+        let p = PathBuf::from(root).join("artifacts");
+        if p.exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// Do the artifacts exist (so tests can skip gracefully before
+/// `make artifacts`)?
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("artifacts.meta.txt").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_and_validates() {
+        let m = WeightManifest::parse(
+            "# comment\ntok 4x2 0 32\nw1 2x2 32 16\n",
+        )
+        .unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.entries[0].shape, vec![4, 2]);
+        assert_eq!(m.total_bytes(), 48);
+    }
+
+    #[test]
+    fn manifest_rejects_gaps_and_bad_sizes() {
+        assert!(WeightManifest::parse("a 2x2 4 16\n").is_err()); // gap at 0
+        assert!(WeightManifest::parse("a 2x2 0 15\n").is_err()); // size mismatch
+        assert!(WeightManifest::parse("a 2x2 0\n").is_err()); // fields
+    }
+
+    #[test]
+    fn meta_parses() {
+        let meta = ArtifactMeta::parse(
+            "hidden = 256\nlayers = 4\nheads = 8\nkv_heads = 4\nhead_dim = 32\n\
+             intermediate = 1024\nvocab = 2048\nprefill_seq = 64\nmax_context = 320\n\
+             decode_batches = \"1,2,4,8\"\nn_weights = 39\n",
+        )
+        .unwrap();
+        assert_eq!(meta.vocab, 2048);
+        assert_eq!(meta.decode_batches, vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn meta_missing_key_errors() {
+        assert!(ArtifactMeta::parse("hidden = 256\n").is_err());
+    }
+
+    #[test]
+    fn real_artifacts_parse_if_present() {
+        if !artifacts_available() {
+            return; // `make artifacts` not run yet
+        }
+        let dir = artifacts_dir();
+        let meta = ArtifactMeta::load(&dir.join("artifacts.meta.txt")).unwrap();
+        let man = WeightManifest::load(&dir.join("weights.manifest.txt")).unwrap();
+        assert_eq!(man.entries.len(), meta.n_weights);
+        let blob = std::fs::metadata(dir.join("weights.bin")).unwrap();
+        assert_eq!(blob.len() as usize, man.total_bytes());
+    }
+}

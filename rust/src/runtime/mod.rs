@@ -1,0 +1,16 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and serve the tiny model from rust — Python is never on this path.
+//!
+//! - [`artifacts`]: manifest/meta/weights-blob parsing.
+//! - [`pjrt`]: the `xla`-crate wrapper — compile HLO text once per model
+//!   variant, execute prefill / decode steps.
+//! - [`serving`]: a real continuous-batching engine over the runtime with
+//!   DuetServe-style decode-priority + look-ahead scheduling.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod serving;
+
+pub use artifacts::{ArtifactMeta, WeightManifest};
+pub use pjrt::TinyRuntime;
+pub use serving::{RealEngine, RealPolicy, RealRequest, RealStats};

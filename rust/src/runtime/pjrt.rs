@@ -1,0 +1,266 @@
+//! The PJRT wrapper: compile the AOT HLO-text artifacts once, then run
+//! prefill / decode forwards from the rust hot path.
+//!
+//! Design notes:
+//! - HLO **text** is the interchange (xla_extension 0.5.1 rejects jax≥0.5
+//!   serialized protos — 64-bit instruction ids).
+//! - The decode path always executes the `decode_b{MAX_SLOTS}` variant
+//!   with inactive slots masked via `lengths == 0`, mirroring how CUDA
+//!   Graph serving pads decode batches to captured sizes (§4.3).
+//! - The crate's `execute` returns a single *tuple* buffer, so the KV
+//!   cache round-trips through host literals each step; the rust engine
+//!   owns the authoritative cache memory and writes prefill K/V into
+//!   batch slots itself (the coordinator manages KV memory, as L3 should).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::{artifacts_dir, ArtifactMeta, WeightManifest};
+
+/// Number of decode slots the serving runtime batches over.
+pub const MAX_SLOTS: usize = 8;
+
+/// Outcome of one prefill call.
+pub struct PrefillOut {
+    /// argmax token at the last valid prompt position.
+    pub next_token: i32,
+    /// K cache rows [layers, prefill_seq, kv_heads, head_dim], flattened.
+    pub k: Vec<f32>,
+    /// V cache rows, same shape.
+    pub v: Vec<f32>,
+}
+
+/// The compiled tiny-model runtime.
+pub struct TinyRuntime {
+    pub meta: ArtifactMeta,
+    client: xla::PjRtClient,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    decode_exe: xla::PjRtLoadedExecutable,
+    /// Weights as DEVICE-RESIDENT buffers, uploaded once at load time and
+    /// reused by every `execute_b` call (§Perf: re-uploading the ~20 MB
+    /// of weights per decode step dominated the serving hot path).
+    weights: Vec<xla::PjRtBuffer>,
+    /// Authoritative KV cache [layers, MAX_SLOTS, max_context, kv_heads,
+    /// head_dim] — owned by rust, updated from decode outputs.
+    pub k_cache: Vec<f32>,
+    pub v_cache: Vec<f32>,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))
+}
+
+impl TinyRuntime {
+    /// Load artifacts from the default directory (`DUET_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn load_default() -> Result<TinyRuntime> {
+        Self::load(&artifacts_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<TinyRuntime> {
+        let meta = ArtifactMeta::load(&dir.join("artifacts.meta.txt"))?;
+        if !meta.decode_batches.contains(&MAX_SLOTS) {
+            bail!("artifacts lack a decode_b{MAX_SLOTS} variant");
+        }
+        let manifest = WeightManifest::load(&dir.join("weights.manifest.txt"))?;
+        if manifest.entries.len() != meta.n_weights {
+            bail!(
+                "manifest has {} weights, meta says {}",
+                manifest.entries.len(),
+                meta.n_weights
+            );
+        }
+        let blob = std::fs::read(dir.join("weights.bin")).context("weights.bin")?;
+        if blob.len() != manifest.total_bytes() {
+            bail!("weights.bin size mismatch");
+        }
+
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        let prefill_exe = compile(&client, &dir.join(format!("prefill_s{}.hlo.txt", meta.prefill_seq)))?;
+        let decode_exe = compile(&client, &dir.join(format!("decode_b{MAX_SLOTS}.hlo.txt")))?;
+
+        // Slice the blob into weight tensors and upload them to the
+        // device ONCE (manifest order == HLO parameter order).
+        let mut weights = Vec::with_capacity(manifest.entries.len());
+        for e in &manifest.entries {
+            let bytes = &blob[e.offset..e.offset + e.size_bytes];
+            let floats: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let buf = client
+                .buffer_from_host_buffer(&floats, &e.shape, None)
+                .map_err(|e2| anyhow::anyhow!("upload {}: {e2:?}", e.name))?;
+            weights.push(buf);
+        }
+
+        let cache_elems =
+            meta.layers * MAX_SLOTS * meta.max_context * meta.kv_heads * meta.head_dim;
+        Ok(TinyRuntime {
+            meta,
+            client,
+            prefill_exe,
+            decode_exe,
+            weights,
+            k_cache: vec![0.0; cache_elems],
+            v_cache: vec![0.0; cache_elems],
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Run prefill over a prompt (≤ prefill_seq tokens; right-padded).
+    /// Returns the next token and the K/V rows to install into a slot.
+    pub fn prefill(&self, prompt: &[i32]) -> Result<PrefillOut> {
+        let s = self.meta.prefill_seq;
+        if prompt.is_empty() || prompt.len() > s {
+            bail!("prompt length {} outside (0, {s}]", prompt.len());
+        }
+        let mut toks = vec![0i32; s];
+        toks[..prompt.len()].copy_from_slice(prompt);
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(&toks, &[s], None)
+            .map_err(|e| anyhow::anyhow!("tokens upload: {e:?}"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&tok_buf);
+        let result = self
+            .prefill_exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow::anyhow!("prefill execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("prefill download: {e:?}"))?;
+        let (logits, k, v) = result
+            .to_tuple3()
+            .map_err(|e| anyhow::anyhow!("prefill untuple: {e:?}"))?;
+        let logits: Vec<f32> = logits
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("logits: {e:?}"))?;
+        let v_sz = self.meta.vocab;
+        let last = prompt.len() - 1;
+        let row = &logits[last * v_sz..(last + 1) * v_sz];
+        let next_token = argmax(row);
+        Ok(PrefillOut {
+            next_token,
+            k: k.to_vec().map_err(|e| anyhow::anyhow!("k: {e:?}"))?,
+            v: v.to_vec().map_err(|e| anyhow::anyhow!("v: {e:?}"))?,
+        })
+    }
+
+    /// Install prefill K/V rows into decode-cache slot `slot` (positions
+    /// `0..len`). Pure rust memory management — the L3 coordinator owns
+    /// the cache.
+    pub fn install_slot(&mut self, slot: usize, len: usize, k: &[f32], v: &[f32]) {
+        assert!(slot < MAX_SLOTS);
+        assert!(len <= self.meta.prefill_seq);
+        let m = &self.meta;
+        let row = m.kv_heads * m.head_dim; // elems per position
+        let s = m.prefill_seq;
+        for layer in 0..m.layers {
+            for pos in 0..len {
+                let src = (layer * s + pos) * row;
+                let dst = ((layer * MAX_SLOTS + slot) * m.max_context + pos) * row;
+                self.k_cache[dst..dst + row].copy_from_slice(&k[src..src + row]);
+                self.v_cache[dst..dst + row].copy_from_slice(&v[src..src + row]);
+            }
+        }
+    }
+
+    /// Clear a slot (request finished).
+    pub fn clear_slot(&mut self, slot: usize) {
+        let m = &self.meta;
+        let row = m.kv_heads * m.head_dim;
+        for layer in 0..m.layers {
+            let dst = ((layer * MAX_SLOTS + slot) * m.max_context) * row;
+            let n = m.max_context * row;
+            self.k_cache[dst..dst + n].fill(0.0);
+            self.v_cache[dst..dst + n].fill(0.0);
+        }
+    }
+
+    /// One decode step over all MAX_SLOTS slots. `tokens[i]` is the input
+    /// token for slot i; `lengths[i]` the valid cache length (0 = slot
+    /// inactive — output ignored). Returns per-slot argmax tokens.
+    /// The KV cache advances in place for every active slot.
+    pub fn decode_step(
+        &mut self,
+        tokens: &[i32; MAX_SLOTS],
+        lengths: &[i32; MAX_SLOTS],
+    ) -> Result<[i32; MAX_SLOTS]> {
+        let m = &self.meta;
+        let cache_dims = [m.layers, MAX_SLOTS, m.max_context, m.kv_heads, m.head_dim];
+        let up = |data: &[f32], dims: &[usize]| {
+            self.client
+                .buffer_from_host_buffer(data, dims, None)
+                .map_err(|e| anyhow::anyhow!("upload: {e:?}"))
+        };
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(&tokens[..], &[MAX_SLOTS], None)
+            .map_err(|e| anyhow::anyhow!("tokens upload: {e:?}"))?;
+        let len_buf = self
+            .client
+            .buffer_from_host_buffer(&lengths[..], &[MAX_SLOTS], None)
+            .map_err(|e| anyhow::anyhow!("lengths upload: {e:?}"))?;
+        let kc = up(&self.k_cache, &cache_dims)?;
+        let vc = up(&self.v_cache, &cache_dims)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&tok_buf);
+        args.push(&kc);
+        args.push(&vc);
+        args.push(&len_buf);
+        let result = self
+            .decode_exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow::anyhow!("decode execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("decode download: {e:?}"))?;
+        let (logits, kc2, vc2) = result
+            .to_tuple3()
+            .map_err(|e| anyhow::anyhow!("decode untuple: {e:?}"))?;
+        self.k_cache = kc2.to_vec().map_err(|e| anyhow::anyhow!("kc': {e:?}"))?;
+        self.v_cache = vc2.to_vec().map_err(|e| anyhow::anyhow!("vc': {e:?}"))?;
+        let logits: Vec<f32> = logits
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("logits: {e:?}"))?;
+        let v_sz = m.vocab;
+        let mut out = [0i32; MAX_SLOTS];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = argmax(&logits[i * v_sz..(i + 1) * v_sz]);
+        }
+        Ok(out)
+    }
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+}

@@ -1,0 +1,85 @@
+//! Sarathi-Serve / vLLM chunked-prefill scheduler (the paper's §3
+//! baseline and the first stage of DuetServe's own scheduling).
+
+use super::{build_chunked_batch, IterationPlan, SchedInput, Scheduler};
+
+/// Token-budget scheduler: every iteration packs ongoing decodes first,
+/// then fills the remaining budget with (possibly chunked) prefill.
+/// This is `vLLM` / `SGLang-Chunked` in the evaluation.
+#[derive(Debug, Clone)]
+pub struct ChunkedScheduler {
+    pub token_budget: u64,
+    pub max_batch: usize,
+    pub kv_watermark: f64,
+    pub label: String,
+}
+
+impl ChunkedScheduler {
+    pub fn new(token_budget: u64, max_batch: usize, kv_watermark: f64) -> ChunkedScheduler {
+        ChunkedScheduler {
+            token_budget,
+            max_batch,
+            kv_watermark,
+            label: "vLLM".into(),
+        }
+    }
+
+    pub fn labeled(mut self, label: &str) -> ChunkedScheduler {
+        self.label = label.to_string();
+        self
+    }
+}
+
+impl Scheduler for ChunkedScheduler {
+    fn plan(&mut self, input: &SchedInput<'_>) -> IterationPlan {
+        let (decode, prefill) =
+            build_chunked_batch(input, self.token_budget, self.max_batch, self.kv_watermark);
+        if decode.is_empty() && prefill.is_empty() {
+            IterationPlan::Idle
+        } else {
+            IterationPlan::Aggregated { decode, prefill }
+        }
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::Request;
+
+    #[test]
+    fn idle_when_no_work() {
+        let mut s = ChunkedScheduler::new(8192, 1024, 0.02);
+        let plan = s.plan(&SchedInput {
+            running: &[],
+            waiting: &[],
+            kv_free_tokens: 100,
+            kv_total_tokens: 100,
+        });
+        assert!(plan.is_idle());
+    }
+
+    #[test]
+    fn emits_aggregated_plan() {
+        let mut s = ChunkedScheduler::new(100, 1024, 0.0);
+        let waiting = vec![Request::new(0, 0.0, 250, 5)];
+        let plan = s.plan(&SchedInput {
+            running: &[],
+            waiting: &waiting,
+            kv_free_tokens: 100_000,
+            kv_total_tokens: 100_000,
+        });
+        match plan {
+            IterationPlan::Aggregated { decode, prefill } => {
+                assert!(decode.is_empty());
+                assert_eq!(prefill.len(), 1);
+                assert_eq!(prefill[0].tokens, 100); // chunked to budget
+            }
+            other => panic!("expected aggregated, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,341 @@
+//! DuetServe's adaptive scheduler (§4, Algorithm 1) and the
+//! static-partition ablation (Appendix A, Fig. 9).
+
+use super::optimizer::optimize_partition_verbatim;
+use super::{build_chunked_batch, optimize_partition, IterationPlan, SchedInput, Scheduler};
+use crate::hw::PartitionPlan;
+use crate::model::AttnShape;
+use crate::request::{Request, RequestId};
+use crate::roofline::{BatchShape, Predictor};
+
+/// Build the (decode, prefill) batch shapes for a candidate plan, looking
+/// request state up in the scheduler input.
+fn shapes_of(
+    input: &SchedInput<'_>,
+    decode: &[RequestId],
+    prefill: &[super::PrefillChunk],
+) -> (BatchShape, BatchShape) {
+    let find = |id: RequestId| -> Option<&Request> {
+        input
+            .running
+            .iter()
+            .chain(input.waiting.iter())
+            .find(|r| r.id == id)
+    };
+    let dec_shapes = decode
+        .iter()
+        .filter_map(|&id| find(id))
+        .map(|r| AttnShape {
+            q: 1,
+            c: r.context_len(),
+        })
+        .collect();
+    let pre_shapes = prefill
+        .iter()
+        .filter_map(|c| find(c.id).map(|r| (r, c.tokens)))
+        .map(|(r, q)| AttnShape {
+            q,
+            c: r.context_len(),
+        })
+        .collect();
+    (
+        BatchShape::from_shapes(dec_shapes),
+        BatchShape::from_shapes(pre_shapes),
+    )
+}
+
+/// The DuetServe scheduler:
+/// 1. build the conventional chunked-prefill batch;
+/// 2. predict its aggregated latency with the attention-aware roofline;
+/// 3. if within the TBT SLO → aggregated (temporal-sharing) iteration;
+/// 4. else split phases and solve Algorithm 1 for `(S_p, S_d, k)` →
+///    spatial iteration; if no feasible split exists, fall back to
+///    aggregated with decode-only (shed the prefill to protect TBT).
+#[derive(Debug, Clone)]
+pub struct DuetScheduler {
+    pub predictor: Predictor,
+    pub token_budget: u64,
+    pub max_batch: usize,
+    pub kv_watermark: f64,
+    pub tbt_slo: f64,
+    pub max_lookahead: u32,
+    /// Count of iterations that went spatial (telemetry / Fig. 10).
+    pub spatial_iterations: u64,
+    pub total_iterations: u64,
+    /// Ablation switch: run Algorithm 1 exactly as printed (no
+    /// realized-gap constraint). See `bench ablation_design`.
+    pub verbatim_alg1: bool,
+}
+
+impl DuetScheduler {
+    pub fn new(
+        predictor: Predictor,
+        token_budget: u64,
+        max_batch: usize,
+        kv_watermark: f64,
+        tbt_slo: f64,
+        max_lookahead: u32,
+    ) -> DuetScheduler {
+        DuetScheduler {
+            predictor,
+            token_budget,
+            max_batch,
+            kv_watermark,
+            tbt_slo,
+            max_lookahead,
+            spatial_iterations: 0,
+            total_iterations: 0,
+            verbatim_alg1: false,
+        }
+    }
+}
+
+impl Scheduler for DuetScheduler {
+    fn plan(&mut self, input: &SchedInput<'_>) -> IterationPlan {
+        let (decode, prefill) =
+            build_chunked_batch(input, self.token_budget, self.max_batch, self.kv_watermark);
+        if decode.is_empty() && prefill.is_empty() {
+            return IterationPlan::Idle;
+        }
+        self.total_iterations += 1;
+
+        let (dec_shape, pre_shape) = shapes_of(input, &decode, &prefill);
+        // Line 2-4: predict the mixed batch on the full device.
+        let mut mixed = dec_shape.shapes.clone();
+        mixed.extend(pre_shape.shapes.iter().copied());
+        let t_mixed = self
+            .predictor
+            .predict_full(&BatchShape::from_shapes(mixed));
+        if t_mixed <= self.tbt_slo || decode.is_empty() || prefill.is_empty() {
+            return IterationPlan::Aggregated { decode, prefill };
+        }
+
+        // Line 5-22: spatial multiplexing via Algorithm 1.
+        let solve = if self.verbatim_alg1 {
+            optimize_partition_verbatim
+        } else {
+            optimize_partition
+        };
+        match solve(
+            &self.predictor,
+            &dec_shape,
+            &pre_shape,
+            self.tbt_slo,
+            self.max_lookahead,
+        ) {
+            Some(plan) => {
+                self.spatial_iterations += 1;
+                IterationPlan::Spatial {
+                    decode,
+                    prefill,
+                    plan,
+                }
+            }
+            // No feasible split: protect decode TBT by postponing prefill.
+            None => IterationPlan::Aggregated {
+                decode,
+                prefill: Vec::new(),
+            },
+        }
+    }
+
+    fn name(&self) -> String {
+        "DuetServe".into()
+    }
+}
+
+/// Fig. 9 ablation: spatial multiplexing with a FIXED TPC split whenever
+/// both phases are present; k chosen by the roofline ratio.
+#[derive(Debug, Clone)]
+pub struct StaticPartitionScheduler {
+    pub predictor: Predictor,
+    pub token_budget: u64,
+    pub max_batch: usize,
+    pub kv_watermark: f64,
+    pub decode_tpcs: u32,
+    pub prefill_tpcs: u32,
+    pub max_lookahead: u32,
+}
+
+impl StaticPartitionScheduler {
+    pub fn new(
+        predictor: Predictor,
+        token_budget: u64,
+        max_batch: usize,
+        decode_tpcs: u32,
+        prefill_tpcs: u32,
+    ) -> StaticPartitionScheduler {
+        assert!(
+            decode_tpcs + prefill_tpcs <= predictor.gpu.num_tpcs(),
+            "static split exceeds device"
+        );
+        StaticPartitionScheduler {
+            predictor,
+            token_budget,
+            max_batch,
+            kv_watermark: 0.02,
+            decode_tpcs,
+            prefill_tpcs,
+            max_lookahead: 16,
+        }
+    }
+}
+
+impl Scheduler for StaticPartitionScheduler {
+    fn plan(&mut self, input: &SchedInput<'_>) -> IterationPlan {
+        let (decode, prefill) =
+            build_chunked_batch(input, self.token_budget, self.max_batch, self.kv_watermark);
+        if decode.is_empty() && prefill.is_empty() {
+            return IterationPlan::Idle;
+        }
+        if decode.is_empty() || prefill.is_empty() {
+            // Only one phase present: run it on the whole device.
+            return IterationPlan::Aggregated { decode, prefill };
+        }
+        let (dec_shape, pre_shape) = shapes_of(input, &decode, &prefill);
+        let sd = self.decode_tpcs * self.predictor.gpu.sms_per_tpc;
+        let sp = self.prefill_tpcs * self.predictor.gpu.sms_per_tpc;
+        let t_d = self.predictor.predict_total(&dec_shape, sd);
+        let t_p = self.predictor.predict_total(&pre_shape, sp);
+        let k = if t_d > 0.0 {
+            (((t_p / t_d).floor() as u32).max(1)).min(self.max_lookahead)
+        } else {
+            1
+        };
+        let mut plan = PartitionPlan::split(&self.predictor.gpu, self.decode_tpcs, k);
+        // Static split may leave TPCs unused if d+p < total; give the rest
+        // to prefill (matches how a static deployment would configure it).
+        plan.prefill = crate::hw::SmMask::tpcs(
+            self.decode_tpcs,
+            self.predictor.gpu.num_tpcs() - self.decode_tpcs,
+        );
+        plan.t_decode = t_d;
+        plan.t_prefill = t_p;
+        IterationPlan::Spatial {
+            decode,
+            prefill,
+            plan,
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("Sd{}-Sp{}", self.decode_tpcs, self.prefill_tpcs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, ModelSpec};
+
+    fn predictor() -> Predictor {
+        Predictor::new(ModelSpec::qwen3_8b(), GpuSpec::h100(), 1)
+    }
+
+    fn decoding(id: RequestId, ctx: u64) -> Request {
+        let mut r = Request::new(id, 0.0, ctx, 100);
+        r.advance_prefill(ctx);
+        r
+    }
+
+    #[test]
+    fn small_mixed_batch_stays_aggregated() {
+        let mut s = DuetScheduler::new(predictor(), 8192, 1024, 0.0, 0.100, 16);
+        let running = vec![decoding(0, 512)];
+        let waiting = vec![Request::new(1, 0.0, 256, 10)];
+        let plan = s.plan(&SchedInput {
+            running: &running,
+            waiting: &waiting,
+            kv_free_tokens: 1_000_000,
+            kv_total_tokens: 1_000_000,
+        });
+        assert!(matches!(plan, IterationPlan::Aggregated { .. }), "{plan:?}");
+        assert_eq!(s.spatial_iterations, 0);
+    }
+
+    #[test]
+    fn tbt_threat_triggers_spatial() {
+        let mut s = DuetScheduler::new(predictor(), 8192, 1024, 0.0, 0.100, 16);
+        // 32 long-context decodes + an 8K prefill: mixed latency >> 100ms.
+        let running: Vec<_> = (0..32).map(|i| decoding(i, 8192)).collect();
+        let waiting = vec![Request::new(99, 0.0, 8192, 10)];
+        let plan = s.plan(&SchedInput {
+            running: &running,
+            waiting: &waiting,
+            kv_free_tokens: 10_000_000,
+            kv_total_tokens: 10_000_000,
+        });
+        match &plan {
+            IterationPlan::Spatial { decode, prefill, plan } => {
+                assert_eq!(decode.len(), 32);
+                assert!(!prefill.is_empty());
+                assert!(plan.t_decode <= 0.100);
+                assert!(plan.k >= 1);
+            }
+            other => panic!("expected spatial, got {other:?}"),
+        }
+        assert_eq!(s.spatial_iterations, 1);
+    }
+
+    #[test]
+    fn decode_only_never_spatial() {
+        let mut s = DuetScheduler::new(predictor(), 8192, 1024, 0.0, 0.001, 16);
+        // Even with an impossible SLO, no prefill side -> aggregated.
+        let running: Vec<_> = (0..64).map(|i| decoding(i, 16384)).collect();
+        let plan = s.plan(&SchedInput {
+            running: &running,
+            waiting: &[],
+            kv_free_tokens: 10_000_000,
+            kv_total_tokens: 10_000_000,
+        });
+        assert!(matches!(plan, IterationPlan::Aggregated { .. }));
+    }
+
+    #[test]
+    fn infeasible_split_sheds_prefill() {
+        // Tight SLO that no partition can satisfy: decode-only iteration.
+        let mut s = DuetScheduler::new(predictor(), 8192, 1024, 0.0, 1e-6, 16);
+        let running: Vec<_> = (0..8).map(|i| decoding(i, 8192)).collect();
+        let waiting = vec![Request::new(99, 0.0, 8192, 10)];
+        let plan = s.plan(&SchedInput {
+            running: &running,
+            waiting: &waiting,
+            kv_free_tokens: 10_000_000,
+            kv_total_tokens: 10_000_000,
+        });
+        match plan {
+            IterationPlan::Aggregated { decode, prefill } => {
+                assert_eq!(decode.len(), 8);
+                assert!(prefill.is_empty(), "prefill postponed to protect TBT");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn static_scheduler_always_spatial_when_mixed() {
+        let mut s = StaticPartitionScheduler::new(predictor(), 8192, 1024, 22, 44);
+        let running = vec![decoding(0, 512)];
+        let waiting = vec![Request::new(1, 0.0, 256, 10)];
+        let plan = s.plan(&SchedInput {
+            running: &running,
+            waiting: &waiting,
+            kv_free_tokens: 1_000_000,
+            kv_total_tokens: 1_000_000,
+        });
+        match plan {
+            IterationPlan::Spatial { plan, .. } => {
+                assert_eq!(plan.decode.n_tpcs, 22);
+                assert_eq!(plan.prefill.n_tpcs, 44);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.name(), "Sd22-Sp44");
+    }
+
+    #[test]
+    #[should_panic(expected = "static split exceeds device")]
+    fn static_oversub_panics() {
+        StaticPartitionScheduler::new(predictor(), 8192, 1024, 40, 40);
+    }
+}

@@ -1,0 +1,286 @@
+//! Iteration-level schedulers.
+//!
+//! All engines run continuous batching (ORCA-style): at every iteration a
+//! scheduler inspects the running/waiting requests and emits an
+//! [`IterationPlan`]. The plans differ by policy:
+//!
+//! - [`chunked::ChunkedScheduler`] — the Sarathi-Serve / vLLM token-budget
+//!   policy (decode-first, then prefill chunks filling the budget).
+//! - [`sglang::SglangDefaultScheduler`] — throughput-oriented: prefill-only
+//!   batches run opportunistically before decode drains.
+//! - [`duet::DuetScheduler`] — the paper's contribution: chunked prefill +
+//!   attention-aware roofline TBT check + Algorithm 1 partition optimizer
+//!   emitting spatial iterations.
+//! - [`duet::StaticPartitionScheduler`] — Fig. 9 ablation: always-spatial
+//!   with a fixed TPC split.
+//!
+//! PD disaggregation (Dynamo baseline) is an *engine topology*, not a
+//! scheduler — see [`crate::engine::disagg`].
+
+pub mod budget;
+pub mod chunked;
+pub mod duet;
+pub mod optimizer;
+pub mod sglang;
+
+pub use budget::{knee_budget, slo_budget};
+pub use chunked::ChunkedScheduler;
+pub use duet::{DuetScheduler, StaticPartitionScheduler};
+pub use optimizer::{optimize_partition, optimize_partition_verbatim};
+pub use sglang::SglangDefaultScheduler;
+
+use crate::hw::PartitionPlan;
+use crate::request::{Phase, Request, RequestId};
+
+/// Scheduler's view of engine state at an iteration boundary.
+pub struct SchedInput<'a> {
+    /// Admitted requests (phase Prefill or Decode), scheduling order.
+    pub running: &'a [Request],
+    /// Waiting queue (FCFS order), arrivals ≤ now only.
+    pub waiting: &'a [Request],
+    /// Free KV tokens available for new allocations.
+    pub kv_free_tokens: u64,
+    /// KV watermark: keep this fraction of tokens free when admitting.
+    pub kv_total_tokens: u64,
+}
+
+/// Prefill work assignment: `tokens` prompt tokens of request `id` this
+/// iteration (`admit` marks requests pulled from the waiting queue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillChunk {
+    pub id: RequestId,
+    pub tokens: u64,
+    pub admit: bool,
+}
+
+/// One iteration's work.
+#[derive(Debug, Clone, PartialEq)]
+pub enum IterationPlan {
+    /// Nothing schedulable (queues empty or KV exhausted).
+    Idle,
+    /// PD-aggregated iteration: decode steps + prefill chunks execute as
+    /// one synchronous batch on the full device.
+    Aggregated {
+        decode: Vec<RequestId>,
+        prefill: Vec<PrefillChunk>,
+    },
+    /// Spatially-multiplexed iteration (§4.2/4.3): decode batch runs k
+    /// look-ahead steps on `plan.decode` TPCs while prefill chunks run on
+    /// `plan.prefill` TPCs.
+    Spatial {
+        decode: Vec<RequestId>,
+        prefill: Vec<PrefillChunk>,
+        plan: PartitionPlan,
+    },
+}
+
+impl IterationPlan {
+    pub fn is_idle(&self) -> bool {
+        matches!(self, IterationPlan::Idle)
+    }
+
+    pub fn prefill_chunks(&self) -> &[PrefillChunk] {
+        match self {
+            IterationPlan::Idle => &[],
+            IterationPlan::Aggregated { prefill, .. } => prefill,
+            IterationPlan::Spatial { prefill, .. } => prefill,
+        }
+    }
+
+    pub fn decode_ids(&self) -> &[RequestId] {
+        match self {
+            IterationPlan::Idle => &[],
+            IterationPlan::Aggregated { decode, .. } => decode,
+            IterationPlan::Spatial { decode, .. } => decode,
+        }
+    }
+
+    /// Total scheduled tokens (decode count + prefill chunk tokens).
+    pub fn scheduled_tokens(&self) -> u64 {
+        self.decode_ids().len() as u64
+            + self
+                .prefill_chunks()
+                .iter()
+                .map(|c| c.tokens)
+                .sum::<u64>()
+    }
+}
+
+/// Common trait so engines are policy-generic.
+pub trait Scheduler {
+    fn plan(&mut self, input: &SchedInput<'_>) -> IterationPlan;
+    fn name(&self) -> String;
+}
+
+/// Shared helper: the Sarathi/vLLM chunked-prefill batch construction.
+/// Decode requests are rescheduled first (one budget token each), then
+/// running prefills continue, then waiting requests are admitted to fill
+/// the remaining budget, chunking the final one. Admission respects the
+/// KV watermark and `max_batch`.
+pub fn build_chunked_batch(
+    input: &SchedInput<'_>,
+    token_budget: u64,
+    max_batch: usize,
+    kv_watermark: f64,
+) -> (Vec<RequestId>, Vec<PrefillChunk>) {
+    let mut budget = token_budget;
+    let mut decode = Vec::new();
+    let mut prefill = Vec::new();
+    let mut batch_slots = max_batch;
+
+    // 1. Ongoing decodes: highest priority, one token each.
+    for r in input.running.iter().filter(|r| r.phase == Phase::Decode) {
+        if budget == 0 || batch_slots == 0 {
+            break;
+        }
+        decode.push(r.id);
+        budget -= 1;
+        batch_slots -= 1;
+    }
+
+    // 2. Running (partially prefilled) requests continue.
+    for r in input.running.iter().filter(|r| r.phase == Phase::Prefill) {
+        if budget == 0 || batch_slots == 0 {
+            break;
+        }
+        let take = r.remaining_prompt().min(budget);
+        if take > 0 {
+            prefill.push(PrefillChunk {
+                id: r.id,
+                tokens: take,
+                admit: false,
+            });
+            budget -= take;
+            batch_slots -= 1;
+        }
+    }
+
+    // 3. Admit waiting requests while budget and KV headroom remain.
+    let watermark_tokens = (input.kv_total_tokens as f64 * kv_watermark) as u64;
+    let mut kv_free = input.kv_free_tokens;
+    for r in input.waiting {
+        if budget == 0 || batch_slots == 0 {
+            break;
+        }
+        // Admission control: the whole prompt (plus one output token) must
+        // fit above the watermark, otherwise admitting risks thrashing.
+        let need = r.prompt_len + 1;
+        if need > kv_free || kv_free - need < watermark_tokens {
+            break; // FCFS: do not skip ahead of a blocked head-of-line
+        }
+        let take = r.remaining_prompt().min(budget);
+        prefill.push(PrefillChunk {
+            id: r.id,
+            tokens: take,
+            admit: true,
+        });
+        kv_free -= need;
+        budget -= take;
+        batch_slots -= 1;
+    }
+
+    (decode, prefill)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::Request;
+
+    fn reqs(specs: &[(u64, u64, u64)]) -> Vec<Request> {
+        // (id, prompt, prefilled)
+        specs
+            .iter()
+            .map(|&(id, prompt, prefilled)| {
+                let mut r = Request::new(id, 0.0, prompt, 10);
+                if prefilled > 0 {
+                    r.advance_prefill(prefilled);
+                }
+                r
+            })
+            .collect()
+    }
+
+    #[test]
+    fn decode_first_then_prefill_chunks() {
+        let running = reqs(&[(0, 100, 100), (1, 100, 100), (2, 500, 200)]);
+        let waiting = reqs(&[(3, 10_000, 0)]);
+        let input = SchedInput {
+            running: &running,
+            waiting: &waiting,
+            kv_free_tokens: 1_000_000,
+            kv_total_tokens: 1_000_000,
+        };
+        let (dec, pre) = build_chunked_batch(&input, 512, 1024, 0.0);
+        assert_eq!(dec, vec![0, 1]);
+        // req2 continues with its remaining 300, then req3 fills 210
+        assert_eq!(
+            pre,
+            vec![
+                PrefillChunk { id: 2, tokens: 300, admit: false },
+                PrefillChunk { id: 3, tokens: 210, admit: true },
+            ]
+        );
+        // budget fully consumed
+        assert_eq!(2 + 300 + 210, 512);
+    }
+
+    #[test]
+    fn budget_bounds_total_tokens() {
+        let running = reqs(&[(0, 4000, 1000)]);
+        let waiting = reqs(&[(1, 9000, 0), (2, 50, 0)]);
+        let input = SchedInput {
+            running: &running,
+            waiting: &waiting,
+            kv_free_tokens: 1_000_000,
+            kv_total_tokens: 1_000_000,
+        };
+        let (dec, pre) = build_chunked_batch(&input, 2048, 1024, 0.0);
+        let total: u64 = dec.len() as u64 + pre.iter().map(|c| c.tokens).sum::<u64>();
+        assert!(total <= 2048);
+        assert_eq!(total, 2048);
+    }
+
+    #[test]
+    fn kv_watermark_blocks_admission_fcfs() {
+        let running = vec![];
+        let waiting = reqs(&[(0, 5000, 0), (1, 10, 0)]);
+        let input = SchedInput {
+            running: &running,
+            waiting: &waiting,
+            kv_free_tokens: 4000,
+            kv_total_tokens: 100_000,
+        };
+        // head-of-line needs 5001 > 4000 free: nothing admitted (no
+        // skip-ahead — FCFS fairness)
+        let (_, pre) = build_chunked_batch(&input, 8192, 1024, 0.0);
+        assert!(pre.is_empty());
+    }
+
+    #[test]
+    fn max_batch_limits_slots() {
+        let running = reqs(&[(0, 10, 10), (1, 10, 10), (2, 10, 10)]);
+        let waiting = reqs(&[(3, 100, 0)]);
+        let input = SchedInput {
+            running: &running,
+            waiting: &waiting,
+            kv_free_tokens: 1_000_000,
+            kv_total_tokens: 1_000_000,
+        };
+        let (dec, pre) = build_chunked_batch(&input, 8192, 3, 0.0);
+        assert_eq!(dec.len(), 3);
+        assert!(pre.is_empty());
+    }
+
+    #[test]
+    fn plan_accessors() {
+        let plan = IterationPlan::Aggregated {
+            decode: vec![1, 2],
+            prefill: vec![PrefillChunk { id: 3, tokens: 100, admit: true }],
+        };
+        assert_eq!(plan.scheduled_tokens(), 102);
+        assert_eq!(plan.decode_ids(), &[1, 2]);
+        assert!(!plan.is_idle());
+        assert!(IterationPlan::Idle.is_idle());
+    }
+}

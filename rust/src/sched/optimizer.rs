@@ -1,0 +1,209 @@
+//! GPU partitioning configuration optimizer — Algorithm 1 (§4.2).
+//!
+//! Given the decode and prefill sub-batches of a mixed iteration whose
+//! aggregated latency would violate the TBT SLO, enumerate decode
+//! partition sizes `S_d` (TPC granularity), keep those satisfying
+//! `t_d(S_d) ≤ τ_TBT`, and for each evaluate `k ∈ {⌊t_p/t_d⌋, ⌊t_p/t_d⌋+1}`
+//! look-ahead decode steps, maximizing token throughput
+//! `ρ = (k·T_decode + T_prefill) / max(k·t_d, t_p)`.
+
+use crate::config::GpuSpec;
+use crate::hw::PartitionPlan;
+use crate::roofline::{BatchShape, Predictor};
+
+/// Solve Algorithm 1 with the realized-gap strengthening (see below).
+/// Returns `None` when no feasible split exists (no `S_d` keeps decode
+/// under the SLO, or either side is empty).
+pub fn optimize_partition(
+    pred: &Predictor,
+    decode: &BatchShape,
+    prefill: &BatchShape,
+    tbt_slo: f64,
+    max_k: u32,
+) -> Option<PartitionPlan> {
+    optimize_partition_impl(pred, decode, prefill, tbt_slo, max_k, true)
+}
+
+/// Algorithm 1 exactly as printed in the paper: the only latency
+/// constraint is `t_d(S_d) <= tau` (line 10). Kept for the ablation bench
+/// — it can select configs whose realized inter-token gap (span/k)
+/// exceeds the SLO.
+pub fn optimize_partition_verbatim(
+    pred: &Predictor,
+    decode: &BatchShape,
+    prefill: &BatchShape,
+    tbt_slo: f64,
+    max_k: u32,
+) -> Option<PartitionPlan> {
+    optimize_partition_impl(pred, decode, prefill, tbt_slo, max_k, false)
+}
+
+fn optimize_partition_impl(
+    pred: &Predictor,
+    decode: &BatchShape,
+    prefill: &BatchShape,
+    tbt_slo: f64,
+    max_k: u32,
+    realized_gap_constraint: bool,
+) -> Option<PartitionPlan> {
+    if decode.is_empty() || prefill.is_empty() {
+        return None;
+    }
+    let spec: &GpuSpec = &pred.gpu;
+    let total_tpcs = spec.num_tpcs();
+    let t_decode_tokens = decode.decode_tokens_per_step() as f64;
+    let t_prefill_tokens = prefill.n_tokens as f64;
+
+    let mut best: Option<PartitionPlan> = None;
+    let mut best_rho = 0.0f64;
+
+    // Enumerate S_d in SM steps of one TPC: `for S_d in range(2, S+1, 2)`
+    // (line 8 operates in SMs; leave ≥1 TPC for prefill).
+    for d_tpcs in 1..total_tpcs {
+        let sd_sms = d_tpcs * spec.sms_per_tpc;
+        let t_d = pred.predict_total(decode, sd_sms);
+        if t_d > tbt_slo {
+            continue; // line 10-12: violates TBT constraint
+        }
+        let p_tpcs = total_tpcs - d_tpcs;
+        let sp_sms = p_tpcs * spec.sms_per_tpc;
+        let t_p = pred.predict_total(prefill, sp_sms);
+
+        let k_floor = if t_d > 0.0 {
+            ((t_p / t_d).floor() as u32).max(1)
+        } else {
+            1
+        };
+        for k in [k_floor, k_floor + 1] {
+            let k = k.clamp(1, max_k.max(1));
+            let span = (k as f64 * t_d).max(t_p);
+            if span <= 0.0 {
+                continue;
+            }
+            // The *realized* decode inter-token gap is span/k (tokens are
+            // spaced t_d apart while the decode side is busy, but the
+            // iteration only rejoins at the synchronization point). A
+            // config whose realized gap exceeds the SLO would satisfy
+            // line 10's per-step check yet still violate TBT in practice
+            // — reject it. (Strengthening of Algorithm 1; see DESIGN.md.)
+            if realized_gap_constraint && span / k as f64 > tbt_slo {
+                continue;
+            }
+            let rho = (k as f64 * t_decode_tokens + t_prefill_tokens) / span;
+            if rho > best_rho {
+                best_rho = rho;
+                let mut plan = PartitionPlan::split(spec, d_tpcs, k);
+                plan.t_decode = t_d;
+                plan.t_prefill = t_p;
+                plan.rho = rho;
+                best = Some(plan);
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, ModelSpec};
+    use crate::model::AttnShape;
+
+    fn pred() -> Predictor {
+        Predictor::new(ModelSpec::qwen3_8b(), GpuSpec::h100(), 1)
+    }
+
+    fn decode_batch(n: u64, ctx: u64) -> BatchShape {
+        BatchShape::from_shapes((0..n).map(|_| AttnShape { q: 1, c: ctx }).collect())
+    }
+
+    fn prefill_batch(tokens: u64) -> BatchShape {
+        BatchShape::from_shapes(vec![AttnShape { q: tokens, c: 0 }])
+    }
+
+    #[test]
+    fn finds_feasible_plan_under_contention() {
+        let p = pred();
+        let dec = decode_batch(32, 4096);
+        let pre = prefill_batch(8192);
+        let plan = optimize_partition(&p, &dec, &pre, 0.100, 16).expect("feasible");
+        assert!(plan.is_valid(&p.gpu));
+        // decode side must satisfy the SLO
+        assert!(plan.t_decode <= 0.100);
+        assert!(plan.k >= 1);
+        assert!(plan.rho > 0.0);
+    }
+
+    #[test]
+    fn favors_prefill_heavy_allocation() {
+        // §4.2: "naturally favors allocating more SMs to prefill ... since
+        // prefill contributes more substantially to total throughput".
+        let p = pred();
+        let dec = decode_batch(16, 2048);
+        let pre = prefill_batch(8192);
+        let plan = optimize_partition(&p, &dec, &pre, 0.100, 16).unwrap();
+        assert!(
+            plan.prefill.n_tpcs > plan.decode.n_tpcs,
+            "prefill {} vs decode {} TPCs",
+            plan.prefill.n_tpcs,
+            plan.decode.n_tpcs
+        );
+    }
+
+    #[test]
+    fn infeasible_slo_returns_none() {
+        let p = pred();
+        // Huge decode batch at very long context with an absurdly tight SLO.
+        let dec = decode_batch(512, 64 * 1024);
+        let pre = prefill_batch(8192);
+        assert!(optimize_partition(&p, &dec, &pre, 1e-5, 16).is_none());
+    }
+
+    #[test]
+    fn empty_side_returns_none() {
+        let p = pred();
+        let dec = decode_batch(8, 1024);
+        let pre = prefill_batch(4096);
+        assert!(optimize_partition(&p, &BatchShape::default(), &pre, 0.1, 16).is_none());
+        assert!(optimize_partition(&p, &dec, &BatchShape::default(), 0.1, 16).is_none());
+    }
+
+    #[test]
+    fn k_balances_sides() {
+        // k should roughly bridge t_p / t_d so neither side idles long.
+        let p = pred();
+        let dec = decode_batch(32, 4096);
+        let pre = prefill_batch(8192);
+        let plan = optimize_partition(&p, &dec, &pre, 0.100, 64).unwrap();
+        let ratio = plan.t_prefill / plan.t_decode;
+        assert!(
+            (plan.k as f64 - ratio).abs() <= 1.5,
+            "k={} ratio={ratio}",
+            plan.k
+        );
+    }
+
+    #[test]
+    fn respects_max_k() {
+        let p = pred();
+        let dec = decode_batch(4, 512); // tiny decode -> huge t_p/t_d ratio
+        let pre = prefill_batch(8192);
+        let plan = optimize_partition(&p, &dec, &pre, 0.100, 8).unwrap();
+        assert!(plan.k <= 8);
+    }
+
+    #[test]
+    fn tighter_slo_means_more_decode_tpcs() {
+        let p = pred();
+        let dec = decode_batch(64, 8192);
+        let pre = prefill_batch(8192);
+        let loose = optimize_partition(&p, &dec, &pre, 0.300, 16).unwrap();
+        let tight = optimize_partition(&p, &dec, &pre, 0.060, 16).unwrap();
+        assert!(
+            tight.decode.n_tpcs >= loose.decode.n_tpcs,
+            "tight {} >= loose {}",
+            tight.decode.n_tpcs,
+            loose.decode.n_tpcs
+        );
+    }
+}

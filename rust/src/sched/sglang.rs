@@ -1,0 +1,156 @@
+//! SGLang-Default-style throughput-oriented scheduler.
+//!
+//! §5.1: "employs a throughput-oriented scheduler that opportunistically
+//! executes prefill-only batches when sufficient GPU memory is available
+//! for several consecutive iterations, before switching to decode-only
+//! iterations to drain pending requests."
+//!
+//! The consequence the paper measures (Fig. 6/7): unbounded TBT growth,
+//! because prefill-only batches repeatedly interrupt decode generation.
+
+use super::{IterationPlan, PrefillChunk, SchedInput, Scheduler};
+use crate::request::Phase;
+
+#[derive(Debug, Clone)]
+pub struct SglangDefaultScheduler {
+    /// Max prompt tokens packed into one prefill-only batch.
+    pub prefill_batch_tokens: u64,
+    pub max_batch: usize,
+    /// Stop admitting prefill when free-KV fraction drops below this.
+    pub mem_threshold: f64,
+}
+
+impl SglangDefaultScheduler {
+    pub fn new(prefill_batch_tokens: u64, max_batch: usize) -> SglangDefaultScheduler {
+        SglangDefaultScheduler {
+            prefill_batch_tokens,
+            max_batch,
+            mem_threshold: 0.10,
+        }
+    }
+}
+
+impl Scheduler for SglangDefaultScheduler {
+    fn plan(&mut self, input: &SchedInput<'_>) -> IterationPlan {
+        let free_frac = input.kv_free_tokens as f64 / input.kv_total_tokens.max(1) as f64;
+
+        // Opportunistic prefill: if requests wait and memory is plentiful,
+        // run a prefill-only batch of whole prompts (no chunking).
+        if !input.waiting.is_empty() && free_frac > self.mem_threshold {
+            let mut tokens = 0u64;
+            let mut kv_free = input.kv_free_tokens;
+            let mut prefill = Vec::new();
+            for r in input.waiting {
+                if prefill.len() >= self.max_batch {
+                    break;
+                }
+                let need = r.prompt_len + 1;
+                if need > kv_free || tokens + r.prompt_len > self.prefill_batch_tokens {
+                    break;
+                }
+                prefill.push(PrefillChunk {
+                    id: r.id,
+                    tokens: r.prompt_len,
+                    admit: true,
+                });
+                tokens += r.prompt_len;
+                kv_free -= need;
+            }
+            // Unfinished running prefills also continue here.
+            for r in input.running.iter().filter(|r| r.phase == Phase::Prefill) {
+                prefill.push(PrefillChunk {
+                    id: r.id,
+                    tokens: r.remaining_prompt(),
+                    admit: false,
+                });
+            }
+            if !prefill.is_empty() {
+                return IterationPlan::Aggregated {
+                    decode: Vec::new(), // decode is INTERRUPTED — the TBT pathology
+                    prefill,
+                };
+            }
+        }
+
+        // Otherwise: decode-only drain.
+        let decode: Vec<_> = input
+            .running
+            .iter()
+            .filter(|r| r.phase == Phase::Decode)
+            .take(self.max_batch)
+            .map(|r| r.id)
+            .collect();
+        // Running prefills must finish even when memory is tight.
+        let leftover: Vec<_> = input
+            .running
+            .iter()
+            .filter(|r| r.phase == Phase::Prefill)
+            .map(|r| PrefillChunk {
+                id: r.id,
+                tokens: r.remaining_prompt(),
+                admit: false,
+            })
+            .collect();
+        if decode.is_empty() && leftover.is_empty() {
+            IterationPlan::Idle
+        } else {
+            IterationPlan::Aggregated {
+                decode,
+                prefill: leftover,
+            }
+        }
+    }
+
+    fn name(&self) -> String {
+        "SGLang-Default".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::Request;
+    use crate::sched::Scheduler;
+
+    #[test]
+    fn prefill_only_batch_interrupts_decode() {
+        let mut s = SglangDefaultScheduler::new(16_384, 1024);
+        let mut running = vec![Request::new(0, 0.0, 10, 5)];
+        running[0].advance_prefill(10); // now decoding
+        let waiting = vec![Request::new(1, 0.0, 4000, 5)];
+        let plan = s.plan(&SchedInput {
+            running: &running,
+            waiting: &waiting,
+            kv_free_tokens: 90_000,
+            kv_total_tokens: 100_000,
+        });
+        match plan {
+            IterationPlan::Aggregated { decode, prefill } => {
+                assert!(decode.is_empty(), "decode interrupted by prefill batch");
+                assert_eq!(prefill[0].tokens, 4000, "whole prompt, not chunked");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn drains_decode_when_memory_tight() {
+        let mut s = SglangDefaultScheduler::new(16_384, 1024);
+        let mut running = vec![Request::new(0, 0.0, 10, 5)];
+        running[0].advance_prefill(10);
+        let waiting = vec![Request::new(1, 0.0, 4000, 5)];
+        let plan = s.plan(&SchedInput {
+            running: &running,
+            waiting: &waiting,
+            kv_free_tokens: 5_000, // 5% free < 10% threshold
+            kv_total_tokens: 100_000,
+        });
+        match plan {
+            IterationPlan::Aggregated { decode, prefill } => {
+                assert_eq!(decode, vec![0]);
+                assert!(prefill.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Threaded serving front-end for the real PJRT engine.
+//!
+//! The coordinator owns the event loop: a dedicated engine thread runs
+//! continuous batching over the PJRT runtime while client threads submit
+//! requests through an mpsc queue and receive their tokens over per-
+//! request streaming channels. This is the "router" face of the system —
+//! the equivalent of vLLM's front-end, minus HTTP (no network stack in
+//! the offline vendor set; the channel protocol is the seam where one
+//! would bolt it on).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::pjrt::{TinyRuntime, MAX_SLOTS};
+
+/// A streamed token event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokenEvent {
+    /// One generated token.
+    Token(i32),
+    /// Generation finished (EOS/max tokens).
+    Done,
+}
+
+/// A submitted request: prompt + generation bound + the stream to answer
+/// on.
+struct Submission {
+    prompt: Vec<i32>,
+    max_new_tokens: usize,
+    stream: Sender<TokenEvent>,
+}
+
+enum Control {
+    Submit(Submission),
+    Shutdown,
+}
+
+/// Handle the client holds for one in-flight request.
+pub struct ResponseStream {
+    rx: Receiver<TokenEvent>,
+    pub submitted_at: Instant,
+}
+
+impl ResponseStream {
+    /// Block until the request completes; returns all tokens.
+    pub fn collect(self) -> Vec<i32> {
+        let mut out = Vec::new();
+        while let Ok(ev) = self.rx.recv() {
+            match ev {
+                TokenEvent::Token(t) => out.push(t),
+                TokenEvent::Done => break,
+            }
+        }
+        out
+    }
+
+    /// Non-blocking poll.
+    pub fn try_next(&self) -> Option<TokenEvent> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// The server: spawn once, submit from any thread.
+pub struct Server {
+    tx: Sender<Control>,
+    engine_thread: Option<JoinHandle<Result<()>>>,
+}
+
+struct ActiveSlot {
+    length: usize,
+    produced: usize,
+    max_new: usize,
+    next_token: i32,
+    stream: Sender<TokenEvent>,
+}
+
+impl Server {
+    /// Start the engine loop on its own thread. The runtime is
+    /// constructed *on* that thread via `make_rt` (PJRT handles are not
+    /// `Send`; the engine thread owns the device for its lifetime —
+    /// exactly the single-dispatcher model the paper's CPU loop uses).
+    /// `lookahead` is the number of decode steps run between admission
+    /// points (§4.3's look-ahead).
+    pub fn start(
+        make_rt: impl FnOnce() -> Result<TinyRuntime> + Send + 'static,
+        lookahead: u32,
+    ) -> Server {
+        let (tx, rx) = channel::<Control>();
+        let engine_thread = std::thread::spawn(move || -> Result<()> {
+            let mut rt = make_rt()?;
+            let mut queue: VecDeque<Submission> = VecDeque::new();
+            let mut slots: Vec<Option<ActiveSlot>> = (0..MAX_SLOTS).map(|_| None).collect();
+            let mut shutdown = false;
+            loop {
+                // Drain the control queue (non-blocking while busy; block
+                // when idle to avoid spinning).
+                let idle =
+                    queue.is_empty() && slots.iter().all(|s| s.is_none());
+                if idle {
+                    if shutdown {
+                        return Ok(());
+                    }
+                    match rx.recv() {
+                        Ok(Control::Submit(s)) => queue.push_back(s),
+                        Ok(Control::Shutdown) | Err(_) => return Ok(()),
+                    }
+                }
+                while let Ok(ctl) = rx.try_recv() {
+                    match ctl {
+                        Control::Submit(s) => queue.push_back(s),
+                        Control::Shutdown => shutdown = true,
+                    }
+                }
+
+                // Admission: fill free slots while occupancy is low; one
+                // per span under load (decode priority).
+                let active = slots.iter().filter(|s| s.is_some()).count();
+                let n_admit = if active < MAX_SLOTS / 2 {
+                    MAX_SLOTS - active
+                } else {
+                    1
+                };
+                for _ in 0..n_admit {
+                    let Some(sub) = queue.pop_front() else { break };
+                    let Some(idx) = slots.iter().position(|s| s.is_none()) else {
+                        queue.push_front(sub);
+                        break;
+                    };
+                    let prompt_len = sub.prompt.len();
+                    let pre = rt.prefill(&sub.prompt)?;
+                    rt.install_slot(idx, prompt_len, &pre.k, &pre.v);
+                    let _ = sub.stream.send(TokenEvent::Token(pre.next_token));
+                    if sub.max_new_tokens <= 1 {
+                        let _ = sub.stream.send(TokenEvent::Done);
+                        rt.clear_slot(idx);
+                        continue;
+                    }
+                    slots[idx] = Some(ActiveSlot {
+                        length: prompt_len,
+                        produced: 1,
+                        max_new: sub.max_new_tokens,
+                        next_token: pre.next_token,
+                        stream: sub.stream,
+                    });
+                }
+
+                // Look-ahead decode span.
+                if slots.iter().any(|s| s.is_some()) {
+                    for _ in 0..lookahead.max(1) {
+                        let mut tokens = [0i32; MAX_SLOTS];
+                        let mut lengths = [0i32; MAX_SLOTS];
+                        for (i, s) in slots.iter().enumerate() {
+                            if let Some(s) = s {
+                                tokens[i] = s.next_token;
+                                lengths[i] = s.length as i32;
+                            }
+                        }
+                        let next = rt.decode_step(&tokens, &lengths)?;
+                        for i in 0..MAX_SLOTS {
+                            let finished = {
+                                let Some(s) = slots[i].as_mut() else { continue };
+                                s.length += 1;
+                                s.next_token = next[i];
+                                s.produced += 1;
+                                let _ = s.stream.send(TokenEvent::Token(next[i]));
+                                s.produced >= s.max_new
+                                    || s.length + 1 >= rt.meta.max_context
+                            };
+                            if finished {
+                                let s = slots[i].take().unwrap();
+                                let _ = s.stream.send(TokenEvent::Done);
+                                rt.clear_slot(i);
+                            }
+                        }
+                        if slots.iter().all(|s| s.is_none()) {
+                            break;
+                        }
+                    }
+                }
+            }
+        });
+        Server {
+            tx,
+            engine_thread: Some(engine_thread),
+        }
+    }
+
+    /// Submit a request; returns the token stream handle.
+    pub fn submit(&self, prompt: Vec<i32>, max_new_tokens: usize) -> ResponseStream {
+        let (stx, srx) = channel();
+        let _ = self.tx.send(Control::Submit(Submission {
+            prompt,
+            max_new_tokens,
+            stream: stx,
+        }));
+        ResponseStream {
+            rx: srx,
+            submitted_at: Instant::now(),
+        }
+    }
+
+    /// Drain in-flight work and stop the engine thread.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Control::Shutdown);
+        if let Some(h) = self.engine_thread.take() {
+            h.join().map_err(|_| anyhow::anyhow!("engine thread panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Control::Shutdown);
+        if let Some(h) = self.engine_thread.take() {
+            let _ = h.join();
+        }
+    }
+}

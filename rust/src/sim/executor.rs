@@ -1,0 +1,418 @@
+//! The simulated GPU executor.
+
+use crate::config::{GpuSpec, ModelSpec};
+use crate::hw::PartitionPlan;
+use crate::model::{block_cost, classifier_cost, ops::allreduce_latency, OpCost, OpKind};
+use crate::roofline::BatchShape;
+use crate::util::rng::Rng;
+
+/// How kernels reach the GPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// Individual CPU launches per kernel (prefill path: dynamic shapes
+    /// prevent graph capture — §4.3).
+    Eager,
+    /// CUDA-Graph-style replay: one launch for the whole captured decode
+    /// step (<0.5 ms — §4.3).
+    Graph,
+}
+
+/// Outcome of executing one batch on one partition.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecResult {
+    /// GPU busy time, seconds.
+    pub gpu_time: f64,
+    /// CPU dispatch time preceding GPU work, seconds.
+    pub dispatch_time: f64,
+    /// Achieved FLOP/s divided by partition peak (SM utilization proxy).
+    pub sm_util: f64,
+    /// Achieved bytes/s divided by device peak (HBM utilization proxy).
+    pub hbm_util: f64,
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+impl ExecResult {
+    pub fn total(&self) -> f64 {
+        self.gpu_time + self.dispatch_time
+    }
+}
+
+/// Result of one spatially-multiplexed iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct SpatialResult {
+    /// Measured latency of a single decode step on its partition.
+    pub t_decode_step: f64,
+    /// Measured latency of the prefill span on its partition.
+    pub t_prefill: f64,
+    /// Wall time of the iteration: max(k·t_d, t_p) + dispatch skew.
+    pub span: f64,
+    /// Decode-side idle fraction within the span (compute bubbles).
+    pub decode_bubble: f64,
+    /// Prefill-side idle fraction within the span.
+    pub prefill_bubble: f64,
+    /// Per-side execution details (utilization accounting).
+    pub dec: ExecResult,
+    pub pre: ExecResult,
+}
+
+/// Per-op-kind efficiency: achieved fraction of peak compute / bandwidth.
+/// Calibrated to typical measured H100 kernel efficiencies (GEMM ~0.75–0.85
+/// of dense peak, FA-3 prefill ~0.55–0.65, decode attention ~0.8 of
+/// streaming bandwidth).
+fn compute_eff(kind: OpKind) -> f64 {
+    match kind {
+        k if k.is_linear() => 0.80,
+        OpKind::Attention => 0.60,
+        OpKind::NormAct => 0.50,
+        _ => 0.70,
+    }
+}
+
+fn bandwidth_eff(kind: OpKind) -> f64 {
+    match kind {
+        k if k.is_linear() => 0.85,
+        OpKind::Attention => 0.80,
+        OpKind::NormAct => 0.90,
+        _ => 0.80,
+    }
+}
+
+/// Kernels launched per transformer layer on the eager path (qkv, rope,
+/// attn, o-proj, norm ×2, gate-up, act, down, residual ×2, misc).
+const KERNELS_PER_LAYER: f64 = 12.0;
+/// CPU time per eager kernel launch (driver + python/runtime overhead;
+/// calibrated so a 36-layer prefill dispatch lands in the "tens of ms"
+/// regime the paper describes in §4.3).
+const EAGER_LAUNCH_S: f64 = 2.5e-5;
+
+/// The simulated device executor for one GPU group (TP counted inside).
+#[derive(Debug, Clone)]
+pub struct GpuExecutor {
+    pub model: ModelSpec,
+    pub gpu: GpuSpec,
+    pub tp: u32,
+    rng: Rng,
+    /// Multiplicative execution noise sigma (0 disables).
+    pub noise: f64,
+    /// The *hardware's* bandwidth-scaling shape: more super-linear than
+    /// the predictor's spec curve (k 0.12 vs 0.2), making the predictor
+    /// conservative for bandwidth-bound decode on small partitions
+    /// (paper Appendix A).
+    hw_bw_k: f64,
+}
+
+impl GpuExecutor {
+    pub fn new(model: ModelSpec, gpu: GpuSpec, tp: u32, seed: u64) -> GpuExecutor {
+        GpuExecutor {
+            model,
+            gpu,
+            tp,
+            rng: Rng::new(seed ^ 0xE8EC),
+            noise: 0.015,
+            hw_bw_k: 0.12,
+        }
+    }
+
+    /// Deterministic variant for calibration/unit tests.
+    pub fn noiseless(model: ModelSpec, gpu: GpuSpec, tp: u32) -> GpuExecutor {
+        let mut e = GpuExecutor::new(model, gpu, tp, 0);
+        e.noise = 0.0;
+        e
+    }
+
+    /// Hardware-achieved bandwidth for `sms` active SMs.
+    fn hw_bw(&self, sms: u32) -> f64 {
+        let s = sms.min(self.gpu.num_sms);
+        if s == 0 {
+            return 0.0;
+        }
+        let x = s as f64 / self.gpu.num_sms as f64;
+        let k = self.hw_bw_k;
+        self.gpu.hbm_bandwidth * x * (1.0 + k) / (x + k)
+    }
+
+    fn op_time(&self, op: &OpCost, pi: f64, bw: f64) -> f64 {
+        let tc = op.flops as f64 / (pi * compute_eff(op.kind));
+        let tm = op.bytes as f64 / (bw * bandwidth_eff(op.kind));
+        tc.max(tm)
+    }
+
+    fn noise_factor(&mut self) -> f64 {
+        if self.noise == 0.0 {
+            1.0
+        } else {
+            (self.rng.normal(0.0, self.noise)).exp()
+        }
+    }
+
+    /// Execute one model forward of `batch` on `sms` SMs. `bw_cap`, when
+    /// set, caps this partition's achievable bandwidth (HBM contention
+    /// from a concurrent partition).
+    pub fn run(
+        &mut self,
+        batch: &BatchShape,
+        sms: u32,
+        mode: DispatchMode,
+        bw_cap: Option<f64>,
+    ) -> ExecResult {
+        if batch.is_empty() {
+            return ExecResult::default();
+        }
+        let pi = self.gpu.pi_sm(sms);
+        let mut bw = self.hw_bw(sms);
+        if let Some(cap) = bw_cap {
+            bw = bw.min(cap);
+        }
+        if pi == 0.0 || bw == 0.0 {
+            return ExecResult {
+                gpu_time: f64::INFINITY,
+                ..Default::default()
+            };
+        }
+        let cost = block_cost(&self.model, batch.n_tokens, &batch.shapes, self.tp);
+        let mut t_block = 0.0;
+        let mut flops = 0.0;
+        let mut bytes = 0.0;
+        for op in cost.token_ops.iter().chain(cost.attn_ops.iter()) {
+            t_block += self.op_time(op, pi, bw);
+            flops += op.flops as f64;
+            bytes += op.bytes as f64;
+        }
+        if self.tp > 1 {
+            t_block += allreduce_latency(
+                self.tp,
+                cost.allreduce_bytes,
+                self.gpu.allreduce_alpha,
+                self.gpu.nvlink_bandwidth,
+                pi,
+            );
+        }
+        let l = self.model.layers as f64;
+        let cls = classifier_cost(&self.model, batch.n_seqs, self.tp);
+        let t_cls = self.op_time(&cls, pi, bw);
+        flops = flops * l + cls.flops as f64;
+        bytes = bytes * l + cls.bytes as f64;
+
+        let gpu_time = (l * t_block + t_cls) * self.noise_factor();
+        let dispatch_time = match mode {
+            DispatchMode::Eager => (l * KERNELS_PER_LAYER + 1.0) * EAGER_LAUNCH_S,
+            DispatchMode::Graph => self.gpu.graph_launch_overhead,
+        };
+        ExecResult {
+            gpu_time,
+            dispatch_time,
+            sm_util: (flops / gpu_time) / pi.max(1.0),
+            hbm_util: (bytes / gpu_time) / self.gpu.hbm_bandwidth,
+            flops,
+            bytes,
+        }
+    }
+
+    /// Execute a spatially-multiplexed iteration per §4.3: `k` look-ahead
+    /// decode steps on the decode partition (graph-dispatched,
+    /// launched first) concurrently with one prefill span on the prefill
+    /// partition (eager-dispatched). Returns measured per-side latencies
+    /// and the synchronization span.
+    pub fn run_spatial(
+        &mut self,
+        decode: &BatchShape,
+        prefill: &BatchShape,
+        plan: &PartitionPlan,
+    ) -> SpatialResult {
+        let sd = plan.decode.num_sms(&self.gpu);
+        let sp = plan.prefill.num_sms(&self.gpu);
+        debug_assert!(!plan.decode.overlaps(&plan.prefill));
+
+        // HBM contention: isolated-curve demands may exceed device peak;
+        // scale each side's achievable bandwidth proportionally.
+        let bd = self.hw_bw(sd);
+        let bp = self.hw_bw(sp);
+        let total = bd + bp;
+        let peak = self.gpu.hbm_bandwidth;
+        let (cap_d, cap_p) = if total > peak {
+            (bd * peak / total, bp * peak / total)
+        } else {
+            (bd, bp)
+        };
+
+        // Decode launches first (graph replay, negligible CPU cost), so
+        // prefill's eager dispatch does not stall it (§4.3 / Fig. 5).
+        let dec_step = self.run(decode, sd, DispatchMode::Graph, Some(cap_d));
+        let pre = self.run(prefill, sp, DispatchMode::Eager, Some(cap_p));
+
+        let k = plan.k.max(1) as f64;
+        // k decode graphs replay back-to-back without CPU sync; the first
+        // graph launch is the only dispatch on the critical path.
+        let t_dec_side = k * dec_step.gpu_time + dec_step.dispatch_time;
+        // Prefill pays its eager dispatch (overlapped with decode's GPU
+        // execution, but serial on its own partition's start).
+        let t_pre_side = pre.gpu_time + pre.dispatch_time;
+        let span = t_dec_side.max(t_pre_side);
+        SpatialResult {
+            t_decode_step: dec_step.gpu_time,
+            t_prefill: pre.gpu_time,
+            span,
+            decode_bubble: if span > 0.0 { 1.0 - t_dec_side / span } else { 0.0 },
+            prefill_bubble: if span > 0.0 { 1.0 - t_pre_side / span } else { 0.0 },
+            dec: dec_step,
+            pre,
+        }
+    }
+
+    /// KV-cache transfer time for disaggregated prefill→decode handoff:
+    /// `tokens` tokens of cache moved over NVLink P2P.
+    pub fn kv_transfer_time(&self, tokens: u64) -> f64 {
+        let bytes = tokens * self.model.kv_bytes_per_token();
+        20e-6 + bytes as f64 / (0.8 * self.gpu.nvlink_bandwidth)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, ModelSpec};
+    use crate::model::AttnShape;
+    use crate::roofline::Predictor;
+
+    fn exec() -> GpuExecutor {
+        GpuExecutor::noiseless(ModelSpec::qwen3_8b(), GpuSpec::h100(), 1)
+    }
+
+    fn prefill(tokens: u64) -> BatchShape {
+        BatchShape::from_shapes(vec![AttnShape { q: tokens, c: 0 }])
+    }
+
+    fn decode(n: u64, ctx: u64) -> BatchShape {
+        BatchShape::from_shapes((0..n).map(|_| AttnShape { q: 1, c: ctx }).collect())
+    }
+
+    #[test]
+    fn executor_slower_than_ideal_predictor() {
+        let mut e = exec();
+        let p = Predictor::new(e.model.clone(), e.gpu.clone(), 1);
+        for b in [prefill(2048), prefill(8192), decode(32, 4096)] {
+            let t_hw = e.run(&b, 132, DispatchMode::Eager, None).gpu_time;
+            let t_pred = p.predict_total(&b, 132);
+            assert!(
+                t_hw > t_pred,
+                "hardware (w/ efficiencies) must be slower than ideal roofline"
+            );
+        }
+    }
+
+    #[test]
+    fn predictor_conservative_for_decode_on_small_partitions() {
+        // Appendix A: at small TPC counts the roofline model OVERestimates
+        // decode latency (pred > measured) because the hardware's
+        // bandwidth curve is more super-linear than profiled.
+        let mut e = exec();
+        let p = Predictor::new(e.model.clone(), e.gpu.clone(), 1);
+        let b = decode(16, 8192);
+        let small_sms = 12; // 6 TPCs
+        let t_hw = e.run(&b, small_sms, DispatchMode::Graph, None).gpu_time;
+        let t_pred = p.predict_total(&b, small_sms);
+        assert!(
+            t_pred > t_hw,
+            "pred {t_pred} should exceed measured {t_hw} at small partitions"
+        );
+    }
+
+    #[test]
+    fn prefill_8k_budget_exceeds_180ms() {
+        // Fig. 1(b): end-to-end prefill under the 8192 budget consistently
+        // exceeds 180 ms on the real system.
+        let mut e = exec();
+        let r = e.run(&prefill(8192), 132, DispatchMode::Eager, None);
+        assert!(r.total() > 0.15, "t={}", r.total());
+        assert!(r.total() < 0.6, "t={}", r.total());
+    }
+
+    #[test]
+    fn decode_context_sweep_4x(){
+        // Fig. 1(c): decode-only batches with budget 8, >4x latency spread
+        // as context grows 1K -> 32K.
+        let mut e = exec();
+        let t_short = e.run(&decode(8, 1024), 132, DispatchMode::Graph, None).gpu_time;
+        let t_long = e.run(&decode(8, 32768), 132, DispatchMode::Graph, None).gpu_time;
+        assert!(t_long / t_short > 3.0, "ratio={}", t_long / t_short);
+    }
+
+    #[test]
+    fn phase_utilization_asymmetry() {
+        // Fig. 3(b,c): prefill saturates SMs, decode saturates HBM.
+        let mut e = exec();
+        let pre = e.run(&prefill(8192), 132, DispatchMode::Eager, None);
+        let dec = e.run(&decode(64, 8192), 132, DispatchMode::Graph, None);
+        assert!(pre.sm_util > 0.5, "prefill sm_util={}", pre.sm_util);
+        assert!(pre.hbm_util < 0.4, "prefill hbm_util={}", pre.hbm_util);
+        assert!(dec.hbm_util > 0.5, "decode hbm_util={}", dec.hbm_util);
+        assert!(dec.sm_util < 0.2, "decode sm_util={}", dec.sm_util);
+    }
+
+    #[test]
+    fn graph_dispatch_cheaper_than_eager() {
+        let mut e = exec();
+        let b = decode(16, 2048);
+        let eager = e.run(&b, 132, DispatchMode::Eager, None);
+        let graph = e.run(&b, 132, DispatchMode::Graph, None);
+        assert!(eager.dispatch_time > 5.0 * graph.dispatch_time);
+        // eager prefill dispatch lands in the ~10ms regime
+        assert!((0.005..0.05).contains(&eager.dispatch_time));
+    }
+
+    #[test]
+    fn spatial_iteration_isolates_decode() {
+        let mut e = exec();
+        let dec = decode(32, 4096);
+        let pre = prefill(8192);
+        let plan = PartitionPlan::split(&e.gpu, 18, 5);
+        let r = e.run_spatial(&dec, &pre, &plan);
+        // decode step on 18 TPCs must still be fast (bandwidth-bound,
+        // super-linear curve)
+        let full = e.run(&dec, 132, DispatchMode::Graph, None).gpu_time;
+        assert!(r.t_decode_step < 3.0 * full);
+        assert!(r.span >= r.t_prefill);
+        // bubbles sum: exactly one side is idle at any given tail
+        assert!(r.decode_bubble >= 0.0 && r.prefill_bubble >= 0.0);
+        assert!(r.decode_bubble == 0.0 || r.prefill_bubble == 0.0);
+    }
+
+    #[test]
+    fn hbm_contention_slows_both_sides() {
+        let mut e = exec();
+        let dec = decode(64, 16384); // very bandwidth hungry
+        let pre = prefill(8192);
+        let plan = PartitionPlan::split(&e.gpu, 33, 1);
+        let spatial = e.run_spatial(&dec, &pre, &plan);
+        let iso_dec = e
+            .run(&dec, 66, DispatchMode::Graph, None)
+            .gpu_time;
+        assert!(
+            spatial.t_decode_step >= iso_dec * 0.99,
+            "contention cannot speed decode up"
+        );
+    }
+
+    #[test]
+    fn kv_transfer_time_scales() {
+        let e = exec();
+        let t1 = e.kv_transfer_time(1000);
+        let t2 = e.kv_transfer_time(100_000);
+        assert!(t2 > 10.0 * t1 * 0.5);
+        // 8000-token Qwen3-8B cache ≈ 1.18 GB → ~3.3ms over 360GB/s
+        let t8k = e.kv_transfer_time(8000);
+        assert!((0.002..0.006).contains(&t8k), "t8k={t8k}");
+    }
+
+    #[test]
+    fn noise_reproducible_by_seed() {
+        let mut a = GpuExecutor::new(ModelSpec::qwen3_8b(), GpuSpec::h100(), 1, 7);
+        let mut b = GpuExecutor::new(ModelSpec::qwen3_8b(), GpuSpec::h100(), 1, 7);
+        let batch = prefill(1024);
+        assert_eq!(
+            a.run(&batch, 132, DispatchMode::Eager, None).gpu_time,
+            b.run(&batch, 132, DispatchMode::Eager, None).gpu_time
+        );
+    }
+}

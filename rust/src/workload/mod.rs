@@ -1,0 +1,85 @@
+//! Workload generation: trace-calibrated request streams.
+//!
+//! The paper evaluates on Azure Code, Azure Conversation (Microsoft 2023)
+//! and Mooncake Conversation (Qin et al. 2025) traces. The raw traces are
+//! external downloads not available offline, so `traces` provides synthetic
+//! generators calibrated to the published Table 1 statistics (mean
+//! ISL/OSL, request counts) with lognormal length distributions; arrivals
+//! follow a Poisson process, as in the paper (§5.1). `synthetic` provides
+//! the fixed-ISL/OSL workloads of Table 2 and the Fig. 2 demo workload.
+
+pub mod arrivals;
+pub mod synthetic;
+pub mod traces;
+
+pub use arrivals::poisson_arrivals;
+pub use synthetic::fixed_workload;
+pub use traces::{trace_by_name, TraceKind, TraceStats};
+
+use crate::request::Request;
+
+/// A generated workload: requests with arrival times, sorted by arrival.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub requests: Vec<Request>,
+}
+
+impl Workload {
+    /// Published-table-style statistics of this workload.
+    pub fn stats(&self) -> TraceStats {
+        let n = self.requests.len();
+        let isl = self.requests.iter().map(|r| r.prompt_len as f64).sum::<f64>() / n.max(1) as f64;
+        let osl = self.requests.iter().map(|r| r.output_len as f64).sum::<f64>() / n.max(1) as f64;
+        TraceStats {
+            n_requests: n,
+            mean_isl: isl,
+            mean_osl: osl,
+        }
+    }
+
+    /// Total prompt + output tokens.
+    pub fn total_tokens(&self) -> u64 {
+        self.requests
+            .iter()
+            .map(|r| r.prompt_len + r.output_len)
+            .sum()
+    }
+
+    /// Keep only the first `n` requests (Mooncake is sampled to 1000 in
+    /// the paper).
+    pub fn take(mut self, n: usize) -> Workload {
+        self.requests.truncate(n);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_computed_over_requests() {
+        let w = Workload {
+            name: "t".into(),
+            requests: vec![
+                Request::new(0, 0.0, 100, 10),
+                Request::new(1, 0.5, 300, 30),
+            ],
+        };
+        let s = w.stats();
+        assert_eq!(s.n_requests, 2);
+        assert!((s.mean_isl - 200.0).abs() < 1e-9);
+        assert!((s.mean_osl - 20.0).abs() < 1e-9);
+        assert_eq!(w.total_tokens(), 440);
+    }
+
+    #[test]
+    fn take_truncates() {
+        let w = Workload {
+            name: "t".into(),
+            requests: (0..10).map(|i| Request::new(i, i as f64, 10, 1)).collect(),
+        };
+        assert_eq!(w.take(3).requests.len(), 3);
+    }
+}

@@ -1,0 +1,87 @@
+//! Fixed-length synthetic workloads (Table 2, Fig. 2's 8000/200 demo).
+
+use crate::request::Request;
+use crate::util::rng::Rng;
+use crate::workload::arrivals::poisson_arrivals;
+use crate::workload::Workload;
+
+/// `n` requests with fixed ISL/OSL arriving as a Poisson process at `qps`.
+/// Used for the Fig. 2 motivation benchmark (ISL 8000, OSL 200 — the vLLM
+/// disaggregation demo workload) and the Table 2 sensitivity study
+/// (ISL 4096, OSL ∈ {64, 1024, 2048}).
+pub fn fixed_workload(n: usize, isl: u64, osl: u64, qps: f64, seed: u64) -> Workload {
+    let mut rng = Rng::new(seed ^ 0x5717);
+    let arrivals = poisson_arrivals(&mut rng, n, qps);
+    let requests = arrivals
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| Request::new(i as u64, t, isl, osl))
+        .collect();
+    Workload {
+        name: format!("fixed-{isl}x{osl}"),
+        requests,
+    }
+}
+
+/// Mildly jittered variant (±`jitter` relative) so batches do not align
+/// perfectly — used where exact ties would be unrealistically friendly to
+/// static partitioning.
+pub fn jittered_workload(
+    n: usize,
+    isl: u64,
+    osl: u64,
+    jitter: f64,
+    qps: f64,
+    seed: u64,
+) -> Workload {
+    let mut rng = Rng::new(seed ^ 0x5718);
+    let arrivals = poisson_arrivals(&mut rng, n, qps);
+    let requests = arrivals
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| {
+            let j = |x: u64, rng: &mut Rng| {
+                let f = rng.f64_range(1.0 - jitter, 1.0 + jitter);
+                ((x as f64 * f).round() as u64).max(1)
+            };
+            let p = j(isl, &mut rng);
+            let o = j(osl, &mut rng);
+            Request::new(i as u64, t, p, o)
+        })
+        .collect();
+    Workload {
+        name: format!("jitter-{isl}x{osl}"),
+        requests,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_lengths_exact() {
+        let w = fixed_workload(50, 8000, 200, 4.0, 3);
+        assert_eq!(w.requests.len(), 50);
+        assert!(w.requests.iter().all(|r| r.prompt_len == 8000));
+        assert!(w.requests.iter().all(|r| r.output_len == 200));
+    }
+
+    #[test]
+    fn jitter_stays_in_bounds() {
+        let w = jittered_workload(200, 1000, 100, 0.2, 4.0, 3);
+        for r in &w.requests {
+            assert!((800..=1200).contains(&r.prompt_len));
+            assert!((80..=120).contains(&r.output_len));
+        }
+    }
+
+    #[test]
+    fn arrivals_sorted() {
+        let w = fixed_workload(100, 10, 10, 10.0, 9);
+        assert!(w
+            .requests
+            .windows(2)
+            .all(|p| p[0].arrival <= p[1].arrival));
+    }
+}

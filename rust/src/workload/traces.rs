@@ -1,0 +1,167 @@
+//! Synthetic generators calibrated to the paper's Table 1 trace stats.
+//!
+//! | trace      | #requests | mean ISL | mean OSL |
+//! |------------|-----------|----------|----------|
+//! | Azure-Code | 19366     | 2047     | 28       |
+//! | Azure-Conv | 8819      | 1155     | 211      |
+//! | Mooncake   | 1000*     | 12035    | 343      |
+//!
+//! (*Mooncake sampled to 1000 requests, as in the paper.)
+//!
+//! The real traces are external downloads (Azure public dataset, Mooncake
+//! repo) unavailable offline; what the evaluation depends on is the
+//! ISL/OSL marginals and Poisson arrivals, which we reproduce with
+//! lognormal length distributions whose mean matches Table 1 and whose
+//! coefficient of variation reflects each trace's character (code
+//! completions: tight OSL; conversations: heavy-tailed OSL; Mooncake:
+//! very long, dispersed prompts).
+
+use crate::request::Request;
+use crate::util::rng::Rng;
+use crate::workload::arrivals::poisson_arrivals;
+use crate::workload::Workload;
+
+/// The three evaluation traces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    AzureCode,
+    AzureConv,
+    Mooncake,
+}
+
+impl TraceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::AzureCode => "Azure-Code",
+            TraceKind::AzureConv => "Azure-Conv",
+            TraceKind::Mooncake => "Mooncake",
+        }
+    }
+
+    /// Table 1 calibration targets: (n_requests, mean ISL, mean OSL,
+    /// ISL cv, OSL cv).
+    pub fn calibration(&self) -> (usize, f64, f64, f64, f64) {
+        match self {
+            TraceKind::AzureCode => (19_366, 2047.0, 28.0, 1.3, 0.6),
+            TraceKind::AzureConv => (8_819, 1155.0, 211.0, 1.1, 1.0),
+            TraceKind::Mooncake => (1_000, 12_035.0, 343.0, 0.9, 0.8),
+        }
+    }
+
+    pub fn all() -> [TraceKind; 3] {
+        [TraceKind::AzureCode, TraceKind::AzureConv, TraceKind::Mooncake]
+    }
+}
+
+/// Summary statistics in Table 1's shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceStats {
+    pub n_requests: usize,
+    pub mean_isl: f64,
+    pub mean_osl: f64,
+}
+
+/// Generate a trace-calibrated workload: `n` requests (None → the trace's
+/// published request count) arriving at `qps`.
+pub fn generate(kind: TraceKind, n: Option<usize>, qps: f64, seed: u64) -> Workload {
+    let (full_n, isl, osl, isl_cv, osl_cv) = kind.calibration();
+    let n = n.unwrap_or(full_n);
+    let mut rng = Rng::new(seed ^ 0xD0E7);
+    let arrivals = poisson_arrivals(&mut rng, n, qps);
+    let requests = arrivals
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| {
+            let p = rng.lognormal_mean_cv(isl, isl_cv).round().max(1.0) as u64;
+            let o = rng.lognormal_mean_cv(osl, osl_cv).round().max(1.0) as u64;
+            // Clamp to sane context bounds (Mooncake prompts cap at 128K).
+            Request::new(i as u64, t, p.min(131_072), o.min(16_384))
+        })
+        .collect();
+    Workload {
+        name: kind.name().to_string(),
+        requests,
+    }
+}
+
+/// Lookup by CLI name.
+pub fn trace_by_name(name: &str) -> Option<TraceKind> {
+    match name.to_ascii_lowercase().as_str() {
+        "azure-code" | "code" => Some(TraceKind::AzureCode),
+        "azure-conv" | "conv" => Some(TraceKind::AzureConv),
+        "mooncake" => Some(TraceKind::Mooncake),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrated_means_match_table1() {
+        for kind in TraceKind::all() {
+            let (_, isl, osl, _, _) = kind.calibration();
+            let w = generate(kind, Some(4000), 10.0, 7);
+            let s = w.stats();
+            assert!(
+                (s.mean_isl - isl).abs() / isl < 0.08,
+                "{}: isl {} vs target {}",
+                kind.name(),
+                s.mean_isl,
+                isl
+            );
+            assert!(
+                (s.mean_osl - osl).abs() / osl < 0.08,
+                "{}: osl {} vs target {}",
+                kind.name(),
+                s.mean_osl,
+                osl
+            );
+        }
+    }
+
+    #[test]
+    fn default_counts_match_table1() {
+        // Don't generate all 19K for azure-code in a unit test; just check
+        // the published count is wired through.
+        assert_eq!(TraceKind::AzureCode.calibration().0, 19_366);
+        assert_eq!(TraceKind::AzureConv.calibration().0, 8_819);
+        assert_eq!(TraceKind::Mooncake.calibration().0, 1_000);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(TraceKind::AzureConv, Some(100), 5.0, 42);
+        let b = generate(TraceKind::AzureConv, Some(100), 5.0, 42);
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.prompt_len, y.prompt_len);
+            assert_eq!(x.output_len, y.output_len);
+            assert_eq!(x.arrival, y.arrival);
+        }
+        let c = generate(TraceKind::AzureConv, Some(100), 5.0, 43);
+        assert!(a
+            .requests
+            .iter()
+            .zip(&c.requests)
+            .any(|(x, y)| x.prompt_len != y.prompt_len));
+    }
+
+    #[test]
+    fn mooncake_prompts_are_long() {
+        let w = generate(TraceKind::Mooncake, Some(500), 2.0, 1);
+        let s = w.stats();
+        assert!(s.mean_isl > 8000.0, "mooncake is prefill-heavy");
+        // code trace has much shorter outputs than conv
+        let code = generate(TraceKind::AzureCode, Some(500), 2.0, 1).stats();
+        let conv = generate(TraceKind::AzureConv, Some(500), 2.0, 1).stats();
+        assert!(code.mean_osl < conv.mean_osl);
+    }
+
+    #[test]
+    fn name_lookup() {
+        assert_eq!(trace_by_name("mooncake"), Some(TraceKind::Mooncake));
+        assert_eq!(trace_by_name("Azure-Code"), Some(TraceKind::AzureCode));
+        assert_eq!(trace_by_name("nope"), None);
+    }
+}

@@ -1,0 +1,135 @@
+//! Cross-layer pipeline tests: the simulated evaluation path end to end
+//! (workload -> scheduler -> executor -> metrics), checking the paper's
+//! qualitative claims hold on fresh seeds (not the bench seeds).
+
+use duetserve::config::{Policy, ServingConfig};
+use duetserve::engine::{engine_for, DisaggEngine, IterKind, ReplicatedEngine};
+use duetserve::workload::synthetic::fixed_workload;
+use duetserve::workload::traces::{generate, TraceKind};
+
+/// Observation 1+2 end-to-end: under prefill-heavy saturation, DuetServe
+/// holds p99 TBT well below the chunked-prefill baseline.
+#[test]
+fn duet_bounds_tail_tbt_under_prefill_pressure() {
+    let w = fixed_workload(30, 8000, 96, 8.0, 314);
+    let mut ev = engine_for(
+        ServingConfig::default_8b().with_policy(Policy::VllmChunked),
+        2,
+    );
+    let rv = ev.run(w.clone());
+    let mut ed = engine_for(ServingConfig::default_8b().with_policy(Policy::Duet), 2);
+    let rd = ed.run(w);
+    assert!(rd.spatial_iterations > 0);
+    assert!(
+        rd.tbt_p99 < 0.85 * rv.tbt_p99,
+        "duet p99 {:.0}ms vs vllm {:.0}ms",
+        rd.tbt_p99 * 1e3,
+        rv.tbt_p99 * 1e3
+    );
+    // and throughput is not sacrificed
+    assert!(rd.throughput_rps > 0.9 * rv.throughput_rps);
+}
+
+/// Observation 3 end-to-end: disaggregation satisfies TBT but wastes
+/// capacity relative to 2-replica aggregation on a prefill-heavy load.
+#[test]
+fn disagg_underutilizes_vs_aggregated() {
+    let w = fixed_workload(40, 8000, 200, 7.0, 217);
+    let mut agg = ReplicatedEngine::new(
+        ServingConfig::default_8b().with_policy(Policy::VllmChunked),
+        2,
+        3,
+    );
+    let ra = agg.run(w.clone());
+    let cfg = ServingConfig::default_8b().with_policy(Policy::DisaggPD {
+        prefill_gpus: 1,
+        decode_gpus: 1,
+    });
+    let mut dis = DisaggEngine::new(cfg, 1, 1, 3);
+    let rd = dis.run(w);
+    assert!(rd.tbt.mean < ra.tbt.mean, "disagg protects TBT");
+    assert!(
+        ra.token_throughput > 1.2 * rd.token_throughput,
+        "agg {} tok/s vs disagg {}",
+        ra.token_throughput,
+        rd.token_throughput
+    );
+}
+
+/// DuetServe reverts to aggregated execution when contention subsides
+/// (decode-heavy regime, Appendix A Table 2 narrative).
+#[test]
+fn duet_stays_aggregated_when_decode_dominant() {
+    let w = fixed_workload(30, 256, 512, 4.0, 99);
+    let mut e = engine_for(ServingConfig::default_8b().with_policy(Policy::Duet), 1);
+    let rep = e.run(w);
+    let frac = rep.spatial_iterations as f64 / rep.iterations.max(1) as f64;
+    assert!(
+        frac < 0.05,
+        "decode-dominant workload should rarely go spatial: {frac}"
+    );
+}
+
+/// The engine alternates between spatial and aggregated iterations as
+/// load fluctuates (Fig. 10 behaviour) — both kinds must appear in a
+/// bursty trace, and every spatial plan must be a valid partition.
+#[test]
+fn duet_alternates_modes_and_partitions_are_valid() {
+    let mut e = engine_for(ServingConfig::default_8b().with_policy(Policy::Duet), 4);
+    e.log_events = true;
+    let w = generate(TraceKind::AzureCode, Some(80), 10.0, 12);
+    e.run(w);
+    let mut spatial = 0;
+    let mut agg = 0;
+    for ev in &e.events {
+        match ev.kind {
+            IterKind::Spatial {
+                decode_tpcs,
+                prefill_tpcs,
+                k,
+            } => {
+                spatial += 1;
+                assert!(decode_tpcs >= 1 && prefill_tpcs >= 1);
+                assert!(decode_tpcs + prefill_tpcs <= 66);
+                assert!(k >= 1 && k <= 16);
+            }
+            IterKind::Aggregated => agg += 1,
+        }
+    }
+    assert!(spatial > 0, "no spatial iterations in a bursty trace");
+    assert!(agg > 0, "no aggregated iterations");
+}
+
+/// Scheduling overhead stays under the paper's 1 ms budget even on large
+/// mixed batches (the Algorithm-1 solve is the hot path).
+#[test]
+fn scheduling_overhead_under_one_ms() {
+    let mut e = engine_for(ServingConfig::default_8b().with_policy(Policy::Duet), 8);
+    let w = fixed_workload(60, 6000, 128, 10.0, 15);
+    let rep = e.run(w);
+    assert!(
+        rep.sched_overhead_per_iter < 1e-3,
+        "sched overhead {:.3}ms",
+        rep.sched_overhead_per_iter * 1e3
+    );
+}
+
+/// SGLang-Default's prefill-priority produces the unbounded-TBT pathology
+/// the paper plots (p99 far beyond every other system's).
+#[test]
+fn sglang_default_tail_blowup() {
+    let w = generate(TraceKind::AzureCode, Some(80), 12.0, 21);
+    let mut es = engine_for(
+        ServingConfig::default_8b().with_policy(Policy::SglangDefault),
+        1,
+    );
+    let rs = es.run(w.clone());
+    let mut ed = engine_for(ServingConfig::default_8b().with_policy(Policy::Duet), 1);
+    let rd = ed.run(w);
+    assert!(
+        rs.tbt_p99 > 3.0 * rd.tbt_p99,
+        "sglang-default p99 {:.0}ms should dwarf duet {:.0}ms",
+        rs.tbt_p99 * 1e3,
+        rd.tbt_p99 * 1e3
+    );
+}

@@ -1,0 +1,173 @@
+//! Property-based integration tests over the coordinator: randomized
+//! workloads and policies must preserve the engine invariants (KV
+//! accounting, request lifecycle, token-time monotonicity, conservation
+//! of requests) and the cross-policy semantic guarantees.
+
+use duetserve::config::{ModelSpec, Policy, ServingConfig};
+use duetserve::engine::{engine_for, DisaggEngine};
+use duetserve::util::proptest::check;
+use duetserve::workload::synthetic::jittered_workload;
+use duetserve::workload::Workload;
+
+fn policies() -> Vec<Policy> {
+    vec![
+        Policy::VllmChunked,
+        Policy::SglangDefault,
+        Policy::SglangChunked,
+        Policy::Duet,
+        Policy::StaticPartition {
+            decode_tpcs: 22,
+            prefill_tpcs: 44,
+        },
+    ]
+}
+
+#[test]
+fn random_workloads_conserve_requests_and_invariants() {
+    let pols = policies();
+    check(24, |g| {
+        let n = g.usize_range(5, 40);
+        let isl = g.u64_range(16, 12_000);
+        let osl = g.u64_range(1, 128);
+        let qps = g.f64_range(0.5, 20.0);
+        let policy = g.choose(&pols).clone();
+        let w = jittered_workload(n, isl, osl, 0.3, qps, g.case_seed);
+        let total_out: u64 = w.requests.iter().map(|r| r.output_len).sum();
+
+        let cfg = ServingConfig::default_8b().with_policy(policy.clone());
+        let mut e = engine_for(cfg, g.case_seed);
+        let rep = e.run(w);
+
+        e.check_invariants().map_err(|m| format!("{policy:?}: {m}"))?;
+        if rep.completed + e.dropped < n as u64 {
+            return Err(format!(
+                "{policy:?}: lost requests: completed {} + dropped {} < {n}",
+                rep.completed, e.dropped
+            ));
+        }
+        if e.dropped == 0 && e.metrics.output_tokens != total_out {
+            return Err(format!(
+                "{policy:?}: token conservation: {} != {total_out}",
+                e.metrics.output_tokens
+            ));
+        }
+        // Iteration-level sanity.
+        if rep.completed > 0 && rep.duration <= 0.0 {
+            return Err("zero duration with completions".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn duet_never_violates_worse_than_vllm_on_p99_tbt() {
+    // The paper's core safety claim, as a property over random saturating
+    // workloads: Duet's p99 TBT should not exceed vLLM's by more than
+    // noise (10%) and usually improves it.
+    check(8, |g| {
+        let n = g.usize_range(20, 40);
+        let isl = g.u64_range(4000, 10_000);
+        let osl = g.u64_range(32, 128);
+        let qps = g.f64_range(4.0, 12.0);
+        let w = jittered_workload(n, isl, osl, 0.2, qps, g.case_seed);
+
+        let mut ev = engine_for(
+            ServingConfig::default_8b().with_policy(Policy::VllmChunked),
+            1,
+        );
+        let rv = ev.run(w.clone());
+        let mut ed = engine_for(ServingConfig::default_8b().with_policy(Policy::Duet), 1);
+        let rd = ed.run(w);
+        if rd.tbt_p99 > rv.tbt_p99 * 1.10 + 1e-3 {
+            return Err(format!(
+                "duet p99 tbt {:.1}ms worse than vllm {:.1}ms (isl={isl} osl={osl} qps={qps:.1})",
+                rd.tbt_p99 * 1e3,
+                rv.tbt_p99 * 1e3
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn disagg_conserves_requests_across_random_topologies() {
+    check(10, |g| {
+        let n = g.usize_range(10, 40);
+        let p = g.u64_range(1, 3) as u32;
+        let d = g.u64_range(1, 3) as u32;
+        let qps = g.f64_range(1.0, 8.0);
+        let w = jittered_workload(n, g.u64_range(500, 6000), g.u64_range(8, 64), 0.3, qps, g.case_seed);
+        let cfg = ServingConfig::default_8b().with_policy(Policy::DisaggPD {
+            prefill_gpus: p,
+            decode_gpus: d,
+        });
+        let mut e = DisaggEngine::new(cfg, p, d, g.case_seed);
+        let rep = e.run(w);
+        if rep.completed + e.dropped != n as u64 {
+            return Err(format!(
+                "{p}P{d}D lost requests: {} + {} != {n}",
+                rep.completed, e.dropped
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let w = |seed| -> Workload { jittered_workload(25, 3000, 48, 0.2, 6.0, seed) };
+    let cfg = ServingConfig::default_8b().with_policy(Policy::Duet);
+    let mut e1 = engine_for(cfg.clone(), 9);
+    let r1 = e1.run(w(4));
+    let mut e2 = engine_for(cfg, 9);
+    let r2 = e2.run(w(4));
+    assert_eq!(r1.completed, r2.completed);
+    assert_eq!(r1.iterations, r2.iterations);
+    assert!((r1.duration - r2.duration).abs() < 1e-12);
+    assert!((r1.tbt.mean - r2.tbt.mean).abs() < 1e-12);
+}
+
+#[test]
+fn tp_scaling_reduces_latency_for_14b() {
+    // TP=2 must strictly improve iteration latency for a compute-heavy
+    // workload on the same policy (paper Fig. 7 setting).
+    let w = jittered_workload(20, 6000, 32, 0.2, 4.0, 11);
+    let m = ModelSpec::qwen3_14b();
+    let mut e1 = engine_for(
+        ServingConfig::default_8b()
+            .with_model(m.clone(), 1)
+            .with_policy(Policy::VllmChunked),
+        3,
+    );
+    let r1 = e1.run(w.clone());
+    let mut e2 = engine_for(
+        ServingConfig::default_8b()
+            .with_model(m, 2)
+            .with_policy(Policy::VllmChunked),
+        3,
+    );
+    let r2 = e2.run(w);
+    assert!(
+        r2.e2e.mean < r1.e2e.mean,
+        "TP=2 e2e {} should beat TP=1 {}",
+        r2.e2e.mean,
+        r1.e2e.mean
+    );
+}
+
+#[test]
+fn kv_pressure_triggers_preemption_not_corruption() {
+    // Tiny KV: the engine must survive via recompute preemption and still
+    // finish everything.
+    let mut cfg = ServingConfig::default_8b().with_policy(Policy::VllmChunked);
+    cfg.gpu_mem_util = 0.22; // barely any KV headroom beyond weights
+    let kv_tokens = cfg.kv_capacity_tokens();
+    assert!(kv_tokens > 2000, "test needs some KV: {kv_tokens}");
+    let mut e = engine_for(cfg, 5);
+    // Prompts sized so ~3 fit concurrently; outputs long enough to grow.
+    let w = jittered_workload(12, kv_tokens / 3, 256, 0.1, 50.0, 5);
+    let rep = e.run(w);
+    assert_eq!(rep.completed + e.dropped, 12);
+    assert!(rep.completed >= 10, "most requests should finish");
+    e.check_invariants().unwrap();
+}

@@ -1,0 +1,92 @@
+//! Threaded front-end integration: token streaming, concurrency, clean
+//! shutdown, and schedule-invariance of greedy outputs through the
+//! server path. Skips when artifacts are absent.
+
+use duetserve::runtime::{artifacts, TinyRuntime};
+use duetserve::server::{Server, TokenEvent};
+
+fn available() -> bool {
+    artifacts::artifacts_available()
+}
+
+#[test]
+fn streams_tokens_and_terminates() {
+    if !available() {
+        return;
+    }
+    let server = Server::start(TinyRuntime::load_default, 4);
+    let stream = server.submit(vec![5, 99, 1023, 7, 300, 12], 6);
+    let toks = stream.collect();
+    assert_eq!(toks.len(), 6);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn server_tokens_match_direct_runtime() {
+    if !available() {
+        return;
+    }
+    let prompt = vec![11i32, 500, 42, 1999, 8];
+    // Direct greedy path.
+    let mut rt = TinyRuntime::load_default().unwrap();
+    let pre = rt.prefill(&prompt).unwrap();
+    rt.install_slot(0, prompt.len(), &pre.k, &pre.v);
+    let mut direct = vec![pre.next_token];
+    let mut tokens = [0i32; 8];
+    let mut lengths = [0i32; 8];
+    tokens[0] = pre.next_token;
+    lengths[0] = prompt.len() as i32;
+    for _ in 0..3 {
+        let next = rt.decode_step(&tokens, &lengths).unwrap();
+        direct.push(next[0]);
+        tokens[0] = next[0];
+        lengths[0] += 1;
+    }
+    drop(rt);
+
+    let server = Server::start(TinyRuntime::load_default, 2);
+    let toks = server.submit(prompt, 4).collect();
+    assert_eq!(toks, direct, "server path must match direct greedy decode");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn concurrent_submissions_all_complete() {
+    if !available() {
+        return;
+    }
+    let server = Server::start(TinyRuntime::load_default, 4);
+    let streams: Vec<_> = (0..12)
+        .map(|i| {
+            server.submit(
+                (0..6 + i % 5).map(|j| ((i * 53 + j * 19) % 2048) as i32).collect(),
+                5,
+            )
+        })
+        .collect();
+    for s in streams {
+        assert_eq!(s.collect().len(), 5);
+    }
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn try_next_is_nonblocking() {
+    if !available() {
+        return;
+    }
+    let server = Server::start(TinyRuntime::load_default, 1);
+    let stream = server.submit(vec![1, 2, 3], 3);
+    // Either nothing yet or a token — must not hang.
+    let _ = stream.try_next();
+    let mut n = 0;
+    loop {
+        match stream.try_next() {
+            Some(TokenEvent::Token(_)) => n += 1,
+            Some(TokenEvent::Done) => break,
+            None => std::thread::yield_now(),
+        }
+    }
+    assert!(n <= 3);
+    server.shutdown().unwrap();
+}
