@@ -67,6 +67,20 @@ impl Args {
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
+
+    /// Enumerated option: returns the value if present, erroring (for the
+    /// caller to surface) when it is not one of `allowed`. `None` when
+    /// the flag was not given.
+    pub fn one_of(&self, key: &str, allowed: &[&str]) -> Result<Option<&str>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) if allowed.contains(&v) => Ok(Some(v)),
+            Some(v) => Err(format!(
+                "--{key} must be one of [{}], got `{v}`",
+                allowed.join("|")
+            )),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -105,5 +119,16 @@ mod tests {
     fn trailing_bool_flag() {
         let a = parse("cmd --dry-run");
         assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn one_of_validates_choices() {
+        let a = parse("serve --router least-loaded");
+        assert_eq!(
+            a.one_of("router", &["round-robin", "least-loaded"]),
+            Ok(Some("least-loaded"))
+        );
+        assert_eq!(a.one_of("missing", &["x"]), Ok(None));
+        assert!(a.one_of("router", &["round-robin"]).is_err());
     }
 }

@@ -51,17 +51,28 @@ pub struct Config {
     map: BTreeMap<String, Value>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+/// Parse failure with its 1-based line number. (Display/Error are
+/// hand-implemented — no `thiserror` in the offline vendor set.)
+#[derive(Debug, PartialEq)]
 pub enum ParseError {
-    #[error("line {0}: malformed section header")]
     BadSection(usize),
-    #[error("line {0}: expected `key = value`")]
     BadLine(usize),
-    #[error("line {0}: unterminated string")]
     BadString(usize),
-    #[error("line {0}: unparseable value `{1}`")]
     BadValue(usize, String),
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::BadSection(l) => write!(f, "line {l}: malformed section header"),
+            ParseError::BadLine(l) => write!(f, "line {l}: expected `key = value`"),
+            ParseError::BadString(l) => write!(f, "line {l}: unterminated string"),
+            ParseError::BadValue(l, v) => write!(f, "line {l}: unparseable value `{v}`"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Config {
     pub fn parse(text: &str) -> Result<Config, ParseError> {

@@ -1,0 +1,763 @@
+//! The multi-worker discrete-event cluster loop.
+//!
+//! One loop serves every multi-GPU topology: [`ClusterEngine`] owns a set
+//! of [`Worker`]s (each an [`EngineCore`] plus a [`WorkerRole`]), a global
+//! arrival stream, a pluggable [`Router`], and a prefill→decode KV
+//! [`Transfer`] queue. Each step advances whichever worker has the
+//! smallest local clock:
+//!
+//! - arrivals with `arrival ≤ now` are routed to a worker *at arrival
+//!   time* (no static sharding — replicas are genuinely
+//!   time-interleaved);
+//! - `Unified` workers run the shared per-iteration step
+//!   ([`EngineCore::step_once`]);
+//! - `Prefill` workers pack prompt-only batches and emit KV transfers;
+//! - `Decode` workers admit ready transfers and run decode-only batches;
+//! - an optional Dynamo-style planner flips worker roles under sustained
+//!   imbalance (role switch preempts in-flight work and costs
+//!   `reconfig_s` of downtime).
+//!
+//! Replication and disaggregation are just worker/role configurations of
+//! this one loop — see [`super::ReplicatedEngine`] and
+//! [`super::DisaggEngine`].
+
+use std::collections::VecDeque;
+
+use crate::config::{GpuSpec, ServingConfig};
+use crate::metrics::{Recorder, Report};
+use crate::model::AttnShape;
+use crate::request::{Phase, Request};
+use crate::roofline::BatchShape;
+use crate::sched::{scheduler_for, IterationPlan, SchedInput, Scheduler};
+use crate::sim::DispatchMode;
+use crate::workload::Workload;
+
+use super::core::{CoreStep, EngineCore, MAX_SIM_TIME};
+use super::router::{RouteCandidate, Router};
+
+/// Clock nudge when a worker parks with nothing to do, so the min-clock
+/// selection always makes progress.
+const PARK_EPS: f64 = 1e-3;
+
+/// What a worker does with the requests routed to it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerRole {
+    /// Full serving loop (scheduler-driven prefill + decode).
+    Unified,
+    /// Prompt processing only; finished prompts hand their KV to a decode
+    /// worker via the transfer queue.
+    Prefill,
+    /// Continuous decode batching over transferred KV.
+    Decode,
+}
+
+/// One GPU group inside the cluster.
+pub struct Worker {
+    pub core: EngineCore,
+    pub role: WorkerRole,
+    /// Worker is reconfiguring (role switch) until this time.
+    pub offline_until: f64,
+}
+
+impl Worker {
+    fn accepts_arrivals(&self) -> bool {
+        matches!(self.role, WorkerRole::Unified | WorkerRole::Prefill)
+    }
+}
+
+/// A request whose prefill finished and whose KV is in flight to a decode
+/// worker.
+struct Transfer {
+    request: Request,
+    ready_at: f64,
+}
+
+/// Placeholder scheduler for role-tagged workers: their iterations are
+/// built by the cluster's role steps, never by `EngineCore::step_once`.
+struct RoleScheduler;
+
+impl Scheduler for RoleScheduler {
+    fn plan(&mut self, _input: &SchedInput<'_>) -> IterationPlan {
+        IterationPlan::Idle
+    }
+
+    fn name(&self) -> String {
+        "role-worker".to_string()
+    }
+}
+
+/// The event-driven cluster core.
+pub struct ClusterEngine {
+    pub cfg: ServingConfig,
+    pub workers: Vec<Worker>,
+    router: Box<dyn Router>,
+    /// Not yet arrived, sorted by arrival time.
+    pending: VecDeque<Request>,
+    transfers: Vec<Transfer>,
+    /// System-level metrics, folded from the workers at the end of `run`.
+    pub metrics: Recorder,
+    /// Finished requests from all workers (moved here at the end of `run`).
+    pub finished: Vec<Request>,
+    /// Requests dropped (divergence drain + per-worker drops, folded at
+    /// the end of `run`).
+    pub dropped: u64,
+    /// Enable Dynamo-planner-style runtime role reconfiguration.
+    pub reconfigurable: bool,
+    /// Downtime for a role switch (paper: ~40 s).
+    pub reconfig_s: f64,
+    /// Planner check interval.
+    pub planner_interval: f64,
+    next_planner_check: f64,
+    pub reconfigs: u64,
+    /// Report label for homogeneous (all-unified) clusters.
+    name: String,
+}
+
+impl ClusterEngine {
+    /// N identical unified workers (model replicas) behind `router`.
+    pub fn replicated(
+        cfg: ServingConfig,
+        replicas: u32,
+        seed: u64,
+        router: Box<dyn Router>,
+    ) -> ClusterEngine {
+        assert!(replicas >= 1, "need at least one replica");
+        let workers: Vec<Worker> = (0..replicas)
+            .map(|i| Worker {
+                core: EngineCore::new(cfg.clone(), scheduler_for(&cfg), seed + i as u64),
+                role: WorkerRole::Unified,
+                offline_until: 0.0,
+            })
+            .collect();
+        let name = format!("{}x{}", workers[0].core.policy_name(), replicas);
+        ClusterEngine::assemble(cfg, workers, router, name)
+    }
+
+    /// PD-disaggregated topology: `prefill_gpus` + `decode_gpus` workers
+    /// on identical GPUs.
+    pub fn disagg(
+        cfg: ServingConfig,
+        prefill_gpus: u32,
+        decode_gpus: u32,
+        seed: u64,
+        router: Box<dyn Router>,
+    ) -> ClusterEngine {
+        let gpu = cfg.gpu.clone();
+        ClusterEngine::disagg_hetero(cfg, prefill_gpus, gpu.clone(), decode_gpus, gpu, seed, router)
+    }
+
+    /// Heterogeneous topology (Appendix B future work): prefill workers on
+    /// `prefill_gpu` parts, decode workers on `decode_gpu` parts — e.g.
+    /// compute-optimized prefill + memory-optimized decode.
+    #[allow(clippy::too_many_arguments)]
+    pub fn disagg_hetero(
+        cfg: ServingConfig,
+        prefill_gpus: u32,
+        prefill_gpu: GpuSpec,
+        decode_gpus: u32,
+        decode_gpu: GpuSpec,
+        seed: u64,
+        router: Box<dyn Router>,
+    ) -> ClusterEngine {
+        assert!(prefill_gpus >= 1 && decode_gpus >= 1);
+        let mk = |role: WorkerRole, spec: &GpuSpec, i: u32| {
+            // Each worker is a single GPU holding a full model replica.
+            let mut wcfg = cfg.clone();
+            wcfg.tp = 1;
+            wcfg.gpu = spec.clone();
+            Worker {
+                core: EngineCore::new(wcfg, Box::new(RoleScheduler), seed + i as u64),
+                role,
+                offline_until: 0.0,
+            }
+        };
+        let mut workers = Vec::new();
+        for i in 0..prefill_gpus {
+            workers.push(mk(WorkerRole::Prefill, &prefill_gpu, i));
+        }
+        for i in 0..decode_gpus {
+            workers.push(mk(WorkerRole::Decode, &decode_gpu, prefill_gpus + i));
+        }
+        ClusterEngine::assemble(cfg, workers, router, String::new())
+    }
+
+    fn assemble(
+        cfg: ServingConfig,
+        workers: Vec<Worker>,
+        router: Box<dyn Router>,
+        name: String,
+    ) -> ClusterEngine {
+        ClusterEngine {
+            cfg,
+            workers,
+            router,
+            pending: VecDeque::new(),
+            transfers: Vec::new(),
+            metrics: Recorder::new(),
+            finished: Vec::new(),
+            dropped: 0,
+            reconfigurable: false,
+            reconfig_s: 40.0,
+            planner_interval: 30.0,
+            next_planner_check: 30.0,
+            reconfigs: 0,
+            name,
+        }
+    }
+
+    /// Swap the routing policy (builder-style, before `run`).
+    pub fn set_router(&mut self, router: Box<dyn Router>) {
+        self.router = router;
+    }
+
+    pub fn router_name(&self) -> &'static str {
+        self.router.name()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// (unified, prefill, decode) worker counts.
+    pub fn role_counts(&self) -> (usize, usize, usize) {
+        let count = |role| self.workers.iter().filter(|w| w.role == role).count();
+        (
+            count(WorkerRole::Unified),
+            count(WorkerRole::Prefill),
+            count(WorkerRole::Decode),
+        )
+    }
+
+    fn system_name(&self) -> String {
+        let (_, p, d) = self.role_counts();
+        if p + d > 0 {
+            format!("Dynamo-{p}P{d}D")
+        } else {
+            self.name.clone()
+        }
+    }
+
+    /// Run the whole workload to completion; returns the merged report.
+    pub fn run(&mut self, workload: Workload) -> Report {
+        self.pending = workload.sorted_by_arrival().requests.into();
+        while self.step() {}
+        let mut duration = 0.0f64;
+        for w in &mut self.workers {
+            self.metrics.merge(&w.core.metrics);
+            self.dropped += w.core.dropped;
+            self.finished.append(&mut w.core.finished);
+            duration = duration.max(w.core.last_active);
+        }
+        self.metrics.duration = duration;
+        self.metrics.report(&self.system_name())
+    }
+
+    /// Cross-worker invariants, for property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (i, w) in self.workers.iter().enumerate() {
+            w.core
+                .check_invariants()
+                .map_err(|e| format!("worker {i}: {e}"))?;
+        }
+        for r in &self.finished {
+            if r.generated != r.output_len || r.phase != Phase::Finished {
+                return Err(format!("request {} retired unfinished", r.id));
+            }
+            if r.finished_at.unwrap_or(f64::NEG_INFINITY) < r.arrival {
+                return Err(format!("request {} finished before arrival", r.id));
+            }
+            if r.first_token_at.unwrap_or(f64::NEG_INFINITY) < r.arrival {
+                return Err(format!("request {} produced a token before arrival", r.id));
+            }
+        }
+        Ok(())
+    }
+
+    fn all_done(&self) -> bool {
+        self.pending.is_empty()
+            && self.transfers.is_empty()
+            && self.workers.iter().all(|w| !w.core.has_local_work())
+    }
+
+    fn min_clock_worker(&self) -> usize {
+        self.workers
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.core.clock.partial_cmp(&b.1.core.clock).unwrap())
+            .map(|(i, _)| i)
+            .expect("cluster has no workers")
+    }
+
+    fn max_clock(&self) -> f64 {
+        self.workers
+            .iter()
+            .map(|w| w.core.clock)
+            .fold(0.0f64, f64::max)
+    }
+
+    /// Advance an idle worker's clock to its next event, or park it just
+    /// past the rest of the fleet so min-clock selection keeps moving.
+    fn idle_advance(&mut self, idx: usize, next_event: Option<f64>) {
+        match next_event {
+            Some(t) => {
+                let core = &mut self.workers[idx].core;
+                core.clock = core.clock.max(t);
+            }
+            None => {
+                let max_all = self.max_clock();
+                self.workers[idx].core.clock = max_all + PARK_EPS;
+            }
+        }
+    }
+
+    /// Advance the cluster by one worker-event. Returns false when done.
+    fn step(&mut self) -> bool {
+        if self.all_done() {
+            return false;
+        }
+        let idx = self.min_clock_worker();
+        let now = self.workers[idx].core.clock;
+        if now > MAX_SIM_TIME {
+            // Diverged: drain bookkeeping everywhere and stop.
+            self.dropped += (self.pending.len() + self.transfers.len()) as u64;
+            self.pending.clear();
+            self.transfers.clear();
+            for w in &mut self.workers {
+                w.core.drain_diverged();
+            }
+            return false;
+        }
+
+        self.dispatch_arrivals(now);
+
+        if self.reconfigurable && now >= self.next_planner_check {
+            self.plan_reconfig(now);
+            self.next_planner_check = now + self.planner_interval;
+        }
+
+        if self.workers[idx].offline_until > now {
+            self.workers[idx].core.clock = self.workers[idx].offline_until;
+            return true;
+        }
+
+        match self.workers[idx].role {
+            WorkerRole::Unified => self.step_unified(idx),
+            WorkerRole::Prefill => self.step_prefill(idx),
+            WorkerRole::Decode => self.step_decode(idx),
+        }
+        true
+    }
+
+    /// Snapshot the workers a router may pick from. Offline workers are
+    /// excluded unless *every* arrival-taking worker is offline (then the
+    /// request must queue somewhere).
+    fn route_candidates(&self, now: f64) -> Vec<RouteCandidate> {
+        let snapshot = |(i, w): (usize, &Worker)| RouteCandidate {
+            worker: i,
+            queue_len: w.core.queue_len(),
+            outstanding_tokens: w.core.outstanding_tokens(),
+            kv_free_tokens: w.core.kv_free_tokens(),
+        };
+        let online: Vec<RouteCandidate> = self
+            .workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.accepts_arrivals() && w.offline_until <= now)
+            .map(snapshot)
+            .collect();
+        if !online.is_empty() {
+            return online;
+        }
+        self.workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| w.accepts_arrivals())
+            .map(snapshot)
+            .collect()
+    }
+
+    /// Route every arrival with `arrival ≤ now` to a worker, at arrival
+    /// time, through the pluggable router.
+    fn dispatch_arrivals(&mut self, now: f64) {
+        while self.pending.front().is_some_and(|r| r.arrival <= now) {
+            let req = self.pending.pop_front().unwrap();
+            let candidates = self.route_candidates(now);
+            assert!(
+                !candidates.is_empty(),
+                "no worker accepts arrivals (topology without prefill/unified workers)"
+            );
+            let choice = self.router.route(&req, &candidates);
+            assert!(
+                candidates.iter().any(|c| c.worker == choice),
+                "router `{}` dispatched to ineligible worker {choice}",
+                self.router.name()
+            );
+            self.workers[choice].core.inject(req);
+        }
+    }
+
+    /// One shared-core iteration on a unified worker; on idle, advance
+    /// its clock to the next event (arrival or park behind the fleet).
+    fn step_unified(&mut self, idx: usize) {
+        let allow_drop = self.pending.is_empty();
+        let outcome = self.workers[idx].core.step_once(allow_drop);
+        if outcome == CoreStep::Idle {
+            // Next event: the next arrival, which dispatch guarantees is
+            // strictly in the future (everything ≤ now was delivered).
+            let next_arrival = self.pending.front().map(|r| r.arrival);
+            if next_arrival.is_none() && self.workers[idx].core.has_local_work() {
+                // Scheduler idled with admitted work (should not happen);
+                // nudge so the min-clock loop cannot livelock.
+                self.workers[idx].core.clock += PARK_EPS;
+            } else {
+                self.idle_advance(idx, next_arrival);
+            }
+        }
+    }
+
+    /// One prefill iteration on worker `idx`: pack whole prompts up to the
+    /// token budget (chunking the head if it alone exceeds the budget).
+    fn step_prefill(&mut self, idx: usize) {
+        let now = self.workers[idx].core.clock;
+        if self.workers[idx].core.queue_len() == 0 {
+            // Idle: jump to the next arrival, or park behind the fleet so
+            // the rest of the cluster drives the system.
+            let next_arrival = self.pending.front().map(|r| r.arrival);
+            self.idle_advance(idx, next_arrival);
+            return;
+        }
+        // Build a prefill-only batch from this worker's queue.
+        let budget = self.cfg.token_budget as u64;
+        let mut tokens = 0u64;
+        let mut batch: Vec<Request> = Vec::new();
+        {
+            let core = &mut self.workers[idx].core;
+            while let Some(r) = core.waiting.front() {
+                if batch.is_empty() {
+                    let r = core.waiting.pop_front().unwrap();
+                    tokens += r.prompt_len.min(budget);
+                    batch.push(r);
+                    if tokens >= budget {
+                        break;
+                    }
+                } else if tokens + r.prompt_len <= budget {
+                    let r = core.waiting.pop_front().unwrap();
+                    tokens += r.prompt_len;
+                    batch.push(r);
+                } else {
+                    break;
+                }
+            }
+        }
+        let shapes: Vec<AttnShape> = batch
+            .iter()
+            .map(|r| AttnShape {
+                q: r.prompt_len.min(budget),
+                c: 0,
+            })
+            .collect();
+        let bshape = BatchShape::from_shapes(shapes);
+        let sms = self.workers[idx].core.cfg.gpu.num_sms;
+        let res = self.workers[idx]
+            .core
+            .executor
+            .run(&bshape, sms, DispatchMode::Eager, None);
+        // A prompt larger than the budget runs over multiple chunked
+        // iterations; model that as ceil(prompt/budget) sequential spans.
+        let mut extra = 0.0;
+        for r in &batch {
+            if r.prompt_len > budget {
+                let n_extra = r.prompt_len.div_ceil(budget) - 1;
+                let shape = BatchShape::from_shapes(vec![AttnShape {
+                    q: budget,
+                    c: budget,
+                }]);
+                let per = self.workers[idx]
+                    .core
+                    .executor
+                    .run(&shape, sms, DispatchMode::Eager, None);
+                extra += n_extra as f64 * per.total();
+            }
+        }
+        let dur = res.total() + extra;
+        let t_end = now + dur;
+        {
+            let core = &mut self.workers[idx].core;
+            core.clock = t_end;
+            core.last_active = t_end;
+            core.metrics.busy_time += res.gpu_time + extra;
+            core.metrics
+                .record_util(res.gpu_time + extra, res.sm_util, res.hbm_util);
+            core.metrics.iterations += 1;
+        }
+
+        // Completed prompts: first token produced here, then KV transfer.
+        for mut r in batch {
+            // The prefill worker holds no paged KV for this request once
+            // the prompt leaves for a decode worker.
+            let _ = self.workers[idx].core.kv.release(r.id);
+            r.advance_prefill(r.remaining_prompt());
+            r.advance_decode(t_end); // first output token from prefill logits
+            if r.phase == Phase::Finished {
+                let core = &mut self.workers[idx].core;
+                core.metrics.record_finished(&r);
+                core.finished.push(r);
+                continue;
+            }
+            let ready = t_end
+                + self.workers[idx]
+                    .core
+                    .executor
+                    .kv_transfer_time(r.context_len());
+            self.transfers.push(Transfer {
+                request: r,
+                ready_at: ready,
+            });
+        }
+    }
+
+    /// One decode iteration on worker `idx`: admit ready transfers (when
+    /// this worker is the least-loaded decode worker), then run one
+    /// decode-only step over the whole running batch.
+    fn step_decode(&mut self, idx: usize) {
+        let now = self.workers[idx].core.clock;
+        let my_load = self.workers[idx].core.running_len();
+        let am_least = self
+            .workers
+            .iter()
+            .enumerate()
+            .filter(|(i, w)| w.role == WorkerRole::Decode && *i != idx)
+            .all(|(_, w)| w.core.running_len() >= my_load);
+        if am_least {
+            let mut i = 0;
+            while i < self.transfers.len() {
+                if self.transfers[i].ready_at <= now {
+                    let t = self.transfers.swap_remove(i);
+                    let mut r = t.request;
+                    let id = r.id;
+                    let core = &mut self.workers[idx].core;
+                    core.kv.register(id);
+                    if core.kv.append(id, r.context_len()).is_err() {
+                        // Decode KV full: requeue the transfer for later.
+                        let _ = core.kv.release(id);
+                        self.transfers.push(Transfer {
+                            request: r,
+                            ready_at: now + 0.05,
+                        });
+                        break;
+                    }
+                    r.phase = Phase::Decode;
+                    core.running.push(r);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+
+        if self.workers[idx].core.running_len() == 0 {
+            // Idle: jump to the next transfer-ready time or park.
+            let next = self
+                .transfers
+                .iter()
+                .map(|t| t.ready_at)
+                .fold(f64::INFINITY, f64::min);
+            self.idle_advance(idx, next.is_finite().then_some(next));
+            return;
+        }
+
+        let sms = self.workers[idx].core.cfg.gpu.num_sms;
+        let shapes: Vec<AttnShape> = self.workers[idx]
+            .core
+            .running
+            .iter()
+            .map(|r| AttnShape {
+                q: 1,
+                c: r.context_len(),
+            })
+            .collect();
+        let bshape = BatchShape::from_shapes(shapes);
+        let res = self.workers[idx]
+            .core
+            .executor
+            .run(&bshape, sms, DispatchMode::Graph, None);
+        let dur = res.total();
+        let t_end = now + dur;
+        let core = &mut self.workers[idx].core;
+        core.clock = t_end;
+        core.last_active = t_end;
+        core.metrics.busy_time += res.gpu_time;
+        core.metrics
+            .record_util(res.gpu_time, res.sm_util, res.hbm_util);
+        core.metrics.iterations += 1;
+
+        for r in core.running.iter_mut() {
+            let _ = core.kv.append(r.id, 1);
+            r.advance_decode(t_end);
+        }
+        core.retire_finished();
+    }
+
+    /// Dynamo-planner emulation: flip one worker's role when the phases
+    /// are persistently imbalanced. Switching preempts in-flight work
+    /// (recompute: back to a prefill worker) and takes `reconfig_s`.
+    fn plan_reconfig(&mut self, now: f64) {
+        let (_, p_count, d_count) = self.role_counts();
+        let queue_pressure: usize = self
+            .workers
+            .iter()
+            .filter(|w| w.role == WorkerRole::Prefill)
+            .map(|w| w.core.queue_len())
+            .sum();
+        let decode_load: usize = self
+            .workers
+            .iter()
+            .filter(|w| w.role == WorkerRole::Decode)
+            .map(|w| w.core.running_len())
+            .sum();
+
+        // Prefill backlogged, decode workers light: D -> P.
+        if queue_pressure > 8 * p_count && d_count > 1 && decode_load < 4 * d_count {
+            let victim = self
+                .workers
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| w.role == WorkerRole::Decode)
+                .min_by_key(|(_, w)| w.core.running_len())
+                .map(|(i, _)| i);
+            if let Some(v) = victim {
+                let drained: Vec<Request> = self.workers[v].core.running.drain(..).collect();
+                for r in &drained {
+                    let _ = self.workers[v].core.kv.release(r.id);
+                }
+                self.workers[v].role = WorkerRole::Prefill;
+                self.workers[v].offline_until = now + self.reconfig_s;
+                self.reconfigs += 1;
+                for r in drained {
+                    // Preempted decodes restart from scratch.
+                    let fresh = Request::new(r.id, r.arrival, r.prompt_len, r.output_len);
+                    let tgt = self.lightest_prefill_worker(now);
+                    self.workers[tgt].core.inject_front(fresh);
+                }
+            }
+        // Decode overloaded, prefill side keeping up: P -> D.
+        } else if queue_pressure < 4 * p_count && decode_load > 8 * d_count.max(1) && p_count > 1 {
+            let victim = self
+                .workers
+                .iter()
+                .position(|w| w.role == WorkerRole::Prefill);
+            if let Some(v) = victim {
+                let moved: Vec<Request> = self.workers[v].core.waiting.drain(..).collect();
+                for r in &moved {
+                    let _ = self.workers[v].core.kv.release(r.id);
+                }
+                self.workers[v].role = WorkerRole::Decode;
+                self.workers[v].offline_until = now + self.reconfig_s;
+                self.reconfigs += 1;
+                for r in moved {
+                    // Re-route the displaced queue to the surviving
+                    // prefill workers.
+                    let tgt = self.lightest_prefill_worker(now);
+                    self.workers[tgt].core.inject(r);
+                }
+            }
+        }
+    }
+
+    /// The prefill worker with the shortest queue, preferring online ones.
+    fn lightest_prefill_worker(&self, now: f64) -> usize {
+        let pick = |require_online: bool| {
+            self.workers
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| {
+                    w.role == WorkerRole::Prefill && (!require_online || w.offline_until <= now)
+                })
+                .min_by_key(|(i, w)| (w.core.queue_len(), *i))
+                .map(|(i, _)| i)
+        };
+        pick(true)
+            .or_else(|| pick(false))
+            .expect("topology lost its last prefill worker")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Policy, ServingConfig};
+    use crate::engine::router::{LeastOutstandingRouter, RoundRobinRouter};
+    use crate::workload::synthetic::fixed_workload;
+
+    fn unified_cfg() -> ServingConfig {
+        ServingConfig::default_8b().with_policy(Policy::VllmChunked)
+    }
+
+    #[test]
+    fn single_unified_worker_matches_sim_engine() {
+        let w = fixed_workload(20, 2048, 16, 4.0, 1);
+        let mut cluster =
+            ClusterEngine::replicated(unified_cfg(), 1, 1, Box::new(RoundRobinRouter::new()));
+        let rc = cluster.run(w.clone());
+        let mut sim = crate::engine::engine_for(unified_cfg(), 1);
+        let rs = sim.run(w);
+        assert_eq!(rc.completed, rs.completed);
+        assert_eq!(rc.iterations, rs.iterations);
+        assert!(
+            (rc.duration - rs.duration).abs() < 1e-9,
+            "cluster {} vs sim {}",
+            rc.duration,
+            rs.duration
+        );
+        cluster.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn arrivals_are_dispatched_per_request_not_sharded() {
+        // With a shared stream and a least-outstanding router, both
+        // workers must receive work (static index sharding is gone).
+        let mut cluster =
+            ClusterEngine::replicated(unified_cfg(), 2, 1, Box::new(LeastOutstandingRouter::new()));
+        let rep = cluster.run(fixed_workload(30, 4000, 32, 10.0, 2));
+        assert_eq!(rep.completed, 30);
+        for (i, w) in cluster.workers.iter().enumerate() {
+            assert!(
+                w.core.metrics.completed > 0,
+                "worker {i} never completed a request"
+            );
+        }
+        cluster.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dispatch_skips_offline_workers() {
+        let cfg = ServingConfig::default_8b().with_policy(Policy::DisaggPD {
+            prefill_gpus: 2,
+            decode_gpus: 1,
+        });
+        let mut cluster =
+            ClusterEngine::disagg(cfg, 2, 1, 1, Box::new(LeastOutstandingRouter::new()));
+        cluster.workers[0].offline_until = 100.0; // reconfiguring
+        cluster.pending.push_back(Request::new(0, 0.0, 512, 4));
+        cluster.dispatch_arrivals(0.0);
+        assert_eq!(cluster.workers[0].core.queue_len(), 0, "offline worker got work");
+        assert_eq!(cluster.workers[1].core.queue_len(), 1);
+    }
+
+    #[test]
+    fn transfer_queue_feeds_decode_workers() {
+        let cfg = ServingConfig::default_8b().with_policy(Policy::DisaggPD {
+            prefill_gpus: 1,
+            decode_gpus: 1,
+        });
+        let mut cluster =
+            ClusterEngine::disagg(cfg, 1, 1, 1, Box::new(LeastOutstandingRouter::new()));
+        let rep = cluster.run(fixed_workload(10, 4000, 16, 2.0, 3));
+        assert_eq!(rep.completed, 10);
+        // Decode worker must have executed iterations (fed by transfers).
+        let (_, p, d) = cluster.role_counts();
+        assert_eq!((p, d), (1, 1));
+        assert!(cluster.workers[1].core.metrics.iterations > 0);
+        assert!(cluster.transfers.is_empty());
+        cluster.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,477 @@
+//! The shared per-iteration serving step.
+//!
+//! [`EngineCore`] owns everything one worker needs to execute one
+//! continuous-batching iteration: scheduler, simulated executor, paged KV
+//! manager, local virtual clock, waiting/running queues, and a metrics
+//! recorder. It deliberately knows nothing about *where requests come
+//! from* — arrival streams, routing, replication, and disaggregation are
+//! topology concerns layered on top ([`super::SimEngine`] for one worker,
+//! [`super::ClusterEngine`] for many).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::config::ServingConfig;
+use crate::kvcache::KvManager;
+use crate::metrics::Recorder;
+use crate::model::AttnShape;
+use crate::request::{Phase, Request, RequestId};
+use crate::roofline::BatchShape;
+use crate::sched::{IterationPlan, SchedInput, Scheduler};
+use crate::sim::{DispatchMode, GpuExecutor};
+
+use super::{IterEvent, IterKind};
+
+/// Hard cap on simulated time — a run that exceeds this has diverged
+/// (arrival rate above capacity with an unbounded queue). Shared by every
+/// engine topology; the drain-on-divergence bookkeeping lives in
+/// [`EngineCore::drain_diverged`].
+pub const MAX_SIM_TIME: f64 = 3.0e4;
+
+/// What one call to [`EngineCore::step_once`] did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreStep {
+    /// An iteration executed; the local clock advanced.
+    Executed,
+    /// Nothing schedulable; the caller decides how to advance the clock.
+    Idle,
+    /// The head waiting request can never fit in KV and was dropped.
+    DroppedHead,
+}
+
+/// One worker's serving state + the per-iteration step all engine
+/// topologies share.
+pub struct EngineCore {
+    pub cfg: ServingConfig,
+    scheduler: Box<dyn Scheduler>,
+    pub(crate) executor: GpuExecutor,
+    pub(crate) kv: KvManager,
+    /// Local virtual clock, seconds.
+    pub clock: f64,
+    /// Clock value after the last *executed* iteration (excludes idle
+    /// jumps/parking — the cluster uses it for wall-time accounting).
+    pub last_active: f64,
+    /// Arrived-and-routed-here requests, not yet admitted (FCFS).
+    pub(crate) waiting: VecDeque<Request>,
+    pub(crate) running: Vec<Request>,
+    pub finished: Vec<Request>,
+    pub metrics: Recorder,
+    /// Requests dropped because their prompt can never fit in KV.
+    pub dropped: u64,
+    /// Requests preempted (recompute-style) due to KV exhaustion.
+    pub preemptions: u64,
+    /// Detailed per-iteration log (Fig. 10); disabled by default.
+    pub log_events: bool,
+    pub events: Vec<IterEvent>,
+}
+
+impl EngineCore {
+    pub fn new(cfg: ServingConfig, scheduler: Box<dyn Scheduler>, seed: u64) -> EngineCore {
+        let kv = KvManager::new(cfg.kv_capacity_blocks(), cfg.kv_block_tokens);
+        let executor = GpuExecutor::new(cfg.model.clone(), cfg.gpu.clone(), cfg.tp, seed);
+        EngineCore {
+            cfg,
+            scheduler,
+            executor,
+            kv,
+            clock: 0.0,
+            last_active: 0.0,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            finished: Vec::new(),
+            metrics: Recorder::new(),
+            dropped: 0,
+            preemptions: 0,
+            log_events: false,
+            events: Vec::new(),
+        }
+    }
+
+    pub fn policy_name(&self) -> String {
+        self.scheduler.name()
+    }
+
+    /// Accept one routed request into the waiting queue.
+    pub fn inject(&mut self, mut r: Request) {
+        r.phase = Phase::Waiting;
+        self.kv.register(r.id);
+        self.waiting.push_back(r);
+    }
+
+    /// Requeue a request at the head of the waiting queue (reconfiguration
+    /// and preemption paths).
+    pub fn inject_front(&mut self, mut r: Request) {
+        r.phase = Phase::Waiting;
+        self.kv.register(r.id);
+        self.waiting.push_front(r);
+    }
+
+    /// Any admitted or queued work on this worker?
+    pub fn has_local_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.running.is_empty()
+    }
+
+    /// Tokens this worker still has to process (remaining prompt +
+    /// remaining output across waiting and running) — the load signal for
+    /// least-outstanding-token routing.
+    pub fn outstanding_tokens(&self) -> u64 {
+        self.waiting
+            .iter()
+            .chain(self.running.iter())
+            .map(|r| r.remaining_prompt() + (r.output_len - r.generated))
+            .sum()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn kv_free_tokens(&self) -> u64 {
+        self.kv.free_blocks() * self.kv.block_tokens() as u64
+    }
+
+    pub fn kv_total_tokens(&self) -> u64 {
+        self.kv.total_blocks() * self.kv.block_tokens() as u64
+    }
+
+    /// Divergence drain: drop all queued and in-flight work, releasing
+    /// its KV. Returns how many requests were discarded (also added to
+    /// `self.dropped`).
+    pub fn drain_diverged(&mut self) -> u64 {
+        let mut n = 0u64;
+        while let Some(r) = self.waiting.pop_front() {
+            let _ = self.kv.release(r.id);
+            n += 1;
+        }
+        for r in self.running.drain(..) {
+            let _ = self.kv.release(r.id);
+            n += 1;
+        }
+        self.dropped += n;
+        n
+    }
+
+    /// Run one scheduling + execution iteration over the local queues.
+    ///
+    /// `allow_drop_head`: when the scheduler idles with an empty running
+    /// set, the head waiting request can never be admitted (its prompt
+    /// exceeds KV) — drop it to avoid deadlock. Topologies pass `false`
+    /// while arrivals are still pending so the legacy ordering (drain
+    /// arrivals first, then drop) is preserved.
+    pub fn step_once(&mut self, allow_drop_head: bool) -> CoreStep {
+        let sched_start = Instant::now();
+        let input = SchedInput {
+            running: &self.running,
+            waiting: self.waiting.make_contiguous(),
+            kv_free_tokens: self.kv.free_blocks() * self.kv.block_tokens() as u64,
+            kv_total_tokens: self.kv.total_blocks() * self.kv.block_tokens() as u64,
+        };
+        let plan = self.scheduler.plan(&input);
+        let sched_s = sched_start.elapsed().as_secs_f64();
+        self.metrics.sched_overhead += sched_s;
+
+        match plan {
+            IterationPlan::Idle => {
+                if allow_drop_head && !self.waiting.is_empty() && self.running.is_empty() {
+                    // Head request can never fit: drop it or we deadlock.
+                    let r = self.waiting.pop_front().unwrap();
+                    let _ = self.kv.release(r.id);
+                    self.dropped += 1;
+                    CoreStep::DroppedHead
+                } else {
+                    CoreStep::Idle
+                }
+            }
+            IterationPlan::Aggregated { decode, prefill } => {
+                self.exec_aggregated(decode, prefill, sched_s);
+                CoreStep::Executed
+            }
+            IterationPlan::Spatial {
+                decode,
+                prefill,
+                plan,
+            } => {
+                self.exec_spatial(decode, prefill, plan, sched_s);
+                CoreStep::Executed
+            }
+        }
+    }
+
+    /// Move scheduled waiting requests into running (admission).
+    fn admit_scheduled(&mut self, prefill: &[crate::sched::PrefillChunk]) {
+        for c in prefill.iter().filter(|c| c.admit) {
+            if let Some(pos) = self.waiting.iter().position(|r| r.id == c.id) {
+                let r = self.waiting.remove(pos).unwrap();
+                self.running.push(r);
+            }
+        }
+    }
+
+    fn batch_shapes(
+        &self,
+        decode: &[RequestId],
+        prefill: &[crate::sched::PrefillChunk],
+    ) -> (BatchShape, BatchShape) {
+        let find = |id: RequestId| self.running.iter().find(|r| r.id == id);
+        let dec = decode
+            .iter()
+            .filter_map(|&id| find(id))
+            .map(|r| AttnShape {
+                q: 1,
+                c: r.context_len(),
+            })
+            .collect();
+        let pre = prefill
+            .iter()
+            .filter_map(|c| find(c.id).map(|r| (r, c.tokens)))
+            .map(|(r, q)| AttnShape {
+                q,
+                c: r.context_len(),
+            })
+            .collect();
+        (BatchShape::from_shapes(dec), BatchShape::from_shapes(pre))
+    }
+
+    /// KV-append with recompute-preemption on exhaustion: the most
+    /// recently admitted running request is evicted, reset, and requeued
+    /// (vLLM's recompute preemption policy).
+    fn kv_append_or_preempt(&mut self, id: RequestId, tokens: u64) -> bool {
+        loop {
+            match self.kv.append(id, tokens) {
+                Ok(()) => return true,
+                Err(_) => {
+                    // Evict the newest running request that is not `id`.
+                    let victim = self
+                        .running
+                        .iter()
+                        .rposition(|r| r.id != id && r.phase != Phase::Finished);
+                    match victim {
+                        Some(pos) => {
+                            let v = self.running.remove(pos);
+                            let _ = self.kv.release(v.id);
+                            self.preemptions += 1;
+                            // Recompute preemption: progress is lost.
+                            let fresh = Request::new(v.id, v.arrival, v.prompt_len, v.output_len);
+                            self.kv.register(fresh.id);
+                            self.waiting.push_front(fresh);
+                        }
+                        None => return false, // single request larger than KV
+                    }
+                }
+            }
+        }
+    }
+
+    fn exec_aggregated(
+        &mut self,
+        decode: Vec<RequestId>,
+        prefill: Vec<crate::sched::PrefillChunk>,
+        sched_s: f64,
+    ) {
+        self.admit_scheduled(&prefill);
+        let (dec_shape, pre_shape) = self.batch_shapes(&decode, &prefill);
+        let mut all = dec_shape.shapes.clone();
+        all.extend(pre_shape.shapes.iter().copied());
+        let batch = BatchShape::from_shapes(all);
+        // Decode-only batches replay captured graphs; any prefill in the
+        // batch forces eager dispatch (dynamic shapes — §4.3).
+        let mode = if pre_shape.is_empty() {
+            DispatchMode::Graph
+        } else {
+            DispatchMode::Eager
+        };
+        let res = self.executor.run(&batch, self.cfg.gpu.num_sms, mode, None);
+        // The virtual clock stays deterministic: measured CPU scheduling
+        // time is *reported* (metrics/events) but not added to simulated
+        // time — it is µs against ~100 ms iterations (Fig. 10).
+        let dur = res.total();
+        let t_end = self.clock + dur;
+
+        // KV appends + request state updates.
+        for &id in &decode {
+            if self.kv_append_or_preempt(id, 1) {
+                if let Some(r) = self.running.iter_mut().find(|r| r.id == id) {
+                    if r.phase == Phase::Decode {
+                        r.advance_decode(t_end);
+                    }
+                }
+            }
+        }
+        for c in &prefill {
+            if self.kv_append_or_preempt(c.id, c.tokens) {
+                if let Some(pos) = self.running.iter().position(|r| r.id == c.id) {
+                    let r = &mut self.running[pos];
+                    r.advance_prefill(c.tokens);
+                    if r.phase == Phase::Decode {
+                        // Prompt completed: this forward's logits produce
+                        // the first output token.
+                        let id = r.id;
+                        if self.kv_append_or_preempt(id, 1) {
+                            if let Some(r) = self.running.iter_mut().find(|r| r.id == id) {
+                                r.advance_decode(t_end);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        self.metrics
+            .record_util(res.gpu_time, res.sm_util, res.hbm_util);
+        self.metrics.busy_time += res.gpu_time;
+        self.metrics.iterations += 1;
+        if self.log_events {
+            self.events.push(IterEvent {
+                t_start: self.clock,
+                duration: dur,
+                kind: IterKind::Aggregated,
+                n_decode: decode.len() as u32,
+                prefill_tokens: pre_shape.n_tokens,
+                sched_s,
+                sm_util: res.sm_util,
+                hbm_util: res.hbm_util,
+            });
+        }
+        self.clock = t_end;
+        self.last_active = t_end;
+        self.retire_finished();
+    }
+
+    fn exec_spatial(
+        &mut self,
+        decode: Vec<RequestId>,
+        prefill: Vec<crate::sched::PrefillChunk>,
+        plan: crate::hw::PartitionPlan,
+        sched_s: f64,
+    ) {
+        self.admit_scheduled(&prefill);
+        let (dec_shape, pre_shape) = self.batch_shapes(&decode, &prefill);
+        let res = self.executor.run_spatial(&dec_shape, &pre_shape, &plan);
+        let dur = res.span;
+        let t_end = self.clock + dur;
+        let k = plan.k.max(1);
+
+        // Look-ahead decode: reserve k slots per request up front (§4.3),
+        // then run k uninterrupted steps; step i completes at
+        // t0 + dispatch + (i+1)·t_step.
+        for &id in &decode {
+            let _ = self.kv.reserve(id, k as u64); // best-effort; append below enforces
+        }
+        let t0 = self.clock;
+        for i in 0..k {
+            let t_tok = t0 + res.dec.dispatch_time + (i + 1) as f64 * res.t_decode_step;
+            for &id in &decode {
+                let done = self
+                    .running
+                    .iter()
+                    .find(|r| r.id == id)
+                    .map(|r| r.phase != Phase::Decode)
+                    .unwrap_or(true);
+                if done {
+                    continue; // finished mid-look-ahead: slot wasted
+                }
+                if self.kv_append_or_preempt(id, 1) {
+                    if let Some(r) = self.running.iter_mut().find(|r| r.id == id) {
+                        r.advance_decode(t_tok.min(t_end));
+                    }
+                }
+            }
+        }
+
+        // Prefill side advances at the synchronization point.
+        for c in &prefill {
+            if self.kv_append_or_preempt(c.id, c.tokens) {
+                if let Some(pos) = self.running.iter().position(|r| r.id == c.id) {
+                    let r = &mut self.running[pos];
+                    r.advance_prefill(c.tokens);
+                    if r.phase == Phase::Decode {
+                        let id = r.id;
+                        if self.kv_append_or_preempt(id, 1) {
+                            if let Some(r) = self.running.iter_mut().find(|r| r.id == id) {
+                                r.advance_decode(t_end);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Utilization: weight each side by its busy time over its SM share.
+        let f_dec = plan.decode.fraction(&self.cfg.gpu);
+        let f_pre = plan.prefill.fraction(&self.cfg.gpu);
+        let busy_dec = (k as f64 * res.t_decode_step).min(res.span);
+        let busy_pre = res.t_prefill.min(res.span);
+        let sm = f_dec * res.dec.sm_util * busy_dec / res.span
+            + f_pre * res.pre.sm_util * busy_pre / res.span;
+        let hbm =
+            res.dec.hbm_util * busy_dec / res.span + res.pre.hbm_util * busy_pre / res.span;
+        self.metrics.record_util(res.span, sm, hbm);
+        self.metrics.busy_time += res.span;
+        self.metrics.iterations += 1;
+        self.metrics.spatial_iterations += 1;
+        if self.log_events {
+            self.events.push(IterEvent {
+                t_start: self.clock,
+                duration: dur,
+                kind: IterKind::Spatial {
+                    decode_tpcs: plan.decode.n_tpcs,
+                    prefill_tpcs: plan.prefill.n_tpcs,
+                    k,
+                },
+                n_decode: decode.len() as u32,
+                prefill_tokens: pre_shape.n_tokens,
+                sched_s,
+                sm_util: sm,
+                hbm_util: hbm,
+            });
+        }
+        self.clock = t_end;
+        self.last_active = t_end;
+        self.retire_finished();
+    }
+
+    pub(crate) fn retire_finished(&mut self) {
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].phase == Phase::Finished {
+                let r = self.running.swap_remove(i);
+                let _ = self.kv.release(r.id);
+                self.metrics.record_finished(&r);
+                self.finished.push(r);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Engine-level invariants, used by property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.kv.check_invariants()?;
+        for r in &self.running {
+            if r.phase == Phase::Finished {
+                return Err(format!("finished request {} still running", r.id));
+            }
+            if r.generated > r.output_len {
+                return Err(format!("request {} over-generated", r.id));
+            }
+        }
+        for r in &self.finished {
+            if r.generated != r.output_len || r.phase != Phase::Finished {
+                return Err(format!("request {} retired unfinished", r.id));
+            }
+            if r.token_times.windows(2).any(|w| w[1] < w[0]) {
+                return Err(format!("request {} token times not monotone", r.id));
+            }
+            if let Some(t) = r.first_token_at {
+                if t < r.arrival {
+                    return Err(format!("request {} produced a token before arrival", r.id));
+                }
+            }
+        }
+        Ok(())
+    }
+}

@@ -2,72 +2,43 @@
 //!
 //! Topology: `P` prefill workers + `D` decode workers, each a whole GPU
 //! (device-granular partitioning — the coarseness DuetServe's SM-granular
-//! approach avoids). Requests prefill FCFS on a prefill worker, the KV
-//! cache transfers over NVLink P2P (NIXL-style), then the request joins a
-//! decode worker's continuous batch.
+//! approach avoids). Requests are routed to a prefill worker at arrival
+//! time, prefill FCFS there, the KV cache transfers over NVLink P2P
+//! (NIXL-style) through the cluster's transfer queue, then the request
+//! joins the least-loaded decode worker's continuous batch.
 //!
-//! For Table 3, the engine optionally emulates Dynamo's planner: when the
-//! queue imbalance persists, a worker switches roles — preempting its
-//! in-flight requests and going offline for `reconfig_s` (model reload +
-//! KV rebuild, ~40 s in the paper) before serving in the new role.
+//! This is a role configuration of [`ClusterEngine`] — the event loop,
+//! divergence guard, transfer queue, and the optional Dynamo-planner
+//! emulation (role switches that preempt in-flight requests and cost
+//! `reconfig_s` of downtime, Table 3) all live there.
 
-use std::collections::VecDeque;
+use std::ops::{Deref, DerefMut};
 
-use crate::config::ServingConfig;
-use crate::kvcache::KvManager;
-use crate::metrics::{Recorder, Report};
-use crate::model::AttnShape;
-use crate::request::{Phase, Request};
-use crate::roofline::BatchShape;
-use crate::sim::{DispatchMode, GpuExecutor};
+use crate::config::{GpuSpec, ServingConfig};
+use crate::metrics::Report;
 use crate::workload::Workload;
 
-const MAX_SIM_TIME: f64 = 3.0e4;
+use super::cluster::ClusterEngine;
+use super::router::LeastOutstandingRouter;
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Role {
-    Prefill,
-    Decode,
-}
-
-struct Worker {
-    role: Role,
-    clock: f64,
-    executor: GpuExecutor,
-    kv: KvManager,
-    /// Decode-role: requests currently decoding.
-    running: Vec<Request>,
-    /// Offline until this time (role reconfiguration).
-    offline_until: f64,
-    busy: f64,
-}
-
-/// A request whose prefill finished and whose KV is in flight to a decode
-/// worker.
-struct Transfer {
-    request: Request,
-    ready_at: f64,
-}
-
-/// Disaggregated engine.
+/// Disaggregated engine: prefill/decode role workers over the cluster
+/// core.
 pub struct DisaggEngine {
-    pub cfg: ServingConfig,
-    workers: Vec<Worker>,
-    /// Global prefill queue (FCFS).
-    prefill_queue: VecDeque<Request>,
-    pending: VecDeque<Request>,
-    transfers: Vec<Transfer>,
-    pub metrics: Recorder,
-    pub finished: Vec<Request>,
-    pub dropped: u64,
-    /// Enable Dynamo-planner-style runtime reconfiguration.
-    pub reconfigurable: bool,
-    /// Downtime for a role switch (paper: ~40 s).
-    pub reconfig_s: f64,
-    /// Planner check interval.
-    pub planner_interval: f64,
-    next_planner_check: f64,
-    pub reconfigs: u64,
+    pub cluster: ClusterEngine,
+}
+
+impl Deref for DisaggEngine {
+    type Target = ClusterEngine;
+
+    fn deref(&self) -> &ClusterEngine {
+        &self.cluster
+    }
+}
+
+impl DerefMut for DisaggEngine {
+    fn deref_mut(&mut self) -> &mut ClusterEngine {
+        &mut self.cluster
+    }
 }
 
 impl DisaggEngine {
@@ -82,369 +53,29 @@ impl DisaggEngine {
     pub fn new_hetero(
         cfg: ServingConfig,
         prefill_gpus: u32,
-        prefill_gpu: crate::config::GpuSpec,
+        prefill_gpu: GpuSpec,
         decode_gpus: u32,
-        decode_gpu: crate::config::GpuSpec,
+        decode_gpu: GpuSpec,
         seed: u64,
     ) -> DisaggEngine {
-        assert!(prefill_gpus >= 1 && decode_gpus >= 1);
-        let mk = |role: Role, spec: &crate::config::GpuSpec, i: u32| Worker {
-            role,
-            clock: 0.0,
-            executor: GpuExecutor::new(cfg.model.clone(), spec.clone(), 1, seed + i as u64),
-            kv: KvManager::new(
-                // Each worker is a single GPU holding a full model replica.
-                {
-                    let mut c = cfg.clone();
-                    c.tp = 1;
-                    c.gpu = spec.clone();
-                    c.kv_capacity_blocks()
-                },
-                cfg.kv_block_tokens,
-            ),
-            running: Vec::new(),
-            offline_until: 0.0,
-            busy: 0.0,
-        };
-        let mut workers = Vec::new();
-        for i in 0..prefill_gpus {
-            workers.push(mk(Role::Prefill, &prefill_gpu, i));
-        }
-        for i in 0..decode_gpus {
-            workers.push(mk(Role::Decode, &decode_gpu, prefill_gpus + i));
-        }
         DisaggEngine {
-            cfg,
-            workers,
-            prefill_queue: VecDeque::new(),
-            pending: VecDeque::new(),
-            transfers: Vec::new(),
-            metrics: Recorder::new(),
-            finished: Vec::new(),
-            dropped: 0,
-            reconfigurable: false,
-            reconfig_s: 40.0,
-            planner_interval: 30.0,
-            next_planner_check: 30.0,
-            reconfigs: 0,
+            cluster: ClusterEngine::disagg_hetero(
+                cfg,
+                prefill_gpus,
+                prefill_gpu,
+                decode_gpus,
+                decode_gpu,
+                seed,
+                // Prefill queues are per-worker now; least-outstanding
+                // routing approximates the old shared-FCFS-queue work
+                // conservation.
+                Box::new(LeastOutstandingRouter::new()),
+            ),
         }
-    }
-
-    pub fn n_workers(&self) -> usize {
-        self.workers.len()
     }
 
     pub fn run(&mut self, workload: Workload) -> Report {
-        self.pending = workload.requests.into();
-        loop {
-            if !self.step() {
-                break;
-            }
-        }
-        let end = self
-            .workers
-            .iter()
-            .map(|w| w.clock)
-            .fold(0.0f64, f64::max);
-        self.metrics.duration = end;
-        for w in &self.workers {
-            self.metrics.busy_time += w.busy;
-        }
-        let p = self.workers.iter().filter(|w| w.role == Role::Prefill).count();
-        let d = self.workers.len() - p;
-        self.metrics.report(&format!("Dynamo-{p}P{d}D"))
-    }
-
-    fn all_done(&self) -> bool {
-        self.pending.is_empty()
-            && self.prefill_queue.is_empty()
-            && self.transfers.is_empty()
-            && self.workers.iter().all(|w| w.running.is_empty())
-    }
-
-    /// Advance the system by one worker-iteration. Returns false if done.
-    fn step(&mut self) -> bool {
-        if self.all_done() {
-            return false;
-        }
-        // The worker with the earliest clock acts next.
-        let idx = self
-            .workers
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.clock.partial_cmp(&b.1.clock).unwrap())
-            .map(|(i, _)| i)
-            .unwrap();
-        let now = self.workers[idx].clock;
-        if now > MAX_SIM_TIME {
-            self.dropped +=
-                (self.pending.len() + self.prefill_queue.len() + self.transfers.len()) as u64;
-            self.pending.clear();
-            self.prefill_queue.clear();
-            self.transfers.clear();
-            for w in &mut self.workers {
-                w.running.clear();
-            }
-            return false;
-        }
-
-        // Pull arrivals into the global prefill queue.
-        while let Some(r) = self.pending.front() {
-            if r.arrival <= now {
-                self.prefill_queue.push_back(self.pending.pop_front().unwrap());
-            } else {
-                break;
-            }
-        }
-
-        if self.reconfigurable && now >= self.next_planner_check {
-            self.plan_reconfig(now);
-            self.next_planner_check = now + self.planner_interval;
-        }
-
-        if self.workers[idx].offline_until > now {
-            self.workers[idx].clock = self.workers[idx].offline_until;
-            return true;
-        }
-
-        match self.workers[idx].role {
-            Role::Prefill => self.step_prefill(idx),
-            Role::Decode => self.step_decode(idx),
-        }
-        true
-    }
-
-    /// One prefill iteration on worker `idx`: pack whole prompts up to the
-    /// token budget (chunking the head if it alone exceeds the budget).
-    fn step_prefill(&mut self, idx: usize) {
-        let now = self.workers[idx].clock;
-        if self.prefill_queue.is_empty() {
-            // Idle: jump to next arrival (or just past other clocks).
-            let next = self.pending.front().map(|r| r.arrival);
-            match next {
-                Some(t) => self.workers[idx].clock = self.workers[idx].clock.max(t),
-                None => {
-                    // No more arrivals: park beyond every active clock so
-                    // other workers drive the system.
-                    let max_other = self
-                        .workers
-                        .iter()
-                        .map(|w| w.clock)
-                        .fold(0.0f64, f64::max);
-                    self.workers[idx].clock = max_other + 1e-3;
-                }
-            }
-            return;
-        }
-        // Build a prefill-only batch.
-        let budget = self.cfg.token_budget as u64;
-        let mut tokens = 0u64;
-        let mut batch: Vec<Request> = Vec::new();
-        while let Some(r) = self.prefill_queue.front() {
-            if batch.is_empty() {
-                let r = self.prefill_queue.pop_front().unwrap();
-                tokens += r.prompt_len.min(budget);
-                batch.push(r);
-                if tokens >= budget {
-                    break;
-                }
-            } else if tokens + r.prompt_len <= budget {
-                let r = self.prefill_queue.pop_front().unwrap();
-                tokens += r.prompt_len;
-                batch.push(r);
-            } else {
-                break;
-            }
-        }
-        // A prompt larger than the budget runs over multiple chunked
-        // iterations; model that as ceil(prompt/budget) sequential spans.
-        let shapes: Vec<AttnShape> = batch
-            .iter()
-            .map(|r| AttnShape {
-                q: r.prompt_len.min(budget),
-                c: 0,
-            })
-            .collect();
-        let bshape = BatchShape::from_shapes(shapes);
-        let res = self.workers[idx]
-            .executor
-            .run(&bshape, self.cfg.gpu.num_sms, DispatchMode::Eager, None);
-        // Extra chunks for oversized prompts.
-        let mut extra = 0.0;
-        for r in &batch {
-            if r.prompt_len > budget {
-                let n_extra = r.prompt_len.div_ceil(budget) - 1;
-                let shape = BatchShape::from_shapes(vec![AttnShape {
-                    q: budget.min(r.prompt_len - budget * 0),
-                    c: budget,
-                }]);
-                let per = self.workers[idx]
-                    .executor
-                    .run(&shape, self.cfg.gpu.num_sms, DispatchMode::Eager, None);
-                extra += n_extra as f64 * per.total();
-            }
-        }
-        let dur = res.total() + extra;
-        let t_end = now + dur;
-        self.workers[idx].clock = t_end;
-        self.workers[idx].busy += res.gpu_time + extra;
-        self.metrics.record_util(res.gpu_time + extra, res.sm_util, res.hbm_util);
-        self.metrics.iterations += 1;
-
-        // Completed prompts: first token produced here, then KV transfer.
-        for mut r in batch {
-            r.advance_prefill(r.prompt_len);
-            r.advance_decode(t_end); // first output token from prefill logits
-            if r.phase == Phase::Finished {
-                self.metrics.record_finished(&r);
-                self.finished.push(r);
-                continue;
-            }
-            let ready = t_end + self.workers[idx].executor.kv_transfer_time(r.context_len());
-            self.transfers.push(Transfer { request: r, ready_at: ready });
-        }
-    }
-
-    /// One decode iteration on worker `idx`: admit ready transfers, run
-    /// one decode-only step over the whole running batch.
-    fn step_decode(&mut self, idx: usize) {
-        let now = self.workers[idx].clock;
-        // Admit ready transfers targeted at the least-loaded decode worker
-        // — approximate by admitting to this worker when it is the
-        // least-loaded decode worker.
-        let my_load = self.workers[idx].running.len();
-        let am_least = self
-            .workers
-            .iter()
-            .filter(|w| w.role == Role::Decode)
-            .all(|w| w.running.len() >= my_load || std::ptr::eq(w, &self.workers[idx]));
-        if am_least {
-            let mut i = 0;
-            while i < self.transfers.len() {
-                if self.transfers[i].ready_at <= now {
-                    let t = self.transfers.swap_remove(i);
-                    let mut r = t.request;
-                    let id = r.id;
-                    self.workers[idx].kv.register(id);
-                    if self.workers[idx].kv.append(id, r.context_len()).is_err() {
-                        // Decode KV full: requeue the transfer for later.
-                        self.transfers.push(Transfer {
-                            request: r,
-                            ready_at: now + 0.05,
-                        });
-                        let last = self.transfers.len() - 1;
-                        let _ = self.workers[idx].kv.release(id);
-                        let _ = last;
-                        break;
-                    }
-                    r.phase = Phase::Decode;
-                    self.workers[idx].running.push(r);
-                } else {
-                    i += 1;
-                }
-            }
-        }
-
-        if self.workers[idx].running.is_empty() {
-            // Idle: jump to next transfer-ready or park.
-            let next = self
-                .transfers
-                .iter()
-                .map(|t| t.ready_at)
-                .fold(f64::INFINITY, f64::min);
-            if next.is_finite() {
-                self.workers[idx].clock = self.workers[idx].clock.max(next);
-            } else {
-                let max_other = self
-                    .workers
-                    .iter()
-                    .map(|w| w.clock)
-                    .fold(0.0f64, f64::max);
-                self.workers[idx].clock = max_other + 1e-3;
-            }
-            return;
-        }
-
-        let shapes: Vec<AttnShape> = self.workers[idx]
-            .running
-            .iter()
-            .map(|r| AttnShape {
-                q: 1,
-                c: r.context_len(),
-            })
-            .collect();
-        let bshape = BatchShape::from_shapes(shapes);
-        let res = self.workers[idx]
-            .executor
-            .run(&bshape, self.cfg.gpu.num_sms, DispatchMode::Graph, None);
-        let dur = res.total();
-        let t_end = now + dur;
-        self.workers[idx].clock = t_end;
-        self.workers[idx].busy += res.gpu_time;
-        self.metrics.record_util(res.gpu_time, res.sm_util, res.hbm_util);
-        self.metrics.iterations += 1;
-
-        let w = &mut self.workers[idx];
-        let mut i = 0;
-        while i < w.running.len() {
-            let id = w.running[i].id;
-            let _ = w.kv.append(id, 1);
-            w.running[i].advance_decode(t_end);
-            if w.running[i].phase == Phase::Finished {
-                let r = w.running.swap_remove(i);
-                let _ = w.kv.release(r.id);
-                self.metrics.record_finished(&r);
-                self.finished.push(r);
-            } else {
-                i += 1;
-            }
-        }
-    }
-
-    /// Dynamo-planner emulation: flip one worker's role when the phases
-    /// are persistently imbalanced. Switching preempts in-flight decodes
-    /// (recompute: back to the prefill queue) and takes `reconfig_s`.
-    fn plan_reconfig(&mut self, now: f64) {
-        let p_count = self.workers.iter().filter(|w| w.role == Role::Prefill).count();
-        let d_count = self.workers.len() - p_count;
-        let queue_pressure = self.prefill_queue.len();
-        let decode_load: usize = self
-            .workers
-            .iter()
-            .filter(|w| w.role == Role::Decode)
-            .map(|w| w.running.len())
-            .sum();
-
-        // Prefill backlogged, decode workers light: D -> P.
-        if queue_pressure > 8 * p_count && d_count > 1 && decode_load < 4 * d_count {
-            if let Some(w) = self
-                .workers
-                .iter_mut()
-                .filter(|w| w.role == Role::Decode)
-                .min_by_key(|w| w.running.len())
-            {
-                for r in w.running.drain(..) {
-                    // Preempted decodes restart from scratch.
-                    let fresh = Request::new(r.id, r.arrival, r.prompt_len, r.output_len);
-                    let _ = w.kv.release(r.id);
-                    self.prefill_queue.push_front(fresh);
-                }
-                w.role = Role::Prefill;
-                w.offline_until = now + self.reconfig_s;
-                self.reconfigs += 1;
-            }
-        // Decode overloaded, prefill side keeping up: P -> D.
-        } else if queue_pressure < 4 * p_count && decode_load > 8 * d_count.max(1) && p_count > 1 {
-            if let Some(w) = self
-                .workers
-                .iter_mut()
-                .find(|w| w.role == Role::Prefill)
-            {
-                w.role = Role::Decode;
-                w.offline_until = now + self.reconfig_s;
-                self.reconfigs += 1;
-            }
-        }
+        self.cluster.run(workload)
     }
 }
 
@@ -514,5 +145,21 @@ mod tests {
         let rep = e.run(fixed_workload(300, 12_000, 8, 12.0, 4));
         assert!(rep.completed > 0);
         assert!(e.reconfigs > 0, "planner should reconfigure under flood");
+    }
+
+    #[test]
+    fn hetero_topology_runs_distinct_gpu_parts() {
+        let mut e = DisaggEngine::new_hetero(
+            cfg(),
+            1,
+            GpuSpec::compute_optimized(),
+            1,
+            GpuSpec::memory_optimized(),
+            1,
+        );
+        let rep = e.run(fixed_workload(12, 4000, 24, 2.0, 5));
+        assert_eq!(rep.completed + e.dropped, 12);
+        assert_eq!(e.n_workers(), 2);
+        e.check_invariants().unwrap();
     }
 }

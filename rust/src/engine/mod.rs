@@ -1,496 +1,152 @@
-//! Serving engines: the iteration loop tying scheduler, KV cache,
-//! executor and metrics together.
+//! Serving engines: scheduler, KV cache, executor and metrics tied into
+//! topologies over one shared iteration core.
 //!
-//! [`SimEngine`] is the single-GPU-group engine (policy-generic via the
-//! [`Scheduler`] trait) used for vLLM / SGLang / DuetServe / static-split
-//! configurations. [`replicated::ReplicatedEngine`] runs N independent
-//! replicas under round-robin dispatch (the Fig. 2 "Agg" setup), and
-//! [`disagg::DisaggEngine`] implements Dynamo-style PD disaggregation
-//! with NVLink KV transfers (Fig. 2/7, Table 3).
+//! # Architecture
+//!
+//! The engine layer is three stacked seams:
+//!
+//! 1. **Core** ([`EngineCore`]) — the per-iteration serving step
+//!    every worker runs: scheduler plan → KV admit/allocate/preempt →
+//!    executor dispatch → metrics/events. One local virtual clock per
+//!    core; no knowledge of arrivals or other workers. The divergence
+//!    guard ([`MAX_SIM_TIME`] + drain bookkeeping) lives here, in
+//!    exactly one place.
+//! 2. **Topology** — how cores are composed:
+//!    - [`SimEngine`]: one unified worker fed directly by the workload
+//!      (vLLM / SGLang / DuetServe / static-split policies);
+//!    - [`ClusterEngine`]: N workers advanced by a discrete-event loop
+//!      (smallest local clock acts next) with a shared arrival stream
+//!      and a prefill→decode KV-transfer queue;
+//!    - [`ReplicatedEngine`]: cluster of unified replicas (Fig. 2 "Agg");
+//!    - [`DisaggEngine`]: cluster of role-tagged prefill/decode workers
+//!      with NVLink transfers and the optional Dynamo-style
+//!      reconfiguration planner (Fig. 2/7, Table 3).
+//! 3. **Routing** ([`router::Router`]) — pluggable per-arrival dispatch
+//!    (round-robin, least-outstanding-tokens, KV-pressure-aware).
+//!    Requests are routed when they arrive, against live load signals;
+//!    replicated serving is time-interleaved rather than statically
+//!    sharded.
 
+pub mod cluster;
+pub mod core;
 pub mod disagg;
 pub mod events;
 pub mod replicated;
+pub mod router;
 
+pub use self::core::{CoreStep, EngineCore, MAX_SIM_TIME};
+pub use cluster::{ClusterEngine, Worker, WorkerRole};
 pub use disagg::DisaggEngine;
 pub use events::{IterEvent, IterKind};
 pub use replicated::ReplicatedEngine;
+pub use router::{
+    router_by_name, KvPressureRouter, LeastOutstandingRouter, RoundRobinRouter, Router,
+};
 
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::ops::{Deref, DerefMut};
 
 use crate::config::ServingConfig;
-use crate::kvcache::KvManager;
-use crate::metrics::{Recorder, Report};
-use crate::model::AttnShape;
-use crate::request::{Phase, Request, RequestId};
-use crate::roofline::BatchShape;
-use crate::sched::{IterationPlan, SchedInput, Scheduler};
-use crate::sim::{DispatchMode, GpuExecutor};
+use crate::metrics::Report;
+use crate::request::Request;
+use crate::sched::{scheduler_for, Scheduler};
 use crate::workload::Workload;
 
-/// Hard cap on simulated time — a run that exceeds this has diverged
-/// (arrival rate above capacity with an unbounded queue).
-const MAX_SIM_TIME: f64 = 3.0e4;
-
-/// Single GPU-group serving engine over the simulated executor.
+/// Single GPU-group serving engine: one [`EngineCore`] fed straight from
+/// the workload's arrival stream.
+///
+/// Derefs to its core, so per-worker state (`metrics`, `finished`,
+/// `dropped`, `events`, …) reads exactly as it did when this struct owned
+/// the loop itself.
 pub struct SimEngine {
-    pub cfg: ServingConfig,
-    scheduler: Box<dyn Scheduler>,
-    executor: GpuExecutor,
-    kv: KvManager,
-    clock: f64,
+    core: EngineCore,
     /// Not yet arrived (sorted by arrival).
     pending: VecDeque<Request>,
-    /// Arrived, not admitted.
-    waiting: VecDeque<Request>,
-    running: Vec<Request>,
-    pub finished: Vec<Request>,
-    pub metrics: Recorder,
-    /// Requests dropped because their prompt can never fit in KV.
-    pub dropped: u64,
-    /// Requests preempted (recompute-style) due to KV exhaustion.
-    pub preemptions: u64,
-    /// Detailed per-iteration log (Fig. 10); disabled by default.
-    pub log_events: bool,
-    pub events: Vec<IterEvent>,
+}
+
+impl Deref for SimEngine {
+    type Target = EngineCore;
+
+    fn deref(&self) -> &EngineCore {
+        &self.core
+    }
+}
+
+impl DerefMut for SimEngine {
+    fn deref_mut(&mut self) -> &mut EngineCore {
+        &mut self.core
+    }
 }
 
 impl SimEngine {
     pub fn new(cfg: ServingConfig, scheduler: Box<dyn Scheduler>, seed: u64) -> SimEngine {
-        let kv = KvManager::new(cfg.kv_capacity_blocks(), cfg.kv_block_tokens);
-        let executor = GpuExecutor::new(cfg.model.clone(), cfg.gpu.clone(), cfg.tp, seed);
         SimEngine {
-            cfg,
-            scheduler,
-            executor,
-            kv,
-            clock: 0.0,
+            core: EngineCore::new(cfg, scheduler, seed),
             pending: VecDeque::new(),
-            waiting: VecDeque::new(),
-            running: Vec::new(),
-            finished: Vec::new(),
-            metrics: Recorder::new(),
-            dropped: 0,
-            preemptions: 0,
-            log_events: false,
-            events: Vec::new(),
         }
-    }
-
-    pub fn policy_name(&self) -> String {
-        self.scheduler.name()
     }
 
     /// Run the whole workload to completion; returns the report.
     pub fn run(&mut self, workload: Workload) -> Report {
-        self.pending = workload.requests.into();
+        self.pending = workload.sorted_by_arrival().requests.into();
         while self.step() {}
-        self.metrics.duration = self.clock;
-        self.metrics.report(&self.scheduler.name())
+        self.core.metrics.duration = self.core.clock;
+        self.core.metrics.report(&self.core.policy_name())
     }
 
     /// One iteration. Returns false when all work is done.
     pub fn step(&mut self) -> bool {
         self.admit_arrivals();
-        if self.pending.is_empty() && self.waiting.is_empty() && self.running.is_empty() {
+        if self.pending.is_empty() && !self.core.has_local_work() {
             return false;
         }
-        if self.clock > MAX_SIM_TIME {
+        if self.core.clock > MAX_SIM_TIME {
             // Diverged: drain bookkeeping and stop.
-            self.dropped += (self.pending.len() + self.waiting.len()) as u64;
+            self.core.dropped += self.pending.len() as u64;
             self.pending.clear();
-            self.waiting.clear();
-            self.running.clear();
+            self.core.drain_diverged();
             return false;
         }
 
-        let sched_start = Instant::now();
-        let input = SchedInput {
-            running: &self.running,
-            waiting: self.waiting.make_contiguous(),
-            kv_free_tokens: self.kv.free_blocks() * self.kv.block_tokens() as u64,
-            kv_total_tokens: self.kv.total_blocks() * self.kv.block_tokens() as u64,
-        };
-        let plan = self.scheduler.plan(&input);
-        let sched_s = sched_start.elapsed().as_secs_f64();
-        self.metrics.sched_overhead += sched_s;
-
-        match plan {
-            IterationPlan::Idle => {
-                // Nothing schedulable now.
+        match self.core.step_once(self.pending.is_empty()) {
+            CoreStep::Executed | CoreStep::DroppedHead => true,
+            CoreStep::Idle => {
+                // Nothing schedulable now: jump to the next arrival, or
+                // keep stepping while admitted work remains.
                 if let Some(next) = self.pending.front() {
-                    self.clock = self.clock.max(next.arrival);
+                    self.core.clock = self.core.clock.max(next.arrival);
                     return true;
                 }
-                if !self.waiting.is_empty() && self.running.is_empty() {
-                    // Head request can never fit: drop it or we deadlock.
-                    let r = self.waiting.pop_front().unwrap();
-                    let _ = self.kv.release(r.id);
-                    self.dropped += 1;
-                    return true;
-                }
-                // Running exists but scheduler idles — should not happen;
-                // advance past to avoid livelock.
-                !self.running.is_empty()
-            }
-            IterationPlan::Aggregated { decode, prefill } => {
-                self.exec_aggregated(decode, prefill, sched_s);
-                true
-            }
-            IterationPlan::Spatial {
-                decode,
-                prefill,
-                plan,
-            } => {
-                self.exec_spatial(decode, prefill, plan, sched_s);
-                true
+                !self.core.running.is_empty()
             }
         }
     }
 
     fn admit_arrivals(&mut self) {
         while let Some(r) = self.pending.front() {
-            if r.arrival <= self.clock {
-                let mut r = self.pending.pop_front().unwrap();
-                r.phase = Phase::Waiting;
-                self.kv.register(r.id);
-                self.waiting.push_back(r);
+            if r.arrival <= self.core.clock {
+                let r = self.pending.pop_front().unwrap();
+                self.core.inject(r);
             } else {
                 break;
             }
         }
         // If totally idle, jump to the next arrival.
-        if self.running.is_empty() && self.waiting.is_empty() {
+        if !self.core.has_local_work() {
             if let Some(r) = self.pending.front() {
-                self.clock = self.clock.max(r.arrival);
-                let mut r = self.pending.pop_front().unwrap();
-                r.phase = Phase::Waiting;
-                self.kv.register(r.id);
-                self.waiting.push_back(r);
+                self.core.clock = self.core.clock.max(r.arrival);
+                let r = self.pending.pop_front().unwrap();
+                self.core.inject(r);
             }
         }
-    }
-
-    /// Move scheduled waiting requests into running (admission).
-    fn admit_scheduled(&mut self, prefill: &[crate::sched::PrefillChunk]) {
-        for c in prefill.iter().filter(|c| c.admit) {
-            if let Some(pos) = self.waiting.iter().position(|r| r.id == c.id) {
-                let r = self.waiting.remove(pos).unwrap();
-                self.running.push(r);
-            }
-        }
-    }
-
-    fn batch_shapes(
-        &self,
-        decode: &[RequestId],
-        prefill: &[crate::sched::PrefillChunk],
-    ) -> (BatchShape, BatchShape) {
-        let find = |id: RequestId| self.running.iter().find(|r| r.id == id);
-        let dec = decode
-            .iter()
-            .filter_map(|&id| find(id))
-            .map(|r| AttnShape {
-                q: 1,
-                c: r.context_len(),
-            })
-            .collect();
-        let pre = prefill
-            .iter()
-            .filter_map(|c| find(c.id).map(|r| (r, c.tokens)))
-            .map(|(r, q)| AttnShape {
-                q,
-                c: r.context_len(),
-            })
-            .collect();
-        (
-            BatchShape::from_shapes(dec),
-            BatchShape::from_shapes(pre),
-        )
-    }
-
-    /// KV-append with recompute-preemption on exhaustion: the most
-    /// recently admitted running request is evicted, reset, and requeued
-    /// (vLLM's recompute preemption policy).
-    fn kv_append_or_preempt(&mut self, id: RequestId, tokens: u64) -> bool {
-        loop {
-            match self.kv.append(id, tokens) {
-                Ok(()) => return true,
-                Err(_) => {
-                    // Evict the newest running request that is not `id`.
-                    let victim = self
-                        .running
-                        .iter()
-                        .rposition(|r| r.id != id && r.phase != Phase::Finished);
-                    match victim {
-                        Some(pos) => {
-                            let mut v = self.running.remove(pos);
-                            let _ = self.kv.release(v.id);
-                            self.preemptions += 1;
-                            // Recompute preemption: progress is lost.
-                            let fresh = Request::new(v.id, v.arrival, v.prompt_len, v.output_len);
-                            v = fresh;
-                            self.kv.register(v.id);
-                            self.waiting.push_front(v);
-                        }
-                        None => return false, // single request larger than KV
-                    }
-                }
-            }
-        }
-    }
-
-    fn exec_aggregated(
-        &mut self,
-        decode: Vec<RequestId>,
-        prefill: Vec<crate::sched::PrefillChunk>,
-        sched_s: f64,
-    ) {
-        self.admit_scheduled(&prefill);
-        let (dec_shape, pre_shape) = self.batch_shapes(&decode, &prefill);
-        let mut all = dec_shape.shapes.clone();
-        all.extend(pre_shape.shapes.iter().copied());
-        let batch = BatchShape::from_shapes(all);
-        // Decode-only batches replay captured graphs; any prefill in the
-        // batch forces eager dispatch (dynamic shapes — §4.3).
-        let mode = if pre_shape.is_empty() {
-            DispatchMode::Graph
-        } else {
-            DispatchMode::Eager
-        };
-        let res = self.executor.run(&batch, self.cfg.gpu.num_sms, mode, None);
-        // The virtual clock stays deterministic: measured CPU scheduling
-        // time is *reported* (metrics/events) but not added to simulated
-        // time — it is µs against ~100 ms iterations (Fig. 10).
-        let dur = res.total();
-        let t_end = self.clock + dur;
-
-        // KV appends + request state updates.
-        for &id in &decode {
-            if self.kv_append_or_preempt(id, 1) {
-                if let Some(r) = self.running.iter_mut().find(|r| r.id == id) {
-                    if r.phase == Phase::Decode {
-                        r.advance_decode(t_end);
-                    }
-                }
-            }
-        }
-        for c in &prefill {
-            if self.kv_append_or_preempt(c.id, c.tokens) {
-                if let Some(pos) = self.running.iter().position(|r| r.id == c.id) {
-                    let r = &mut self.running[pos];
-                    r.advance_prefill(c.tokens);
-                    if r.phase == Phase::Decode {
-                        // Prompt completed: this forward's logits produce
-                        // the first output token.
-                        let id = r.id;
-                        if self.kv_append_or_preempt(id, 1) {
-                            if let Some(r) = self.running.iter_mut().find(|r| r.id == id) {
-                                r.advance_decode(t_end);
-                            }
-                        }
-                    }
-                }
-            }
-        }
-
-        self.metrics
-            .record_util(res.gpu_time, res.sm_util, res.hbm_util);
-        self.metrics.busy_time += res.gpu_time;
-        self.metrics.iterations += 1;
-        if self.log_events {
-            self.events.push(IterEvent {
-                t_start: self.clock,
-                duration: dur,
-                kind: IterKind::Aggregated,
-                n_decode: decode.len() as u32,
-                prefill_tokens: pre_shape.n_tokens,
-                sched_s,
-                sm_util: res.sm_util,
-                hbm_util: res.hbm_util,
-            });
-        }
-        self.clock = t_end;
-        self.retire_finished();
-    }
-
-    fn exec_spatial(
-        &mut self,
-        decode: Vec<RequestId>,
-        prefill: Vec<crate::sched::PrefillChunk>,
-        plan: crate::hw::PartitionPlan,
-        sched_s: f64,
-    ) {
-        self.admit_scheduled(&prefill);
-        let (dec_shape, pre_shape) = self.batch_shapes(&decode, &prefill);
-        let res = self.executor.run_spatial(&dec_shape, &pre_shape, &plan);
-        let dur = res.span;
-        let t_end = self.clock + dur;
-        let k = plan.k.max(1);
-
-        // Look-ahead decode: reserve k slots per request up front (§4.3),
-        // then run k uninterrupted steps; step i completes at
-        // t0 + dispatch + (i+1)·t_step.
-        for &id in &decode {
-            let _ = self.kv.reserve(id, k as u64); // best-effort; append below enforces
-        }
-        let t0 = self.clock;
-        for i in 0..k {
-            let t_tok = t0 + res.dec.dispatch_time + (i + 1) as f64 * res.t_decode_step;
-            for &id in &decode {
-                let done = self
-                    .running
-                    .iter()
-                    .find(|r| r.id == id)
-                    .map(|r| r.phase != Phase::Decode)
-                    .unwrap_or(true);
-                if done {
-                    continue; // finished mid-look-ahead: slot wasted
-                }
-                if self.kv_append_or_preempt(id, 1) {
-                    if let Some(r) = self.running.iter_mut().find(|r| r.id == id) {
-                        r.advance_decode(t_tok.min(t_end));
-                    }
-                }
-            }
-        }
-
-        // Prefill side advances at the synchronization point.
-        for c in &prefill {
-            if self.kv_append_or_preempt(c.id, c.tokens) {
-                if let Some(pos) = self.running.iter().position(|r| r.id == c.id) {
-                    let r = &mut self.running[pos];
-                    r.advance_prefill(c.tokens);
-                    if r.phase == Phase::Decode {
-                        let id = r.id;
-                        if self.kv_append_or_preempt(id, 1) {
-                            if let Some(r) = self.running.iter_mut().find(|r| r.id == id) {
-                                r.advance_decode(t_end);
-                            }
-                        }
-                    }
-                }
-            }
-        }
-
-        // Utilization: weight each side by its busy time over its SM share.
-        let f_dec = plan.decode.fraction(&self.cfg.gpu);
-        let f_pre = plan.prefill.fraction(&self.cfg.gpu);
-        let busy_dec = (k as f64 * res.t_decode_step).min(res.span);
-        let busy_pre = res.t_prefill.min(res.span);
-        let sm = f_dec * res.dec.sm_util * busy_dec / res.span
-            + f_pre * res.pre.sm_util * busy_pre / res.span;
-        let hbm = res.dec.hbm_util * busy_dec / res.span
-            + res.pre.hbm_util * busy_pre / res.span;
-        self.metrics.record_util(res.span, sm, hbm);
-        self.metrics.busy_time += res.span;
-        self.metrics.iterations += 1;
-        self.metrics.spatial_iterations += 1;
-        if self.log_events {
-            self.events.push(IterEvent {
-                t_start: self.clock,
-                duration: dur,
-                kind: IterKind::Spatial {
-                    decode_tpcs: plan.decode.n_tpcs,
-                    prefill_tpcs: plan.prefill.n_tpcs,
-                    k,
-                },
-                n_decode: decode.len() as u32,
-                prefill_tokens: pre_shape.n_tokens,
-                sched_s,
-                sm_util: sm,
-                hbm_util: hbm,
-            });
-        }
-        self.clock = t_end;
-        self.retire_finished();
-    }
-
-    fn retire_finished(&mut self) {
-        let mut i = 0;
-        while i < self.running.len() {
-            if self.running[i].phase == Phase::Finished {
-                let r = self.running.swap_remove(i);
-                let _ = self.kv.release(r.id);
-                self.metrics.record_finished(&r);
-                self.finished.push(r);
-            } else {
-                i += 1;
-            }
-        }
-    }
-
-    /// Engine-level invariants, used by property tests.
-    pub fn check_invariants(&self) -> Result<(), String> {
-        self.kv.check_invariants()?;
-        for r in &self.running {
-            if r.phase == Phase::Finished {
-                return Err(format!("finished request {} still running", r.id));
-            }
-            if r.generated > r.output_len {
-                return Err(format!("request {} over-generated", r.id));
-            }
-        }
-        for r in &self.finished {
-            if r.generated != r.output_len || r.phase != Phase::Finished {
-                return Err(format!("request {} retired unfinished", r.id));
-            }
-            let mut times = r.token_times.clone();
-            let mut sorted = times.clone();
-            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            if times != sorted {
-                return Err(format!("request {} token times not monotone", r.id));
-            }
-            times.dedup();
-            let _ = times;
-        }
-        Ok(())
     }
 }
 
 /// Convenience: build an engine for a config (maps `cfg.policy` to a
-/// scheduler). Disaggregated policies must use [`DisaggEngine`] instead.
+/// scheduler via [`scheduler_for`]). Disaggregated policies must use
+/// [`DisaggEngine`] instead.
 pub fn engine_for(cfg: ServingConfig, seed: u64) -> SimEngine {
-    use crate::config::Policy;
-    use crate::roofline::Predictor;
-    use crate::sched::{ChunkedScheduler, DuetScheduler, SglangDefaultScheduler,
-        StaticPartitionScheduler};
-
-    let pred = Predictor::new(cfg.model.clone(), cfg.gpu.clone(), cfg.tp);
-    let sched: Box<dyn Scheduler> = match &cfg.policy {
-        Policy::VllmChunked => Box::new(
-            ChunkedScheduler::new(cfg.token_budget as u64, cfg.max_batch as usize, cfg.kv_watermark)
-                .labeled("vLLM"),
-        ),
-        Policy::SglangChunked => Box::new(
-            ChunkedScheduler::new(cfg.token_budget as u64, cfg.max_batch as usize, cfg.kv_watermark)
-                .labeled("SGLang-Chunked"),
-        ),
-        Policy::SglangDefault => Box::new(SglangDefaultScheduler::new(
-            2 * cfg.token_budget as u64,
-            cfg.max_batch as usize,
-        )),
-        Policy::Duet => Box::new(DuetScheduler::new(
-            pred,
-            cfg.token_budget as u64,
-            cfg.max_batch as usize,
-            cfg.kv_watermark,
-            cfg.tbt_slo,
-            cfg.max_lookahead,
-        )),
-        Policy::StaticPartition {
-            decode_tpcs,
-            prefill_tpcs,
-        } => Box::new(StaticPartitionScheduler::new(
-            pred,
-            cfg.token_budget as u64,
-            cfg.max_batch as usize,
-            *decode_tpcs,
-            *prefill_tpcs,
-        )),
-        Policy::DisaggPD { .. } => panic!("use DisaggEngine for disaggregated policies"),
-    };
+    let sched = scheduler_for(&cfg);
     SimEngine::new(cfg, sched, seed)
 }
 
@@ -596,9 +252,6 @@ mod tests {
         e.run(w);
         assert!(!e.events.is_empty());
         // events must tile the timeline monotonically
-        assert!(e
-            .events
-            .windows(2)
-            .all(|w| w[1].t_start >= w[0].t_start));
+        assert!(e.events.windows(2).all(|w| w[1].t_start >= w[0].t_start));
     }
 }

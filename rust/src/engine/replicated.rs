@@ -1,51 +1,67 @@
-//! N-replica aggregated serving under round-robin dispatch (the Fig. 2
-//! "Agg-vLLM on two GPUs" setup: both GPUs host identical model replicas).
+//! N-replica aggregated serving (the Fig. 2 "Agg" setup: every GPU hosts
+//! an identical model replica).
+//!
+//! This is a thin topology over [`ClusterEngine`]: `N` unified workers
+//! share one arrival stream and a pluggable [`Router`] dispatches each
+//! request *at its arrival time* — replicas are time-interleaved, unlike
+//! the static index-sharding this module used to implement. The default
+//! router is round-robin (the classic replica front-end); swap in
+//! least-outstanding or KV-pressure routing with [`with_router`].
+//!
+//! [`with_router`]: ReplicatedEngine::with_router
+
+use std::ops::{Deref, DerefMut};
 
 use crate::config::ServingConfig;
-use crate::metrics::{Recorder, Report};
+use crate::metrics::Report;
 use crate::workload::Workload;
 
-use super::{engine_for, SimEngine};
+use super::cluster::ClusterEngine;
+use super::router::{RoundRobinRouter, Router};
 
-/// Round-robin front-end over N independent single-GPU engines.
+/// Router-fronted cluster of N identical single-GPU engines.
 pub struct ReplicatedEngine {
-    pub engines: Vec<SimEngine>,
+    pub cluster: ClusterEngine,
+}
+
+impl Deref for ReplicatedEngine {
+    type Target = ClusterEngine;
+
+    fn deref(&self) -> &ClusterEngine {
+        &self.cluster
+    }
+}
+
+impl DerefMut for ReplicatedEngine {
+    fn deref_mut(&mut self) -> &mut ClusterEngine {
+        &mut self.cluster
+    }
 }
 
 impl ReplicatedEngine {
+    /// N replicas behind round-robin dispatch.
     pub fn new(cfg: ServingConfig, replicas: u32, seed: u64) -> ReplicatedEngine {
-        let engines = (0..replicas)
-            .map(|i| engine_for(cfg.clone(), seed + i as u64))
-            .collect();
-        ReplicatedEngine { engines }
+        ReplicatedEngine {
+            cluster: ClusterEngine::replicated(
+                cfg,
+                replicas,
+                seed,
+                Box::new(RoundRobinRouter::new()),
+            ),
+        }
     }
 
-    /// Dispatch round-robin, run every replica to completion, merge
-    /// metrics. The end-to-end duration is the slowest replica's (the
-    /// system is done when all replicas drain).
+    /// Swap the routing policy (builder-style, before `run`).
+    pub fn with_router(mut self, router: Box<dyn Router>) -> ReplicatedEngine {
+        self.cluster.set_router(router);
+        self
+    }
+
+    /// Serve the shared workload to completion; metrics are merged across
+    /// replicas and the end-to-end duration is the last worker's final
+    /// iteration.
     pub fn run(&mut self, workload: Workload) -> Report {
-        let n = self.engines.len();
-        let mut shards: Vec<Vec<crate::request::Request>> = vec![Vec::new(); n];
-        for (i, r) in workload.requests.into_iter().enumerate() {
-            shards[i % n].push(r);
-        }
-        let mut merged = Recorder::new();
-        let mut max_dur = 0.0f64;
-        let mut name = String::new();
-        for (e, shard) in self.engines.iter_mut().zip(shards) {
-            let rep = e.run(Workload {
-                name: workload.name.clone(),
-                requests: shard,
-            });
-            name = format!("{}x{}", rep.system, n);
-            max_dur = max_dur.max(rep.duration);
-            for r in &e.finished {
-                merged.record_finished(r);
-            }
-            merged.merge_iteration_state(&e.metrics);
-        }
-        merged.duration = max_dur;
-        merged.report(&name)
+        self.cluster.run(workload)
     }
 }
 
@@ -53,6 +69,9 @@ impl ReplicatedEngine {
 mod tests {
     use super::*;
     use crate::config::{Policy, ServingConfig};
+    use crate::engine::engine_for;
+    use crate::engine::router::LeastOutstandingRouter;
+    use crate::metrics::Recorder;
     use crate::workload::synthetic::fixed_workload;
 
     #[test]
@@ -76,6 +95,85 @@ mod tests {
         assert!(
             speedup > 1.5,
             "2 replicas should be ~2x at saturation, got {speedup}"
+        );
+    }
+
+    /// The acceptance check for the cluster refactor: two time-interleaved
+    /// replicas with per-arrival routing must complete a shared workload
+    /// with throughput at least matching the legacy static-shard
+    /// implementation (requests pre-split by index parity, each shard run
+    /// on an isolated engine).
+    #[test]
+    fn interleaved_routing_beats_or_matches_static_sharding() {
+        let cfg = ServingConfig::default_8b().with_policy(Policy::VllmChunked);
+        let w = fixed_workload(60, 8000, 64, 14.0, 7);
+
+        // Legacy behaviour, reproduced inline: static round-robin shards,
+        // each replica drains its shard independently.
+        let n = 2usize;
+        let mut shards: Vec<Vec<crate::request::Request>> = vec![Vec::new(); n];
+        for (i, r) in w.requests.iter().cloned().enumerate() {
+            shards[i % n].push(r);
+        }
+        let mut merged = Recorder::new();
+        let mut max_dur = 0.0f64;
+        for (i, shard) in shards.into_iter().enumerate() {
+            let mut e = engine_for(cfg.clone(), 1 + i as u64);
+            let rep = e.run(Workload {
+                name: w.name.clone(),
+                requests: shard,
+            });
+            max_dur = max_dur.max(rep.duration);
+            for r in &e.finished {
+                merged.record_finished(r);
+            }
+        }
+        merged.duration = max_dur;
+        let static_rep = merged.report("static-shard-x2");
+
+        // New cluster: shared stream, dispatch at arrival time.
+        let mut e = ReplicatedEngine::new(cfg, 2, 1);
+        let cluster_rep = e.run(w);
+
+        assert_eq!(cluster_rep.completed, 60);
+        assert_eq!(static_rep.completed, 60);
+        assert!(
+            cluster_rep.throughput_rps >= static_rep.throughput_rps * 0.999,
+            "interleaved {} req/s must not lose to static sharding {} req/s",
+            cluster_rep.throughput_rps,
+            static_rep.throughput_rps
+        );
+    }
+
+    #[test]
+    fn least_outstanding_router_balances_heterogeneous_prompts() {
+        // Alternating huge/small prompts: static parity sharding piles all
+        // huge prompts on one replica; per-arrival least-outstanding
+        // routing spreads them and must not be slower.
+        let cfg = ServingConfig::default_8b().with_policy(Policy::VllmChunked);
+        let mut requests = Vec::new();
+        for i in 0..40u64 {
+            let (isl, osl) = if i % 2 == 0 { (12_000, 16) } else { (256, 16) };
+            requests.push(crate::request::Request::new(i, i as f64 * 0.05, isl, osl));
+        }
+        let w = Workload {
+            name: "alternating".into(),
+            requests,
+        };
+
+        let mut rr = ReplicatedEngine::new(cfg.clone(), 2, 3);
+        let r_rr = rr.run(w.clone());
+        let mut ll = ReplicatedEngine::new(cfg, 2, 3)
+            .with_router(Box::new(LeastOutstandingRouter::new()));
+        let r_ll = ll.run(w);
+
+        assert_eq!(r_rr.completed, 40);
+        assert_eq!(r_ll.completed, 40);
+        assert!(
+            r_ll.duration <= r_rr.duration * 1.05,
+            "least-outstanding ({:.2}s) should not trail round-robin ({:.2}s)",
+            r_ll.duration,
+            r_rr.duration
         );
     }
 }

@@ -1,0 +1,191 @@
+//! Pluggable request routing for multi-worker topologies.
+//!
+//! The cluster engine digests its worker state into [`RouteCandidate`]s
+//! (only *eligible* workers: online, and in a role that accepts new
+//! arrivals) and asks a [`Router`] to pick one per arriving request. This
+//! is the seam where replicated serving stops being static sharding:
+//! requests are dispatched at arrival time against live load signals.
+
+use crate::request::Request;
+
+/// Load snapshot of one eligible worker at dispatch time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RouteCandidate {
+    /// Index into the cluster's worker list.
+    pub worker: usize,
+    /// Requests queued but not yet admitted on that worker.
+    pub queue_len: usize,
+    /// Remaining prompt + output tokens across the worker's queues.
+    pub outstanding_tokens: u64,
+    /// Free KV-cache tokens on that worker.
+    pub kv_free_tokens: u64,
+}
+
+/// Picks a destination worker for each arriving request.
+///
+/// Implementations must return the `worker` field of one of `candidates`
+/// — the cluster validates this and panics otherwise, which is what
+/// guarantees a router can never dispatch to an offline worker or to a
+/// role that does not take arrivals.
+pub trait Router {
+    fn name(&self) -> &'static str;
+    /// `candidates` is non-empty and ordered by worker index.
+    fn route(&mut self, req: &Request, candidates: &[RouteCandidate]) -> usize;
+}
+
+/// Static round-robin over the eligible workers, in arrival order — the
+/// classic replica front-end.
+#[derive(Debug, Default)]
+pub struct RoundRobinRouter {
+    next: usize,
+}
+
+impl RoundRobinRouter {
+    pub fn new() -> RoundRobinRouter {
+        RoundRobinRouter { next: 0 }
+    }
+}
+
+impl Router for RoundRobinRouter {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&mut self, _req: &Request, candidates: &[RouteCandidate]) -> usize {
+        let c = &candidates[self.next % candidates.len()];
+        self.next = self.next.wrapping_add(1);
+        c.worker
+    }
+}
+
+/// Join the worker with the fewest outstanding (unprocessed prompt +
+/// output) tokens — the "least work left" policy.
+#[derive(Debug, Default)]
+pub struct LeastOutstandingRouter;
+
+impl LeastOutstandingRouter {
+    pub fn new() -> LeastOutstandingRouter {
+        LeastOutstandingRouter
+    }
+}
+
+impl Router for LeastOutstandingRouter {
+    fn name(&self) -> &'static str {
+        "least-outstanding"
+    }
+
+    fn route(&mut self, _req: &Request, candidates: &[RouteCandidate]) -> usize {
+        candidates
+            .iter()
+            .min_by_key(|c| (c.outstanding_tokens, c.queue_len, c.worker))
+            .expect("route called with no candidates")
+            .worker
+    }
+}
+
+/// Join the worker with the most free KV-cache tokens; ties break toward
+/// less outstanding work. Useful when prompts are long enough that KV
+/// admission, not compute, is the scarce resource.
+#[derive(Debug, Default)]
+pub struct KvPressureRouter;
+
+impl KvPressureRouter {
+    pub fn new() -> KvPressureRouter {
+        KvPressureRouter
+    }
+}
+
+impl Router for KvPressureRouter {
+    fn name(&self) -> &'static str {
+        "kv-pressure"
+    }
+
+    fn route(&mut self, _req: &Request, candidates: &[RouteCandidate]) -> usize {
+        candidates
+            .iter()
+            .max_by_key(|c| (c.kv_free_tokens, std::cmp::Reverse(c.outstanding_tokens)))
+            .expect("route called with no candidates")
+            .worker
+    }
+}
+
+/// Router factory by name (CLI / bench surface).
+pub fn router_by_name(name: &str) -> Option<Box<dyn Router>> {
+    match name {
+        "round-robin" | "rr" => Some(Box::new(RoundRobinRouter::new())),
+        "least-outstanding" | "least-loaded" | "ll" => {
+            Some(Box::new(LeastOutstandingRouter::new()))
+        }
+        "kv-pressure" | "kv" => Some(Box::new(KvPressureRouter::new())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(worker: usize, outstanding: u64, kv_free: u64) -> RouteCandidate {
+        RouteCandidate {
+            worker,
+            queue_len: 0,
+            outstanding_tokens: outstanding,
+            kv_free_tokens: kv_free,
+        }
+    }
+
+    fn req() -> Request {
+        Request::new(0, 0.0, 100, 10)
+    }
+
+    #[test]
+    fn round_robin_cycles_eligible_workers() {
+        let mut r = RoundRobinRouter::new();
+        let cs = vec![cand(0, 0, 0), cand(2, 0, 0), cand(5, 0, 0)];
+        let picks: Vec<usize> = (0..6).map(|_| r.route(&req(), &cs)).collect();
+        assert_eq!(picks, vec![0, 2, 5, 0, 2, 5]);
+    }
+
+    #[test]
+    fn round_robin_survives_candidate_set_shrinking() {
+        let mut r = RoundRobinRouter::new();
+        let full = vec![cand(0, 0, 0), cand(1, 0, 0), cand(2, 0, 0)];
+        for _ in 0..5 {
+            r.route(&req(), &full);
+        }
+        // Worker 1 went offline: only 0 and 2 remain eligible.
+        let reduced = vec![cand(0, 0, 0), cand(2, 0, 0)];
+        let pick = r.route(&req(), &reduced);
+        assert!(pick == 0 || pick == 2, "must pick an eligible worker");
+    }
+
+    #[test]
+    fn least_outstanding_picks_lightest() {
+        let mut r = LeastOutstandingRouter::new();
+        let cs = vec![cand(0, 500, 0), cand(1, 20, 0), cand(2, 300, 0)];
+        assert_eq!(r.route(&req(), &cs), 1);
+    }
+
+    #[test]
+    fn kv_pressure_picks_most_free() {
+        let mut r = KvPressureRouter::new();
+        let cs = vec![cand(0, 0, 1000), cand(1, 0, 9000), cand(2, 0, 500)];
+        assert_eq!(r.route(&req(), &cs), 1);
+        // Tie on KV free → less outstanding work wins.
+        let tie = vec![cand(0, 70, 9000), cand(1, 30, 9000)];
+        assert_eq!(r.route(&req(), &tie), 1);
+    }
+
+    #[test]
+    fn factory_resolves_aliases() {
+        for (name, expect) in [
+            ("round-robin", "round-robin"),
+            ("rr", "round-robin"),
+            ("least-loaded", "least-outstanding"),
+            ("kv", "kv-pressure"),
+        ] {
+            assert_eq!(router_by_name(name).unwrap().name(), expect);
+        }
+        assert!(router_by_name("nope").is_none());
+    }
+}

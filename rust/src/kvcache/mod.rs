@@ -18,13 +18,26 @@ use std::collections::HashMap;
 pub type BlockId = u32;
 
 /// Errors surfaced to the scheduler (admission control reacts to these).
-#[derive(Debug, thiserror::Error, PartialEq)]
+/// (Display/Error are hand-implemented — no `thiserror` in the offline
+/// vendor set.)
+#[derive(Debug, PartialEq)]
 pub enum KvError {
-    #[error("out of KV blocks: need {need}, free {free}")]
     OutOfBlocks { need: u64, free: u64 },
-    #[error("unknown request {0}")]
     UnknownRequest(RequestId),
 }
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::OutOfBlocks { need, free } => {
+                write!(f, "out of KV blocks: need {need}, free {free}")
+            }
+            KvError::UnknownRequest(id) => write!(f, "unknown request {id}"),
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
 
 /// Per-request block table.
 #[derive(Debug, Clone, Default)]

@@ -15,7 +15,7 @@
 
 use duetserve::cli::Args;
 use duetserve::config::{ModelSpec, Policy, ServingConfig};
-use duetserve::engine::{engine_for, DisaggEngine};
+use duetserve::engine::{engine_for, router_by_name, DisaggEngine, ReplicatedEngine};
 use duetserve::metrics::Report;
 use duetserve::model::AttnShape;
 use duetserve::roofline::{BatchShape, Predictor};
@@ -67,6 +67,21 @@ fn cmd_serve(args: &Args) {
     let cfg = build_config(args);
     let qps = args.f64_or("qps", 8.0);
     let seed = args.usize_or("seed", 1) as u64;
+    let replicas = args.u32_or("replicas", 1);
+    if replicas == 0 {
+        eprintln!("error: --replicas must be >= 1");
+        std::process::exit(2);
+    }
+    let router = match args.one_of(
+        "router",
+        &["round-robin", "rr", "least-loaded", "least-outstanding", "ll", "kv-pressure", "kv"],
+    ) {
+        Ok(choice) => choice.map(str::to_string),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
     let w = build_workload(args, qps, seed);
     println!(
         "serving {} requests ({}) with {} (TP={})",
@@ -80,7 +95,21 @@ fn cmd_serve(args: &Args) {
             prefill_gpus,
             decode_gpus,
         } => {
+            if replicas > 1 {
+                eprintln!("note: --replicas is ignored for dynamo (topology is {prefill_gpus}P+{decode_gpus}D)");
+            }
             let mut e = DisaggEngine::new(cfg.clone(), prefill_gpus, decode_gpus, seed);
+            if let Some(name) = &router {
+                e.set_router(router_by_name(name).unwrap());
+            }
+            e.run(w)
+        }
+        _ if replicas > 1 || router.is_some() => {
+            let mut e = ReplicatedEngine::new(cfg.clone(), replicas, seed);
+            if let Some(name) = &router {
+                e.set_router(router_by_name(name).unwrap());
+            }
+            println!("cluster: {replicas} replicas, {} routing", e.router_name());
             e.run(w)
         }
         _ => {
@@ -188,6 +217,7 @@ serve:      --policy vllm|sglang|sglang-chunked|duet|dynamo
             --trace azure-code|azure-conv|mooncake | --isl N --osl N
             --qps F --n N --model qwen3-8b|qwen3-14b|qwen3-32b --tp N
             --budget N --tbt-slo F --seed N
+            --replicas N --router round-robin|least-loaded|kv-pressure
 partition:  --decode N --ctx N --prefill N [--tbt-slo F]
 e2e:        --requests N --max-new N --lookahead N   (needs `make artifacts`)
 ";

@@ -47,16 +47,24 @@ impl Recorder {
         self.total_tokens += r.prompt_len + r.generated;
     }
 
-    /// Merge another recorder's iteration-level state (finished requests
-    /// are merged separately via `record_finished`). Used by multi-replica
-    /// front-ends.
-    pub fn merge_iteration_state(&mut self, other: &Recorder) {
+    /// Merge everything another recorder accumulated — iteration-level
+    /// state *and* per-request latency samples. The cluster engine folds
+    /// each worker's recorder into one system-level recorder with this
+    /// (`duration` is left to the caller: wall time is a max over
+    /// workers, not a sum).
+    pub fn merge(&mut self, other: &Recorder) {
         self.sm_util.extend_from_slice(&other.sm_util);
         self.hbm_util.extend_from_slice(&other.hbm_util);
         self.iterations += other.iterations;
         self.spatial_iterations += other.spatial_iterations;
         self.sched_overhead += other.sched_overhead;
         self.busy_time += other.busy_time;
+        self.ttft.extend_from_slice(&other.ttft);
+        self.tbt.extend_from_slice(&other.tbt);
+        self.e2e.extend_from_slice(&other.e2e);
+        self.completed += other.completed;
+        self.output_tokens += other.output_tokens;
+        self.total_tokens += other.total_tokens;
     }
 
     pub fn record_util(&mut self, weight_s: f64, sm: f64, hbm: f64) {
@@ -182,6 +190,28 @@ mod tests {
         let rep = m.report("u");
         assert!((rep.mean_sm_util - 0.25).abs() < 1e-9);
         assert!((rep.mean_hbm_util - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_combines_requests_and_iteration_state() {
+        let mut a = Recorder::new();
+        a.record_finished(&finished_request());
+        a.record_util(1.0, 0.5, 0.5);
+        a.iterations = 3;
+        a.busy_time = 1.5;
+        let mut b = Recorder::new();
+        b.record_finished(&finished_request());
+        b.iterations = 2;
+        b.busy_time = 0.5;
+        a.merge(&b);
+        a.duration = 4.0;
+        let rep = a.report("m");
+        assert_eq!(rep.completed, 2);
+        assert_eq!(rep.iterations, 5);
+        assert_eq!(a.total_tokens, 206);
+        assert!((a.busy_time - 2.0).abs() < 1e-12);
+        // latency samples from both recorders survive the merge
+        assert_eq!(rep.tbt.n, 4);
     }
 
     #[test]

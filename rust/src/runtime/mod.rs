@@ -3,11 +3,19 @@
 //!
 //! - [`artifacts`]: manifest/meta/weights-blob parsing.
 //! - [`pjrt`]: the `xla`-crate wrapper — compile HLO text once per model
-//!   variant, execute prefill / decode steps.
+//!   variant, execute prefill / decode steps. Behind the `xla-pjrt`
+//!   feature (the offline vendor set has no `xla` crate); the default
+//!   build uses an API-compatible stub whose `load` fails, and callers
+//!   skip gracefully via `artifacts::artifacts_available()`.
 //! - [`serving`]: a real continuous-batching engine over the runtime with
 //!   DuetServe-style decode-priority + look-ahead scheduling.
 
 pub mod artifacts;
+#[cfg(feature = "xla-pjrt")]
+#[path = "pjrt_xla.rs"]
+pub mod pjrt;
+#[cfg(not(feature = "xla-pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 pub mod serving;
 

@@ -1,0 +1,84 @@
+//! Stub PJRT runtime, compiled when the `xla-pjrt` feature is off.
+//!
+//! The offline vendor set does not ship the `xla` crate, so the default
+//! build replaces [`pjrt_xla`](super) with this API-compatible stand-in:
+//! the types and signatures match, but [`TinyRuntime::load`] always
+//! fails. Callers already gate on `artifacts::artifacts_available()` (and
+//! artifacts can only be produced where the real toolchain exists), so
+//! tests and examples skip gracefully instead of hitting this error.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::artifacts::{artifacts_dir, ArtifactMeta};
+
+/// Number of decode slots the serving runtime batches over.
+pub const MAX_SLOTS: usize = 8;
+
+/// Outcome of one prefill call.
+pub struct PrefillOut {
+    /// argmax token at the last valid prompt position.
+    pub next_token: i32,
+    /// K cache rows [layers, prefill_seq, kv_heads, head_dim], flattened.
+    pub k: Vec<f32>,
+    /// V cache rows, same shape.
+    pub v: Vec<f32>,
+}
+
+/// The compiled tiny-model runtime (stub: construction always fails).
+#[derive(Debug)]
+pub struct TinyRuntime {
+    pub meta: ArtifactMeta,
+    pub k_cache: Vec<f32>,
+    pub v_cache: Vec<f32>,
+}
+
+impl TinyRuntime {
+    /// Load artifacts from the default directory (`DUET_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn load_default() -> Result<TinyRuntime> {
+        Self::load(&artifacts_dir())
+    }
+
+    pub fn load(_dir: &Path) -> Result<TinyRuntime> {
+        bail!(
+            "this build has no PJRT backend: rebuild with `--features xla-pjrt` \
+             in an environment that provides the `xla` crate"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Run prefill over a prompt (unreachable in the stub: no instance of
+    /// [`TinyRuntime`] can be constructed).
+    pub fn prefill(&self, _prompt: &[i32]) -> Result<PrefillOut> {
+        bail!("PJRT stub: no backend")
+    }
+
+    pub fn install_slot(&mut self, _slot: usize, _len: usize, _k: &[f32], _v: &[f32]) {}
+
+    pub fn clear_slot(&mut self, _slot: usize) {}
+
+    /// One decode step over all MAX_SLOTS slots (unreachable, see above).
+    pub fn decode_step(
+        &mut self,
+        _tokens: &[i32; MAX_SLOTS],
+        _lengths: &[i32; MAX_SLOTS],
+    ) -> Result<[i32; MAX_SLOTS]> {
+        bail!("PJRT stub: no backend")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_fails_with_guidance() {
+        let err = TinyRuntime::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("xla-pjrt"), "{err}");
+    }
+}

@@ -112,6 +112,63 @@ pub trait Scheduler {
     fn name(&self) -> String;
 }
 
+/// Build the scheduler for a config's policy. Shared by the single-GPU
+/// engine constructor and the cluster topologies (every unified worker
+/// gets its own scheduler instance).
+///
+/// # Panics
+/// On `Policy::DisaggPD`: disaggregation is an engine *topology*
+/// (role-tagged workers over the cluster loop), not an iteration policy.
+pub fn scheduler_for(cfg: &crate::config::ServingConfig) -> Box<dyn Scheduler> {
+    use crate::config::Policy;
+    use crate::roofline::Predictor;
+
+    let pred = Predictor::new(cfg.model.clone(), cfg.gpu.clone(), cfg.tp);
+    match &cfg.policy {
+        Policy::VllmChunked => Box::new(
+            ChunkedScheduler::new(
+                cfg.token_budget as u64,
+                cfg.max_batch as usize,
+                cfg.kv_watermark,
+            )
+            .labeled("vLLM"),
+        ),
+        Policy::SglangChunked => Box::new(
+            ChunkedScheduler::new(
+                cfg.token_budget as u64,
+                cfg.max_batch as usize,
+                cfg.kv_watermark,
+            )
+            .labeled("SGLang-Chunked"),
+        ),
+        Policy::SglangDefault => Box::new(SglangDefaultScheduler::new(
+            2 * cfg.token_budget as u64,
+            cfg.max_batch as usize,
+        )),
+        Policy::Duet => Box::new(DuetScheduler::new(
+            pred,
+            cfg.token_budget as u64,
+            cfg.max_batch as usize,
+            cfg.kv_watermark,
+            cfg.tbt_slo,
+            cfg.max_lookahead,
+        )),
+        Policy::StaticPartition {
+            decode_tpcs,
+            prefill_tpcs,
+        } => Box::new(StaticPartitionScheduler::new(
+            pred,
+            cfg.token_budget as u64,
+            cfg.max_batch as usize,
+            *decode_tpcs,
+            *prefill_tpcs,
+        )),
+        Policy::DisaggPD { .. } => {
+            panic!("DisaggPD is an engine topology, not a scheduler policy")
+        }
+    }
+}
+
 /// Shared helper: the Sarathi/vLLM chunked-prefill batch construction.
 /// Decode requests are rescheduled first (one budget token each), then
 /// running prefills continue, then waiting requests are admitted to fill

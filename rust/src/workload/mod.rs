@@ -52,6 +52,15 @@ impl Workload {
         self.requests.truncate(n);
         self
     }
+
+    /// Enforce the arrival-order invariant the engines' pending queues
+    /// rely on. Generators already emit sorted streams; hand-built or
+    /// merged workloads (multi-tenant experiments) go through this.
+    pub fn sorted_by_arrival(mut self) -> Workload {
+        self.requests
+            .sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        self
+    }
 }
 
 #[cfg(test)]
@@ -72,6 +81,21 @@ mod tests {
         assert!((s.mean_isl - 200.0).abs() < 1e-9);
         assert!((s.mean_osl - 20.0).abs() < 1e-9);
         assert_eq!(w.total_tokens(), 440);
+    }
+
+    #[test]
+    fn sorted_by_arrival_orders_requests() {
+        let w = Workload {
+            name: "t".into(),
+            requests: vec![
+                Request::new(0, 2.0, 10, 1),
+                Request::new(1, 0.5, 10, 1),
+                Request::new(2, 1.0, 10, 1),
+            ],
+        }
+        .sorted_by_arrival();
+        let order: Vec<u64> = w.requests.iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![1, 2, 0]);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! of requests) and the cross-policy semantic guarantees.
 
 use duetserve::config::{ModelSpec, Policy, ServingConfig};
-use duetserve::engine::{engine_for, DisaggEngine};
+use duetserve::engine::{engine_for, router_by_name, DisaggEngine, ReplicatedEngine};
 use duetserve::util::proptest::check;
 use duetserve::workload::synthetic::jittered_workload;
 use duetserve::workload::Workload;
@@ -91,6 +91,10 @@ fn duet_never_violates_worse_than_vllm_on_p99_tbt() {
 
 #[test]
 fn disagg_conserves_requests_across_random_topologies() {
+    // Conservation + causality over random P/D topologies, with the
+    // Dynamo-style reconfiguration planner randomly enabled so routing
+    // must cope with workers going offline mid-run (the cluster panics if
+    // a router ever dispatches to an offline worker).
     check(10, |g| {
         let n = g.usize_range(10, 40);
         let p = g.u64_range(1, 3) as u32;
@@ -102,12 +106,70 @@ fn disagg_conserves_requests_across_random_topologies() {
             decode_gpus: d,
         });
         let mut e = DisaggEngine::new(cfg, p, d, g.case_seed);
+        if g.bool(0.5) {
+            e.reconfigurable = true;
+            e.reconfig_s = g.f64_range(1.0, 10.0);
+            e.planner_interval = g.f64_range(5.0, 20.0);
+        }
         let rep = e.run(w);
         if rep.completed + e.dropped != n as u64 {
             return Err(format!(
                 "{p}P{d}D lost requests: {} + {} != {n}",
                 rep.completed, e.dropped
             ));
+        }
+        e.check_invariants()
+            .map_err(|m| format!("{p}P{d}D: {m}"))?;
+        for r in &e.finished {
+            if r.finished_at.unwrap_or(f64::NEG_INFINITY) < r.arrival {
+                return Err(format!("{p}P{d}D: request {} finished before arrival", r.id));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn replicated_clusters_conserve_requests_across_routers() {
+    // The same conservation + causality properties over unified-replica
+    // topologies, for every router policy.
+    check(12, |g| {
+        let n = g.usize_range(8, 32);
+        let replicas = g.u64_range(1, 4) as u32;
+        let qps = g.f64_range(1.0, 15.0);
+        let isl = g.u64_range(64, 8000);
+        let osl = g.u64_range(1, 64);
+        let routers = ["round-robin", "least-outstanding", "kv-pressure"];
+        let router = *g.choose(&routers);
+        let w = jittered_workload(n, isl, osl, 0.3, qps, g.case_seed);
+        let total_out: u64 = w.requests.iter().map(|r| r.output_len).sum();
+
+        let cfg = ServingConfig::default_8b().with_policy(Policy::VllmChunked);
+        let mut e = ReplicatedEngine::new(cfg, replicas, g.case_seed)
+            .with_router(router_by_name(router).expect("known router"));
+        let rep = e.run(w);
+
+        let label = format!("{replicas}x/{router}");
+        e.check_invariants().map_err(|m| format!("{label}: {m}"))?;
+        if rep.completed + e.dropped != n as u64 {
+            return Err(format!(
+                "{label}: lost requests: completed {} + dropped {} != {n}",
+                rep.completed, e.dropped
+            ));
+        }
+        if e.dropped == 0 && e.metrics.output_tokens != total_out {
+            return Err(format!(
+                "{label}: token conservation: {} != {total_out}",
+                e.metrics.output_tokens
+            ));
+        }
+        for r in &e.finished {
+            if r.first_token_at.unwrap_or(f64::NEG_INFINITY) < r.arrival {
+                return Err(format!(
+                    "{label}: request {} produced a token before its arrival",
+                    r.id
+                ));
+            }
         }
         Ok(())
     });

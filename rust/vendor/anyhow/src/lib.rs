@@ -1,0 +1,136 @@
+//! Minimal in-tree stand-in for the `anyhow` crate.
+//!
+//! The offline vendor set ships no external crates, so this provides the
+//! subset of `anyhow`'s API the workspace actually uses: [`Error`],
+//! [`Result`], the [`anyhow!`] / [`bail!`] macros, and the [`Context`]
+//! extension trait for `Result` and `Option`. Errors are flattened to a
+//! message string at construction time ("context: cause"); no source
+//! chain or backtrace is kept.
+
+use std::fmt;
+
+/// A type-erased error: a rendered message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like real `anyhow::Error`, this type deliberately does NOT implement
+// `std::error::Error`, which is what makes the blanket conversion below
+// coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a failure, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error/none case with `context: cause`.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Lazily-evaluated variant of [`Context::context`].
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse() -> Result<u32> {
+            let v: u32 = "nope".parse()?;
+            Ok(v)
+        }
+        assert!(parse().is_err());
+    }
+
+    #[test]
+    fn context_prefixes_message() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "), "{e}");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(format!("{e}"), "bad value 7");
+        fn bails() -> Result<()> {
+            bail!("stop {x}", x = 1);
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "stop 1");
+    }
+}
