@@ -1,26 +1,38 @@
-//! End-to-end driver (DESIGN.md "End-to-end validation"): load the REAL
-//! tiny Qwen3-style model compiled AOT from JAX+Pallas, and serve batched
-//! requests from rust through PJRT — measuring real wall-clock TTFT, TBT
-//! and throughput for the prefill-first baseline vs DuetServe-style
-//! decode-priority look-ahead scheduling.
+//! End-to-end driver: load the REAL tiny Qwen3-style model compiled AOT
+//! from JAX+Pallas and serve batched requests from rust through PJRT —
+//! driven by the *same* unified serving lifecycle (`EngineCore` +
+//! scheduler + `server::ServerCore`) the simulations use, with the
+//! `PjrtBackend` plugged into the execution seam. Real wall-clock TTFT,
+//! TBT and throughput are reported from the shared metrics structs,
+//! comparing a prefill-priority baseline scheduler against the
+//! decode-priority chunked scheduler.
 //!
 //! Prerequisite: `make artifacts` (python runs once, never at serving
-//! time).
+//! time) and a build with `--features xla-pjrt`.
 //!
 //!     cargo run --release --example e2e_serve
 
-use duetserve::runtime::{artifacts, RealEngine, RealPolicy, RealRequest, TinyRuntime};
+use duetserve::config::{Policy, ServingConfig};
+use duetserve::runtime::{artifacts, PjrtBackend};
+use duetserve::sched::{scheduler_for, SglangDefaultScheduler};
+use duetserve::server::{ServerCore, SubmitOptions};
 use duetserve::util::tablefmt::Table;
 
-fn requests(n: usize) -> Vec<RealRequest> {
+fn submit_all(core: &mut ServerCore, n: usize) -> Vec<duetserve::server::RequestHandle> {
     (0..n)
-        .map(|i| RealRequest {
-            id: i as u64,
+        .map(|i| {
             // Deterministic pseudo-prompts over the tiny vocab.
-            prompt: (0..12 + (i % 20))
+            let prompt: Vec<i32> = (0..12 + (i % 20))
                 .map(|j| ((i * 131 + j * 17 + 7) % 2048) as i32)
-                .collect(),
-            max_new_tokens: 24,
+                .collect();
+            core.submit(
+                prompt,
+                SubmitOptions {
+                    max_new_tokens: 24,
+                    ..Default::default()
+                },
+            )
+            .expect("submit")
         })
         .collect()
 }
@@ -33,50 +45,61 @@ fn main() -> anyhow::Result<()> {
     println!("loading AOT artifacts (HLO text -> PJRT CPU)...");
 
     let mut table = Table::new(vec![
-        "policy",
+        "scheduler",
         "done",
         "wall(s)",
         "req/s",
         "out-tok",
-        "dec-tok/s",
         "ttft-mean(ms)",
-        "ttft-p99(ms)",
         "tbt-mean(ms)",
         "tbt-p99(ms)",
     ]);
 
     let n = 24;
-    for policy in [
-        RealPolicy::PrefillFirst,
-        RealPolicy::DuetInterleave { lookahead: 4 },
-    ] {
-        let rt = TinyRuntime::load_default()?;
-        if matches!(policy, RealPolicy::PrefillFirst) {
-            println!("platform: {}", rt.platform());
+    for prefill_first in [true, false] {
+        let backend = PjrtBackend::load_default()?;
+        if prefill_first {
+            println!("platform: {}", backend.platform());
         }
-        let mut engine = RealEngine::new(rt, policy);
-        let stats = engine.serve(requests(n))?;
-        assert_eq!(stats.completed, n, "all requests must complete");
+        let cfg = backend.tune_config(ServingConfig::default_8b().with_policy(Policy::VllmChunked));
+        // Prefill-priority baseline (SGLang-default flavoured) vs the
+        // decode-priority chunked scheduler — same engine, same backend.
+        let scheduler: Box<dyn duetserve::sched::Scheduler> = if prefill_first {
+            Box::new(SglangDefaultScheduler::new(
+                2 * cfg.token_budget as u64,
+                cfg.max_batch as usize,
+            ))
+        } else {
+            scheduler_for(&cfg)
+        };
+        let mut core = ServerCore::new(cfg, scheduler, Box::new(backend));
+        let handles = submit_all(&mut core, n);
+        core.run_to_idle();
+        let mut out_tokens = 0usize;
+        for h in handles {
+            out_tokens += h.collect().len();
+        }
+        let rep = core.finish();
+        assert_eq!(rep.completed, n as u64, "all requests must complete");
         table.row(vec![
-            stats.policy.to_string(),
-            format!("{}", stats.completed),
-            format!("{:.2}", stats.wall_s),
-            format!("{:.2}", stats.throughput_rps),
-            format!("{}", stats.output_tokens),
-            format!("{:.1}", stats.decode_tokens_per_s),
-            format!("{:.1}", stats.ttft.mean * 1e3),
-            format!("{:.1}", stats.ttft.p99 * 1e3),
-            format!("{:.1}", stats.tbt.mean * 1e3),
-            format!("{:.1}", stats.tbt.p99 * 1e3),
+            rep.system.clone(),
+            format!("{}", rep.completed),
+            format!("{:.2}", rep.duration),
+            format!("{:.2}", rep.throughput_rps),
+            format!("{out_tokens}"),
+            format!("{:.1}", rep.ttft.mean * 1e3),
+            format!("{:.1}", rep.tbt.mean * 1e3),
+            format!("{:.1}", rep.tbt_p99 * 1e3),
         ]);
     }
     println!();
     table.print();
     println!(
         "\nAll layers composed: Pallas kernel -> JAX model -> HLO text ->\n\
-         PJRT CPU executable -> rust continuous-batching coordinator.\n\
-         (Weights stay device-resident across calls; the coordinator owns\n\
-         the KV cache and pads decode batches to the captured graph size,\n\
+         PJRT CPU executable -> the same EngineCore/server lifecycle the\n\
+         simulations run, via the ExecutionBackend seam. (Weights stay\n\
+         device-resident across calls; the engine owns KV accounting and\n\
+         the runtime pads decode batches to the captured graph size,\n\
          exactly like CUDA-Graph serving.)"
     );
     Ok(())

@@ -1,56 +1,96 @@
 //! Streaming front-end demo: concurrent clients submit requests to the
-//! threaded serving router and stream tokens back while the engine
-//! thread runs continuous batching over the real PJRT model.
+//! unified serving front-end and stream tokens back while the engine
+//! thread runs continuous batching — here over the *simulated* execution
+//! backend, so the demo runs anywhere (no AOT artifacts needed) and the
+//! token timestamps are engine-clock seconds from the same metrics
+//! structs the paper's evaluation uses. Swap the backend for
+//! `PjrtBackend` (see `e2e_serve`) and the identical lifecycle serves the
+//! real AOT-compiled model.
 //!
 //!     cargo run --release --example streaming_server
 
 use std::time::Instant;
 
-use duetserve::runtime::{artifacts, TinyRuntime};
-use duetserve::server::Server;
+use duetserve::config::{Policy, ServingConfig};
+use duetserve::server::{Server, SubmitOptions, TokenEvent};
 
 fn main() -> anyhow::Result<()> {
-    if !artifacts::artifacts_available() {
-        eprintln!("artifacts not found — run `make artifacts` first");
-        std::process::exit(1);
-    }
-    println!("starting engine thread (loads AOT artifacts)...");
-    let server = Server::start(|| TinyRuntime::load_default(), 4);
+    let cfg = ServingConfig::default_8b().with_policy(Policy::Duet);
+    println!("starting engine thread (DuetScheduler over the sim backend)...");
+    let server = Server::start_sim(cfg, 1)?;
 
     // 3 concurrent "client" threads, 4 requests each.
     let t0 = Instant::now();
     let server_ref = &server;
     std::thread::scope(|scope| {
-        let mut handles = Vec::new();
+        let mut joins = Vec::new();
         for c in 0..3u64 {
             let h = scope.spawn(move || {
                 let mut results = Vec::new();
                 for r in 0..4u64 {
-                    let prompt: Vec<i32> =
-                        (0..10).map(|j| ((c * 977 + r * 131 + j * 13) % 2048) as i32).collect();
-                    let stream = server_ref.submit(prompt, 12);
-                    let start = stream.submitted_at;
-                    let toks = stream.collect();
-                    results.push((c, r, toks.len(), start.elapsed()));
+                    let prompt: Vec<i32> = (0..2048 + 512 * (r as usize % 3))
+                        .map(|j| ((c * 977 + r * 131 + j as u64 * 13) % 2048) as i32)
+                        .collect();
+                    let opts = SubmitOptions {
+                        max_new_tokens: 12,
+                        slo_tbt_ms: Some(100.0),
+                        ..Default::default()
+                    };
+                    let handle = server_ref.submit(prompt, opts).expect("submit");
+                    let events = handle.collect_events();
+                    let times: Vec<f64> = events
+                        .iter()
+                        .filter_map(|e| match e {
+                            TokenEvent::Token { at, .. } => Some(*at),
+                            TokenEvent::Done { .. } => None,
+                        })
+                        .collect();
+                    results.push((c, r, times));
                 }
                 results
             });
-            handles.push(h);
+            joins.push(h);
         }
-        for h in handles {
-            for (c, r, n, dur) in h.join().unwrap() {
+        for h in joins {
+            for (c, r, times) in h.join().unwrap() {
+                let ttft = times.first().copied().unwrap_or(0.0);
+                let tbt = if times.len() > 1 {
+                    (times.last().unwrap() - times.first().unwrap())
+                        / (times.len() - 1) as f64
+                } else {
+                    0.0
+                };
                 println!(
-                    "client {c} request {r}: {n} tokens in {:.0} ms",
-                    dur.as_secs_f64() * 1e3
+                    "client {c} request {r}: {} tokens, first at {:.0} ms, \
+                     mean gap {:.1} ms (engine clock)",
+                    times.len(),
+                    ttft * 1e3,
+                    tbt * 1e3
                 );
             }
         }
     });
     println!(
-        "12 requests served concurrently in {:.2}s total",
+        "12 requests streamed concurrently in {:.2}s wall time",
         t0.elapsed().as_secs_f64()
     );
-    server.shutdown()?;
+
+    // Drain and read the end-of-run report from the shared metrics
+    // structs — the same TTFT/TBT accounting every simulated bench uses.
+    let report = server.shutdown()?;
+    println!(
+        "report[{}]: {} completed; ttft mean {:.0} ms; tbt mean {:.1} ms \
+         p99 {:.1} ms; slo attainment {}",
+        report.system,
+        report.completed,
+        report.ttft.mean * 1e3,
+        report.tbt.mean * 1e3,
+        report.tbt_p99 * 1e3,
+        report
+            .slo_attainment
+            .map(|a| format!("{:.1}%", a * 100.0))
+            .unwrap_or_else(|| "n/a".into()),
+    );
     println!("engine thread drained and stopped cleanly");
     Ok(())
 }

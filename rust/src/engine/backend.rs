@@ -1,0 +1,278 @@
+//! The execution-backend seam: *how* an [`IterationPlan`] actually runs.
+//!
+//! [`EngineCore`](super::EngineCore) turns a scheduler's plan into an
+//! [`IterationBatch`] — request ids, chunk sizes, context lengths, and
+//! (when serving real traffic) prompt token payloads — and hands it to an
+//! [`ExecutionBackend`]. The backend executes it and reports timing; the
+//! core does everything else (KV accounting, request state, metrics).
+//!
+//! Two implementations exist:
+//!
+//! - [`SimBackend`] wraps the roofline-calibrated
+//!   [`GpuExecutor`](crate::sim::GpuExecutor): iteration latencies are
+//!   *modelled*, tokens are synthetic. This is the evaluation path every
+//!   bench and test runs.
+//! - [`PjrtBackend`](crate::runtime::PjrtBackend) wraps the AOT-compiled
+//!   [`TinyRuntime`](crate::runtime::TinyRuntime): iteration latencies
+//!   are *measured wall clock*, tokens are real greedy argmax. It cannot
+//!   partition SMs, so spatial plans degrade to aggregated execution
+//!   (logged once by the core).
+//!
+//! The trait is the seam the unified serving front-end
+//! ([`crate::server`]) builds on: one request lifecycle, pluggable
+//! execution.
+//!
+//! [`IterationPlan`]: crate::sched::IterationPlan
+
+use crate::hw::PartitionPlan;
+use crate::model::AttnShape;
+use crate::request::RequestId;
+use crate::roofline::BatchShape;
+use crate::sim::{DispatchMode, ExecResult, GpuExecutor, SpatialResult};
+
+/// One decode-side entry of an iteration: the request generates exactly
+/// one token per decode step at `context_len` tokens of KV context.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeSlot {
+    pub id: RequestId,
+    pub context_len: u64,
+}
+
+/// One prefill-side entry: `chunk_tokens` prompt tokens of request `id`
+/// processed this iteration, on top of `context_len` cached tokens.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillSlice<'a> {
+    pub id: RequestId,
+    pub chunk_tokens: u64,
+    pub context_len: u64,
+    /// This chunk finishes the prompt (the forward's last logits yield
+    /// the first output token).
+    pub completes_prompt: bool,
+    /// The actual prompt token ids, when the request carries a payload
+    /// (serving path). Simulated requests have none.
+    pub prompt: Option<&'a [i32]>,
+}
+
+/// Everything a backend needs to execute one iteration.
+pub struct IterationBatch<'a> {
+    pub decode: Vec<DecodeSlot>,
+    pub prefill: Vec<PrefillSlice<'a>>,
+    /// Attention shapes of the decode side (one q=1 row per slot).
+    pub dec_shape: BatchShape,
+    /// Attention shapes of the prefill side (one row per chunk).
+    pub pre_shape: BatchShape,
+}
+
+impl IterationBatch<'_> {
+    pub fn is_empty(&self) -> bool {
+        self.decode.is_empty() && self.prefill.is_empty()
+    }
+}
+
+impl IterationBatch<'static> {
+    /// A decode-only batch (no prefill side) — cluster decode workers
+    /// batch transferred-KV requests this way.
+    pub fn decode_only(decode: Vec<DecodeSlot>) -> IterationBatch<'static> {
+        let dec_shape = BatchShape::from_shapes(
+            decode
+                .iter()
+                .map(|d| AttnShape {
+                    q: 1,
+                    c: d.context_len,
+                })
+                .collect(),
+        );
+        IterationBatch {
+            decode,
+            prefill: Vec::new(),
+            dec_shape,
+            pre_shape: BatchShape::from_shapes(Vec::new()),
+        }
+    }
+}
+
+/// Executes iteration batches and reports per-request progress.
+///
+/// Contract:
+/// - `run_aggregated` / `run_spatial` are called once per executed
+///   iteration, after the scheduler planned it and before the core
+///   updates KV/request state from the returned timing.
+/// - `pop_token(id, index)` is called by streaming front-ends once per
+///   produced output token, in production order per request; `index` is
+///   the token's position in the request's output. Backends with real
+///   runtimes return the argmax token; the default synthesizes a
+///   deterministic placeholder.
+/// - `release(id)` is called when a request leaves the engine without
+///   finishing (preemption, drop, cancel) so backend-side state (real KV
+///   slots, pending tokens) can be reclaimed. Front-ends also call it
+///   after a finished request's stream is fully drained.
+pub trait ExecutionBackend {
+    fn name(&self) -> &'static str;
+
+    /// Can this backend execute a [`Spatial`](crate::sched::IterationPlan)
+    /// plan natively? When false the core degrades spatial plans to
+    /// aggregated execution and logs a warning once.
+    fn supports_spatial(&self) -> bool {
+        true
+    }
+
+    /// Hard bound on a request's total context (prompt + generated
+    /// tokens), when the backend has one — compiled runtimes do; the
+    /// analytical simulator does not (KV capacity governs instead).
+    /// Front-ends reject submissions that could exceed it.
+    fn max_context(&self) -> Option<u64> {
+        None
+    }
+
+    /// Execute decode + prefill as one synchronous batch on `sms` SMs.
+    fn run_aggregated(
+        &mut self,
+        batch: &IterationBatch<'_>,
+        sms: u32,
+        mode: DispatchMode,
+    ) -> ExecResult;
+
+    /// Execute the batch spatially multiplexed per `plan`. Only called
+    /// when [`supports_spatial`](Self::supports_spatial) returns true.
+    fn run_spatial(&mut self, batch: &IterationBatch<'_>, plan: &PartitionPlan) -> SpatialResult;
+
+    /// The value of request `id`'s output token number `index`.
+    fn pop_token(&mut self, id: RequestId, index: u64) -> i32 {
+        // Deterministic synthetic stream: stable across recompute
+        // preemption replays (depends only on identity and position).
+        (((id.wrapping_mul(0x9E37_79B9) ^ index) & 0x7FFF) as i32).max(1)
+    }
+
+    /// Reclaim backend-side state for `id` (slots, pending tokens).
+    fn release(&mut self, _id: RequestId) {}
+
+    /// Prefill→decode KV handoff latency for `tokens` cached tokens
+    /// (disaggregated topologies).
+    fn kv_transfer_time(&self, tokens: u64) -> f64;
+}
+
+/// The simulated backend: a thin adapter over [`GpuExecutor`].
+pub struct SimBackend {
+    exec: GpuExecutor,
+}
+
+impl SimBackend {
+    pub fn new(exec: GpuExecutor) -> SimBackend {
+        SimBackend { exec }
+    }
+
+    pub fn from_config(cfg: &crate::config::ServingConfig, seed: u64) -> SimBackend {
+        SimBackend::new(GpuExecutor::new(cfg.model.clone(), cfg.gpu.clone(), cfg.tp, seed))
+    }
+}
+
+impl ExecutionBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn run_aggregated(
+        &mut self,
+        batch: &IterationBatch<'_>,
+        sms: u32,
+        mode: DispatchMode,
+    ) -> ExecResult {
+        let mut all = batch.dec_shape.shapes.clone();
+        all.extend(batch.pre_shape.shapes.iter().copied());
+        let combined = BatchShape::from_shapes(all);
+        self.exec.run(&combined, sms, mode, None)
+    }
+
+    fn run_spatial(&mut self, batch: &IterationBatch<'_>, plan: &PartitionPlan) -> SpatialResult {
+        self.exec.run_spatial(&batch.dec_shape, &batch.pre_shape, plan)
+    }
+
+    fn kv_transfer_time(&self, tokens: u64) -> f64 {
+        self.exec.kv_transfer_time(tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, ModelSpec};
+    use crate::model::AttnShape;
+
+    fn batch(n_dec: u64, pre_tokens: u64) -> IterationBatch<'static> {
+        let decode: Vec<DecodeSlot> = (0..n_dec)
+            .map(|i| DecodeSlot {
+                id: i,
+                context_len: 1024,
+            })
+            .collect();
+        let prefill: Vec<PrefillSlice<'static>> = if pre_tokens > 0 {
+            vec![PrefillSlice {
+                id: 100,
+                chunk_tokens: pre_tokens,
+                context_len: 0,
+                completes_prompt: true,
+                prompt: None,
+            }]
+        } else {
+            Vec::new()
+        };
+        let dec_shape = BatchShape::from_shapes(
+            decode.iter().map(|d| AttnShape { q: 1, c: d.context_len }).collect(),
+        );
+        let pre_shape = BatchShape::from_shapes(
+            prefill
+                .iter()
+                .map(|p| AttnShape {
+                    q: p.chunk_tokens,
+                    c: p.context_len,
+                })
+                .collect(),
+        );
+        IterationBatch {
+            decode,
+            prefill,
+            dec_shape,
+            pre_shape,
+        }
+    }
+
+    fn sim() -> SimBackend {
+        SimBackend::new(GpuExecutor::noiseless(ModelSpec::qwen3_8b(), GpuSpec::h100(), 1))
+    }
+
+    #[test]
+    fn sim_backend_matches_direct_executor() {
+        let mut b = sim();
+        let mut direct = GpuExecutor::noiseless(ModelSpec::qwen3_8b(), GpuSpec::h100(), 1);
+        let ib = batch(16, 2048);
+        let via_backend = b.run_aggregated(&ib, 132, DispatchMode::Eager);
+        let mut all = ib.dec_shape.shapes.clone();
+        all.extend(ib.pre_shape.shapes.iter().copied());
+        let expect = direct.run(&BatchShape::from_shapes(all), 132, DispatchMode::Eager, None);
+        assert_eq!(via_backend.gpu_time, expect.gpu_time);
+        assert_eq!(via_backend.dispatch_time, expect.dispatch_time);
+    }
+
+    #[test]
+    fn sim_backend_supports_spatial() {
+        assert!(sim().supports_spatial());
+        assert_eq!(sim().name(), "sim");
+    }
+
+    #[test]
+    fn default_tokens_are_deterministic_and_positive() {
+        let mut b = sim();
+        let t1 = b.pop_token(7, 3);
+        let t2 = b.pop_token(7, 3);
+        assert_eq!(t1, t2);
+        assert!(t1 >= 1);
+        // different positions give a stream, not a constant
+        assert_ne!(b.pop_token(7, 0), b.pop_token(7, 1));
+    }
+
+    #[test]
+    fn kv_transfer_time_delegates() {
+        let b = sim();
+        assert!(b.kv_transfer_time(8000) > 0.0);
+    }
+}

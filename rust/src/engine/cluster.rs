@@ -11,8 +11,14 @@
 //!   time-interleaved);
 //! - `Unified` workers run the shared per-iteration step
 //!   ([`EngineCore::step_once`]);
-//! - `Prefill` workers pack prompt-only batches and emit KV transfers;
-//! - `Decode` workers admit ready transfers and run decode-only batches;
+//! - `Prefill` workers run the same shared step under a
+//!   [`PrefillOnlyScheduler`]; each step, requests whose prompt completed
+//!   are extracted and their KV emitted as transfers;
+//! - ready transfers are routed to a decode worker through the same
+//!   [`Router`] seam arrivals use (at transfer-ready time, against live
+//!   decode-side load);
+//! - `Decode` workers admit the transfers routed to them and run
+//!   decode-only batches;
 //! - an optional Dynamo-style planner flips worker roles under sustained
 //!   imbalance (role switch preempts in-flight work and costs
 //!   `reconfig_s` of downtime).
@@ -25,13 +31,14 @@ use std::collections::VecDeque;
 
 use crate::config::{GpuSpec, ServingConfig};
 use crate::metrics::{Recorder, Report};
-use crate::model::AttnShape;
 use crate::request::{Phase, Request};
-use crate::roofline::BatchShape;
-use crate::sched::{scheduler_for, IterationPlan, SchedInput, Scheduler};
+use crate::sched::{
+    scheduler_for, IterationPlan, PrefillOnlyScheduler, SchedInput, Scheduler,
+};
 use crate::sim::DispatchMode;
 use crate::workload::Workload;
 
+use super::backend::{DecodeSlot, IterationBatch};
 use super::core::{CoreStep, EngineCore, MAX_SIM_TIME};
 use super::router::{RouteCandidate, Router};
 
@@ -70,10 +77,15 @@ impl Worker {
 struct Transfer {
     request: Request,
     ready_at: f64,
+    /// Destination decode worker, routed at transfer-ready time through
+    /// the cluster's [`Router`]. `None` until routed (or after a KV-full
+    /// bounce / role flip invalidated the assignment).
+    assigned: Option<usize>,
 }
 
-/// Placeholder scheduler for role-tagged workers: their iterations are
-/// built by the cluster's role steps, never by `EngineCore::step_once`.
+/// Placeholder scheduler for decode-role workers: their decode-only
+/// batches are packed by [`ClusterEngine::step_decode`] over transferred
+/// KV, never planned by `EngineCore::step_once`.
 struct RoleScheduler;
 
 impl Scheduler for RoleScheduler {
@@ -165,8 +177,19 @@ impl ClusterEngine {
             let mut wcfg = cfg.clone();
             wcfg.tp = 1;
             wcfg.gpu = spec.clone();
+            // Prefill workers run the shared per-iteration step under a
+            // prefill-only policy; decode batches are packed by the
+            // cluster from transferred KV.
+            let sched: Box<dyn Scheduler> = match role {
+                WorkerRole::Prefill => Box::new(PrefillOnlyScheduler::new(
+                    wcfg.token_budget as u64,
+                    wcfg.max_batch as usize,
+                    wcfg.kv_watermark,
+                )),
+                _ => Box::new(RoleScheduler),
+            };
             Worker {
-                core: EngineCore::new(wcfg, Box::new(RoleScheduler), seed + i as u64),
+                core: EngineCore::new(wcfg, sched, seed + i as u64),
                 role,
                 offline_until: 0.0,
             }
@@ -205,7 +228,9 @@ impl ClusterEngine {
         }
     }
 
-    /// Swap the routing policy (builder-style, before `run`).
+    /// Swap the routing policy (builder-style, before `run`). The router
+    /// dispatches both arrivals (to prefill/unified workers) and ready KV
+    /// transfers (to decode workers).
     pub fn set_router(&mut self, router: Box<dyn Router>) {
         self.router = router;
     }
@@ -329,6 +354,7 @@ impl ClusterEngine {
         }
 
         self.dispatch_arrivals(now);
+        self.route_transfers(now);
 
         if self.reconfigurable && now >= self.next_planner_check {
             self.plan_reconfig(now);
@@ -348,10 +374,10 @@ impl ClusterEngine {
         true
     }
 
-    /// Snapshot the workers a router may pick from. Offline workers are
-    /// excluded unless *every* arrival-taking worker is offline (then the
-    /// request must queue somewhere).
-    fn route_candidates(&self, now: f64) -> Vec<RouteCandidate> {
+    /// Snapshot the workers satisfying `eligible` for a routing
+    /// decision. Offline workers are excluded unless *every* eligible
+    /// worker is offline (then the request must queue somewhere).
+    fn candidates_where(&self, now: f64, eligible: impl Fn(&Worker) -> bool) -> Vec<RouteCandidate> {
         let snapshot = |(i, w): (usize, &Worker)| RouteCandidate {
             worker: i,
             queue_len: w.core.queue_len(),
@@ -362,7 +388,7 @@ impl ClusterEngine {
             .workers
             .iter()
             .enumerate()
-            .filter(|(_, w)| w.accepts_arrivals() && w.offline_until <= now)
+            .filter(|(_, w)| eligible(w) && w.offline_until <= now)
             .map(snapshot)
             .collect();
         if !online.is_empty() {
@@ -371,9 +397,14 @@ impl ClusterEngine {
         self.workers
             .iter()
             .enumerate()
-            .filter(|(_, w)| w.accepts_arrivals())
+            .filter(|(_, w)| eligible(w))
             .map(snapshot)
             .collect()
+    }
+
+    /// Arrival-side router candidates (unified/prefill workers).
+    fn route_candidates(&self, now: f64) -> Vec<RouteCandidate> {
+        self.candidates_where(now, Worker::accepts_arrivals)
     }
 
     /// Route every arrival with `arrival ≤ now` to a worker, at arrival
@@ -396,6 +427,61 @@ impl ClusterEngine {
         }
     }
 
+    /// Decode-side router candidates, preferring online decode workers.
+    fn transfer_candidates(&self, now: f64) -> Vec<RouteCandidate> {
+        self.candidates_where(now, |w| w.role == WorkerRole::Decode)
+    }
+
+    /// Route every ready, unrouted transfer to a decode worker through
+    /// the pluggable router (the second ROADMAP routing seam: transfers
+    /// are no longer hard-wired to the least-loaded decode worker).
+    /// In-flight assignments are folded into the candidates' load signals
+    /// so a burst of simultaneous transfers spreads across workers.
+    fn route_transfers(&mut self, now: f64) {
+        let n = self.workers.len();
+        let mut extra_queue = vec![0usize; n];
+        let mut extra_tokens = vec![0u64; n];
+        let mut extra_kv = vec![0u64; n];
+        for t in &self.transfers {
+            if let Some(w) = t.assigned {
+                extra_queue[w] += 1;
+                extra_tokens[w] += t.request.output_len - t.request.generated;
+                extra_kv[w] += t.request.context_len();
+            }
+        }
+        // Worker state cannot change inside this loop; snapshot the base
+        // candidates once (lazily — most ticks have no routable transfer)
+        // and re-apply only the in-flight-assignment overlay per decision.
+        let mut base: Option<Vec<RouteCandidate>> = None;
+        let mut i = 0;
+        while i < self.transfers.len() {
+            if self.transfers[i].assigned.is_none() && self.transfers[i].ready_at <= now {
+                let base = base.get_or_insert_with(|| self.transfer_candidates(now));
+                if base.is_empty() {
+                    return; // topology without decode workers
+                }
+                let mut candidates = base.clone();
+                for c in &mut candidates {
+                    c.queue_len += extra_queue[c.worker];
+                    c.outstanding_tokens += extra_tokens[c.worker];
+                    c.kv_free_tokens = c.kv_free_tokens.saturating_sub(extra_kv[c.worker]);
+                }
+                let choice = self.router.route(&self.transfers[i].request, &candidates);
+                assert!(
+                    candidates.iter().any(|c| c.worker == choice),
+                    "router `{}` routed a transfer to ineligible worker {choice}",
+                    self.router.name()
+                );
+                self.transfers[i].assigned = Some(choice);
+                extra_queue[choice] += 1;
+                extra_tokens[choice] +=
+                    self.transfers[i].request.output_len - self.transfers[i].request.generated;
+                extra_kv[choice] += self.transfers[i].request.context_len();
+            }
+            i += 1;
+        }
+    }
+
     /// One shared-core iteration on a unified worker; on idle, advance
     /// its clock to the next event (arrival or park behind the fleet).
     fn step_unified(&mut self, idx: usize) {
@@ -415,142 +501,80 @@ impl ClusterEngine {
         }
     }
 
-    /// One prefill iteration on worker `idx`: pack whole prompts up to the
-    /// token budget (chunking the head if it alone exceeds the budget).
+    /// One shared-core iteration on a prefill worker (prefill-only
+    /// scheduler), then extract completed prompts into the transfer
+    /// queue: a request whose phase reached `Decode` produced its first
+    /// output token from the prefill logits and its KV now moves to a
+    /// decode worker.
     fn step_prefill(&mut self, idx: usize) {
-        let now = self.workers[idx].core.clock;
-        if self.workers[idx].core.queue_len() == 0 {
-            // Idle: jump to the next arrival, or park behind the fleet so
-            // the rest of the cluster drives the system.
-            let next_arrival = self.pending.front().map(|r| r.arrival);
-            self.idle_advance(idx, next_arrival);
-            return;
-        }
-        // Build a prefill-only batch from this worker's queue.
-        let budget = self.cfg.token_budget as u64;
-        let mut tokens = 0u64;
-        let mut batch: Vec<Request> = Vec::new();
-        {
-            let core = &mut self.workers[idx].core;
-            while let Some(r) = core.waiting.front() {
-                if batch.is_empty() {
-                    let r = core.waiting.pop_front().unwrap();
-                    tokens += r.prompt_len.min(budget);
-                    batch.push(r);
-                    if tokens >= budget {
-                        break;
+        let allow_drop = self.pending.is_empty();
+        match self.workers[idx].core.step_once(allow_drop) {
+            CoreStep::Executed => {
+                let t_end = self.workers[idx].core.clock;
+                let mut outgoing = Vec::new();
+                {
+                    let core = &mut self.workers[idx].core;
+                    let mut i = 0;
+                    while i < core.running.len() {
+                        if core.running[i].phase == Phase::Decode {
+                            let r = core.running.remove(i);
+                            // The prefill worker holds no paged KV for a
+                            // request once its cache leaves for decode.
+                            let _ = core.kv.release(r.id);
+                            core.backend.release(r.id);
+                            let ready_at = t_end + core.backend.kv_transfer_time(r.context_len());
+                            outgoing.push(Transfer {
+                                request: r,
+                                ready_at,
+                                assigned: None,
+                            });
+                        } else {
+                            i += 1;
+                        }
                     }
-                } else if tokens + r.prompt_len <= budget {
-                    let r = core.waiting.pop_front().unwrap();
-                    tokens += r.prompt_len;
-                    batch.push(r);
+                }
+                self.transfers.append(&mut outgoing);
+            }
+            CoreStep::DroppedHead(_) => {}
+            CoreStep::Idle => {
+                let next_arrival = self.pending.front().map(|r| r.arrival);
+                if next_arrival.is_none() && self.workers[idx].core.has_local_work() {
+                    self.workers[idx].core.clock += PARK_EPS;
                 } else {
-                    break;
+                    self.idle_advance(idx, next_arrival);
                 }
             }
-        }
-        let shapes: Vec<AttnShape> = batch
-            .iter()
-            .map(|r| AttnShape {
-                q: r.prompt_len.min(budget),
-                c: 0,
-            })
-            .collect();
-        let bshape = BatchShape::from_shapes(shapes);
-        let sms = self.workers[idx].core.cfg.gpu.num_sms;
-        let res = self.workers[idx]
-            .core
-            .executor
-            .run(&bshape, sms, DispatchMode::Eager, None);
-        // A prompt larger than the budget runs over multiple chunked
-        // iterations; model that as ceil(prompt/budget) sequential spans.
-        let mut extra = 0.0;
-        for r in &batch {
-            if r.prompt_len > budget {
-                let n_extra = r.prompt_len.div_ceil(budget) - 1;
-                let shape = BatchShape::from_shapes(vec![AttnShape {
-                    q: budget,
-                    c: budget,
-                }]);
-                let per = self.workers[idx]
-                    .core
-                    .executor
-                    .run(&shape, sms, DispatchMode::Eager, None);
-                extra += n_extra as f64 * per.total();
-            }
-        }
-        let dur = res.total() + extra;
-        let t_end = now + dur;
-        {
-            let core = &mut self.workers[idx].core;
-            core.clock = t_end;
-            core.last_active = t_end;
-            core.metrics.busy_time += res.gpu_time + extra;
-            core.metrics
-                .record_util(res.gpu_time + extra, res.sm_util, res.hbm_util);
-            core.metrics.iterations += 1;
-        }
-
-        // Completed prompts: first token produced here, then KV transfer.
-        for mut r in batch {
-            // The prefill worker holds no paged KV for this request once
-            // the prompt leaves for a decode worker.
-            let _ = self.workers[idx].core.kv.release(r.id);
-            r.advance_prefill(r.remaining_prompt());
-            r.advance_decode(t_end); // first output token from prefill logits
-            if r.phase == Phase::Finished {
-                let core = &mut self.workers[idx].core;
-                core.metrics.record_finished(&r);
-                core.finished.push(r);
-                continue;
-            }
-            let ready = t_end
-                + self.workers[idx]
-                    .core
-                    .executor
-                    .kv_transfer_time(r.context_len());
-            self.transfers.push(Transfer {
-                request: r,
-                ready_at: ready,
-            });
         }
     }
 
-    /// One decode iteration on worker `idx`: admit ready transfers (when
-    /// this worker is the least-loaded decode worker), then run one
-    /// decode-only step over the whole running batch.
+    /// One decode iteration on worker `idx`: admit the transfers the
+    /// router assigned here, then run one decode-only step over the whole
+    /// running batch.
     fn step_decode(&mut self, idx: usize) {
         let now = self.workers[idx].core.clock;
-        let my_load = self.workers[idx].core.running_len();
-        let am_least = self
-            .workers
-            .iter()
-            .enumerate()
-            .filter(|(i, w)| w.role == WorkerRole::Decode && *i != idx)
-            .all(|(_, w)| w.core.running_len() >= my_load);
-        if am_least {
-            let mut i = 0;
-            while i < self.transfers.len() {
-                if self.transfers[i].ready_at <= now {
-                    let t = self.transfers.swap_remove(i);
-                    let mut r = t.request;
-                    let id = r.id;
-                    let core = &mut self.workers[idx].core;
-                    core.kv.register(id);
-                    if core.kv.append(id, r.context_len()).is_err() {
-                        // Decode KV full: requeue the transfer for later.
-                        let _ = core.kv.release(id);
-                        self.transfers.push(Transfer {
-                            request: r,
-                            ready_at: now + 0.05,
-                        });
-                        break;
-                    }
-                    r.phase = Phase::Decode;
-                    core.running.push(r);
-                } else {
-                    i += 1;
+        let mut i = 0;
+        while i < self.transfers.len() {
+            if self.transfers[i].assigned == Some(idx) && self.transfers[i].ready_at <= now {
+                let t = self.transfers.swap_remove(i);
+                let mut r = t.request;
+                let id = r.id;
+                let core = &mut self.workers[idx].core;
+                core.kv.register(id);
+                if core.kv.append(id, r.context_len()).is_err() {
+                    // Decode KV full: bounce the transfer back for
+                    // re-routing (possibly to another worker) later.
+                    let _ = core.kv.release(id);
+                    self.transfers.push(Transfer {
+                        request: r,
+                        ready_at: now + 0.05,
+                        assigned: None,
+                    });
+                    break;
                 }
+                r.phase = Phase::Decode;
+                core.running.push(r);
+            } else {
+                i += 1;
             }
         }
 
@@ -565,24 +589,20 @@ impl ClusterEngine {
             return;
         }
 
-        let sms = self.workers[idx].core.cfg.gpu.num_sms;
-        let shapes: Vec<AttnShape> = self.workers[idx]
-            .core
-            .running
-            .iter()
-            .map(|r| AttnShape {
-                q: 1,
-                c: r.context_len(),
-            })
-            .collect();
-        let bshape = BatchShape::from_shapes(shapes);
-        let res = self.workers[idx]
-            .core
-            .executor
-            .run(&bshape, sms, DispatchMode::Graph, None);
+        let core = &mut self.workers[idx].core;
+        let sms = core.cfg.gpu.num_sms;
+        let batch = IterationBatch::decode_only(
+            core.running
+                .iter()
+                .map(|r| DecodeSlot {
+                    id: r.id,
+                    context_len: r.context_len(),
+                })
+                .collect(),
+        );
+        let res = core.backend.run_aggregated(&batch, sms, DispatchMode::Graph);
         let dur = res.total();
         let t_end = now + dur;
-        let core = &mut self.workers[idx].core;
         core.clock = t_end;
         core.last_active = t_end;
         core.metrics.busy_time += res.gpu_time;
@@ -628,13 +648,21 @@ impl ClusterEngine {
                 let drained: Vec<Request> = self.workers[v].core.running.drain(..).collect();
                 for r in &drained {
                     let _ = self.workers[v].core.kv.release(r.id);
+                    self.workers[v].core.backend.release(r.id);
+                }
+                // Transfers already routed to this worker must be
+                // re-routed: it no longer decodes.
+                for t in &mut self.transfers {
+                    if t.assigned == Some(v) {
+                        t.assigned = None;
+                    }
                 }
                 self.workers[v].role = WorkerRole::Prefill;
                 self.workers[v].offline_until = now + self.reconfig_s;
                 self.reconfigs += 1;
                 for r in drained {
                     // Preempted decodes restart from scratch.
-                    let fresh = Request::new(r.id, r.arrival, r.prompt_len, r.output_len);
+                    let fresh = r.reset_for_retry();
                     let tgt = self.lightest_prefill_worker(now);
                     self.workers[tgt].core.inject_front(fresh);
                 }
@@ -646,9 +674,14 @@ impl ClusterEngine {
                 .iter()
                 .position(|w| w.role == WorkerRole::Prefill);
             if let Some(v) = victim {
-                let moved: Vec<Request> = self.workers[v].core.waiting.drain(..).collect();
+                // Displace both the queued prompts and the in-flight
+                // (partially prefilled) ones — prefill progress is lost.
+                let mut moved: Vec<Request> =
+                    self.workers[v].core.waiting.drain(..).collect();
+                moved.extend(self.workers[v].core.running.drain(..));
                 for r in &moved {
                     let _ = self.workers[v].core.kv.release(r.id);
+                    self.workers[v].core.backend.release(r.id);
                 }
                 self.workers[v].role = WorkerRole::Decode;
                 self.workers[v].offline_until = now + self.reconfig_s;
@@ -657,7 +690,7 @@ impl ClusterEngine {
                     // Re-route the displaced queue to the surviving
                     // prefill workers.
                     let tgt = self.lightest_prefill_worker(now);
-                    self.workers[tgt].core.inject(r);
+                    self.workers[tgt].core.inject(r.reset_for_retry());
                 }
             }
         }
@@ -758,6 +791,39 @@ mod tests {
         assert_eq!((p, d), (1, 1));
         assert!(cluster.workers[1].core.metrics.iterations > 0);
         assert!(cluster.transfers.is_empty());
+        cluster.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefill_workers_use_the_scheduler_seam() {
+        let cfg = ServingConfig::default_8b().with_policy(Policy::DisaggPD {
+            prefill_gpus: 1,
+            decode_gpus: 1,
+        });
+        let cluster =
+            ClusterEngine::disagg(cfg, 1, 1, 1, Box::new(LeastOutstandingRouter::new()));
+        assert_eq!(cluster.workers[0].core.policy_name(), "prefill-only");
+        assert_eq!(cluster.workers[1].core.policy_name(), "role-worker");
+    }
+
+    #[test]
+    fn transfers_spread_across_decode_workers() {
+        // 1 prefill + 2 decode workers: router-dispatched transfers must
+        // reach both decode workers under sustained load.
+        let cfg = ServingConfig::default_8b().with_policy(Policy::DisaggPD {
+            prefill_gpus: 1,
+            decode_gpus: 2,
+        });
+        let mut cluster =
+            ClusterEngine::disagg(cfg, 1, 2, 1, Box::new(LeastOutstandingRouter::new()));
+        let rep = cluster.run(fixed_workload(24, 2000, 64, 6.0, 7));
+        assert_eq!(rep.completed, 24);
+        for i in [1usize, 2] {
+            assert!(
+                cluster.workers[i].core.metrics.completed > 0,
+                "decode worker {i} never served a transferred request"
+            );
+        }
         cluster.check_invariants().unwrap();
     }
 }

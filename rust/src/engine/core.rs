@@ -1,12 +1,14 @@
 //! The shared per-iteration serving step.
 //!
 //! [`EngineCore`] owns everything one worker needs to execute one
-//! continuous-batching iteration: scheduler, simulated executor, paged KV
+//! continuous-batching iteration: scheduler, execution backend, paged KV
 //! manager, local virtual clock, waiting/running queues, and a metrics
 //! recorder. It deliberately knows nothing about *where requests come
 //! from* — arrival streams, routing, replication, and disaggregation are
 //! topology concerns layered on top ([`super::SimEngine`] for one worker,
-//! [`super::ClusterEngine`] for many).
+//! [`super::ClusterEngine`] for many) — nor about *how* iterations
+//! execute: that is the [`ExecutionBackend`] seam (simulated roofline
+//! executor or the real PJRT runtime).
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -17,9 +19,10 @@ use crate::metrics::Recorder;
 use crate::model::AttnShape;
 use crate::request::{Phase, Request, RequestId};
 use crate::roofline::BatchShape;
-use crate::sched::{IterationPlan, SchedInput, Scheduler};
-use crate::sim::{DispatchMode, GpuExecutor};
+use crate::sched::{IterationPlan, PrefillChunk, SchedInput, Scheduler};
+use crate::sim::DispatchMode;
 
+use super::backend::{DecodeSlot, ExecutionBackend, IterationBatch, PrefillSlice, SimBackend};
 use super::{IterEvent, IterKind};
 
 /// Hard cap on simulated time — a run that exceeds this has diverged
@@ -36,7 +39,59 @@ pub enum CoreStep {
     /// Nothing schedulable; the caller decides how to advance the clock.
     Idle,
     /// The head waiting request can never fit in KV and was dropped.
-    DroppedHead,
+    DroppedHead(RequestId),
+}
+
+/// Build the backend batch descriptor for a planned iteration from the
+/// running set. A free function (not a method) so the caller can hold the
+/// borrow of `running` while mutably using other `EngineCore` fields.
+fn iteration_batch<'a>(
+    running: &'a [Request],
+    decode: &[RequestId],
+    prefill: &[PrefillChunk],
+) -> IterationBatch<'a> {
+    let find = |id: RequestId| running.iter().find(|r| r.id == id);
+    let dec: Vec<DecodeSlot> = decode
+        .iter()
+        .filter_map(|&id| find(id))
+        .map(|r| DecodeSlot {
+            id: r.id,
+            context_len: r.context_len(),
+        })
+        .collect();
+    let pre: Vec<PrefillSlice<'a>> = prefill
+        .iter()
+        .filter_map(|c| find(c.id).map(|r| (r, c.tokens)))
+        .map(|(r, q)| PrefillSlice {
+            id: r.id,
+            chunk_tokens: q,
+            context_len: r.context_len(),
+            completes_prompt: q == r.remaining_prompt(),
+            prompt: r.prompt_tokens.as_deref(),
+        })
+        .collect();
+    let dec_shape = BatchShape::from_shapes(
+        dec.iter()
+            .map(|d| AttnShape {
+                q: 1,
+                c: d.context_len,
+            })
+            .collect(),
+    );
+    let pre_shape = BatchShape::from_shapes(
+        pre.iter()
+            .map(|p| AttnShape {
+                q: p.chunk_tokens,
+                c: p.context_len,
+            })
+            .collect(),
+    );
+    IterationBatch {
+        decode: dec,
+        prefill: pre,
+        dec_shape,
+        pre_shape,
+    }
 }
 
 /// One worker's serving state + the per-iteration step all engine
@@ -44,7 +99,7 @@ pub enum CoreStep {
 pub struct EngineCore {
     pub cfg: ServingConfig,
     scheduler: Box<dyn Scheduler>,
-    pub(crate) executor: GpuExecutor,
+    pub(crate) backend: Box<dyn ExecutionBackend>,
     pub(crate) kv: KvManager,
     /// Local virtual clock, seconds.
     pub clock: f64,
@@ -60,19 +115,33 @@ pub struct EngineCore {
     pub dropped: u64,
     /// Requests preempted (recompute-style) due to KV exhaustion.
     pub preemptions: u64,
+    /// Spatial plans degraded to aggregated execution because the backend
+    /// cannot partition SMs.
+    pub spatial_degraded: u64,
+    spatial_degrade_warned: bool,
     /// Detailed per-iteration log (Fig. 10); disabled by default.
     pub log_events: bool,
     pub events: Vec<IterEvent>,
 }
 
 impl EngineCore {
+    /// Core over the simulated backend (the evaluation path).
     pub fn new(cfg: ServingConfig, scheduler: Box<dyn Scheduler>, seed: u64) -> EngineCore {
+        let backend = Box::new(SimBackend::from_config(&cfg, seed));
+        EngineCore::with_backend(cfg, scheduler, backend)
+    }
+
+    /// Core over an arbitrary execution backend (the serving path).
+    pub fn with_backend(
+        cfg: ServingConfig,
+        scheduler: Box<dyn Scheduler>,
+        backend: Box<dyn ExecutionBackend>,
+    ) -> EngineCore {
         let kv = KvManager::new(cfg.kv_capacity_blocks(), cfg.kv_block_tokens);
-        let executor = GpuExecutor::new(cfg.model.clone(), cfg.gpu.clone(), cfg.tp, seed);
         EngineCore {
             cfg,
             scheduler,
-            executor,
+            backend,
             kv,
             clock: 0.0,
             last_active: 0.0,
@@ -82,6 +151,8 @@ impl EngineCore {
             metrics: Recorder::new(),
             dropped: 0,
             preemptions: 0,
+            spatial_degraded: 0,
+            spatial_degrade_warned: false,
             log_events: false,
             events: Vec::new(),
         }
@@ -89,6 +160,16 @@ impl EngineCore {
 
     pub fn policy_name(&self) -> String {
         self.scheduler.name()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Mutable access to the execution backend (streaming front-ends pull
+    /// token values through this).
+    pub fn backend_mut(&mut self) -> &mut dyn ExecutionBackend {
+        &mut *self.backend
     }
 
     /// Accept one routed request into the waiting queue.
@@ -145,10 +226,12 @@ impl EngineCore {
         let mut n = 0u64;
         while let Some(r) = self.waiting.pop_front() {
             let _ = self.kv.release(r.id);
+            self.backend.release(r.id);
             n += 1;
         }
         for r in self.running.drain(..) {
             let _ = self.kv.release(r.id);
+            self.backend.release(r.id);
             n += 1;
         }
         self.dropped += n;
@@ -180,8 +263,9 @@ impl EngineCore {
                     // Head request can never fit: drop it or we deadlock.
                     let r = self.waiting.pop_front().unwrap();
                     let _ = self.kv.release(r.id);
+                    self.backend.release(r.id);
                     self.dropped += 1;
-                    CoreStep::DroppedHead
+                    CoreStep::DroppedHead(r.id)
                 } else {
                     CoreStep::Idle
                 }
@@ -195,45 +279,35 @@ impl EngineCore {
                 prefill,
                 plan,
             } => {
-                self.exec_spatial(decode, prefill, plan, sched_s);
+                if self.backend.supports_spatial() {
+                    self.exec_spatial(decode, prefill, plan, sched_s);
+                } else {
+                    // The backend cannot partition SMs (e.g. the PJRT
+                    // runtime): degrade to one aggregated batch.
+                    if !self.spatial_degrade_warned {
+                        self.spatial_degrade_warned = true;
+                        eprintln!(
+                            "engine: backend `{}` cannot run spatial plans; \
+                             degrading to aggregated execution",
+                            self.backend.name()
+                        );
+                    }
+                    self.spatial_degraded += 1;
+                    self.exec_aggregated(decode, prefill, sched_s);
+                }
                 CoreStep::Executed
             }
         }
     }
 
     /// Move scheduled waiting requests into running (admission).
-    fn admit_scheduled(&mut self, prefill: &[crate::sched::PrefillChunk]) {
+    fn admit_scheduled(&mut self, prefill: &[PrefillChunk]) {
         for c in prefill.iter().filter(|c| c.admit) {
             if let Some(pos) = self.waiting.iter().position(|r| r.id == c.id) {
                 let r = self.waiting.remove(pos).unwrap();
                 self.running.push(r);
             }
         }
-    }
-
-    fn batch_shapes(
-        &self,
-        decode: &[RequestId],
-        prefill: &[crate::sched::PrefillChunk],
-    ) -> (BatchShape, BatchShape) {
-        let find = |id: RequestId| self.running.iter().find(|r| r.id == id);
-        let dec = decode
-            .iter()
-            .filter_map(|&id| find(id))
-            .map(|r| AttnShape {
-                q: 1,
-                c: r.context_len(),
-            })
-            .collect();
-        let pre = prefill
-            .iter()
-            .filter_map(|c| find(c.id).map(|r| (r, c.tokens)))
-            .map(|(r, q)| AttnShape {
-                q,
-                c: r.context_len(),
-            })
-            .collect();
-        (BatchShape::from_shapes(dec), BatchShape::from_shapes(pre))
     }
 
     /// KV-append with recompute-preemption on exhaustion: the most
@@ -253,9 +327,10 @@ impl EngineCore {
                         Some(pos) => {
                             let v = self.running.remove(pos);
                             let _ = self.kv.release(v.id);
+                            self.backend.release(v.id);
                             self.preemptions += 1;
                             // Recompute preemption: progress is lost.
-                            let fresh = Request::new(v.id, v.arrival, v.prompt_len, v.output_len);
+                            let fresh = v.reset_for_retry();
                             self.kv.register(fresh.id);
                             self.waiting.push_front(fresh);
                         }
@@ -266,25 +341,21 @@ impl EngineCore {
         }
     }
 
-    fn exec_aggregated(
-        &mut self,
-        decode: Vec<RequestId>,
-        prefill: Vec<crate::sched::PrefillChunk>,
-        sched_s: f64,
-    ) {
+    fn exec_aggregated(&mut self, decode: Vec<RequestId>, prefill: Vec<PrefillChunk>, sched_s: f64) {
         self.admit_scheduled(&prefill);
-        let (dec_shape, pre_shape) = self.batch_shapes(&decode, &prefill);
-        let mut all = dec_shape.shapes.clone();
-        all.extend(pre_shape.shapes.iter().copied());
-        let batch = BatchShape::from_shapes(all);
+        let batch = iteration_batch(&self.running, &decode, &prefill);
         // Decode-only batches replay captured graphs; any prefill in the
         // batch forces eager dispatch (dynamic shapes — §4.3).
-        let mode = if pre_shape.is_empty() {
+        let mode = if batch.pre_shape.is_empty() {
             DispatchMode::Graph
         } else {
             DispatchMode::Eager
         };
-        let res = self.executor.run(&batch, self.cfg.gpu.num_sms, mode, None);
+        let pre_tokens = batch.pre_shape.n_tokens;
+        let res = self
+            .backend
+            .run_aggregated(&batch, self.cfg.gpu.num_sms, mode);
+        drop(batch);
         // The virtual clock stays deterministic: measured CPU scheduling
         // time is *reported* (metrics/events) but not added to simulated
         // time — it is µs against ~100 ms iterations (Fig. 10).
@@ -330,7 +401,7 @@ impl EngineCore {
                 duration: dur,
                 kind: IterKind::Aggregated,
                 n_decode: decode.len() as u32,
-                prefill_tokens: pre_shape.n_tokens,
+                prefill_tokens: pre_tokens,
                 sched_s,
                 sm_util: res.sm_util,
                 hbm_util: res.hbm_util,
@@ -344,13 +415,15 @@ impl EngineCore {
     fn exec_spatial(
         &mut self,
         decode: Vec<RequestId>,
-        prefill: Vec<crate::sched::PrefillChunk>,
+        prefill: Vec<PrefillChunk>,
         plan: crate::hw::PartitionPlan,
         sched_s: f64,
     ) {
         self.admit_scheduled(&prefill);
-        let (dec_shape, pre_shape) = self.batch_shapes(&decode, &prefill);
-        let res = self.executor.run_spatial(&dec_shape, &pre_shape, &plan);
+        let batch = iteration_batch(&self.running, &decode, &prefill);
+        let pre_tokens = batch.pre_shape.n_tokens;
+        let res = self.backend.run_spatial(&batch, &plan);
+        drop(batch);
         let dur = res.span;
         let t_end = self.clock + dur;
         let k = plan.k.max(1);
@@ -423,7 +496,7 @@ impl EngineCore {
                     k,
                 },
                 n_decode: decode.len() as u32,
-                prefill_tokens: pre_shape.n_tokens,
+                prefill_tokens: pre_tokens,
                 sched_s,
                 sm_util: sm,
                 hbm_util: hbm,

@@ -3,9 +3,11 @@
 //! Topology: `P` prefill workers + `D` decode workers, each a whole GPU
 //! (device-granular partitioning — the coarseness DuetServe's SM-granular
 //! approach avoids). Requests are routed to a prefill worker at arrival
-//! time, prefill FCFS there, the KV cache transfers over NVLink P2P
-//! (NIXL-style) through the cluster's transfer queue, then the request
-//! joins the least-loaded decode worker's continuous batch.
+//! time and chunk-prefilled there through the shared core under a
+//! `PrefillOnlyScheduler`; the KV cache transfers over NVLink P2P
+//! (NIXL-style) through the cluster's transfer queue, and each ready
+//! transfer is routed to a decode worker through the same pluggable
+//! `Router` the arrivals use, joining that worker's continuous batch.
 //!
 //! This is a role configuration of [`ClusterEngine`] — the event loop,
 //! divergence guard, transfer queue, and the optional Dynamo-planner

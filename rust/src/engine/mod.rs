@@ -25,8 +25,18 @@
 //!    (round-robin, least-outstanding-tokens, KV-pressure-aware).
 //!    Requests are routed when they arrive, against live load signals;
 //!    replicated serving is time-interleaved rather than statically
-//!    sharded.
+//!    sharded. Prefill→decode KV transfers go through the same seam:
+//!    each finished prompt is routed to a decode worker at
+//!    transfer-ready time.
+//! 4. **Execution** ([`backend::ExecutionBackend`]) — *how* a planned
+//!    iteration runs: [`backend::SimBackend`] models latencies with the
+//!    roofline-calibrated executor, while
+//!    [`PjrtBackend`](crate::runtime::PjrtBackend) measures real
+//!    wall-clock over the AOT-compiled runtime. The unified serving
+//!    front-end ([`crate::server`]) is a transport layer over one
+//!    [`EngineCore`] + one backend.
 
+pub mod backend;
 pub mod cluster;
 pub mod core;
 pub mod disagg;
@@ -35,6 +45,7 @@ pub mod replicated;
 pub mod router;
 
 pub use self::core::{CoreStep, EngineCore, MAX_SIM_TIME};
+pub use backend::{DecodeSlot, ExecutionBackend, IterationBatch, PrefillSlice, SimBackend};
 pub use cluster::{ClusterEngine, Worker, WorkerRole};
 pub use disagg::DisaggEngine;
 pub use events::{IterEvent, IterKind};
@@ -95,6 +106,10 @@ impl SimEngine {
     }
 
     /// One iteration. Returns false when all work is done.
+    ///
+    /// `server::ServerCore::step` mirrors this loop so the serving path
+    /// and the simulation produce identical metrics; changes here must
+    /// keep the `server_path_matches_sim_engine_metrics` property green.
     pub fn step(&mut self) -> bool {
         self.admit_arrivals();
         if self.pending.is_empty() && !self.core.has_local_work() {
@@ -109,7 +124,7 @@ impl SimEngine {
         }
 
         match self.core.step_once(self.pending.is_empty()) {
-            CoreStep::Executed | CoreStep::DroppedHead => true,
+            CoreStep::Executed | CoreStep::DroppedHead(_) => true,
             CoreStep::Idle => {
                 // Nothing schedulable now: jump to the next arrival, or
                 // keep stepping while admitted work remains.

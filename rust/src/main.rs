@@ -1,15 +1,19 @@
 //! DuetServe launcher.
 //!
 //! Subcommands:
-//!   serve      — run a simulated serving experiment (policy x workload)
+//!   serve      — run a serving experiment (policy x workload); with
+//!                `--backend` the workload goes through the unified
+//!                streaming front-end instead of the batch simulator
 //!   traces     — print Table-1 statistics of the calibrated traces
 //!   partition  — inspect the Algorithm-1 optimizer for a batch shape
 //!   e2e        — serve the real AOT-compiled tiny model via PJRT
+//!                (unified front-end + PjrtBackend)
 //!   config     — dump the effective serving configuration
 //!
 //! Examples:
 //!   duetserve serve --policy duet --trace azure-conv --qps 10 --n 300
 //!   duetserve serve --policy vllm --isl 8000 --osl 200 --qps 6 --n 100
+//!   duetserve serve --backend sim --policy duet --n 50 --qps 8
 //!   duetserve partition --decode 64 --ctx 8192 --prefill 8192
 //!   duetserve e2e --requests 16 --max-new 24
 
@@ -19,8 +23,9 @@ use duetserve::engine::{engine_for, router_by_name, DisaggEngine, ReplicatedEngi
 use duetserve::metrics::Report;
 use duetserve::model::AttnShape;
 use duetserve::roofline::{BatchShape, Predictor};
-use duetserve::runtime::{artifacts, RealEngine, RealPolicy, RealRequest, TinyRuntime};
-use duetserve::sched::optimize_partition;
+use duetserve::runtime::{artifacts, PjrtBackend};
+use duetserve::sched::{optimize_partition, scheduler_for};
+use duetserve::server::{Server, ServerCore, SubmitOptions};
 use duetserve::util::tablefmt::Table;
 use duetserve::workload::synthetic::fixed_workload;
 use duetserve::workload::traces::{generate, trace_by_name, TraceKind};
@@ -82,7 +87,18 @@ fn cmd_serve(args: &Args) {
             std::process::exit(2);
         }
     };
+    let backend = match args.one_of("backend", &["sim", "pjrt-stub"]) {
+        Ok(choice) => choice.map(str::to_string),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
     let w = build_workload(args, qps, seed);
+    if let Some(kind) = backend {
+        cmd_serve_front(&kind, cfg, w, qps, seed);
+        return;
+    }
     println!(
         "serving {} requests ({}) with {} (TP={})",
         w.requests.len(),
@@ -124,6 +140,74 @@ fn cmd_serve(args: &Args) {
     let mut t = Table::new(Report::header());
     t.row(rep.row(qps));
     t.print();
+}
+
+/// Serve the workload through the unified streaming front-end: one
+/// `EngineCore` + pluggable `ExecutionBackend` behind `server::Server`.
+fn cmd_serve_front(kind: &str, cfg: ServingConfig, w: Workload, qps: f64, seed: u64) {
+    // The whole workload is submitted before any stream is drained, so
+    // the backpressure bound must admit all of it.
+    let depth = w.requests.len().max(1);
+    let server = match kind {
+        "sim" => {
+            let base = cfg.clone();
+            Server::start(move || Ok(ServerCore::sim(base, seed).with_queue_depth(depth)))
+        }
+        "pjrt-stub" => {
+            let base = cfg.clone();
+            Server::start(move || {
+                let backend = PjrtBackend::load_default()?;
+                let tuned = backend.tune_config(base);
+                let scheduler = scheduler_for(&tuned);
+                Ok(ServerCore::new(tuned, scheduler, Box::new(backend))
+                    .with_queue_depth(depth))
+            })
+        }
+        _ => unreachable!("validated by one_of"),
+    };
+    let server = match server {
+        Ok(s) => s,
+        Err(e) => {
+            // The stub build has no PJRT runtime: report and skip, so CI
+            // can exercise this path unconditionally.
+            println!("front-end backend `{kind}` unavailable: {e}");
+            return;
+        }
+    };
+    println!(
+        "front-end: {} requests ({}) via {} scheduler, `{kind}` backend",
+        w.requests.len(),
+        w.name,
+        cfg.policy.name()
+    );
+    let mut handles = Vec::new();
+    for r in &w.requests {
+        // Trace requests carry lengths, not token values: synthesize a
+        // deterministic prompt of the right length.
+        let prompt: Vec<i32> = (0..r.prompt_len).map(|j| (j % 1024) as i32).collect();
+        let opts = SubmitOptions {
+            max_new_tokens: r.output_len,
+            arrival: Some(r.arrival),
+            ..Default::default()
+        };
+        match server.submit(prompt, opts) {
+            Ok(h) => handles.push(h),
+            Err(e) => eprintln!("submit failed: {e}"),
+        }
+    }
+    let mut streamed = 0usize;
+    for h in handles {
+        streamed += h.collect().len();
+    }
+    match server.shutdown() {
+        Ok(rep) => {
+            println!("streamed {streamed} tokens");
+            let mut t = Table::new(Report::header());
+            t.row(rep.row(qps));
+            t.print();
+        }
+        Err(e) => eprintln!("shutdown error: {e}"),
+    }
 }
 
 fn cmd_traces() {
@@ -171,32 +255,48 @@ fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
         anyhow::bail!("artifacts not found — run `make artifacts` first");
     }
     let n = args.usize_or("requests", 8);
-    let max_new = args.usize_or("max-new", 16);
-    let lookahead = args.u32_or("lookahead", 4);
-    let rt = TinyRuntime::load_default()?;
-    println!("platform: {}", rt.platform());
-    let reqs: Vec<RealRequest> = (0..n)
-        .map(|i| RealRequest {
-            id: i as u64,
-            prompt: (0..8 + i % 16)
+    let max_new = args.usize_or("max-new", 16) as u64;
+    // The real model serves through the same unified lifecycle as the
+    // simulations: EngineCore + scheduler, PJRT execution backend.
+    let server = Server::start(move || {
+        let backend = PjrtBackend::load_default()?;
+        println!("platform: {}", backend.platform());
+        let tuned =
+            backend.tune_config(ServingConfig::default_8b().with_policy(Policy::VllmChunked));
+        let scheduler = scheduler_for(&tuned);
+        Ok(ServerCore::new(tuned, scheduler, Box::new(backend)))
+    })?;
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..8 + i % 16)
                 .map(|j| ((i * 97 + j * 31 + 3) % 2048) as i32)
-                .collect(),
-            max_new_tokens: max_new,
+                .collect();
+            server
+                .submit(
+                    prompt,
+                    SubmitOptions {
+                        max_new_tokens: max_new,
+                        ..Default::default()
+                    },
+                )
+                .map_err(|e| anyhow::anyhow!("submit: {e}"))
         })
-        .collect();
-    let mut engine = RealEngine::new(rt, RealPolicy::DuetInterleave { lookahead });
-    let s = engine.serve(reqs)?;
+        .collect::<anyhow::Result<_>>()?;
+    let mut tokens = 0usize;
+    for h in handles {
+        tokens += h.collect().len();
+    }
+    let rep = server.shutdown()?;
     println!(
-        "{}: {} requests in {:.2}s = {:.2} req/s; decode {:.1} tok/s; \
+        "{}: {} requests ({tokens} tokens) in {:.2}s = {:.2} req/s; \
          ttft mean {:.0}ms; tbt mean {:.1}ms p99 {:.1}ms",
-        s.policy,
-        s.completed,
-        s.wall_s,
-        s.throughput_rps,
-        s.decode_tokens_per_s,
-        s.ttft.mean * 1e3,
-        s.tbt.mean * 1e3,
-        s.tbt.p99 * 1e3,
+        rep.system,
+        rep.completed,
+        rep.duration,
+        rep.throughput_rps,
+        rep.ttft.mean * 1e3,
+        rep.tbt.mean * 1e3,
+        rep.tbt_p99 * 1e3,
     );
     Ok(())
 }
@@ -218,8 +318,11 @@ serve:      --policy vllm|sglang|sglang-chunked|duet|dynamo
             --qps F --n N --model qwen3-8b|qwen3-14b|qwen3-32b --tp N
             --budget N --tbt-slo F --seed N
             --replicas N --router round-robin|least-loaded|kv-pressure
+            --backend sim|pjrt-stub   (stream through the unified
+                                       front-end; pjrt-stub skips unless
+                                       built with --features xla-pjrt)
 partition:  --decode N --ctx N --prefill N [--tbt-slo F]
-e2e:        --requests N --max-new N --lookahead N   (needs `make artifacts`)
+e2e:        --requests N --max-new N   (needs `make artifacts`)
 ";
 
 fn main() {

@@ -27,6 +27,11 @@ pub struct Recorder {
     /// Cumulative GPU busy time, seconds (per-device sum; divide by
     /// worker count × duration for average device utilization).
     pub busy_time: f64,
+    /// Inter-token gaps checked against a per-request TBT SLO
+    /// (requests submitted with `SubmitOptions::slo_tbt_ms`).
+    pub slo_checked: u64,
+    /// Of those, gaps that exceeded the request's SLO.
+    pub slo_violations: u64,
 }
 
 impl Recorder {
@@ -45,6 +50,11 @@ impl Recorder {
         self.completed += 1;
         self.output_tokens += r.generated;
         self.total_tokens += r.prompt_len + r.generated;
+        if let Some(slo) = r.slo_tbt {
+            let gaps = r.tbt_samples();
+            self.slo_checked += gaps.len() as u64;
+            self.slo_violations += gaps.iter().filter(|&&g| g > slo).count() as u64;
+        }
     }
 
     /// Merge everything another recorder accumulated — iteration-level
@@ -65,6 +75,8 @@ impl Recorder {
         self.completed += other.completed;
         self.output_tokens += other.output_tokens;
         self.total_tokens += other.total_tokens;
+        self.slo_checked += other.slo_checked;
+        self.slo_violations += other.slo_violations;
     }
 
     pub fn record_util(&mut self, weight_s: f64, sm: f64, hbm: f64) {
@@ -99,6 +111,11 @@ impl Recorder {
             sched_overhead_per_iter: self.sched_overhead / self.iterations.max(1) as f64,
             tbt_p99: stats::percentile(&self.tbt, 99.0),
             busy_frac: self.busy_time / self.duration.max(1e-9),
+            slo_attainment: if self.slo_checked > 0 {
+                Some(1.0 - self.slo_violations as f64 / self.slo_checked as f64)
+            } else {
+                None
+            },
         }
     }
 }
@@ -126,6 +143,9 @@ pub struct Report {
     /// GPU busy time / wall time (sum across workers; divide by worker
     /// count for the average per-device utilization).
     pub busy_frac: f64,
+    /// Fraction of SLO-checked inter-token gaps within their request's
+    /// TBT SLO. `None` when no request declared one.
+    pub slo_attainment: Option<f64>,
 }
 
 impl Report {
@@ -212,6 +232,25 @@ mod tests {
         assert!((a.busy_time - 2.0).abs() < 1e-12);
         // latency samples from both recorders survive the merge
         assert_eq!(rep.tbt.n, 4);
+    }
+
+    #[test]
+    fn slo_attainment_counts_violations() {
+        let mut m = Recorder::new();
+        let mut r = Request::new(1, 0.0, 10, 3).with_slo_tbt(0.15);
+        r.advance_prefill(10);
+        r.advance_decode(1.0);
+        r.advance_decode(1.1); // gap 0.1: within SLO
+        r.advance_decode(1.4); // gap 0.3: violation
+        m.record_finished(&r);
+        m.duration = 2.0;
+        let rep = m.report("s");
+        assert_eq!(m.slo_checked, 2);
+        assert_eq!(m.slo_violations, 1);
+        assert!((rep.slo_attainment.unwrap() - 0.5).abs() < 1e-9);
+        // no SLO declared anywhere -> attainment is None
+        let rep2 = Recorder::new().report("t");
+        assert!(rep2.slo_attainment.is_none());
     }
 
     #[test]

@@ -40,6 +40,13 @@ pub struct Request {
     pub finished_at: Option<f64>,
     /// Timestamps of each generated token, for TBT accounting.
     pub token_times: Vec<f64>,
+    /// Actual prompt token ids, when serving real traffic through the
+    /// front-end (real execution backends need the values). Simulated
+    /// requests carry only `prompt_len`.
+    pub prompt_tokens: Option<Vec<i32>>,
+    /// Per-request decode TBT SLO in seconds, when the submitter set one
+    /// (attainment is accounted in `metrics::Recorder`).
+    pub slo_tbt: Option<f64>,
 }
 
 impl Request {
@@ -57,7 +64,37 @@ impl Request {
             first_token_at: None,
             finished_at: None,
             token_times: Vec::new(),
+            prompt_tokens: None,
+            slo_tbt: None,
         }
+    }
+
+    /// Attach the actual prompt token ids (serving path). The declared
+    /// `prompt_len` must match the payload.
+    pub fn with_prompt_tokens(mut self, tokens: Vec<i32>) -> Request {
+        assert_eq!(
+            tokens.len() as u64,
+            self.prompt_len,
+            "prompt payload length must match prompt_len"
+        );
+        self.prompt_tokens = Some(tokens);
+        self
+    }
+
+    /// Attach a per-request decode TBT SLO (seconds).
+    pub fn with_slo_tbt(mut self, slo: f64) -> Request {
+        self.slo_tbt = Some(slo);
+        self
+    }
+
+    /// A fresh copy for recompute-style retry (preemption, role
+    /// reconfiguration): identity and payload survive, all progress is
+    /// discarded.
+    pub fn reset_for_retry(&self) -> Request {
+        let mut fresh = Request::new(self.id, self.arrival, self.prompt_len, self.output_len);
+        fresh.prompt_tokens = self.prompt_tokens.clone();
+        fresh.slo_tbt = self.slo_tbt;
+        fresh
     }
 
     /// Prompt tokens not yet prefilled.
@@ -173,6 +210,31 @@ mod tests {
     fn decode_before_prefill_panics() {
         let mut r = Request::new(1, 0.0, 10, 1);
         r.advance_decode(0.5);
+    }
+
+    #[test]
+    fn reset_for_retry_keeps_identity_drops_progress() {
+        let mut r = Request::new(3, 1.5, 4, 8)
+            .with_prompt_tokens(vec![9, 8, 7, 6])
+            .with_slo_tbt(0.1);
+        r.advance_prefill(4);
+        r.advance_decode(2.0);
+        let fresh = r.reset_for_retry();
+        assert_eq!(fresh.id, 3);
+        assert_eq!(fresh.arrival, 1.5);
+        assert_eq!(fresh.prompt_len, 4);
+        assert_eq!(fresh.output_len, 8);
+        assert_eq!(fresh.prompt_tokens.as_deref(), Some(&[9, 8, 7, 6][..]));
+        assert_eq!(fresh.slo_tbt, Some(0.1));
+        assert_eq!(fresh.phase, Phase::Waiting);
+        assert_eq!(fresh.generated, 0);
+        assert!(fresh.token_times.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "prompt payload length must match")]
+    fn prompt_payload_length_mismatch_panics() {
+        let _ = Request::new(1, 0.0, 3, 1).with_prompt_tokens(vec![1, 2]);
     }
 
     #[test]

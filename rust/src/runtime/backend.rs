@@ -1,0 +1,215 @@
+//! The PJRT execution backend: the real-runtime adapter behind the
+//! [`ExecutionBackend`] seam.
+//!
+//! This wraps [`TinyRuntime`] (the AOT-compiled tiny model served through
+//! PJRT) so the *same* `EngineCore` + `server::Server` lifecycle that
+//! drives the simulated evaluation also drives real tokens:
+//!
+//! - a prefill chunk that completes a prompt runs `TinyRuntime::prefill`
+//!   over the whole prompt and installs the K/V rows into a decode slot
+//!   (`install_slot`); the prefill logits' argmax becomes the request's
+//!   first output token;
+//! - each decode entry advances one step through the batched
+//!   `decode_step` (one runtime call per iteration covers every scheduled
+//!   slot, exactly like CUDA-Graph replay over a captured batch);
+//! - iteration latency is *measured wall clock*, so the engine's clock,
+//!   TTFT and TBT all come from the same `metrics` structs as the
+//!   simulations — but reflect real execution.
+//!
+//! Capability notes:
+//! - The runtime owns no SM partitions, so `supports_spatial()` is false
+//!   and the core degrades spatial plans to aggregated execution (logged
+//!   once). On the default build `TinyRuntime` is the stub whose `load`
+//!   fails, so this backend can only be constructed where `make
+//!   artifacts` has run (`--features xla-pjrt` for the real runtime).
+//! - The runtime batches over at most [`MAX_SLOTS`] sequences; configure
+//!   the serving path with `max_batch <= MAX_SLOTS`
+//!   ([`PjrtBackend::tune_config`] does this).
+//! - Chunked prefill cannot be split across runtime calls (the AOT
+//!   executable prefills a whole prompt); non-completing chunks advance
+//!   only engine-side accounting and the full prompt executes at the
+//!   completing chunk.
+//!
+//! [`ExecutionBackend`]: crate::engine::ExecutionBackend
+
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::ServingConfig;
+use crate::engine::{ExecutionBackend, IterationBatch};
+use crate::hw::PartitionPlan;
+use crate::request::RequestId;
+use crate::sim::{DispatchMode, ExecResult, SpatialResult};
+
+use super::pjrt::{TinyRuntime, MAX_SLOTS};
+
+/// [`ExecutionBackend`] over the PJRT-compiled tiny model.
+pub struct PjrtBackend {
+    rt: TinyRuntime,
+    /// Decode slot index per in-flight request.
+    slots: HashMap<RequestId, usize>,
+    free_slots: Vec<usize>,
+    /// Produced-but-not-yet-popped token values per request (FIFO).
+    out: HashMap<RequestId, VecDeque<i32>>,
+    /// Per-slot mirrors of the runtime's decode inputs.
+    slot_token: [i32; MAX_SLOTS],
+    slot_len: [i32; MAX_SLOTS],
+}
+
+impl PjrtBackend {
+    pub fn new(rt: TinyRuntime) -> PjrtBackend {
+        PjrtBackend {
+            rt,
+            slots: HashMap::new(),
+            free_slots: (0..MAX_SLOTS).rev().collect(),
+            out: HashMap::new(),
+            slot_token: [0; MAX_SLOTS],
+            slot_len: [0; MAX_SLOTS],
+        }
+    }
+
+    /// Load the AOT artifacts from the default directory. Fails on the
+    /// stub build (no `xla` crate) or when `make artifacts` has not run.
+    pub fn load_default() -> Result<PjrtBackend> {
+        Ok(PjrtBackend::new(TinyRuntime::load_default()?))
+    }
+
+    pub fn platform(&self) -> String {
+        self.rt.platform()
+    }
+
+    /// Clamp a serving config to what the runtime can batch: at most
+    /// [`MAX_SLOTS`] concurrent sequences.
+    pub fn tune_config(&self, mut cfg: ServingConfig) -> ServingConfig {
+        cfg.max_batch = cfg.max_batch.min(MAX_SLOTS as u32);
+        cfg
+    }
+
+    fn prefill_request(&mut self, id: RequestId, prompt: &[i32]) {
+        assert!(
+            prompt.len() < self.rt.meta.max_context,
+            "pjrt backend: prompt of {} tokens exceeds compiled max_context {} (request {id})",
+            prompt.len(),
+            self.rt.meta.max_context
+        );
+        let slot = self
+            .free_slots
+            .pop()
+            .expect("pjrt backend out of decode slots: configure max_batch <= MAX_SLOTS");
+        let pre = self
+            .rt
+            .prefill(prompt)
+            .expect("pjrt prefill failed (artifacts missing or runtime error)");
+        self.rt.install_slot(slot, prompt.len(), &pre.k, &pre.v);
+        self.slot_token[slot] = pre.next_token;
+        self.slot_len[slot] = prompt.len() as i32;
+        self.slots.insert(id, slot);
+        self.out.entry(id).or_default().push_back(pre.next_token);
+    }
+
+    fn decode_batch(&mut self, ids: &[RequestId]) {
+        // One batched step over the scheduled slots; unscheduled slots
+        // are masked with length 0 (the runtime treats them as inactive,
+        // mirroring CUDA-Graph padding).
+        let mut tokens = [0i32; MAX_SLOTS];
+        let mut lengths = [0i32; MAX_SLOTS];
+        for id in ids {
+            let Some(&slot) = self.slots.get(id) else { continue };
+            // The step appends K/V at position `length`; past max_context
+            // it would silently write into the next slot's cache rows.
+            // The serving front-end rejects submissions that could get
+            // here (`max_context()`), so this is a hard invariant.
+            assert!(
+                (self.slot_len[slot] as usize) < self.rt.meta.max_context,
+                "pjrt backend: slot {slot} reached compiled max_context {} (request {id})",
+                self.rt.meta.max_context
+            );
+            tokens[slot] = self.slot_token[slot];
+            lengths[slot] = self.slot_len[slot];
+        }
+        let next = self
+            .rt
+            .decode_step(&tokens, &lengths)
+            .expect("pjrt decode step failed");
+        for id in ids {
+            let Some(&slot) = self.slots.get(id) else { continue };
+            self.slot_token[slot] = next[slot];
+            self.slot_len[slot] += 1;
+            self.out.entry(*id).or_default().push_back(next[slot]);
+        }
+    }
+}
+
+impl ExecutionBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn supports_spatial(&self) -> bool {
+        false // no SM partitioning on this runtime
+    }
+
+    /// The compiled KV cache holds `max_context` positions per slot;
+    /// prompt + generated tokens must stay within it.
+    fn max_context(&self) -> Option<u64> {
+        Some(self.rt.meta.max_context as u64)
+    }
+
+    fn run_aggregated(
+        &mut self,
+        batch: &IterationBatch<'_>,
+        _sms: u32,
+        _mode: DispatchMode,
+    ) -> ExecResult {
+        let t0 = Instant::now();
+        // Prompt-completing chunks run the whole prompt now (see module
+        // docs); earlier chunks of the same prompt were engine-side only.
+        for p in batch.prefill.iter().filter(|p| p.completes_prompt) {
+            let prompt = p
+                .prompt
+                .expect("pjrt backend requires prompt token payloads (submit real prompts)");
+            self.prefill_request(p.id, prompt);
+        }
+        if !batch.decode.is_empty() {
+            let ids: Vec<RequestId> = batch.decode.iter().map(|d| d.id).collect();
+            self.decode_batch(&ids);
+        }
+        ExecResult {
+            gpu_time: t0.elapsed().as_secs_f64().max(1e-9),
+            dispatch_time: 0.0,
+            sm_util: 0.0,
+            hbm_util: 0.0,
+            flops: 0.0,
+            bytes: 0.0,
+        }
+    }
+
+    fn run_spatial(&mut self, _batch: &IterationBatch<'_>, _plan: &PartitionPlan) -> SpatialResult {
+        unreachable!("core degrades spatial plans for backends without SM partitioning")
+    }
+
+    fn pop_token(&mut self, id: RequestId, _index: u64) -> i32 {
+        self.out
+            .get_mut(&id)
+            .and_then(|q| q.pop_front())
+            .expect("pjrt backend has no pending token for this request")
+    }
+
+    fn release(&mut self, id: RequestId) {
+        if let Some(slot) = self.slots.remove(&id) {
+            self.rt.clear_slot(slot);
+            self.slot_token[slot] = 0;
+            self.slot_len[slot] = 0;
+            self.free_slots.push(slot);
+        }
+        self.out.remove(&id);
+    }
+
+    /// Single-device runtime: prefill and decode share one device, so
+    /// there is no P2P cache movement to model.
+    fn kv_transfer_time(&self, _tokens: u64) -> f64 {
+        0.0
+    }
+}

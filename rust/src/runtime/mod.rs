@@ -7,18 +7,21 @@
 //!   feature (the offline vendor set has no `xla` crate); the default
 //!   build uses an API-compatible stub whose `load` fails, and callers
 //!   skip gracefully via `artifacts::artifacts_available()`.
-//! - [`serving`]: a real continuous-batching engine over the runtime with
-//!   DuetServe-style decode-priority + look-ahead scheduling.
+//! - [`backend`]: the [`PjrtBackend`] adapter implementing the engine's
+//!   `ExecutionBackend` seam over [`TinyRuntime`]. Real serving goes
+//!   through the unified front-end (`server::Server` over an
+//!   `EngineCore`) with this backend plugged in — the crate has exactly
+//!   one request lifecycle, simulated or real.
 
 pub mod artifacts;
+pub mod backend;
 #[cfg(feature = "xla-pjrt")]
 #[path = "pjrt_xla.rs"]
 pub mod pjrt;
 #[cfg(not(feature = "xla-pjrt"))]
 #[path = "pjrt_stub.rs"]
 pub mod pjrt;
-pub mod serving;
 
 pub use artifacts::{ArtifactMeta, WeightManifest};
+pub use backend::PjrtBackend;
 pub use pjrt::TinyRuntime;
-pub use serving::{RealEngine, RealPolicy, RealRequest, RealStats};

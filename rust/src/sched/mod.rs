@@ -13,6 +13,8 @@
 //!   emitting spatial iterations.
 //! - [`duet::StaticPartitionScheduler`] — Fig. 9 ablation: always-spatial
 //!   with a fixed TPC split.
+//! - [`prefill_only::PrefillOnlyScheduler`] — prompt-only chunked
+//!   scheduling for prefill-role cluster workers (disaggregation).
 //!
 //! PD disaggregation (Dynamo baseline) is an *engine topology*, not a
 //! scheduler — see [`crate::engine::disagg`].
@@ -21,12 +23,14 @@ pub mod budget;
 pub mod chunked;
 pub mod duet;
 pub mod optimizer;
+pub mod prefill_only;
 pub mod sglang;
 
 pub use budget::{knee_budget, slo_budget};
 pub use chunked::ChunkedScheduler;
 pub use duet::{DuetScheduler, StaticPartitionScheduler};
 pub use optimizer::{optimize_partition, optimize_partition_verbatim};
+pub use prefill_only::PrefillOnlyScheduler;
 pub use sglang::SglangDefaultScheduler;
 
 use crate::hw::PartitionPlan;

@@ -1,0 +1,108 @@
+//! Prefill-only scheduler for role-tagged cluster workers.
+//!
+//! Prefill workers in a disaggregated (Dynamo-style) topology used to
+//! bypass the [`Scheduler`] trait entirely — the cluster packed their
+//! batches by hand. This scheduler closes that gap: a prefill worker now
+//! runs the exact same [`EngineCore::step_once`] path as every other
+//! worker, with a policy that continues in-flight prompt chunks first and
+//! then admits waiting prompts under the token budget and KV watermark
+//! (FCFS, no skip-ahead). The cluster extracts requests whose prompt
+//! completed (phase transitioned to Decode) after each step and hands
+//! their KV to a decode worker through the transfer queue.
+//!
+//! [`EngineCore::step_once`]: crate::engine::EngineCore::step_once
+
+use super::{build_chunked_batch, IterationPlan, SchedInput, Scheduler};
+
+/// Chunked prompt processing with no decode scheduling.
+#[derive(Debug, Clone)]
+pub struct PrefillOnlyScheduler {
+    pub token_budget: u64,
+    pub max_batch: usize,
+    pub kv_watermark: f64,
+}
+
+impl PrefillOnlyScheduler {
+    pub fn new(token_budget: u64, max_batch: usize, kv_watermark: f64) -> PrefillOnlyScheduler {
+        PrefillOnlyScheduler {
+            token_budget,
+            max_batch,
+            kv_watermark,
+        }
+    }
+}
+
+impl Scheduler for PrefillOnlyScheduler {
+    fn plan(&mut self, input: &SchedInput<'_>) -> IterationPlan {
+        // The shared batch builder already prioritizes running prefills
+        // and admits FCFS under the watermark. Decode-phase requests are
+        // transient on a prefill worker (extracted right after the step
+        // that completes their prompt), so the decode side is normally
+        // empty; if a straggler exists it is carried along harmlessly.
+        let (decode, prefill) =
+            build_chunked_batch(input, self.token_budget, self.max_batch, self.kv_watermark);
+        if decode.is_empty() && prefill.is_empty() {
+            IterationPlan::Idle
+        } else {
+            IterationPlan::Aggregated { decode, prefill }
+        }
+    }
+
+    fn name(&self) -> String {
+        "prefill-only".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::Request;
+
+    #[test]
+    fn idle_on_empty_queues() {
+        let mut s = PrefillOnlyScheduler::new(8192, 64, 0.02);
+        let plan = s.plan(&SchedInput {
+            running: &[],
+            waiting: &[],
+            kv_free_tokens: 1000,
+            kv_total_tokens: 1000,
+        });
+        assert!(plan.is_idle());
+        assert_eq!(s.name(), "prefill-only");
+    }
+
+    #[test]
+    fn continues_running_chunk_before_admitting() {
+        let mut s = PrefillOnlyScheduler::new(1000, 64, 0.0);
+        let mut running = vec![Request::new(0, 0.0, 2000, 4)];
+        running[0].advance_prefill(600);
+        let waiting = vec![Request::new(1, 0.0, 300, 4)];
+        let plan = s.plan(&SchedInput {
+            running: &running,
+            waiting: &waiting,
+            kv_free_tokens: 100_000,
+            kv_total_tokens: 100_000,
+        });
+        let chunks = plan.prefill_chunks();
+        assert_eq!(chunks.len(), 1, "budget consumed by the running prompt");
+        assert_eq!(chunks[0].id, 0);
+        assert_eq!(chunks[0].tokens, 1000);
+        assert!(!chunks[0].admit);
+        assert!(plan.decode_ids().is_empty());
+    }
+
+    #[test]
+    fn admission_is_fcfs_under_kv_pressure() {
+        let mut s = PrefillOnlyScheduler::new(8192, 64, 0.0);
+        // Head prompt does not fit free KV: nothing is admitted, even
+        // though the second prompt would fit (no skip-ahead).
+        let waiting = vec![Request::new(0, 0.0, 5000, 4), Request::new(1, 0.0, 10, 4)];
+        let plan = s.plan(&SchedInput {
+            running: &[],
+            waiting: &waiting,
+            kv_free_tokens: 4000,
+            kv_total_tokens: 100_000,
+        });
+        assert!(plan.is_idle());
+    }
+}

@@ -1,58 +1,184 @@
-//! Threaded serving front-end for the real PJRT engine.
+//! The unified serving front-end: one request lifecycle, pluggable
+//! execution.
 //!
-//! The coordinator owns the event loop: a dedicated engine thread runs
-//! continuous batching over the PJRT runtime while client threads submit
-//! requests through an mpsc queue and receive their tokens over per-
-//! request streaming channels. This is the "router" face of the system —
-//! the equivalent of vLLM's front-end, minus HTTP (no network stack in
-//! the offline vendor set; the channel protocol is the seam where one
-//! would bolt it on).
+//! # Architecture
+//!
+//! There is exactly one serving path in this crate. [`ServerCore`] is a
+//! deterministic, single-threaded request lifecycle over an
+//! [`EngineCore`] — the *same* iteration core the simulated engines run —
+//! paired with any [`ExecutionBackend`]:
+//!
+//! - **sim** ([`SimBackend`](crate::engine::SimBackend)): iteration
+//!   latencies come from the roofline-calibrated executor; the serving
+//!   path and `SimEngine` produce *identical* metrics for the same
+//!   workload and seed (property-tested).
+//! - **pjrt** ([`PjrtBackend`](crate::runtime::PjrtBackend)): the real
+//!   AOT-compiled tiny model; latencies are measured wall clock and
+//!   tokens are real greedy argmax. On the default (stub) build the
+//!   backend fails to construct with a clear message — real execution
+//!   needs `--features xla-pjrt` plus `make artifacts`. The runtime has
+//!   no SM partitions, so DuetServe's spatial plans degrade to
+//!   aggregated iterations (logged once by the core).
+//!
+//! Any [`Scheduler`] — including `DuetScheduler` — can drive the serving
+//! path, because admission, chunked prefill, KV accounting, preemption
+//! and metrics all live in the shared core, not here.
+//!
+//! [`Server`] is a thin *transport* layer over `ServerCore`: a dedicated
+//! engine thread owns the core (PJRT handles are not `Send`; the engine
+//! thread owns the device for its lifetime) while client threads submit
+//! through a control channel and stream [`TokenEvent`]s back over
+//! per-request channels. Each event carries the engine-clock timestamp of
+//! its token, so TTFT/TBT come from the same [`metrics`](crate::metrics)
+//! structs as the simulations.
+//!
+//! # Request lifecycle
+//!
+//! [`ServerCore::submit`] applies bounded-queue backpressure: beyond the
+//! configured depth of not-yet-admitted requests it returns
+//! [`SubmitError::QueueFull`] instead of queueing unboundedly. Admission
+//! out of the submission queue is FCFS in arrival order (priority breaks
+//! ties among equal arrivals); under slot/KV exhaustion the scheduler
+//! blocks the head rather than skipping ahead, so first-token order
+//! follows submission order (regression-tested). `cancel` removes a
+//! request at any stage and closes its stream with
+//! [`FinishReason::Cancelled`]; shutdown drains in-flight and queued work
+//! before the engine thread exits, returning the final [`Report`].
 
-use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::cmp::Ordering;
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::runtime::pjrt::{TinyRuntime, MAX_SLOTS};
+use crate::config::ServingConfig;
+use crate::engine::{CoreStep, EngineCore, ExecutionBackend, SimBackend, MAX_SIM_TIME};
+use crate::metrics::{Recorder, Report};
+use crate::request::{Request, RequestId};
+use crate::sched::{scheduler_for, Scheduler};
+
+/// Default bound on accepted-but-not-yet-admitted requests.
+pub const DEFAULT_QUEUE_DEPTH: usize = 1024;
+
+/// Why a stream ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// All requested tokens were generated.
+    Completed,
+    /// The client cancelled the request.
+    Cancelled,
+    /// The engine dropped it (prompt can never fit KV, or divergence
+    /// drain).
+    Dropped,
+}
 
 /// A streamed token event.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TokenEvent {
-    /// One generated token.
-    Token(i32),
-    /// Generation finished (EOS/max tokens).
-    Done,
+    /// One generated token, stamped with the engine-clock time it was
+    /// produced (seconds).
+    Token { value: i32, at: f64 },
+    /// Generation finished.
+    Done { reason: FinishReason },
 }
 
-/// A submitted request: prompt + generation bound + the stream to answer
-/// on.
-struct Submission {
-    prompt: Vec<i32>,
-    max_new_tokens: usize,
-    stream: Sender<TokenEvent>,
+/// Per-request submission options.
+#[derive(Debug, Clone)]
+pub struct SubmitOptions {
+    /// Generation bound (≥ 1).
+    pub max_new_tokens: u64,
+    /// Per-request decode TBT SLO in milliseconds; attainment is
+    /// accounted in the shared metrics ([`Report::slo_attainment`]).
+    pub slo_tbt_ms: Option<f64>,
+    /// Larger runs earlier among submissions with the same arrival time.
+    pub priority: i32,
+    /// Engine-clock arrival override (trace replay); `None` means "now".
+    pub arrival: Option<f64>,
 }
+
+impl Default for SubmitOptions {
+    fn default() -> SubmitOptions {
+        SubmitOptions {
+            max_new_tokens: 16,
+            slo_tbt_ms: None,
+            priority: 0,
+            arrival: None,
+        }
+    }
+}
+
+/// Why a submission was not accepted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Backpressure: the submission queue is at its configured depth.
+    QueueFull { depth: usize },
+    /// The request itself is invalid (empty prompt, zero tokens).
+    Rejected(String),
+    /// The server is shutting down (or its engine thread is gone).
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { depth } => {
+                write!(f, "submission queue full (depth {depth})")
+            }
+            SubmitError::Rejected(why) => write!(f, "rejected: {why}"),
+            SubmitError::ShuttingDown => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 enum Control {
-    Submit(Submission),
+    Submit {
+        prompt: Vec<i32>,
+        opts: SubmitOptions,
+        reply: Sender<std::result::Result<RequestHandle, SubmitError>>,
+    },
+    Cancel(RequestId),
     Shutdown,
 }
 
 /// Handle the client holds for one in-flight request.
-pub struct ResponseStream {
-    rx: Receiver<TokenEvent>,
+pub struct RequestHandle {
+    id: RequestId,
+    /// Wall-clock submission time (client side).
     pub submitted_at: Instant,
+    rx: Receiver<TokenEvent>,
+    ctl: Option<Sender<Control>>,
 }
 
-impl ResponseStream {
-    /// Block until the request completes; returns all tokens.
+impl RequestHandle {
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    /// Block until the request completes; returns the token values.
     pub fn collect(self) -> Vec<i32> {
         let mut out = Vec::new();
         while let Ok(ev) = self.rx.recv() {
             match ev {
-                TokenEvent::Token(t) => out.push(t),
-                TokenEvent::Done => break,
+                TokenEvent::Token { value, .. } => out.push(value),
+                TokenEvent::Done { .. } => break,
+            }
+        }
+        out
+    }
+
+    /// Block until the request completes; returns every event including
+    /// the terminal [`TokenEvent::Done`].
+    pub fn collect_events(self) -> Vec<TokenEvent> {
+        let mut out = Vec::new();
+        while let Ok(ev) = self.rx.recv() {
+            let done = matches!(ev, TokenEvent::Done { .. });
+            out.push(ev);
+            if done {
+                break;
             }
         }
         out
@@ -62,154 +188,496 @@ impl ResponseStream {
     pub fn try_next(&self) -> Option<TokenEvent> {
         self.rx.try_recv().ok()
     }
+
+    /// Blocking wait for the next event; `None` once the stream closed.
+    pub fn next_event(&self) -> Option<TokenEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Ask the server to cancel this request. Returns false when the
+    /// handle has no control channel (core-driven handles — use
+    /// [`ServerCore::cancel`]) or the server is gone.
+    pub fn cancel(&self) -> bool {
+        match &self.ctl {
+            Some(tx) => tx.send(Control::Cancel(self.id)).is_ok(),
+            None => false,
+        }
+    }
 }
 
-/// The server: spawn once, submit from any thread.
+struct PendingEntry {
+    req: Request,
+    priority: i32,
+}
+
+struct StreamState {
+    tx: Sender<TokenEvent>,
+    /// Tokens consumed from the backend for this request.
+    seen: u64,
+    /// Token events actually delivered to the client (replays after
+    /// recompute preemption are suppressed).
+    emitted: u64,
+    /// Timestamp of output token 0, to detect recompute replays.
+    first_at: f64,
+}
+
+/// The unified request lifecycle: an [`EngineCore`] plus submission
+/// queue, token streams, backpressure, cancel and drain. Deterministic
+/// and single-threaded — [`Server`] adds the transport.
+pub struct ServerCore {
+    core: EngineCore,
+    pending: VecDeque<PendingEntry>,
+    streams: HashMap<RequestId, StreamState>,
+    queue_depth: usize,
+    next_id: RequestId,
+    /// Finished-list watermark: entries before this index were pumped.
+    finished_seen: usize,
+    /// Requests cancelled by the client.
+    pub cancelled: u64,
+}
+
+impl ServerCore {
+    /// Core over an explicit scheduler + backend.
+    pub fn new(
+        cfg: ServingConfig,
+        scheduler: Box<dyn Scheduler>,
+        backend: Box<dyn ExecutionBackend>,
+    ) -> ServerCore {
+        ServerCore {
+            core: EngineCore::with_backend(cfg, scheduler, backend),
+            pending: VecDeque::new(),
+            streams: HashMap::new(),
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+            next_id: 0,
+            finished_seen: 0,
+            cancelled: 0,
+        }
+    }
+
+    /// Simulated-backend core: the policy scheduler from `cfg` over a
+    /// [`SimBackend`] — byte-identical engine construction to
+    /// `SimEngine`, so metrics match the simulation exactly.
+    pub fn sim(cfg: ServingConfig, seed: u64) -> ServerCore {
+        let scheduler = scheduler_for(&cfg);
+        let backend = Box::new(SimBackend::from_config(&cfg, seed));
+        ServerCore::new(cfg, scheduler, backend)
+    }
+
+    /// Set the backpressure bound (accepted-but-not-admitted requests).
+    pub fn with_queue_depth(mut self, depth: usize) -> ServerCore {
+        self.queue_depth = depth.max(1);
+        self
+    }
+
+    pub fn engine(&self) -> &EngineCore {
+        &self.core
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.core.clock
+    }
+
+    /// Accepted but not yet admitted requests (backpressure signal).
+    pub fn queued(&self) -> usize {
+        self.pending.len() + self.core.queue_len()
+    }
+
+    /// Submit one request. Applies validation and bounded-queue
+    /// backpressure; on success the returned handle streams
+    /// [`TokenEvent`]s as the engine produces them.
+    pub fn submit(
+        &mut self,
+        prompt: Vec<i32>,
+        opts: SubmitOptions,
+    ) -> std::result::Result<RequestHandle, SubmitError> {
+        if prompt.is_empty() {
+            return Err(SubmitError::Rejected("empty prompt".into()));
+        }
+        if opts.max_new_tokens == 0 {
+            return Err(SubmitError::Rejected("max_new_tokens must be >= 1".into()));
+        }
+        if opts.arrival.is_some_and(|a| !a.is_finite()) {
+            return Err(SubmitError::Rejected("arrival must be finite".into()));
+        }
+        if let Some(mc) = self.core.backend.max_context() {
+            let need = prompt.len() as u64 + opts.max_new_tokens;
+            if need > mc {
+                return Err(SubmitError::Rejected(format!(
+                    "prompt + max_new_tokens ({need}) exceeds the backend's max context ({mc})"
+                )));
+            }
+        }
+        if self.queued() >= self.queue_depth {
+            return Err(SubmitError::QueueFull {
+                depth: self.queue_depth,
+            });
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let arrival = opts.arrival.unwrap_or(self.core.clock);
+        let mut req = Request::new(id, arrival, prompt.len() as u64, opts.max_new_tokens)
+            .with_prompt_tokens(prompt);
+        if let Some(ms) = opts.slo_tbt_ms {
+            req = req.with_slo_tbt(ms / 1e3);
+        }
+        let (tx, rx) = channel();
+        self.streams.insert(
+            id,
+            StreamState {
+                tx,
+                seen: 0,
+                emitted: 0,
+                first_at: f64::NAN,
+            },
+        );
+        // Sorted insert by (arrival, priority desc); equal keys keep
+        // submission order (FCFS).
+        let priority = opts.priority;
+        let pos = self.pending.make_contiguous().partition_point(|e| {
+            match e.req.arrival.partial_cmp(&arrival).expect("arrival must not be NaN") {
+                Ordering::Less => true,
+                Ordering::Greater => false,
+                Ordering::Equal => e.priority >= priority,
+            }
+        });
+        self.pending.insert(pos, PendingEntry { req, priority });
+        Ok(RequestHandle {
+            id,
+            submitted_at: Instant::now(),
+            rx,
+            ctl: None,
+        })
+    }
+
+    /// Cancel a request at any stage. Returns false when it is unknown
+    /// (already finished or never existed).
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        if let Some(pos) = self.pending.iter().position(|e| e.req.id == id) {
+            self.pending.remove(pos);
+            self.cancelled += 1;
+            self.finish_stream(id, FinishReason::Cancelled);
+            return true;
+        }
+        if let Some(pos) = self.core.waiting.iter().position(|r| r.id == id) {
+            let r = self.core.waiting.remove(pos).unwrap();
+            let _ = self.core.kv.release(r.id);
+            self.cancelled += 1;
+            self.finish_stream(id, FinishReason::Cancelled);
+            return true;
+        }
+        if let Some(pos) = self.core.running.iter().position(|r| r.id == id) {
+            let r = self.core.running.remove(pos);
+            let _ = self.core.kv.release(r.id);
+            self.cancelled += 1;
+            self.finish_stream(id, FinishReason::Cancelled);
+            return true;
+        }
+        false
+    }
+
+    /// One engine iteration. Returns false when no pending, queued or
+    /// running work remains.
+    ///
+    /// The admit / divergence-drain / idle-clock-jump structure here
+    /// deliberately mirrors `SimEngine::step` — that equivalence is what
+    /// makes the serving path produce identical metrics to the
+    /// simulation (`server_path_matches_sim_engine_metrics` pins it; a
+    /// change to either loop must keep that property test green).
+    pub fn step(&mut self) -> bool {
+        self.admit_pending();
+        if self.pending.is_empty() && !self.core.has_local_work() {
+            return false;
+        }
+        if self.core.clock > MAX_SIM_TIME {
+            // Diverged: drain bookkeeping, close every open stream.
+            self.core.dropped += self.pending.len() as u64;
+            let mut victims: Vec<RequestId> =
+                self.pending.drain(..).map(|e| e.req.id).collect();
+            victims.extend(self.core.waiting.iter().map(|r| r.id));
+            victims.extend(self.core.running.iter().map(|r| r.id));
+            self.core.drain_diverged();
+            for id in victims {
+                self.finish_stream(id, FinishReason::Dropped);
+            }
+            return false;
+        }
+
+        match self.core.step_once(self.pending.is_empty()) {
+            CoreStep::Executed => {
+                self.pump_tokens();
+                true
+            }
+            CoreStep::DroppedHead(id) => {
+                self.finish_stream(id, FinishReason::Dropped);
+                true
+            }
+            CoreStep::Idle => {
+                if let Some(e) = self.pending.front() {
+                    self.core.clock = self.core.clock.max(e.req.arrival);
+                    true
+                } else {
+                    !self.core.running.is_empty()
+                }
+            }
+        }
+    }
+
+    /// Drain: run until all accepted work has completed (or been
+    /// dropped/cancelled).
+    pub fn run_to_idle(&mut self) {
+        while self.step() {}
+    }
+
+    /// Drain and produce the final report from the shared metrics
+    /// structs (same `Recorder`/`Report` as the simulated engines).
+    pub fn finish(mut self) -> Report {
+        self.run_to_idle();
+        self.core.metrics.duration = self.core.clock;
+        let label = format!(
+            "server/{}+{}",
+            self.core.policy_name(),
+            self.core.backend_name()
+        );
+        self.core.metrics.report(&label)
+    }
+
+    fn admit_pending(&mut self) {
+        while let Some(e) = self.pending.front() {
+            if e.req.arrival <= self.core.clock {
+                let e = self.pending.pop_front().unwrap();
+                self.core.inject(e.req);
+            } else {
+                break;
+            }
+        }
+        // If totally idle, jump to the next submission's arrival.
+        if !self.core.has_local_work() {
+            if let Some(e) = self.pending.front() {
+                self.core.clock = self.core.clock.max(e.req.arrival);
+                let e = self.pending.pop_front().unwrap();
+                self.core.inject(e.req);
+            }
+        }
+    }
+
+    /// Emit newly produced tokens to their streams. Values come from the
+    /// backend (real argmax on PJRT, synthetic in simulation); timestamps
+    /// come from the request's engine-clock token times.
+    fn pump_tokens(&mut self) {
+        for r in &self.core.running {
+            Self::pump_one(&mut self.streams, &mut *self.core.backend, r);
+        }
+        while self.finished_seen < self.core.finished.len() {
+            let i = self.finished_seen;
+            Self::pump_one(
+                &mut self.streams,
+                &mut *self.core.backend,
+                &self.core.finished[i],
+            );
+            let id = self.core.finished[i].id;
+            self.finished_seen += 1;
+            self.finish_stream(id, FinishReason::Completed);
+        }
+    }
+
+    fn pump_one(
+        streams: &mut HashMap<RequestId, StreamState>,
+        backend: &mut dyn ExecutionBackend,
+        r: &Request,
+    ) {
+        let Some(st) = streams.get_mut(&r.id) else { return };
+        // Recompute preemption replays the request from scratch: progress
+        // regressed, or token 0 now carries a different timestamp. Replay
+        // consumption from the backend, but do not re-emit to the client.
+        if r.generated < st.seen
+            || (st.seen > 0 && r.generated > 0 && r.token_times[0] != st.first_at)
+        {
+            st.seen = 0;
+        }
+        while st.seen < r.generated {
+            let idx = st.seen;
+            let value = backend.pop_token(r.id, idx);
+            let at = r.token_times[idx as usize];
+            if idx == 0 {
+                st.first_at = at;
+            }
+            st.seen += 1;
+            if idx >= st.emitted {
+                let _ = st.tx.send(TokenEvent::Token { value, at });
+                st.emitted = idx + 1;
+            }
+        }
+    }
+
+    fn finish_stream(&mut self, id: RequestId, reason: FinishReason) {
+        if let Some(st) = self.streams.remove(&id) {
+            let _ = st.tx.send(TokenEvent::Done { reason });
+        }
+        // Backend-side state (real KV slots, pending tokens) is
+        // reclaimed once the stream is closed.
+        self.core.backend_mut().release(id);
+    }
+
+    /// Close every open stream with a terminal event and report what ran
+    /// so far. The transport calls this when a backend failure (panic)
+    /// aborts the engine loop: clients must observe an explicit `Done`
+    /// rather than a silently truncated stream.
+    fn into_aborted_report(mut self) -> Report {
+        let ids: Vec<RequestId> = self.streams.keys().copied().collect();
+        for id in ids {
+            self.finish_stream(id, FinishReason::Dropped);
+        }
+        self.core.metrics.duration = self.core.clock;
+        self.core.metrics.report("server/aborted")
+    }
+}
+
+fn apply_control(core: &mut ServerCore, ctl: Control, handle_ctl: &Sender<Control>) -> bool {
+    match ctl {
+        Control::Submit {
+            prompt,
+            opts,
+            reply,
+        } => {
+            let res = core.submit(prompt, opts).map(|mut h| {
+                h.ctl = Some(handle_ctl.clone());
+                h
+            });
+            let _ = reply.send(res);
+            false
+        }
+        Control::Cancel(id) => {
+            core.cancel(id);
+            false
+        }
+        Control::Shutdown => true,
+    }
+}
+
+/// Threaded transport over [`ServerCore`]: spawn once, submit from any
+/// thread, stream tokens back.
 pub struct Server {
     tx: Sender<Control>,
-    engine_thread: Option<JoinHandle<Result<()>>>,
-}
-
-struct ActiveSlot {
-    length: usize,
-    produced: usize,
-    max_new: usize,
-    next_token: i32,
-    stream: Sender<TokenEvent>,
+    engine_thread: Option<JoinHandle<Report>>,
 }
 
 impl Server {
-    /// Start the engine loop on its own thread. The runtime is
-    /// constructed *on* that thread via `make_rt` (PJRT handles are not
-    /// `Send`; the engine thread owns the device for its lifetime —
-    /// exactly the single-dispatcher model the paper's CPU loop uses).
-    /// `lookahead` is the number of decode steps run between admission
-    /// points (§4.3's look-ahead).
+    /// Start the engine loop on its own thread. The core is constructed
+    /// *on* that thread via `make_core` (real-runtime handles are not
+    /// `Send`; the engine thread owns the device for its lifetime).
+    /// Construction failures (e.g. the PJRT stub refusing to load) are
+    /// reported here, not deferred.
     pub fn start(
-        make_rt: impl FnOnce() -> Result<TinyRuntime> + Send + 'static,
-        lookahead: u32,
-    ) -> Server {
+        make_core: impl FnOnce() -> Result<ServerCore> + Send + 'static,
+    ) -> Result<Server> {
         let (tx, rx) = channel::<Control>();
-        let engine_thread = std::thread::spawn(move || -> Result<()> {
-            let mut rt = make_rt()?;
-            let mut queue: VecDeque<Submission> = VecDeque::new();
-            let mut slots: Vec<Option<ActiveSlot>> = (0..MAX_SLOTS).map(|_| None).collect();
-            let mut shutdown = false;
+        let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
+        let handle_ctl = tx.clone();
+        let engine_thread = std::thread::spawn(move || -> Report {
+            let mut core = match make_core() {
+                Ok(c) => {
+                    let _ = ready_tx.send(Ok(()));
+                    c
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e.to_string()));
+                    return Recorder::new().report("server/failed");
+                }
+            };
+            let mut draining = false;
             loop {
-                // Drain the control queue (non-blocking while busy; block
-                // when idle to avoid spinning).
-                let idle =
-                    queue.is_empty() && slots.iter().all(|s| s.is_none());
-                if idle {
-                    if shutdown {
-                        return Ok(());
-                    }
-                    match rx.recv() {
-                        Ok(Control::Submit(s)) => queue.push_back(s),
-                        Ok(Control::Shutdown) | Err(_) => return Ok(()),
-                    }
-                }
-                while let Ok(ctl) = rx.try_recv() {
-                    match ctl {
-                        Control::Submit(s) => queue.push_back(s),
-                        Control::Shutdown => shutdown = true,
-                    }
-                }
-
-                // Admission: fill free slots while occupancy is low; one
-                // per span under load (decode priority).
-                let active = slots.iter().filter(|s| s.is_some()).count();
-                let n_admit = if active < MAX_SLOTS / 2 {
-                    MAX_SLOTS - active
-                } else {
-                    1
-                };
-                for _ in 0..n_admit {
-                    let Some(sub) = queue.pop_front() else { break };
-                    let Some(idx) = slots.iter().position(|s| s.is_none()) else {
-                        queue.push_front(sub);
-                        break;
-                    };
-                    let prompt_len = sub.prompt.len();
-                    let pre = rt.prefill(&sub.prompt)?;
-                    rt.install_slot(idx, prompt_len, &pre.k, &pre.v);
-                    let _ = sub.stream.send(TokenEvent::Token(pre.next_token));
-                    if sub.max_new_tokens <= 1 {
-                        let _ = sub.stream.send(TokenEvent::Done);
-                        rt.clear_slot(idx);
-                        continue;
-                    }
-                    slots[idx] = Some(ActiveSlot {
-                        length: prompt_len,
-                        produced: 1,
-                        max_new: sub.max_new_tokens,
-                        next_token: pre.next_token,
-                        stream: sub.stream,
-                    });
-                }
-
-                // Look-ahead decode span.
-                if slots.iter().any(|s| s.is_some()) {
-                    for _ in 0..lookahead.max(1) {
-                        let mut tokens = [0i32; MAX_SLOTS];
-                        let mut lengths = [0i32; MAX_SLOTS];
-                        for (i, s) in slots.iter().enumerate() {
-                            if let Some(s) = s {
-                                tokens[i] = s.next_token;
-                                lengths[i] = s.length as i32;
+                loop {
+                    match rx.try_recv() {
+                        Ok(ctl) => {
+                            if apply_control(&mut core, ctl, &handle_ctl) {
+                                draining = true;
                             }
                         }
-                        let next = rt.decode_step(&tokens, &lengths)?;
-                        for i in 0..MAX_SLOTS {
-                            let finished = {
-                                let Some(s) = slots[i].as_mut() else { continue };
-                                s.length += 1;
-                                s.next_token = next[i];
-                                s.produced += 1;
-                                let _ = s.stream.send(TokenEvent::Token(next[i]));
-                                s.produced >= s.max_new
-                                    || s.length + 1 >= rt.meta.max_context
-                            };
-                            if finished {
-                                let s = slots[i].take().unwrap();
-                                let _ = s.stream.send(TokenEvent::Done);
-                                rt.clear_slot(i);
-                            }
-                        }
-                        if slots.iter().all(|s| s.is_none()) {
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            draining = true;
                             break;
                         }
                     }
                 }
+                // Contain backend failures (the PJRT adapter surfaces
+                // runtime errors as panics): close every stream with a
+                // terminal event instead of unwinding the whole thread.
+                let progressed = match std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| core.step()),
+                ) {
+                    Ok(p) => p,
+                    Err(_) => return core.into_aborted_report(),
+                };
+                if !progressed {
+                    if draining {
+                        break;
+                    }
+                    // Idle: block until the next control message.
+                    match rx.recv() {
+                        Ok(ctl) => {
+                            if apply_control(&mut core, ctl, &handle_ctl) {
+                                draining = true;
+                            }
+                        }
+                        Err(_) => break,
+                    }
+                }
             }
+            core.finish()
         });
-        Server {
-            tx,
-            engine_thread: Some(engine_thread),
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(Server {
+                tx,
+                engine_thread: Some(engine_thread),
+            }),
+            Ok(Err(msg)) => {
+                let _ = engine_thread.join();
+                Err(anyhow!("server failed to start: {msg}"))
+            }
+            Err(_) => {
+                let _ = engine_thread.join();
+                Err(anyhow!("server engine thread died during startup"))
+            }
         }
     }
 
-    /// Submit a request; returns the token stream handle.
-    pub fn submit(&self, prompt: Vec<i32>, max_new_tokens: usize) -> ResponseStream {
-        let (stx, srx) = channel();
-        let _ = self.tx.send(Control::Submit(Submission {
-            prompt,
-            max_new_tokens,
-            stream: stx,
-        }));
-        ResponseStream {
-            rx: srx,
-            submitted_at: Instant::now(),
+    /// Start over the simulated backend with `cfg`'s policy scheduler.
+    pub fn start_sim(cfg: ServingConfig, seed: u64) -> Result<Server> {
+        Server::start(move || Ok(ServerCore::sim(cfg, seed)))
+    }
+
+    /// Submit a request; blocks briefly for the engine's accept/reject
+    /// decision (backpressure is synchronous).
+    pub fn submit(
+        &self,
+        prompt: Vec<i32>,
+        opts: SubmitOptions,
+    ) -> std::result::Result<RequestHandle, SubmitError> {
+        let (reply, reply_rx) = channel();
+        if self
+            .tx
+            .send(Control::Submit {
+                prompt,
+                opts,
+                reply,
+            })
+            .is_err()
+        {
+            return Err(SubmitError::ShuttingDown);
+        }
+        match reply_rx.recv() {
+            Ok(res) => res,
+            Err(_) => Err(SubmitError::ShuttingDown),
         }
     }
 
-    /// Drain in-flight work and stop the engine thread.
-    pub fn shutdown(mut self) -> Result<()> {
+    /// Drain in-flight and queued work, stop the engine thread, and
+    /// return the final report.
+    pub fn shutdown(mut self) -> Result<Report> {
         let _ = self.tx.send(Control::Shutdown);
-        if let Some(h) = self.engine_thread.take() {
-            h.join().map_err(|_| anyhow::anyhow!("engine thread panicked"))??;
-        }
-        Ok(())
+        let h = self.engine_thread.take().expect("engine thread already joined");
+        h.join().map_err(|_| anyhow!("engine thread panicked"))
     }
 }
 
@@ -219,5 +687,301 @@ impl Drop for Server {
         if let Some(h) = self.engine_thread.take() {
             let _ = h.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Policy;
+    use crate::engine::IterationBatch;
+    use crate::hw::PartitionPlan;
+    use crate::sim::{DispatchMode, ExecResult, SpatialResult};
+
+    fn cfg() -> ServingConfig {
+        ServingConfig::default_8b().with_policy(Policy::VllmChunked)
+    }
+
+    /// Sim backend with a compiled-runtime-style context bound, to
+    /// exercise the `max_context` submission guard.
+    struct CappedSim(SimBackend);
+
+    impl ExecutionBackend for CappedSim {
+        fn name(&self) -> &'static str {
+            "capped-sim"
+        }
+
+        fn run_aggregated(
+            &mut self,
+            batch: &IterationBatch<'_>,
+            sms: u32,
+            mode: DispatchMode,
+        ) -> ExecResult {
+            self.0.run_aggregated(batch, sms, mode)
+        }
+
+        fn run_spatial(
+            &mut self,
+            batch: &IterationBatch<'_>,
+            plan: &PartitionPlan,
+        ) -> SpatialResult {
+            self.0.run_spatial(batch, plan)
+        }
+
+        fn max_context(&self) -> Option<u64> {
+            Some(64)
+        }
+
+        fn kv_transfer_time(&self, tokens: u64) -> f64 {
+            self.0.kv_transfer_time(tokens)
+        }
+    }
+
+    fn prompt(n: usize) -> Vec<i32> {
+        (0..n).map(|i| (i % 911) as i32).collect()
+    }
+
+    #[test]
+    fn submit_validates_and_defaults() {
+        let mut s = ServerCore::sim(cfg(), 1);
+        assert!(matches!(
+            s.submit(Vec::new(), SubmitOptions::default()),
+            Err(SubmitError::Rejected(_))
+        ));
+        assert!(matches!(
+            s.submit(
+                prompt(4),
+                SubmitOptions {
+                    max_new_tokens: 0,
+                    ..Default::default()
+                }
+            ),
+            Err(SubmitError::Rejected(_))
+        ));
+        assert!(matches!(
+            s.submit(
+                prompt(4),
+                SubmitOptions {
+                    arrival: Some(f64::NAN),
+                    ..Default::default()
+                }
+            ),
+            Err(SubmitError::Rejected(_))
+        ));
+        let h = s.submit(prompt(4), SubmitOptions::default()).unwrap();
+        assert_eq!(h.id(), 0);
+        assert_eq!(s.queued(), 1);
+    }
+
+    #[test]
+    fn backend_max_context_bounds_submissions() {
+        let c = cfg();
+        let backend = Box::new(CappedSim(SimBackend::from_config(&c, 1)));
+        let mut s = ServerCore::new(c.clone(), scheduler_for(&c), backend);
+        // 60-token prompt + 8 output tokens > 64: rejected up front.
+        assert!(matches!(
+            s.submit(
+                prompt(60),
+                SubmitOptions {
+                    max_new_tokens: 8,
+                    ..Default::default()
+                }
+            ),
+            Err(SubmitError::Rejected(_))
+        ));
+        // Within the bound: served normally.
+        let h = s
+            .submit(
+                prompt(32),
+                SubmitOptions {
+                    max_new_tokens: 8,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        s.run_to_idle();
+        assert_eq!(h.collect().len(), 8);
+    }
+
+    #[test]
+    fn backpressure_returns_queue_full() {
+        let mut s = ServerCore::sim(cfg(), 1).with_queue_depth(2);
+        s.submit(prompt(8), SubmitOptions::default()).unwrap();
+        s.submit(prompt(8), SubmitOptions::default()).unwrap();
+        let err = s.submit(prompt(8), SubmitOptions::default()).unwrap_err();
+        assert_eq!(err, SubmitError::QueueFull { depth: 2 });
+        // Draining the queue frees capacity again.
+        s.run_to_idle();
+        assert!(s.submit(prompt(8), SubmitOptions::default()).is_ok());
+    }
+
+    #[test]
+    fn tokens_stream_with_monotone_timestamps_and_done() {
+        let mut s = ServerCore::sim(cfg(), 1);
+        let h = s
+            .submit(
+                prompt(512),
+                SubmitOptions {
+                    max_new_tokens: 8,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        s.run_to_idle();
+        let events = h.collect_events();
+        assert_eq!(events.len(), 9, "8 tokens + Done");
+        let times: Vec<f64> = events
+            .iter()
+            .filter_map(|e| match e {
+                TokenEvent::Token { at, .. } => Some(*at),
+                TokenEvent::Done { .. } => None,
+            })
+            .collect();
+        assert_eq!(times.len(), 8);
+        assert!(times.windows(2).all(|w| w[1] >= w[0]));
+        assert_eq!(
+            events.last(),
+            Some(&TokenEvent::Done {
+                reason: FinishReason::Completed
+            })
+        );
+        s.engine().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cancel_pending_and_running() {
+        let mut s = ServerCore::sim(cfg(), 1);
+        let opts = SubmitOptions {
+            max_new_tokens: 64,
+            ..Default::default()
+        };
+        let h1 = s.submit(prompt(2048), opts.clone()).unwrap();
+        let h2 = s.submit(prompt(2048), opts).unwrap();
+        // Cancel h2 while still pending.
+        assert!(s.cancel(h2.id()));
+        // Run a couple of iterations so h1 is admitted, then cancel it.
+        s.step();
+        assert!(s.cancel(h1.id()));
+        assert!(!s.cancel(h1.id()), "double cancel reports unknown");
+        s.run_to_idle();
+        assert_eq!(s.cancelled, 2);
+        assert_eq!(s.engine().metrics.completed, 0);
+        let e1 = h1.collect_events();
+        assert_eq!(
+            e1.last(),
+            Some(&TokenEvent::Done {
+                reason: FinishReason::Cancelled
+            })
+        );
+        s.engine().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn priority_breaks_ties_among_equal_arrivals() {
+        let mut s = ServerCore::sim(cfg(), 1);
+        let mk = |priority| SubmitOptions {
+            max_new_tokens: 4,
+            priority,
+            arrival: Some(0.0),
+            ..Default::default()
+        };
+        let low = s.submit(prompt(64), mk(0)).unwrap();
+        let high = s.submit(prompt(64), mk(5)).unwrap();
+        s.run_to_idle();
+        let first_of = |h: RequestHandle| match h.collect_events().first().cloned() {
+            Some(TokenEvent::Token { at, .. }) => at,
+            other => panic!("expected a token, got {other:?}"),
+        };
+        let (t_low, t_high) = (first_of(low), first_of(high));
+        assert!(
+            t_high <= t_low,
+            "high priority ({t_high}) must not start after low ({t_low})"
+        );
+    }
+
+    #[test]
+    fn oversized_prompt_stream_reports_dropped() {
+        let mut c = cfg();
+        c.gpu_mem_util = 0.25; // tiny KV
+        let kv_tokens = c.kv_capacity_tokens() as usize;
+        let mut s = ServerCore::sim(c, 1);
+        let h = s.submit(prompt(kv_tokens * 2), SubmitOptions::default()).unwrap();
+        s.run_to_idle();
+        assert_eq!(
+            h.collect_events().last(),
+            Some(&TokenEvent::Done {
+                reason: FinishReason::Dropped
+            })
+        );
+        assert_eq!(s.engine().dropped, 1);
+    }
+
+    #[test]
+    fn slo_attainment_flows_into_report() {
+        let mut s = ServerCore::sim(cfg(), 1);
+        let h = s
+            .submit(
+                prompt(256),
+                SubmitOptions {
+                    max_new_tokens: 8,
+                    slo_tbt_ms: Some(1e-6), // impossibly tight: all violate
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        s.run_to_idle();
+        assert_eq!(h.collect().len(), 8);
+        let rep = s.finish();
+        let att = rep.slo_attainment.expect("SLO was declared");
+        assert!(att < 0.5, "tight SLO must show violations: {att}");
+    }
+
+    #[test]
+    fn threaded_server_streams_and_drains_on_shutdown() {
+        let server = Server::start_sim(cfg(), 1).unwrap();
+        let handles: Vec<RequestHandle> = (0..6)
+            .map(|i| {
+                server
+                    .submit(
+                        prompt(128 + i * 17),
+                        SubmitOptions {
+                            max_new_tokens: 5,
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap()
+            })
+            .collect();
+        // Shut down immediately: drain must still finish everything.
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.completed, 6);
+        assert!(report.ttft.mean > 0.0);
+        for h in handles {
+            assert_eq!(h.collect().len(), 5);
+        }
+    }
+
+    #[test]
+    fn threaded_cancel_via_handle() {
+        let server = Server::start_sim(cfg(), 1).unwrap();
+        let h = server
+            .submit(
+                prompt(8000),
+                SubmitOptions {
+                    max_new_tokens: 100_000,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert!(h.cancel());
+        let events = h.collect_events();
+        assert_eq!(
+            events.last(),
+            Some(&TokenEvent::Done {
+                reason: FinishReason::Cancelled
+            })
+        );
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.completed, 0);
     }
 }

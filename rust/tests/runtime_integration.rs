@@ -2,7 +2,10 @@
 //! decode path is consistent with prefill (the interchange contract's
 //! rust half). Skips gracefully if `make artifacts` has not run.
 
-use duetserve::runtime::{artifacts, RealEngine, RealPolicy, RealRequest, TinyRuntime};
+use duetserve::config::{Policy, ServingConfig};
+use duetserve::runtime::{artifacts, PjrtBackend, TinyRuntime};
+use duetserve::sched::{scheduler_for, SglangDefaultScheduler};
+use duetserve::server::{RequestHandle, ServerCore, SubmitOptions};
 
 fn runtime_or_skip() -> Option<TinyRuntime> {
     if !artifacts::artifacts_available() {
@@ -75,28 +78,54 @@ fn inactive_slots_do_not_disturb_active_ones() {
     assert_eq!(solo, crowded, "inactive slots must be isolated");
 }
 
-#[test]
-fn real_engine_serves_batch_and_policies_agree_on_tokens() {
-    let Some(rt) = runtime_or_skip() else { return };
-    let reqs: Vec<RealRequest> = (0..6)
-        .map(|i| RealRequest {
-            id: i,
-            prompt: vec![(i as i32 * 37 + 11) % 2048, 5, 9, 2 + i as i32],
-            max_new_tokens: 6,
+/// Serve a fixed batch through the unified lifecycle (ServerCore +
+/// PjrtBackend) under one scheduler; return (id, tokens) pairs.
+fn serve_unified(prefill_first: bool) -> Vec<(u64, Vec<i32>)> {
+    let backend = PjrtBackend::load_default().unwrap();
+    let cfg = backend.tune_config(ServingConfig::default_8b().with_policy(Policy::VllmChunked));
+    let scheduler: Box<dyn duetserve::sched::Scheduler> = if prefill_first {
+        Box::new(SglangDefaultScheduler::new(
+            2 * cfg.token_budget as u64,
+            cfg.max_batch as usize,
+        ))
+    } else {
+        scheduler_for(&cfg)
+    };
+    let mut core = ServerCore::new(cfg, scheduler, Box::new(backend));
+    let handles: Vec<RequestHandle> = (0..6u64)
+        .map(|i| {
+            core.submit(
+                vec![(i as i32 * 37 + 11) % 2048, 5, 9, 2 + i as i32],
+                SubmitOptions {
+                    max_new_tokens: 6,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
         })
         .collect();
-    let mut e1 = RealEngine::new(rt, RealPolicy::DuetInterleave { lookahead: 4 });
-    let s1 = e1.serve(reqs.clone()).unwrap();
-    assert_eq!(s1.completed, 6);
-    assert!(s1.throughput_rps > 0.0);
-    for (_, toks) in &s1.outputs {
+    core.run_to_idle();
+    assert_eq!(core.engine().metrics.completed, 6);
+    core.engine().check_invariants().unwrap();
+    handles
+        .into_iter()
+        .map(|h| (h.id(), h.collect()))
+        .collect()
+}
+
+#[test]
+fn unified_server_serves_real_tokens_schedule_invariantly() {
+    if runtime_or_skip().is_none() {
+        return;
+    }
+    let decode_priority = serve_unified(false);
+    let prefill_priority = serve_unified(true);
+    for (_, toks) in &decode_priority {
         assert_eq!(toks.len(), 6);
     }
-
-    let rt2 = TinyRuntime::load_default().unwrap();
-    let mut e2 = RealEngine::new(rt2, RealPolicy::PrefillFirst);
-    let s2 = e2.serve(reqs).unwrap();
-    assert_eq!(s2.completed, 6);
     // Scheduling order differs but greedy tokens are model-determined.
-    assert_eq!(s1.outputs, s2.outputs, "tokens must be schedule-invariant");
+    assert_eq!(
+        decode_priority, prefill_priority,
+        "tokens must be schedule-invariant"
+    );
 }

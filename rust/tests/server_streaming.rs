@@ -1,92 +1,341 @@
-//! Threaded front-end integration: token streaming, concurrency, clean
-//! shutdown, and schedule-invariance of greedy outputs through the
-//! server path. Skips when artifacts are absent.
+//! Unified front-end integration: token streaming, FCFS admission
+//! fairness under backpressure, cancel/drain semantics, and the identity
+//! property — the server path and `SimEngine` produce the same metrics
+//! for the same workload and seed. Everything runs on the simulated
+//! execution backend, so none of these tests require AOT artifacts.
 
-use duetserve::runtime::{artifacts, TinyRuntime};
-use duetserve::server::{Server, TokenEvent};
+use duetserve::config::{Policy, ServingConfig};
+use duetserve::engine::engine_for;
+use duetserve::server::{
+    FinishReason, Server, ServerCore, SubmitError, SubmitOptions, TokenEvent,
+};
+use duetserve::util::proptest::check;
+use duetserve::workload::synthetic::jittered_workload;
 
-fn available() -> bool {
-    artifacts::artifacts_available()
+fn cfg() -> ServingConfig {
+    ServingConfig::default_8b().with_policy(Policy::VllmChunked)
+}
+
+fn prompt(n: usize) -> Vec<i32> {
+    (0..n).map(|i| (i % 997) as i32).collect()
 }
 
 #[test]
 fn streams_tokens_and_terminates() {
-    if !available() {
-        return;
-    }
-    let server = Server::start(TinyRuntime::load_default, 4);
-    let stream = server.submit(vec![5, 99, 1023, 7, 300, 12], 6);
-    let toks = stream.collect();
+    let server = Server::start_sim(cfg(), 4).unwrap();
+    let handle = server
+        .submit(
+            vec![5, 99, 1023, 7, 300, 12],
+            SubmitOptions {
+                max_new_tokens: 6,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let toks = handle.collect();
     assert_eq!(toks.len(), 6);
     server.shutdown().unwrap();
 }
 
 #[test]
-fn server_tokens_match_direct_runtime() {
-    if !available() {
-        return;
-    }
-    let prompt = vec![11i32, 500, 42, 1999, 8];
-    // Direct greedy path.
-    let mut rt = TinyRuntime::load_default().unwrap();
-    let pre = rt.prefill(&prompt).unwrap();
-    rt.install_slot(0, prompt.len(), &pre.k, &pre.v);
-    let mut direct = vec![pre.next_token];
-    let mut tokens = [0i32; 8];
-    let mut lengths = [0i32; 8];
-    tokens[0] = pre.next_token;
-    lengths[0] = prompt.len() as i32;
-    for _ in 0..3 {
-        let next = rt.decode_step(&tokens, &lengths).unwrap();
-        direct.push(next[0]);
-        tokens[0] = next[0];
-        lengths[0] += 1;
-    }
-    drop(rt);
-
-    let server = Server::start(TinyRuntime::load_default, 2);
-    let toks = server.submit(prompt, 4).collect();
-    assert_eq!(toks, direct, "server path must match direct greedy decode");
-    server.shutdown().unwrap();
-}
-
-#[test]
 fn concurrent_submissions_all_complete() {
-    if !available() {
-        return;
-    }
-    let server = Server::start(TinyRuntime::load_default, 4);
-    let streams: Vec<_> = (0..12)
+    let server = Server::start_sim(cfg(), 4).unwrap();
+    let handles: Vec<_> = (0..12)
         .map(|i| {
-            server.submit(
-                (0..6 + i % 5).map(|j| ((i * 53 + j * 19) % 2048) as i32).collect(),
-                5,
-            )
+            server
+                .submit(
+                    prompt(64 + i * 31),
+                    SubmitOptions {
+                        max_new_tokens: 5,
+                        ..Default::default()
+                    },
+                )
+                .unwrap()
         })
         .collect();
-    for s in streams {
-        assert_eq!(s.collect().len(), 5);
+    for h in handles {
+        assert_eq!(h.collect().len(), 5);
     }
-    server.shutdown().unwrap();
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.completed, 12);
 }
 
 #[test]
 fn try_next_is_nonblocking() {
-    if !available() {
-        return;
-    }
-    let server = Server::start(TinyRuntime::load_default, 1);
-    let stream = server.submit(vec![1, 2, 3], 3);
-    // Either nothing yet or a token — must not hang.
-    let _ = stream.try_next();
+    let server = Server::start_sim(cfg(), 1).unwrap();
+    let handle = server
+        .submit(
+            vec![1, 2, 3],
+            SubmitOptions {
+                max_new_tokens: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    // Either nothing yet or an event — must not hang.
+    let _ = handle.try_next();
     let mut n = 0;
     loop {
-        match stream.try_next() {
-            Some(TokenEvent::Token(_)) => n += 1,
-            Some(TokenEvent::Done) => break,
+        match handle.try_next() {
+            Some(TokenEvent::Token { .. }) => n += 1,
+            Some(TokenEvent::Done { .. }) => break,
             None => std::thread::yield_now(),
         }
     }
     assert!(n <= 3);
     server.shutdown().unwrap();
+}
+
+/// Regression for the old front-end's slot-exhaustion unfairness: the
+/// legacy loop re-queued the head at the front but still burned an
+/// admission slot per decode span, so later requests could overtake
+/// earlier ones. The unified admission is FCFS: under sustained
+/// backpressure (more requests than concurrent slots), first tokens must
+/// appear in submission order.
+#[test]
+fn fcfs_admission_order_under_backpressure() {
+    let mut c = cfg();
+    c.max_batch = 2; // two concurrent slots: everything else queues
+    let mut s = ServerCore::sim(c, 7).with_queue_depth(64);
+    let handles: Vec<_> = (0..10)
+        .map(|_| {
+            s.submit(
+                prompt(1500),
+                SubmitOptions {
+                    max_new_tokens: 12,
+                    arrival: Some(0.0),
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        })
+        .collect();
+    s.run_to_idle();
+    let mut first_token_times = Vec::new();
+    for h in handles {
+        let events = h.collect_events();
+        let first = events
+            .iter()
+            .find_map(|e| match e {
+                TokenEvent::Token { at, .. } => Some(*at),
+                TokenEvent::Done { .. } => None,
+            })
+            .expect("request must produce tokens");
+        first_token_times.push(first);
+    }
+    // Submission order == id order; first tokens must be non-decreasing.
+    for w in first_token_times.windows(2) {
+        assert!(
+            w[1] >= w[0],
+            "FCFS violated: later submission started earlier ({} < {})",
+            w[1],
+            w[0]
+        );
+    }
+    assert_eq!(s.engine().metrics.completed, 10);
+}
+
+#[test]
+fn queue_full_is_backpressure_not_loss() {
+    let mut s = ServerCore::sim(cfg(), 3).with_queue_depth(3);
+    let mut accepted = Vec::new();
+    let mut rejected = 0;
+    for _ in 0..8 {
+        match s.submit(
+            prompt(256),
+            SubmitOptions {
+                max_new_tokens: 4,
+                ..Default::default()
+            },
+        ) {
+            Ok(h) => accepted.push(h),
+            Err(SubmitError::QueueFull { depth }) => {
+                assert_eq!(depth, 3);
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert!(rejected > 0, "depth 3 must reject some of 8 submissions");
+    s.run_to_idle();
+    // Every accepted request completes; nothing is silently lost.
+    assert_eq!(s.engine().metrics.completed, accepted.len() as u64);
+    for h in accepted {
+        assert_eq!(h.collect().len(), 4);
+    }
+}
+
+#[test]
+fn shutdown_drains_queued_work() {
+    let server = Server::start_sim(cfg(), 5).unwrap();
+    let handles: Vec<_> = (0..9)
+        .map(|_| {
+            server
+                .submit(
+                    prompt(4000),
+                    SubmitOptions {
+                        max_new_tokens: 7,
+                        ..Default::default()
+                    },
+                )
+                .unwrap()
+        })
+        .collect();
+    // Immediate shutdown: graceful drain must finish all 9 first.
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.completed, 9);
+    for h in handles {
+        let events = h.collect_events();
+        assert_eq!(
+            events.last(),
+            Some(&TokenEvent::Done {
+                reason: FinishReason::Completed
+            })
+        );
+        assert_eq!(events.len(), 8, "7 tokens + Done");
+    }
+}
+
+#[test]
+fn cancel_mid_stream_stops_generation() {
+    let mut s = ServerCore::sim(cfg(), 2);
+    let long = s
+        .submit(
+            prompt(1024),
+            SubmitOptions {
+                max_new_tokens: 10_000,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let short = s
+        .submit(
+            prompt(1024),
+            SubmitOptions {
+                max_new_tokens: 6,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    // Let both get going, then cancel the long one mid-decode.
+    for _ in 0..12 {
+        s.step();
+    }
+    assert!(s.cancel(long.id()));
+    s.run_to_idle();
+    let long_events = long.collect_events();
+    assert_eq!(
+        long_events.last(),
+        Some(&TokenEvent::Done {
+            reason: FinishReason::Cancelled
+        })
+    );
+    assert!(long_events.len() < 10_001, "cancel must stop the stream early");
+    assert_eq!(short.collect().len(), 6);
+    assert_eq!(s.engine().metrics.completed, 1);
+    s.engine().check_invariants().unwrap();
+}
+
+/// The unification property: for the same trace and seed, the serving
+/// path (ServerCore over the sim backend) and `SimEngine` produce
+/// identical token counts and TTFT/TBT metrics — one request lifecycle,
+/// two entry points.
+#[test]
+fn server_path_matches_sim_engine_metrics() {
+    check(6, |g| {
+        let n = g.usize_range(8, 24);
+        let isl = g.u64_range(64, 6000);
+        let osl = g.u64_range(2, 48);
+        let qps = g.f64_range(1.0, 12.0);
+        let seed = g.case_seed;
+        let w = jittered_workload(n, isl, osl, 0.3, qps, seed).sorted_by_arrival();
+
+        let mut sim = engine_for(cfg(), seed);
+        let sim_rep = sim.run(w.clone());
+
+        let mut srv = ServerCore::sim(cfg(), seed).with_queue_depth(usize::MAX);
+        let handles: Vec<_> = w
+            .requests
+            .iter()
+            .map(|r| {
+                srv.submit(
+                    prompt(r.prompt_len as usize),
+                    SubmitOptions {
+                        max_new_tokens: r.output_len,
+                        arrival: Some(r.arrival),
+                        ..Default::default()
+                    },
+                )
+                .expect("unbounded queue")
+            })
+            .collect();
+        srv.run_to_idle();
+        srv.engine().check_invariants()?;
+        let streamed: usize = handles.into_iter().map(|h| h.collect().len()).sum();
+        let srv_rep = srv.finish();
+
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()));
+        if srv_rep.completed != sim_rep.completed {
+            return Err(format!(
+                "completed {} != sim {}",
+                srv_rep.completed, sim_rep.completed
+            ));
+        }
+        if streamed as u64 != sim.metrics.output_tokens {
+            return Err(format!(
+                "streamed tokens {streamed} != sim output {}",
+                sim.metrics.output_tokens
+            ));
+        }
+        if !close(srv_rep.ttft.mean, sim_rep.ttft.mean) {
+            return Err(format!(
+                "ttft {} != sim {}",
+                srv_rep.ttft.mean, sim_rep.ttft.mean
+            ));
+        }
+        if !close(srv_rep.tbt.mean, sim_rep.tbt.mean) {
+            return Err(format!(
+                "tbt {} != sim {}",
+                srv_rep.tbt.mean, sim_rep.tbt.mean
+            ));
+        }
+        if !close(srv_rep.duration, sim_rep.duration) {
+            return Err(format!(
+                "duration {} != sim {}",
+                srv_rep.duration, sim_rep.duration
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// DuetScheduler drives the serving path too (acceptance criterion: any
+/// scheduler can be selected for serving).
+#[test]
+fn duet_scheduler_serves_through_front_end() {
+    let duet = ServingConfig::default_8b().with_policy(Policy::Duet);
+    let mut s = ServerCore::sim(duet, 2);
+    let handles: Vec<_> = (0..20)
+        .map(|i| {
+            s.submit(
+                prompt(8000),
+                SubmitOptions {
+                    max_new_tokens: 32,
+                    arrival: Some(i as f64 * 0.12),
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        })
+        .collect();
+    s.run_to_idle();
+    for h in handles {
+        assert_eq!(h.collect().len(), 32);
+    }
+    assert_eq!(s.engine().metrics.completed, 20);
+    assert!(
+        s.engine().metrics.spatial_iterations > 0,
+        "duet should multiplex under prefill pressure on the serving path"
+    );
+    s.engine().check_invariants().unwrap();
 }
