@@ -7,17 +7,40 @@
 //! `PjrtBackend` (see `e2e_serve`) and the identical lifecycle serves the
 //! real AOT-compiled model.
 //!
+//! With `--replicas N` (N ≥ 2) the same lifecycle serves across an
+//! N-worker cluster: each submission is routed at arrival time through
+//! the pluggable `Router` seam (`--router`, default least-outstanding)
+//! against live load signals, and the drain report is the workers'
+//! merged recorder — streaming, cancel and backpressure are unchanged.
+//!
 //!     cargo run --release --example streaming_server
+//!     cargo run --release --example streaming_server -- --replicas 3 --router kv-pressure
+//!
+//! The engine invariants are checked on the live drain path by
+//! `ServerCore::finish` (which `shutdown` drives), not just on batch
+//! runs.
 
 use std::time::Instant;
 
+use duetserve::cli::Args;
 use duetserve::config::{Policy, ServingConfig};
 use duetserve::server::{Server, SubmitOptions, TokenEvent};
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let replicas = args.u32_or("replicas", 1);
+    let router = args.str_or("router", "least-outstanding");
     let cfg = ServingConfig::default_8b().with_policy(Policy::Duet);
-    println!("starting engine thread (DuetScheduler over the sim backend)...");
-    let server = Server::start_sim(cfg, 1)?;
+    let server = if replicas > 1 {
+        println!(
+            "starting engine thread ({replicas} DuetScheduler sim workers, \
+             {router} routing)..."
+        );
+        Server::start_sim_replicated(cfg, replicas, 1, &router)?
+    } else {
+        println!("starting engine thread (DuetScheduler over the sim backend)...");
+        Server::start_sim(cfg, 1)?
+    };
 
     // 3 concurrent "client" threads, 4 requests each.
     let t0 = Instant::now();
@@ -76,7 +99,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Drain and read the end-of-run report from the shared metrics
-    // structs — the same TTFT/TBT accounting every simulated bench uses.
+    // structs — the same TTFT/TBT accounting every simulated bench uses,
+    // merged across workers when serving a cluster.
     let report = server.shutdown()?;
     println!(
         "report[{}]: {} completed; ttft mean {:.0} ms; tbt mean {:.1} ms \

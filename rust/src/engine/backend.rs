@@ -143,6 +143,16 @@ pub trait ExecutionBackend {
         (((id.wrapping_mul(0x9E37_79B9) ^ index) & 0x7FFF) as i32).max(1)
     }
 
+    /// Whether [`pop_token`](Self::pop_token) is a pure function of
+    /// `(id, index)` — true for the synthetic default, false for real
+    /// runtimes that queue argmax values on the device that produced
+    /// them. Cluster topologies require this to stream tokens for
+    /// requests in flight *between* workers (the producing worker has
+    /// already released them); the cluster asserts it when pumping.
+    fn deterministic_tokens(&self) -> bool {
+        true
+    }
+
     /// Reclaim backend-side state for `id` (slots, pending tokens).
     fn release(&mut self, _id: RequestId) {}
 

@@ -3,8 +3,27 @@
 //! One loop serves every multi-GPU topology: [`ClusterEngine`] owns a set
 //! of [`Worker`]s (each an [`EngineCore`] plus a [`WorkerRole`]), a global
 //! arrival stream, a pluggable [`Router`], and a prefill→decode KV
-//! [`Transfer`] queue. Each step advances whichever worker has the
-//! smallest local clock:
+//! [`Transfer`] queue.
+//!
+//! The loop is *re-entrant and incrementally fed*: [`inject`] accepts one
+//! request at a time (sorted into the arrival stream), [`step_next`]
+//! advances the cluster by exactly one worker event, and [`drain`] runs
+//! the loop dry and folds every worker's recorder into one merged
+//! [`Report`]. The batch entry point [`run`] is a thin replay over that
+//! incremental API — inject the whole workload, then drain — so there is
+//! exactly one cluster event loop in the crate, and the same loop serves
+//! *live* traffic: the cluster implements
+//! [`ServingTopology`](super::ServingTopology), which is how
+//! [`crate::server::ServerCore`] routes live submissions (with streaming,
+//! cancel, backpressure and graceful drain) across N workers.
+//!
+//! Each [`step_next`] advances whichever worker has the smallest local
+//! clock:
+//!
+//! [`inject`]: ClusterEngine::inject
+//! [`step_next`]: ClusterEngine::step_next
+//! [`drain`]: ClusterEngine::drain
+//! [`run`]: ClusterEngine::run
 //!
 //! - arrivals with `arrival ≤ now` are routed to a worker *at arrival
 //!   time* (no static sharding — replicas are genuinely
@@ -31,16 +50,17 @@ use std::collections::VecDeque;
 
 use crate::config::{GpuSpec, ServingConfig};
 use crate::metrics::{Recorder, Report};
-use crate::request::{Phase, Request};
+use crate::request::{Phase, Request, RequestId};
 use crate::sched::{
     scheduler_for, IterationPlan, PrefillOnlyScheduler, SchedInput, Scheduler,
 };
 use crate::sim::DispatchMode;
 use crate::workload::Workload;
 
-use super::backend::{DecodeSlot, IterationBatch};
+use super::backend::{DecodeSlot, ExecutionBackend, IterationBatch};
 use super::core::{CoreStep, EngineCore, MAX_SIM_TIME};
 use super::router::{RouteCandidate, Router};
+use super::topology::{ServingTopology, TopologyStep};
 
 /// Clock nudge when a worker parks with nothing to do, so the min-clock
 /// selection always makes progress.
@@ -123,6 +143,14 @@ pub struct ClusterEngine {
     pub reconfigs: u64,
     /// Report label for homogeneous (all-unified) clusters.
     name: String,
+    /// Worker state was already folded into `metrics`/`finished`
+    /// ([`drain`](ClusterEngine::drain) ran); folding twice would double
+    /// count.
+    folded: bool,
+    /// The worker the last [`step_next`](ClusterEngine::step_next)
+    /// advanced — only it can carry new tokens, so the live-serving pump
+    /// visits just that worker instead of rescanning the fleet.
+    stepped_worker: Option<usize>,
 }
 
 impl ClusterEngine {
@@ -225,6 +253,8 @@ impl ClusterEngine {
             next_planner_check: 30.0,
             reconfigs: 0,
             name,
+            folded: false,
+            stepped_worker: None,
         }
     }
 
@@ -263,18 +293,68 @@ impl ClusterEngine {
     }
 
     /// Run the whole workload to completion; returns the merged report.
+    ///
+    /// This is a thin batch replay over the incremental loop: inject
+    /// every request, then [`drain`](ClusterEngine::drain).
     pub fn run(&mut self, workload: Workload) -> Report {
-        self.pending = workload.sorted_by_arrival().requests.into();
-        while self.step() {}
+        for r in workload.sorted_by_arrival().requests {
+            self.inject(r);
+        }
+        self.drain()
+    }
+
+    /// Feed one request into the shared arrival stream. Sorted insert by
+    /// arrival time; equal arrivals keep injection order, so a caller
+    /// that feeds an ordered stream reproduces the batch path exactly.
+    pub fn inject(&mut self, r: Request) {
+        // A drained cluster already folded its workers' recorders; work
+        // injected after that would run but vanish from every later
+        // report. Fail loudly instead.
+        assert!(
+            !self.folded,
+            "cluster already drained; build a new engine for another run"
+        );
+        let pos = self.pending.partition_point(|q| q.arrival <= r.arrival);
+        self.pending.insert(pos, r);
+    }
+
+    /// The cluster's arrival reference clock: the smallest worker clock,
+    /// i.e. the time of the next event.
+    pub fn clock(&self) -> f64 {
+        self.workers
+            .iter()
+            .map(|w| w.core.clock)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Run the event loop until no work remains, then fold every worker's
+    /// recorder/finished list into the merged system-level report.
+    pub fn drain(&mut self) -> Report {
+        loop {
+            match self.step_next(None) {
+                TopologyStep::Exhausted | TopologyStep::Diverged(_) => break,
+                _ => {}
+            }
+        }
+        ServingTopology::fold_report(self)
+    }
+
+    /// Merge per-worker metrics, drop counts and finished requests into
+    /// the cluster-level recorder (idempotent; runs once).
+    fn fold_workers(&mut self) {
+        if self.folded {
+            return;
+        }
+        self.folded = true;
         let mut duration = 0.0f64;
         for w in &mut self.workers {
             self.metrics.merge(&w.core.metrics);
             self.dropped += w.core.dropped;
             self.finished.append(&mut w.core.finished);
+            w.core.pumped_finished = 0;
             duration = duration.max(w.core.last_active);
         }
         self.metrics.duration = duration;
-        self.metrics.report(&self.system_name())
     }
 
     /// Cross-worker invariants, for property tests.
@@ -335,22 +415,50 @@ impl ClusterEngine {
         }
     }
 
-    /// Advance the cluster by one worker-event. Returns false when done.
-    fn step(&mut self) -> bool {
-        if self.all_done() {
-            return false;
+    /// The earliest known future arrival: the head of the internal
+    /// arrival stream (batch path) or the caller's hint about the next
+    /// not-yet-injected submission (live path), whichever comes first.
+    fn next_arrival(&self, hint: Option<f64>) -> Option<f64> {
+        let internal = self.pending.front().map(|r| r.arrival);
+        match (internal, hint) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Advance the cluster by one worker-event (the min-clock loop).
+    ///
+    /// `next_arrival` hints the earliest arrival the caller has not yet
+    /// [`inject`](ClusterEngine::inject)ed, so idle workers advance to it
+    /// instead of parking — this is what makes a live caller (the serving
+    /// front-end feeding submissions as they become due) take exactly the
+    /// same event trajectory as the batch replay that holds the whole
+    /// stream up front.
+    pub fn step_next(&mut self, next_arrival: Option<f64>) -> TopologyStep {
+        if self.all_done() && next_arrival.is_none() {
+            self.stepped_worker = None;
+            return TopologyStep::Exhausted;
         }
         let idx = self.min_clock_worker();
+        self.stepped_worker = Some(idx);
         let now = self.workers[idx].core.clock;
         if now > MAX_SIM_TIME {
-            // Diverged: drain bookkeeping everywhere and stop.
+            // Diverged: drain bookkeeping everywhere and report every
+            // request that was discarded so streams can be closed.
+            let mut victims: Vec<RequestId> = self.pending.iter().map(|r| r.id).collect();
+            victims.extend(self.transfers.iter().map(|t| t.request.id));
+            for w in &self.workers {
+                victims.extend(w.core.waiting.iter().map(|r| r.id));
+                victims.extend(w.core.running.iter().map(|r| r.id));
+            }
             self.dropped += (self.pending.len() + self.transfers.len()) as u64;
             self.pending.clear();
             self.transfers.clear();
             for w in &mut self.workers {
                 w.core.drain_diverged();
             }
-            return false;
+            self.stepped_worker = None;
+            return TopologyStep::Diverged(victims);
         }
 
         self.dispatch_arrivals(now);
@@ -363,15 +471,21 @@ impl ClusterEngine {
 
         if self.workers[idx].offline_until > now {
             self.workers[idx].core.clock = self.workers[idx].offline_until;
-            return true;
+            return TopologyStep::Progressed;
         }
 
-        match self.workers[idx].role {
-            WorkerRole::Unified => self.step_unified(idx),
-            WorkerRole::Prefill => self.step_prefill(idx),
-            WorkerRole::Decode => self.step_decode(idx),
+        let dropped = match self.workers[idx].role {
+            WorkerRole::Unified => self.step_unified(idx, next_arrival),
+            WorkerRole::Prefill => self.step_prefill(idx, next_arrival),
+            WorkerRole::Decode => {
+                self.step_decode(idx);
+                None
+            }
+        };
+        match dropped {
+            Some(id) => TopologyStep::Dropped(id),
+            None => TopologyStep::Progressed,
         }
-        true
     }
 
     /// Snapshot the workers satisfying `eligible` for a routing
@@ -484,19 +598,26 @@ impl ClusterEngine {
 
     /// One shared-core iteration on a unified worker; on idle, advance
     /// its clock to the next event (arrival or park behind the fleet).
-    fn step_unified(&mut self, idx: usize) {
-        let allow_drop = self.pending.is_empty();
-        let outcome = self.workers[idx].core.step_once(allow_drop);
-        if outcome == CoreStep::Idle {
-            // Next event: the next arrival, which dispatch guarantees is
-            // strictly in the future (everything ≤ now was delivered).
-            let next_arrival = self.pending.front().map(|r| r.arrival);
-            if next_arrival.is_none() && self.workers[idx].core.has_local_work() {
-                // Scheduler idled with admitted work (should not happen);
-                // nudge so the min-clock loop cannot livelock.
-                self.workers[idx].core.clock += PARK_EPS;
-            } else {
-                self.idle_advance(idx, next_arrival);
+    /// Returns the id of a dropped never-fits request, if any.
+    fn step_unified(&mut self, idx: usize, hint: Option<f64>) -> Option<RequestId> {
+        let allow_drop = self.pending.is_empty() && hint.is_none();
+        match self.workers[idx].core.step_once(allow_drop) {
+            CoreStep::Executed => None,
+            CoreStep::DroppedHead(id) => Some(id),
+            CoreStep::Idle => {
+                // Next event: the next arrival, which dispatch guarantees
+                // is strictly in the future (everything ≤ now was
+                // delivered).
+                let next_arrival = self.next_arrival(hint);
+                if next_arrival.is_none() && self.workers[idx].core.has_local_work() {
+                    // Scheduler idled with admitted work (should not
+                    // happen); nudge so the min-clock loop cannot
+                    // livelock.
+                    self.workers[idx].core.clock += PARK_EPS;
+                } else {
+                    self.idle_advance(idx, next_arrival);
+                }
+                None
             }
         }
     }
@@ -506,8 +627,8 @@ impl ClusterEngine {
     /// queue: a request whose phase reached `Decode` produced its first
     /// output token from the prefill logits and its KV now moves to a
     /// decode worker.
-    fn step_prefill(&mut self, idx: usize) {
-        let allow_drop = self.pending.is_empty();
+    fn step_prefill(&mut self, idx: usize, hint: Option<f64>) -> Option<RequestId> {
+        let allow_drop = self.pending.is_empty() && hint.is_none();
         match self.workers[idx].core.step_once(allow_drop) {
             CoreStep::Executed => {
                 let t_end = self.workers[idx].core.clock;
@@ -534,15 +655,17 @@ impl ClusterEngine {
                     }
                 }
                 self.transfers.append(&mut outgoing);
+                None
             }
-            CoreStep::DroppedHead(_) => {}
+            CoreStep::DroppedHead(id) => Some(id),
             CoreStep::Idle => {
-                let next_arrival = self.pending.front().map(|r| r.arrival);
+                let next_arrival = self.next_arrival(hint);
                 if next_arrival.is_none() && self.workers[idx].core.has_local_work() {
                     self.workers[idx].core.clock += PARK_EPS;
                 } else {
                     self.idle_advance(idx, next_arrival);
                 }
+                None
             }
         }
     }
@@ -711,6 +834,126 @@ impl ClusterEngine {
         pick(true)
             .or_else(|| pick(false))
             .expect("topology lost its last prefill worker")
+    }
+}
+
+/// Live serving across the cluster: [`crate::server::ServerCore`] feeds
+/// due submissions through [`inject`](ClusterEngine::inject), advances
+/// the min-clock loop via [`step_next`](ClusterEngine::step_next), and
+/// streams tokens out of every worker through `pump` — the identical
+/// event trajectory the batch [`run`](ClusterEngine::run) replays
+/// (property-tested).
+impl ServingTopology for ClusterEngine {
+    fn label(&self) -> String {
+        self.system_name()
+    }
+
+    fn clock(&self) -> f64 {
+        ClusterEngine::clock(self)
+    }
+
+    fn inject(&mut self, req: Request) {
+        ClusterEngine::inject(self, req);
+    }
+
+    fn step(&mut self, next_arrival: Option<f64>) -> TopologyStep {
+        self.step_next(next_arrival)
+    }
+
+    fn has_work(&self) -> bool {
+        !self.all_done()
+    }
+
+    fn queued(&self) -> usize {
+        self.pending.len()
+            + self
+                .workers
+                .iter()
+                .map(|w| w.core.queue_len())
+                .sum::<usize>()
+    }
+
+    fn cancel(&mut self, id: RequestId) -> bool {
+        // Not yet dispatched: no worker ever saw it.
+        if let Some(pos) = self.pending.iter().position(|r| r.id == id) {
+            self.pending.remove(pos);
+            return true;
+        }
+        // In flight between a prefill and a decode worker: the prefill
+        // side already released its KV, the decode side never admitted
+        // it, so dropping the transfer is the whole cancellation.
+        if let Some(pos) = self.transfers.iter().position(|t| t.request.id == id) {
+            self.transfers.remove(pos);
+            return true;
+        }
+        self.workers.iter_mut().any(|w| w.core.cancel_local(id))
+    }
+
+    fn max_context(&self) -> Option<u64> {
+        // Submissions are routed at arrival time, so the tightest bound
+        // of any worker's backend governs every request.
+        self.workers
+            .iter()
+            .filter_map(|w| w.core.backend.max_context())
+            .min()
+    }
+
+    fn release(&mut self, id: RequestId) {
+        for w in &mut self.workers {
+            w.core.backend.release(id);
+        }
+    }
+
+    fn add_dropped(&mut self, n: u64) {
+        self.dropped += n;
+    }
+
+    fn pump(&mut self, f: &mut dyn FnMut(&Request, &mut dyn ExecutionBackend, bool)) {
+        let stepped = self.stepped_worker;
+        let (workers, transfers) = (&mut self.workers, &self.transfers);
+        // Tokens only appear on the worker an event just advanced; pump
+        // that one instead of rescanning the fleet per event (watermarks
+        // make re-pumping idempotent, so the fallback visits everyone).
+        match stepped {
+            Some(i) => workers[i].core.pump_local(f),
+            None => {
+                for w in workers.iter_mut() {
+                    w.core.pump_local(f);
+                }
+            }
+        }
+        // Requests in flight between workers carry their first output
+        // token (produced by the prefill forward), but the producing
+        // worker already released them — the lookup goes through a
+        // stand-in backend, which is only sound when token values are a
+        // pure function of (id, index) (`deterministic_tokens`).
+        if let Some(w0) = workers.first_mut() {
+            if !transfers.is_empty() {
+                assert!(
+                    w0.core.backend.deterministic_tokens(),
+                    "cluster streaming of in-transfer requests requires \
+                     position-deterministic tokens; backend `{}` queues \
+                     device-resident values",
+                    w0.core.backend.name()
+                );
+            }
+            for t in transfers.iter() {
+                f(&t.request, &mut *w0.core.backend, false);
+            }
+        }
+    }
+
+    fn fold_report(&mut self) -> Report {
+        self.fold_workers();
+        self.metrics.report(&self.system_name())
+    }
+
+    fn check_invariants(&self) -> Result<(), String> {
+        ClusterEngine::check_invariants(self)
+    }
+
+    fn as_cluster(&self) -> Option<&ClusterEngine> {
+        Some(self)
     }
 }
 

@@ -110,6 +110,10 @@ pub struct EngineCore {
     pub(crate) waiting: VecDeque<Request>,
     pub(crate) running: Vec<Request>,
     pub finished: Vec<Request>,
+    /// Watermark into `finished` for streaming front-ends: entries before
+    /// it were already pumped to their token streams
+    /// ([`super::ServingTopology::pump`]).
+    pub(crate) pumped_finished: usize,
     pub metrics: Recorder,
     /// Requests dropped because their prompt can never fit in KV.
     pub dropped: u64,
@@ -148,6 +152,7 @@ impl EngineCore {
             waiting: VecDeque::new(),
             running: Vec::new(),
             finished: Vec::new(),
+            pumped_finished: 0,
             metrics: Recorder::new(),
             dropped: 0,
             preemptions: 0,
@@ -217,6 +222,50 @@ impl EngineCore {
 
     pub fn kv_total_tokens(&self) -> u64 {
         self.kv.total_blocks() * self.kv.block_tokens() as u64
+    }
+
+    /// Visit this worker's requests that may carry new tokens — every
+    /// running request, then each finished request exactly once (tracked
+    /// by `pumped_finished`) with the flag set — paired with the backend
+    /// holding their token values. Streaming front-ends drive this
+    /// through [`super::ServingTopology::pump`].
+    pub(crate) fn pump_local(
+        &mut self,
+        f: &mut dyn FnMut(&Request, &mut dyn ExecutionBackend, bool),
+    ) {
+        let EngineCore {
+            running,
+            finished,
+            backend,
+            pumped_finished,
+            ..
+        } = self;
+        for r in running.iter() {
+            f(r, &mut **backend, false);
+        }
+        while *pumped_finished < finished.len() {
+            let r = &finished[*pumped_finished];
+            *pumped_finished += 1;
+            f(r, &mut **backend, true);
+        }
+    }
+
+    /// Remove a request from this worker's waiting or running queues,
+    /// releasing its KV. Returns false when the request is not here.
+    /// Backend-side state is reclaimed separately (the front-end releases
+    /// it when the stream closes).
+    pub(crate) fn cancel_local(&mut self, id: RequestId) -> bool {
+        if let Some(pos) = self.waiting.iter().position(|r| r.id == id) {
+            let r = self.waiting.remove(pos).unwrap();
+            let _ = self.kv.release(r.id);
+            return true;
+        }
+        if let Some(pos) = self.running.iter().position(|r| r.id == id) {
+            let r = self.running.remove(pos);
+            let _ = self.kv.release(r.id);
+            return true;
+        }
+        false
     }
 
     /// Divergence drain: drop all queued and in-flight work, releasing

@@ -14,9 +14,11 @@
 //! 2. **Topology** — how cores are composed:
 //!    - [`SimEngine`]: one unified worker fed directly by the workload
 //!      (vLLM / SGLang / DuetServe / static-split policies);
-//!    - [`ClusterEngine`]: N workers advanced by a discrete-event loop
-//!      (smallest local clock acts next) with a shared arrival stream
-//!      and a prefill→decode KV-transfer queue;
+//!    - [`ClusterEngine`]: N workers advanced by a re-entrant,
+//!      incrementally fed discrete-event loop (smallest local clock acts
+//!      next; `inject`/`step_next`/`drain`) with a shared arrival stream
+//!      and a prefill→decode KV-transfer queue — the batch
+//!      `run(workload)` is a thin replay over the same loop;
 //!    - [`ReplicatedEngine`]: cluster of unified replicas (Fig. 2 "Agg");
 //!    - [`DisaggEngine`]: cluster of role-tagged prefill/decode workers
 //!      with NVLink transfers and the optional Dynamo-style
@@ -32,9 +34,12 @@
 //!    iteration runs: [`backend::SimBackend`] models latencies with the
 //!    roofline-calibrated executor, while
 //!    [`PjrtBackend`](crate::runtime::PjrtBackend) measures real
-//!    wall-clock over the AOT-compiled runtime. The unified serving
-//!    front-end ([`crate::server`]) is a transport layer over one
-//!    [`EngineCore`] + one backend.
+//!    wall-clock over the AOT-compiled runtime.
+//! 5. **Serving** ([`topology::ServingTopology`]) — the seam the unified
+//!    serving front-end ([`crate::server`]) dispatches through: live
+//!    submit/stream/cancel/drain work identically over a single
+//!    [`EngineCore`] or an N-worker [`ClusterEngine`] routed through the
+//!    [`router::Router`] seam at submit time.
 
 pub mod backend;
 pub mod cluster;
@@ -43,6 +48,7 @@ pub mod disagg;
 pub mod events;
 pub mod replicated;
 pub mod router;
+pub mod topology;
 
 pub use self::core::{CoreStep, EngineCore, MAX_SIM_TIME};
 pub use backend::{DecodeSlot, ExecutionBackend, IterationBatch, PrefillSlice, SimBackend};
@@ -53,6 +59,7 @@ pub use replicated::ReplicatedEngine;
 pub use router::{
     router_by_name, KvPressureRouter, LeastOutstandingRouter, RoundRobinRouter, Router,
 };
+pub use topology::{ServingTopology, TopologyStep};
 
 use std::collections::VecDeque;
 use std::ops::{Deref, DerefMut};
@@ -132,7 +139,14 @@ impl SimEngine {
                     self.core.clock = self.core.clock.max(next.arrival);
                     return true;
                 }
-                !self.core.running.is_empty()
+                if self.core.running.is_empty() {
+                    return false;
+                }
+                // Scheduler idled with admitted work (should not happen);
+                // nudge — identically to the serving path — so the
+                // divergence guard trips rather than livelocking.
+                self.core.clock += topology::IDLE_NUDGE;
+                true
             }
         }
     }

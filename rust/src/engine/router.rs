@@ -5,6 +5,21 @@
 //! arrivals) and asks a [`Router`] to pick one per arriving request. This
 //! is the seam where replicated serving stops being static sharding:
 //! requests are dispatched at arrival time against live load signals.
+//!
+//! The same seam serves three dispatch points:
+//!
+//! - **batch arrivals** — `ClusterEngine::run` replays a workload's
+//!   arrival stream through it;
+//! - **live submissions** — a cluster-backed
+//!   [`ServerCore`](crate::server::ServerCore) injects each accepted
+//!   submission when its arrival comes due, so the candidates' queue
+//!   depths, outstanding tokens and free-KV counts reflect the *live*
+//!   in-flight state at submit time (including everything earlier
+//!   submissions put on each worker);
+//! - **prefill→decode transfers** — ready KV handoffs are routed to
+//!   decode workers at transfer-ready time, with not-yet-admitted
+//!   in-flight transfer assignments folded into the load signals so a
+//!   burst spreads instead of piling onto one worker.
 
 use crate::request::Request;
 

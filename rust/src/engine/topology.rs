@@ -1,0 +1,212 @@
+//! The serving-topology seam: one request lifecycle over one worker or
+//! many.
+//!
+//! [`ServingTopology`] is the contract between the serving front-end
+//! ([`crate::server::ServerCore`]) and whatever executes requests under
+//! it. Two implementations exist:
+//!
+//! - [`EngineCore`] — a single worker (one GPU group, one backend). The
+//!   serving path over a sim backend is property-tested identical to
+//!   [`super::SimEngine`].
+//! - [`ClusterEngine`](super::ClusterEngine) — N workers behind the
+//!   [`Router`](super::router::Router) seam, advanced by the min-clock
+//!   discrete-event loop, fed incrementally through
+//!   [`inject`](super::ClusterEngine::inject) /
+//!   [`step_next`](super::ClusterEngine::step_next).
+//!
+//! The front-end owns submission ordering (arrival time + priority) and
+//! token streams; the topology owns routing, clocks, execution, and
+//! metrics. The contract that keeps live serving equal to batch replay:
+//!
+//! - `inject` hands over a request whose `arrival` is already due
+//!   (`arrival <= clock()`); the topology routes and enqueues it exactly
+//!   as the batch path would at that instant.
+//! - `step` advances the topology by one event. `next_arrival` is the
+//!   earliest arrival the caller has *not yet injected*, so idle workers
+//!   can jump to it instead of parking — without it, a live topology
+//!   would idle past future submissions that the batch loop (which holds
+//!   the whole arrival stream) would have jumped to.
+//! - `pump` visits every request that may carry new tokens, paired with
+//!   the backend holding its token values; newly finished requests are
+//!   visited exactly once with `finished = true`.
+
+use crate::metrics::Report;
+use crate::request::{Request, RequestId};
+
+use super::backend::ExecutionBackend;
+use super::cluster::ClusterEngine;
+use super::core::{CoreStep, EngineCore, MAX_SIM_TIME};
+
+/// Clock nudge when a scheduler idles while admitted work remains (a
+/// defensive should-not-happen state): keeps the clock moving so the
+/// [`MAX_SIM_TIME`] divergence guard can trip instead of the caller
+/// livelocking. Matches the cluster loop's parking epsilon, and
+/// [`super::SimEngine::step`] applies the identical nudge so the
+/// serving-path ≡ simulation property holds even in this state.
+pub(crate) const IDLE_NUDGE: f64 = 1e-3;
+
+/// What one [`ServingTopology::step`] call did.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TopologyStep {
+    /// An event ran (an iteration executed, or a clock advanced toward
+    /// the next event); streams may carry new tokens.
+    Progressed,
+    /// The head waiting request can never be admitted (prompt exceeds
+    /// KV) and was dropped; its stream must be closed.
+    Dropped(RequestId),
+    /// The clock passed [`MAX_SIM_TIME`]: all queued and in-flight work
+    /// was drained. The ids are every request that was discarded; their
+    /// streams must be closed.
+    Diverged(Vec<RequestId>),
+    /// No queued or running work remains and no future arrival was
+    /// hinted: the topology is fully drained.
+    Exhausted,
+}
+
+/// The seam [`crate::server::ServerCore`] dispatches through — submit,
+/// stream, cancel and drain work identically whether the back end is one
+/// worker or an N-worker cluster.
+pub trait ServingTopology {
+    /// Report label (policy/backend for a single core, system name for a
+    /// cluster).
+    fn label(&self) -> String;
+
+    /// The arrival reference clock: requests with `arrival <= clock()`
+    /// are due for [`inject`](Self::inject). For a cluster this is the
+    /// minimum worker clock (the time of the next event).
+    fn clock(&self) -> f64;
+
+    /// Accept one due request (route it, enqueue it).
+    fn inject(&mut self, req: Request);
+
+    /// Advance by one event; `next_arrival` hints the earliest
+    /// not-yet-injected arrival so idle workers can jump to it.
+    fn step(&mut self, next_arrival: Option<f64>) -> TopologyStep;
+
+    /// Any queued or in-flight work anywhere?
+    fn has_work(&self) -> bool;
+
+    /// Accepted-but-not-yet-admitted requests (the backpressure signal).
+    fn queued(&self) -> usize;
+
+    /// Remove a request at any stage (queued, running, or in transfer
+    /// between workers). Returns false when it is unknown.
+    fn cancel(&mut self, id: RequestId) -> bool;
+
+    /// Hard context bound, when every backend underneath has one.
+    fn max_context(&self) -> Option<u64>;
+
+    /// Reclaim backend-side state for `id` on every backend that might
+    /// hold it (called once a stream closes).
+    fn release(&mut self, id: RequestId);
+
+    /// Account requests the *caller* discarded without injecting them
+    /// (divergence drain of a front-end submission queue).
+    fn add_dropped(&mut self, n: u64);
+
+    /// Visit every request that may have produced tokens since the last
+    /// call — running, in transfer, and newly finished — with the
+    /// backend that holds its token values. Newly finished requests are
+    /// visited exactly once, with the flag set.
+    fn pump(&mut self, f: &mut dyn FnMut(&Request, &mut dyn ExecutionBackend, bool));
+
+    /// Fold per-worker state into the final merged [`Report`].
+    fn fold_report(&mut self) -> Report;
+
+    /// Cross-worker invariants (used on the drain path and by tests).
+    fn check_invariants(&self) -> Result<(), String>;
+
+    /// Downcast for single-core-specific inspection.
+    fn as_engine(&self) -> Option<&EngineCore> {
+        None
+    }
+
+    /// Downcast for cluster-specific inspection.
+    fn as_cluster(&self) -> Option<&ClusterEngine> {
+        None
+    }
+}
+
+impl ServingTopology for EngineCore {
+    fn label(&self) -> String {
+        format!("{}+{}", self.policy_name(), self.backend_name())
+    }
+
+    fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    fn inject(&mut self, req: Request) {
+        EngineCore::inject(self, req);
+    }
+
+    fn step(&mut self, next_arrival: Option<f64>) -> TopologyStep {
+        if self.clock > MAX_SIM_TIME {
+            let mut victims: Vec<RequestId> = self.waiting.iter().map(|r| r.id).collect();
+            victims.extend(self.running.iter().map(|r| r.id));
+            self.drain_diverged();
+            return TopologyStep::Diverged(victims);
+        }
+        match self.step_once(next_arrival.is_none()) {
+            CoreStep::Executed => TopologyStep::Progressed,
+            CoreStep::DroppedHead(id) => TopologyStep::Dropped(id),
+            CoreStep::Idle => match next_arrival {
+                // Nothing schedulable before the next submission: jump.
+                Some(t) => {
+                    self.clock = self.clock.max(t);
+                    TopologyStep::Progressed
+                }
+                // Scheduler idled with admitted work (should not happen);
+                // nudge the clock — same defence as the cluster loop — so
+                // the divergence guard eventually trips instead of the
+                // caller spinning forever at a frozen clock.
+                None if !self.running.is_empty() => {
+                    self.clock += IDLE_NUDGE;
+                    TopologyStep::Progressed
+                }
+                None => TopologyStep::Exhausted,
+            },
+        }
+    }
+
+    fn has_work(&self) -> bool {
+        self.has_local_work()
+    }
+
+    fn queued(&self) -> usize {
+        self.queue_len()
+    }
+
+    fn cancel(&mut self, id: RequestId) -> bool {
+        self.cancel_local(id)
+    }
+
+    fn max_context(&self) -> Option<u64> {
+        self.backend.max_context()
+    }
+
+    fn release(&mut self, id: RequestId) {
+        self.backend.release(id);
+    }
+
+    fn add_dropped(&mut self, n: u64) {
+        self.dropped += n;
+    }
+
+    fn pump(&mut self, f: &mut dyn FnMut(&Request, &mut dyn ExecutionBackend, bool)) {
+        self.pump_local(f);
+    }
+
+    fn fold_report(&mut self) -> Report {
+        self.metrics.duration = self.clock;
+        self.metrics.report(&ServingTopology::label(self))
+    }
+
+    fn check_invariants(&self) -> Result<(), String> {
+        EngineCore::check_invariants(self)
+    }
+
+    fn as_engine(&self) -> Option<&EngineCore> {
+        Some(self)
+    }
+}

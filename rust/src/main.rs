@@ -19,7 +19,7 @@
 
 use duetserve::cli::Args;
 use duetserve::config::{ModelSpec, Policy, ServingConfig};
-use duetserve::engine::{engine_for, router_by_name, DisaggEngine, ReplicatedEngine};
+use duetserve::engine::{engine_for, router_by_name, ClusterEngine, DisaggEngine, ReplicatedEngine};
 use duetserve::metrics::Report;
 use duetserve::model::AttnShape;
 use duetserve::roofline::{BatchShape, Predictor};
@@ -55,6 +55,25 @@ fn build_config(args: &Args) -> ServingConfig {
     cfg.max_batch = args.u32_or("max-batch", cfg.max_batch);
     cfg.policy = policy_by_name(&args.str_or("policy", "duet")).unwrap_or(Policy::Duet);
     cfg
+}
+
+/// Split a `--replicas` worker budget into (prefill, decode) roles for
+/// `--topology disagg`. Callers reject `replicas < 2` first.
+fn disagg_split(replicas: u32) -> (u32, u32) {
+    let p = (replicas / 2).max(1);
+    (p, replicas - p)
+}
+
+/// Default routing policy per topology, matching the engine defaults
+/// (`ReplicatedEngine` fronts replicas with round-robin; `DisaggEngine`
+/// approximates the shared prefill queue with least-outstanding) so the
+/// batch and `--backend` front-end paths serve identical configurations.
+fn default_router(topology: &str) -> &'static str {
+    if topology == "disagg" {
+        "least-outstanding"
+    } else {
+        "round-robin"
+    }
 }
 
 fn build_workload(args: &Args, qps: f64, seed: u64) -> Workload {
@@ -94,9 +113,32 @@ fn cmd_serve(args: &Args) {
             std::process::exit(2);
         }
     };
+    let topology = match args.one_of("topology", &["unified", "disagg"]) {
+        Ok(choice) => choice.unwrap_or("unified").to_string(),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if topology == "disagg" && replicas < 2 {
+        eprintln!(
+            "error: --topology disagg needs at least one prefill and one decode \
+             worker; pass --replicas 2 or more"
+        );
+        std::process::exit(2);
+    }
+    if backend.as_deref() == Some("pjrt-stub")
+        && (replicas > 1 || topology == "disagg" || router.is_some())
+    {
+        eprintln!(
+            "error: --replicas/--router/--topology need simulated workers; \
+             the pjrt backend owns one real device (use --backend sim)"
+        );
+        std::process::exit(2);
+    }
     let w = build_workload(args, qps, seed);
     if let Some(kind) = backend {
-        cmd_serve_front(&kind, cfg, w, qps, seed);
+        cmd_serve_front(&kind, cfg, w, qps, seed, replicas, router, &topology);
         return;
     }
     println!(
@@ -106,35 +148,52 @@ fn cmd_serve(args: &Args) {
         cfg.policy.name(),
         cfg.tp
     );
-    let rep = match cfg.policy {
-        Policy::DisaggPD {
-            prefill_gpus,
-            decode_gpus,
-        } => {
-            if replicas > 1 {
-                eprintln!("note: --replicas is ignored for dynamo (topology is {prefill_gpus}P+{decode_gpus}D)");
+    let rep = if topology == "disagg" {
+        // Explicit --topology disagg: split the --replicas worker budget
+        // into prefill and decode roles. This wins over the policy's own
+        // topology (--policy dynamo without --topology keeps its
+        // configured P/D counts), matching the --backend front-end path.
+        let (p, d) = disagg_split(replicas);
+        let mut e = ClusterEngine::disagg(
+            cfg.clone(),
+            p,
+            d,
+            seed,
+            router_by_name(router.as_deref().unwrap_or(default_router(&topology))).unwrap(),
+        );
+        println!("cluster: {p}P+{d}D disaggregated, {} routing", e.router_name());
+        e.run(w)
+    } else {
+        match cfg.policy {
+            Policy::DisaggPD {
+                prefill_gpus,
+                decode_gpus,
+            } => {
+                if replicas > 1 {
+                    eprintln!("note: --replicas is ignored for dynamo (topology is {prefill_gpus}P+{decode_gpus}D)");
+                }
+                let mut e = DisaggEngine::new(cfg.clone(), prefill_gpus, decode_gpus, seed);
+                if let Some(name) = &router {
+                    e.set_router(router_by_name(name).unwrap());
+                }
+                e.run(w)
             }
-            let mut e = DisaggEngine::new(cfg.clone(), prefill_gpus, decode_gpus, seed);
-            if let Some(name) = &router {
-                e.set_router(router_by_name(name).unwrap());
+            _ if replicas > 1 || router.is_some() => {
+                let mut e = ReplicatedEngine::new(cfg.clone(), replicas, seed);
+                if let Some(name) = &router {
+                    e.set_router(router_by_name(name).unwrap());
+                }
+                println!("cluster: {replicas} replicas, {} routing", e.router_name());
+                e.run(w)
             }
-            e.run(w)
-        }
-        _ if replicas > 1 || router.is_some() => {
-            let mut e = ReplicatedEngine::new(cfg.clone(), replicas, seed);
-            if let Some(name) = &router {
-                e.set_router(router_by_name(name).unwrap());
+            _ => {
+                let mut e = engine_for(cfg, seed);
+                let rep = e.run(w);
+                if e.preemptions > 0 || e.dropped > 0 {
+                    println!("preemptions: {}, dropped: {}", e.preemptions, e.dropped);
+                }
+                rep
             }
-            println!("cluster: {replicas} replicas, {} routing", e.router_name());
-            e.run(w)
-        }
-        _ => {
-            let mut e = engine_for(cfg, seed);
-            let rep = e.run(w);
-            if e.preemptions > 0 || e.dropped > 0 {
-                println!("preemptions: {}, dropped: {}", e.preemptions, e.dropped);
-            }
-            rep
         }
     };
     let mut t = Table::new(Report::header());
@@ -142,13 +201,42 @@ fn cmd_serve(args: &Args) {
     t.print();
 }
 
-/// Serve the workload through the unified streaming front-end: one
-/// `EngineCore` + pluggable `ExecutionBackend` behind `server::Server`.
-fn cmd_serve_front(kind: &str, cfg: ServingConfig, w: Workload, qps: f64, seed: u64) {
+/// Serve the workload through the unified streaming front-end: a
+/// `ServingTopology` (one `EngineCore`, or a `ClusterEngine` of sim
+/// workers routed at submit time) behind `server::Server`.
+#[allow(clippy::too_many_arguments)]
+fn cmd_serve_front(
+    kind: &str,
+    cfg: ServingConfig,
+    w: Workload,
+    qps: f64,
+    seed: u64,
+    replicas: u32,
+    router: Option<String>,
+    topology: &str,
+) {
     // The whole workload is submitted before any stream is drained, so
     // the backpressure bound must admit all of it.
     let depth = w.requests.len().max(1);
+    let multi = replicas > 1 || router.is_some() || topology == "disagg";
     let server = match kind {
+        "sim" if multi => {
+            let base = cfg.clone();
+            let router_name = router.unwrap_or_else(|| default_router(topology).to_string());
+            let topo = topology.to_string();
+            println!("front-end cluster: {replicas} sim workers ({topo}), {router_name} routing");
+            Server::start(move || {
+                let r = router_by_name(&router_name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown router `{router_name}`"))?;
+                let core = if topo == "disagg" {
+                    let (p, d) = disagg_split(replicas);
+                    ServerCore::sim_disagg(base, p, d, seed, r)
+                } else {
+                    ServerCore::sim_replicated(base, replicas, seed, r)
+                };
+                Ok(core.with_queue_depth(depth))
+            })
+        }
         "sim" => {
             let base = cfg.clone();
             Server::start(move || Ok(ServerCore::sim(base, seed).with_queue_depth(depth)))
@@ -318,9 +406,15 @@ serve:      --policy vllm|sglang|sglang-chunked|duet|dynamo
             --qps F --n N --model qwen3-8b|qwen3-14b|qwen3-32b --tp N
             --budget N --tbt-slo F --seed N
             --replicas N --router round-robin|least-loaded|kv-pressure
+            --topology unified|disagg (disagg splits --replicas into
+                                       prefill + decode role workers;
+                                       needs --replicas >= 2)
             --backend sim|pjrt-stub   (stream through the unified
-                                       front-end; pjrt-stub skips unless
-                                       built with --features xla-pjrt)
+                                       front-end; with --replicas/--router/
+                                       --topology the sim front-end serves
+                                       live across a routed cluster;
+                                       pjrt-stub skips unless built with
+                                       --features xla-pjrt)
 partition:  --decode N --ctx N --prefill N [--tbt-slo F]
 e2e:        --requests N --max-new N   (needs `make artifacts`)
 ";

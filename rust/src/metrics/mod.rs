@@ -62,6 +62,13 @@ impl Recorder {
     /// each worker's recorder into one system-level recorder with this
     /// (`duration` is left to the caller: wall time is a max over
     /// workers, not a sum).
+    ///
+    /// Every counted field must be included here: a field that exists on
+    /// `Recorder` but is skipped silently under-reports multi-worker
+    /// runs. In particular the per-request SLO-attainment counts
+    /// (`slo_checked`/`slo_violations`) are summed so
+    /// [`Report::slo_attainment`] stays correct across cross-worker
+    /// merges (regression-tested by `merge_preserves_slo_attainment`).
     pub fn merge(&mut self, other: &Recorder) {
         self.sm_util.extend_from_slice(&other.sm_util);
         self.hbm_util.extend_from_slice(&other.hbm_util);
@@ -251,6 +258,41 @@ mod tests {
         // no SLO declared anywhere -> attainment is None
         let rep2 = Recorder::new().report("t");
         assert!(rep2.slo_attainment.is_none());
+    }
+
+    #[test]
+    fn merge_preserves_slo_attainment() {
+        // Two workers with different SLO outcomes: worker A checks 2 gaps
+        // (1 violation), worker B checks 2 gaps (0 violations). The
+        // merged attainment must be 3/4 — per-request attainment counts
+        // survive cross-worker merges.
+        let mut a = Recorder::new();
+        let mut ra = Request::new(1, 0.0, 10, 3).with_slo_tbt(0.15);
+        ra.advance_prefill(10);
+        ra.advance_decode(1.0);
+        ra.advance_decode(1.1); // gap 0.1: ok
+        ra.advance_decode(1.5); // gap 0.4: violation
+        a.record_finished(&ra);
+
+        let mut b = Recorder::new();
+        let mut rb = Request::new(2, 0.0, 10, 3).with_slo_tbt(0.15);
+        rb.advance_prefill(10);
+        rb.advance_decode(1.0);
+        rb.advance_decode(1.05); // ok
+        rb.advance_decode(1.1); // ok
+        b.record_finished(&rb);
+
+        a.merge(&b);
+        a.duration = 2.0;
+        assert_eq!(a.slo_checked, 4);
+        assert_eq!(a.slo_violations, 1);
+        let rep = a.report("m");
+        assert!((rep.slo_attainment.unwrap() - 0.75).abs() < 1e-9);
+
+        // Merging a no-SLO recorder must not erase the counts.
+        a.merge(&Recorder::new());
+        assert_eq!(a.slo_checked, 4);
+        assert_eq!(a.slo_violations, 1);
     }
 
     #[test]

@@ -197,6 +197,13 @@ impl ExecutionBackend for PjrtBackend {
             .expect("pjrt backend has no pending token for this request")
     }
 
+    /// Tokens are real argmax values queued on this device — another
+    /// worker's backend cannot reproduce them, so cluster topologies
+    /// must not stream in-transfer requests from a stand-in backend.
+    fn deterministic_tokens(&self) -> bool {
+        false
+    }
+
     fn release(&mut self, id: RequestId) {
         if let Some(slot) = self.slots.remove(&id) {
             self.rt.clear_slot(slot);

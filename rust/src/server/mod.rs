@@ -1,24 +1,37 @@
 //! The unified serving front-end: one request lifecycle, pluggable
-//! execution.
+//! execution, pluggable topology.
 //!
 //! # Architecture
 //!
 //! There is exactly one serving path in this crate. [`ServerCore`] is a
-//! deterministic, single-threaded request lifecycle over an
-//! [`EngineCore`] — the *same* iteration core the simulated engines run —
-//! paired with any [`ExecutionBackend`]:
+//! deterministic, single-threaded request lifecycle over a
+//! [`ServingTopology`] — the seam under which requests actually execute.
+//! The front-end owns submission ordering, backpressure, token streams,
+//! cancellation and drain; the topology owns routing, clocks, execution
+//! and metrics. Two topologies exist:
 //!
-//! - **sim** ([`SimBackend`](crate::engine::SimBackend)): iteration
-//!   latencies come from the roofline-calibrated executor; the serving
-//!   path and `SimEngine` produce *identical* metrics for the same
-//!   workload and seed (property-tested).
-//! - **pjrt** ([`PjrtBackend`](crate::runtime::PjrtBackend)): the real
-//!   AOT-compiled tiny model; latencies are measured wall clock and
-//!   tokens are real greedy argmax. On the default (stub) build the
-//!   backend fails to construct with a clear message — real execution
-//!   needs `--features xla-pjrt` plus `make artifacts`. The runtime has
-//!   no SM partitions, so DuetServe's spatial plans degrade to
-//!   aggregated iterations (logged once by the core).
+//! - a single [`EngineCore`] — the *same* iteration core the simulated
+//!   engines run — paired with any [`ExecutionBackend`]:
+//!   - **sim** ([`SimBackend`](crate::engine::SimBackend)): iteration
+//!     latencies come from the roofline-calibrated executor; the serving
+//!     path and `SimEngine` produce *identical* metrics for the same
+//!     workload and seed (property-tested).
+//!   - **pjrt** ([`PjrtBackend`](crate::runtime::PjrtBackend)): the real
+//!     AOT-compiled tiny model; latencies are measured wall clock and
+//!     tokens are real greedy argmax. On the default (stub) build the
+//!     backend fails to construct with a clear message — real execution
+//!     needs `--features xla-pjrt` plus `make artifacts`. The runtime
+//!     has no SM partitions, so DuetServe's spatial plans degrade to
+//!     aggregated iterations (logged once by the core).
+//! - a [`ClusterEngine`](crate::engine::ClusterEngine) — N workers
+//!   (unified replicas or disaggregated prefill/decode roles) advanced
+//!   by the min-clock event loop, with each due submission routed
+//!   through the [`Router`](crate::engine::Router) seam against live
+//!   load signals. Submit, streaming, cancel, backpressure and graceful
+//!   drain behave identically; the drain report is the workers' merged
+//!   [`metrics::Recorder`](crate::metrics::Recorder), and the live path
+//!   is property-tested identical to the batch
+//!   `ClusterEngine::run(workload)` replay.
 //!
 //! Any [`Scheduler`] — including `DuetScheduler` — can drive the serving
 //! path, because admission, chunked prefill, KV accounting, preemption
@@ -54,7 +67,10 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::config::ServingConfig;
-use crate::engine::{CoreStep, EngineCore, ExecutionBackend, SimBackend, MAX_SIM_TIME};
+use crate::engine::{
+    ClusterEngine, EngineCore, ExecutionBackend, Router, ServingTopology, SimBackend,
+    TopologyStep,
+};
 use crate::metrics::{Recorder, Report};
 use crate::request::{Request, RequestId};
 use crate::sched::{scheduler_for, Scheduler};
@@ -145,6 +161,7 @@ enum Control {
 }
 
 /// Handle the client holds for one in-flight request.
+#[derive(Debug)]
 pub struct RequestHandle {
     id: RequestId,
     /// Wall-clock submission time (client side).
@@ -221,35 +238,38 @@ struct StreamState {
     first_at: f64,
 }
 
-/// The unified request lifecycle: an [`EngineCore`] plus submission
-/// queue, token streams, backpressure, cancel and drain. Deterministic
-/// and single-threaded — [`Server`] adds the transport.
+/// The unified request lifecycle: a [`ServingTopology`] (one
+/// [`EngineCore`] or an N-worker cluster) plus submission queue, token
+/// streams, backpressure, cancel and drain. Deterministic and
+/// single-threaded — [`Server`] adds the transport.
 pub struct ServerCore {
-    core: EngineCore,
+    topology: Box<dyn ServingTopology>,
     pending: VecDeque<PendingEntry>,
     streams: HashMap<RequestId, StreamState>,
     queue_depth: usize,
     next_id: RequestId,
-    /// Finished-list watermark: entries before this index were pumped.
-    finished_seen: usize,
     /// Requests cancelled by the client.
     pub cancelled: u64,
 }
 
 impl ServerCore {
-    /// Core over an explicit scheduler + backend.
+    /// Single-worker core over an explicit scheduler + backend.
     pub fn new(
         cfg: ServingConfig,
         scheduler: Box<dyn Scheduler>,
         backend: Box<dyn ExecutionBackend>,
     ) -> ServerCore {
+        ServerCore::over(Box::new(EngineCore::with_backend(cfg, scheduler, backend)))
+    }
+
+    /// Core over any serving topology (single core or cluster).
+    pub fn over(topology: Box<dyn ServingTopology>) -> ServerCore {
         ServerCore {
-            core: EngineCore::with_backend(cfg, scheduler, backend),
+            topology,
             pending: VecDeque::new(),
             streams: HashMap::new(),
             queue_depth: DEFAULT_QUEUE_DEPTH,
             next_id: 0,
-            finished_seen: 0,
             cancelled: 0,
         }
     }
@@ -263,23 +283,69 @@ impl ServerCore {
         ServerCore::new(cfg, scheduler, backend)
     }
 
+    /// Cluster-backed core: `replicas` unified sim workers behind
+    /// `router` — construction-identical to
+    /// [`ClusterEngine::replicated`], so live serving is metric-identical
+    /// to the batch cluster run (property-tested).
+    pub fn sim_replicated(
+        cfg: ServingConfig,
+        replicas: u32,
+        seed: u64,
+        router: Box<dyn Router>,
+    ) -> ServerCore {
+        ServerCore::over(Box::new(ClusterEngine::replicated(
+            cfg, replicas, seed, router,
+        )))
+    }
+
+    /// Cluster-backed core over a disaggregated prefill/decode fleet.
+    pub fn sim_disagg(
+        cfg: ServingConfig,
+        prefill_gpus: u32,
+        decode_gpus: u32,
+        seed: u64,
+        router: Box<dyn Router>,
+    ) -> ServerCore {
+        ServerCore::over(Box::new(ClusterEngine::disagg(
+            cfg,
+            prefill_gpus,
+            decode_gpus,
+            seed,
+            router,
+        )))
+    }
+
     /// Set the backpressure bound (accepted-but-not-admitted requests).
     pub fn with_queue_depth(mut self, depth: usize) -> ServerCore {
         self.queue_depth = depth.max(1);
         self
     }
 
+    /// The single [`EngineCore`] under this server. Panics for
+    /// cluster-backed servers — use [`cluster`](ServerCore::cluster).
     pub fn engine(&self) -> &EngineCore {
-        &self.core
+        self.topology
+            .as_engine()
+            .expect("server is cluster-backed; use ServerCore::cluster()")
     }
 
+    /// The [`ClusterEngine`] under this server. Panics for single-core
+    /// servers — use [`engine`](ServerCore::engine).
+    pub fn cluster(&self) -> &ClusterEngine {
+        self.topology
+            .as_cluster()
+            .expect("server is single-core; use ServerCore::engine()")
+    }
+
+    /// The topology's arrival reference clock (min worker clock for a
+    /// cluster).
     pub fn clock(&self) -> f64 {
-        self.core.clock
+        self.topology.clock()
     }
 
     /// Accepted but not yet admitted requests (backpressure signal).
     pub fn queued(&self) -> usize {
-        self.pending.len() + self.core.queue_len()
+        self.pending.len() + self.topology.queued()
     }
 
     /// Submit one request. Applies validation and bounded-queue
@@ -299,7 +365,7 @@ impl ServerCore {
         if opts.arrival.is_some_and(|a| !a.is_finite()) {
             return Err(SubmitError::Rejected("arrival must be finite".into()));
         }
-        if let Some(mc) = self.core.backend.max_context() {
+        if let Some(mc) = self.topology.max_context() {
             let need = prompt.len() as u64 + opts.max_new_tokens;
             if need > mc {
                 return Err(SubmitError::Rejected(format!(
@@ -314,7 +380,7 @@ impl ServerCore {
         }
         let id = self.next_id;
         self.next_id += 1;
-        let arrival = opts.arrival.unwrap_or(self.core.clock);
+        let arrival = opts.arrival.unwrap_or_else(|| self.topology.clock());
         let mut req = Request::new(id, arrival, prompt.len() as u64, opts.max_new_tokens)
             .with_prompt_tokens(prompt);
         if let Some(ms) = opts.slo_tbt_ms {
@@ -352,73 +418,58 @@ impl ServerCore {
     /// Cancel a request at any stage. Returns false when it is unknown
     /// (already finished or never existed).
     pub fn cancel(&mut self, id: RequestId) -> bool {
-        if let Some(pos) = self.pending.iter().position(|e| e.req.id == id) {
+        let known = if let Some(pos) = self.pending.iter().position(|e| e.req.id == id) {
             self.pending.remove(pos);
+            true
+        } else {
+            self.topology.cancel(id)
+        };
+        if known {
             self.cancelled += 1;
             self.finish_stream(id, FinishReason::Cancelled);
-            return true;
         }
-        if let Some(pos) = self.core.waiting.iter().position(|r| r.id == id) {
-            let r = self.core.waiting.remove(pos).unwrap();
-            let _ = self.core.kv.release(r.id);
-            self.cancelled += 1;
-            self.finish_stream(id, FinishReason::Cancelled);
-            return true;
-        }
-        if let Some(pos) = self.core.running.iter().position(|r| r.id == id) {
-            let r = self.core.running.remove(pos);
-            let _ = self.core.kv.release(r.id);
-            self.cancelled += 1;
-            self.finish_stream(id, FinishReason::Cancelled);
-            return true;
-        }
-        false
+        known
     }
 
-    /// One engine iteration. Returns false when no pending, queued or
+    /// One topology event. Returns false when no pending, queued or
     /// running work remains.
     ///
-    /// The admit / divergence-drain / idle-clock-jump structure here
-    /// deliberately mirrors `SimEngine::step` — that equivalence is what
-    /// makes the serving path produce identical metrics to the
-    /// simulation (`server_path_matches_sim_engine_metrics` pins it; a
-    /// change to either loop must keep that property test green).
+    /// The admit / step / idle-arrival-hint structure deliberately
+    /// mirrors the batch loops (`SimEngine::step`, `ClusterEngine::run`)
+    /// — that equivalence is what makes the serving path produce
+    /// identical metrics to the batch runs
+    /// (`server_path_matches_sim_engine_metrics` and
+    /// `cluster_server_matches_cluster_engine_metrics` pin it; a change
+    /// to either side must keep those property tests green).
     pub fn step(&mut self) -> bool {
         self.admit_pending();
-        if self.pending.is_empty() && !self.core.has_local_work() {
+        if self.pending.is_empty() && !self.topology.has_work() {
             return false;
         }
-        if self.core.clock > MAX_SIM_TIME {
-            // Diverged: drain bookkeeping, close every open stream.
-            self.core.dropped += self.pending.len() as u64;
-            let mut victims: Vec<RequestId> =
-                self.pending.drain(..).map(|e| e.req.id).collect();
-            victims.extend(self.core.waiting.iter().map(|r| r.id));
-            victims.extend(self.core.running.iter().map(|r| r.id));
-            self.core.drain_diverged();
-            for id in victims {
-                self.finish_stream(id, FinishReason::Dropped);
-            }
-            return false;
-        }
-
-        match self.core.step_once(self.pending.is_empty()) {
-            CoreStep::Executed => {
+        // Everything ≤ clock() was injected above, so the head of the
+        // submission queue is strictly in the future: hint it so idle
+        // workers jump there instead of parking.
+        let hint = self.pending.front().map(|e| e.req.arrival);
+        match self.topology.step(hint) {
+            TopologyStep::Progressed => {
                 self.pump_tokens();
                 true
             }
-            CoreStep::DroppedHead(id) => {
+            TopologyStep::Dropped(id) => {
                 self.finish_stream(id, FinishReason::Dropped);
                 true
             }
-            CoreStep::Idle => {
-                if let Some(e) = self.pending.front() {
-                    self.core.clock = self.core.clock.max(e.req.arrival);
-                    true
-                } else {
-                    !self.core.running.is_empty()
+            TopologyStep::Diverged(mut victims) => {
+                // The topology drained itself; discard the un-injected
+                // submissions too and close every affected stream.
+                self.topology.add_dropped(self.pending.len() as u64);
+                victims.extend(self.pending.drain(..).map(|e| e.req.id));
+                for id in victims {
+                    self.finish_stream(id, FinishReason::Dropped);
                 }
+                false
             }
+            TopologyStep::Exhausted => false,
         }
     }
 
@@ -429,53 +480,48 @@ impl ServerCore {
     }
 
     /// Drain and produce the final report from the shared metrics
-    /// structs (same `Recorder`/`Report` as the simulated engines).
+    /// structs (same `Recorder`/`Report` as the simulated engines; merged
+    /// across workers for a cluster). The engine invariants are checked
+    /// on this path too, not just the batch runs.
     pub fn finish(mut self) -> Report {
         self.run_to_idle();
-        self.core.metrics.duration = self.core.clock;
-        let label = format!(
-            "server/{}+{}",
-            self.core.policy_name(),
-            self.core.backend_name()
-        );
-        self.core.metrics.report(&label)
+        let mut rep = self.topology.fold_report();
+        if let Err(e) = self.topology.check_invariants() {
+            // Print before panicking: on the threaded path the panic
+            // unwinds the engine thread and `shutdown` only reports "the
+            // engine thread panicked" — stderr must carry the diagnostic.
+            eprintln!("serving invariants violated at drain: {e}");
+            panic!("serving invariants violated at drain: {e}");
+        }
+        rep.system = format!("server/{}", rep.system);
+        rep
     }
 
     fn admit_pending(&mut self) {
         while let Some(e) = self.pending.front() {
-            if e.req.arrival <= self.core.clock {
+            if e.req.arrival <= self.topology.clock() {
                 let e = self.pending.pop_front().unwrap();
-                self.core.inject(e.req);
+                self.topology.inject(e.req);
             } else {
                 break;
-            }
-        }
-        // If totally idle, jump to the next submission's arrival.
-        if !self.core.has_local_work() {
-            if let Some(e) = self.pending.front() {
-                self.core.clock = self.core.clock.max(e.req.arrival);
-                let e = self.pending.pop_front().unwrap();
-                self.core.inject(e.req);
             }
         }
     }
 
     /// Emit newly produced tokens to their streams. Values come from the
-    /// backend (real argmax on PJRT, synthetic in simulation); timestamps
-    /// come from the request's engine-clock token times.
+    /// owning worker's backend (real argmax on PJRT, synthetic in
+    /// simulation); timestamps come from the request's engine-clock token
+    /// times.
     fn pump_tokens(&mut self) {
-        for r in &self.core.running {
-            Self::pump_one(&mut self.streams, &mut *self.core.backend, r);
-        }
-        while self.finished_seen < self.core.finished.len() {
-            let i = self.finished_seen;
-            Self::pump_one(
-                &mut self.streams,
-                &mut *self.core.backend,
-                &self.core.finished[i],
-            );
-            let id = self.core.finished[i].id;
-            self.finished_seen += 1;
+        let streams = &mut self.streams;
+        let mut completed: Vec<RequestId> = Vec::new();
+        self.topology.pump(&mut |r, backend, finished| {
+            Self::pump_one(streams, backend, r);
+            if finished {
+                completed.push(r.id);
+            }
+        });
+        for id in completed {
             self.finish_stream(id, FinishReason::Completed);
         }
     }
@@ -515,7 +561,7 @@ impl ServerCore {
         }
         // Backend-side state (real KV slots, pending tokens) is
         // reclaimed once the stream is closed.
-        self.core.backend_mut().release(id);
+        self.topology.release(id);
     }
 
     /// Close every open stream with a terminal event and report what ran
@@ -527,8 +573,9 @@ impl ServerCore {
         for id in ids {
             self.finish_stream(id, FinishReason::Dropped);
         }
-        self.core.metrics.duration = self.core.clock;
-        self.core.metrics.report("server/aborted")
+        let mut rep = self.topology.fold_report();
+        rep.system = "server/aborted".to_string();
+        rep
     }
 }
 
@@ -645,6 +692,25 @@ impl Server {
     /// Start over the simulated backend with `cfg`'s policy scheduler.
     pub fn start_sim(cfg: ServingConfig, seed: u64) -> Result<Server> {
         Server::start(move || Ok(ServerCore::sim(cfg, seed)))
+    }
+
+    /// Start over a cluster of `replicas` unified sim workers, with live
+    /// submissions routed by `router` (a [`crate::engine::router_by_name`]
+    /// name).
+    pub fn start_sim_replicated(
+        cfg: ServingConfig,
+        replicas: u32,
+        seed: u64,
+        router: &str,
+    ) -> Result<Server> {
+        let name = router.to_string();
+        if crate::engine::router_by_name(&name).is_none() {
+            return Err(anyhow!("unknown router `{name}`"));
+        }
+        Server::start(move || {
+            let router = crate::engine::router_by_name(&name).expect("validated above");
+            Ok(ServerCore::sim_replicated(cfg, replicas, seed, router))
+        })
     }
 
     /// Submit a request; blocks briefly for the engine's accept/reject

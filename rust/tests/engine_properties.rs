@@ -3,8 +3,13 @@
 //! accounting, request lifecycle, token-time monotonicity, conservation
 //! of requests) and the cross-policy semantic guarantees.
 
+use std::collections::VecDeque;
+
 use duetserve::config::{ModelSpec, Policy, ServingConfig};
-use duetserve::engine::{engine_for, router_by_name, DisaggEngine, ReplicatedEngine};
+use duetserve::engine::{
+    engine_for, router_by_name, ClusterEngine, DisaggEngine, ReplicatedEngine, TopologyStep,
+};
+use duetserve::request::Request;
 use duetserve::util::proptest::check;
 use duetserve::workload::synthetic::jittered_workload;
 use duetserve::workload::Workload;
@@ -170,6 +175,89 @@ fn replicated_clusters_conserve_requests_across_routers() {
                     r.id
                 ));
             }
+        }
+        Ok(())
+    });
+}
+
+/// The steppable-loop property: feeding the cluster one request at a
+/// time as its clock reaches each arrival (the live-serving pattern:
+/// `inject` when due, `step_next` with the next-arrival hint) produces
+/// exactly the same merged report as the batch `run(workload)` replay —
+/// there is one event loop, entered two ways.
+#[test]
+fn cluster_batch_run_equals_incremental_live_feed() {
+    check(8, |g| {
+        let n = g.usize_range(8, 28);
+        let isl = g.u64_range(64, 8000);
+        let osl = g.u64_range(1, 48);
+        let qps = g.f64_range(1.0, 14.0);
+        let replicas = g.u64_range(1, 4) as u32;
+        let routers = ["round-robin", "least-outstanding", "kv-pressure"];
+        let router = *g.choose(&routers);
+        let seed = g.case_seed;
+        let cfg = ServingConfig::default_8b().with_policy(Policy::VllmChunked);
+        let w = jittered_workload(n, isl, osl, 0.3, qps, seed).sorted_by_arrival();
+
+        let mut batch = ClusterEngine::replicated(
+            cfg.clone(),
+            replicas,
+            seed,
+            router_by_name(router).expect("known router"),
+        );
+        let rep_batch = batch.run(w.clone());
+
+        let mut live = ClusterEngine::replicated(
+            cfg,
+            replicas,
+            seed,
+            router_by_name(router).expect("known router"),
+        );
+        let mut feed: VecDeque<Request> = w.requests.into();
+        loop {
+            while feed.front().is_some_and(|r| r.arrival <= live.clock()) {
+                live.inject(feed.pop_front().unwrap());
+            }
+            let hint = feed.front().map(|r| r.arrival);
+            match live.step_next(hint) {
+                TopologyStep::Exhausted => break,
+                TopologyStep::Diverged(_) => {
+                    feed.clear();
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let rep_live = live.drain();
+
+        let label = format!("{replicas}x/{router}");
+        live.check_invariants().map_err(|m| format!("{label}: {m}"))?;
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()));
+        if rep_live.completed != rep_batch.completed {
+            return Err(format!(
+                "{label}: completed {} != batch {}",
+                rep_live.completed, rep_batch.completed
+            ));
+        }
+        if rep_live.iterations != rep_batch.iterations {
+            return Err(format!(
+                "{label}: iterations {} != batch {}",
+                rep_live.iterations, rep_batch.iterations
+            ));
+        }
+        if !close(rep_live.duration, rep_batch.duration) {
+            return Err(format!(
+                "{label}: duration {} != batch {}",
+                rep_live.duration, rep_batch.duration
+            ));
+        }
+        if !close(rep_live.ttft.mean, rep_batch.ttft.mean)
+            || !close(rep_live.tbt.mean, rep_batch.tbt.mean)
+        {
+            return Err(format!(
+                "{label}: latency drift: ttft {} vs {}, tbt {} vs {}",
+                rep_live.ttft.mean, rep_batch.ttft.mean, rep_live.tbt.mean, rep_batch.tbt.mean
+            ));
         }
         Ok(())
     });

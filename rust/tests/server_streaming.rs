@@ -5,7 +5,7 @@
 //! execution backend, so none of these tests require AOT artifacts.
 
 use duetserve::config::{Policy, ServingConfig};
-use duetserve::engine::engine_for;
+use duetserve::engine::{engine_for, router_by_name, ClusterEngine};
 use duetserve::server::{
     FinishReason, Server, ServerCore, SubmitError, SubmitOptions, TokenEvent,
 };
@@ -307,6 +307,242 @@ fn server_path_matches_sim_engine_metrics() {
         }
         Ok(())
     });
+}
+
+/// The cluster extension of the unification property: a cluster-backed
+/// `ServerCore` (live submissions routed across N sim workers through
+/// the `Router` seam) produces identical metrics to the batch
+/// `ClusterEngine::run` for the same trace, seed, router and topology —
+/// one cluster event loop, entered two ways.
+#[test]
+fn cluster_server_matches_cluster_engine_metrics() {
+    check(6, |g| {
+        let n = g.usize_range(8, 24);
+        let isl = g.u64_range(64, 6000);
+        let osl = g.u64_range(2, 48);
+        let qps = g.f64_range(1.0, 12.0);
+        let replicas = g.u64_range(2, 4) as u32;
+        let routers = ["round-robin", "least-outstanding", "kv-pressure"];
+        let router = *g.choose(&routers);
+        let seed = g.case_seed;
+        let label = format!("{replicas}x/{router}");
+        let w = jittered_workload(n, isl, osl, 0.3, qps, seed).sorted_by_arrival();
+
+        let mut batch = ClusterEngine::replicated(
+            cfg(),
+            replicas,
+            seed,
+            router_by_name(router).expect("known router"),
+        );
+        let batch_rep = batch.run(w.clone());
+        let batch_tokens = batch.metrics.output_tokens;
+
+        let mut srv = ServerCore::sim_replicated(
+            cfg(),
+            replicas,
+            seed,
+            router_by_name(router).expect("known router"),
+        )
+        .with_queue_depth(usize::MAX);
+        let handles: Vec<_> = w
+            .requests
+            .iter()
+            .map(|r| {
+                srv.submit(
+                    prompt(r.prompt_len as usize),
+                    SubmitOptions {
+                        max_new_tokens: r.output_len,
+                        arrival: Some(r.arrival),
+                        ..Default::default()
+                    },
+                )
+                .expect("unbounded queue")
+            })
+            .collect();
+        srv.run_to_idle();
+        let streamed: usize = handles.into_iter().map(|h| h.collect().len()).sum();
+        let srv_rep = srv.finish();
+
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()));
+        if srv_rep.completed != batch_rep.completed {
+            return Err(format!(
+                "{label}: completed {} != batch {}",
+                srv_rep.completed, batch_rep.completed
+            ));
+        }
+        if srv_rep.iterations != batch_rep.iterations {
+            return Err(format!(
+                "{label}: iterations {} != batch {}",
+                srv_rep.iterations, batch_rep.iterations
+            ));
+        }
+        if streamed as u64 != batch_tokens {
+            return Err(format!(
+                "{label}: streamed tokens {streamed} != batch output {batch_tokens}"
+            ));
+        }
+        if !close(srv_rep.ttft.mean, batch_rep.ttft.mean) {
+            return Err(format!(
+                "{label}: ttft {} != batch {}",
+                srv_rep.ttft.mean, batch_rep.ttft.mean
+            ));
+        }
+        if !close(srv_rep.tbt.mean, batch_rep.tbt.mean) {
+            return Err(format!(
+                "{label}: tbt {} != batch {}",
+                srv_rep.tbt.mean, batch_rep.tbt.mean
+            ));
+        }
+        if !close(srv_rep.duration, batch_rep.duration) {
+            return Err(format!(
+                "{label}: duration {} != batch {}",
+                srv_rep.duration, batch_rep.duration
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Live multi-worker serving keeps the whole request lifecycle:
+/// backpressure at the configured depth, cancel before admission, token
+/// streams from every worker, and one merged drain report.
+#[test]
+fn cluster_server_backpressure_cancel_and_merged_drain() {
+    let mut s = ServerCore::sim_replicated(
+        cfg(),
+        2,
+        1,
+        router_by_name("least-outstanding").unwrap(),
+    )
+    .with_queue_depth(4);
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            s.submit(
+                prompt(2048),
+                SubmitOptions {
+                    max_new_tokens: 8,
+                    arrival: Some(0.0),
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        })
+        .collect();
+    assert_eq!(
+        s.submit(prompt(16), SubmitOptions::default()).unwrap_err(),
+        SubmitError::QueueFull { depth: 4 }
+    );
+    // Cancel the last submission while still queued.
+    let cancelled_id = handles[3].id();
+    assert!(s.cancel(cancelled_id));
+    assert!(!s.cancel(cancelled_id), "double cancel reports unknown");
+    s.run_to_idle();
+    // Both workers served traffic (live routing, not static sharding).
+    for (i, w) in s.cluster().workers.iter().enumerate() {
+        assert!(
+            w.core.metrics.completed > 0,
+            "worker {i} never completed a request"
+        );
+    }
+    assert_eq!(s.cancelled, 1);
+    let rep = s.finish();
+    assert_eq!(rep.completed, 3);
+    assert!(
+        rep.system.starts_with("server/") && rep.system.contains("x2"),
+        "merged report must carry the cluster label: {}",
+        rep.system
+    );
+    for (i, h) in handles.into_iter().enumerate() {
+        let events = h.collect_events();
+        if i == 3 {
+            assert_eq!(
+                events.last(),
+                Some(&TokenEvent::Done {
+                    reason: FinishReason::Cancelled
+                })
+            );
+        } else {
+            assert_eq!(events.len(), 9, "8 tokens + Done");
+            assert_eq!(
+                events.last(),
+                Some(&TokenEvent::Done {
+                    reason: FinishReason::Completed
+                })
+            );
+        }
+    }
+}
+
+/// A disaggregated prefill/decode fleet serves live traffic through the
+/// same front-end: first tokens come off the prefill workers, the rest
+/// stream from decode workers after the KV transfer, and the drain
+/// report is the merged Dynamo-style system report.
+#[test]
+fn disagg_cluster_serves_live_streams() {
+    let mut s = ServerCore::sim_disagg(
+        cfg(),
+        1,
+        1,
+        1,
+        router_by_name("least-outstanding").unwrap(),
+    );
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            s.submit(
+                prompt(3000),
+                SubmitOptions {
+                    max_new_tokens: 12,
+                    arrival: Some(i as f64 * 0.4),
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        })
+        .collect();
+    s.run_to_idle();
+    // The decode worker (index 1) must have served the transferred KV.
+    assert!(s.cluster().workers[1].core.metrics.iterations > 0);
+    let rep = s.finish();
+    assert_eq!(rep.completed, 6);
+    assert!(rep.system.contains("1P1D"), "got {}", rep.system);
+    for h in handles {
+        let events = h.collect_events();
+        assert_eq!(events.len(), 13, "12 tokens + Done");
+        let times: Vec<f64> = events
+            .iter()
+            .filter_map(|e| match e {
+                TokenEvent::Token { at, .. } => Some(*at),
+                TokenEvent::Done { .. } => None,
+            })
+            .collect();
+        assert!(times.windows(2).all(|w| w[1] >= w[0]), "timestamps monotone");
+    }
+}
+
+/// The threaded transport serves a routed cluster transparently: spawn,
+/// submit from client threads, stream, drain on shutdown.
+#[test]
+fn threaded_cluster_server_drains_on_shutdown() {
+    let server = Server::start_sim_replicated(cfg(), 3, 2, "kv-pressure").unwrap();
+    let handles: Vec<_> = (0..9)
+        .map(|i| {
+            server
+                .submit(
+                    prompt(512 + 256 * (i % 3)),
+                    SubmitOptions {
+                        max_new_tokens: 6,
+                        ..Default::default()
+                    },
+                )
+                .unwrap()
+        })
+        .collect();
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.completed, 9);
+    assert!(report.system.contains("x3"), "got {}", report.system);
+    for h in handles {
+        assert_eq!(h.collect().len(), 6);
+    }
 }
 
 /// DuetScheduler drives the serving path too (acceptance criterion: any
