@@ -1,0 +1,176 @@
+//! HTTP transport demo and curl-free CI smoke: spawn `serve-http`
+//! in-process on an ephemeral port, then act as a plain `std::net` HTTP
+//! client against it — stream one completion over SSE, run one
+//! non-streaming completion, probe `/healthz` and `/metrics`, and drain
+//! with `POST /shutdown`.
+//!
+//!     cargo run --release --example http_client
+//!     cargo run --release --example http_client -- --addr 127.0.0.1:8080
+//!
+//! With `--addr` the example skips spawning and talks to an
+//! already-running `serve-http` instead (it will drain that server at
+//! the end).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use duetserve::cli::Args;
+use duetserve::config::{Policy, ServingConfig};
+use duetserve::server::http::{HttpConfig, HttpServer};
+use duetserve::server::{Server, ServerCore};
+use duetserve::util::json;
+
+fn connect(addr: SocketAddr) -> anyhow::Result<TcpStream> {
+    let s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(Duration::from_secs(60)))?;
+    Ok(s)
+}
+
+/// One full request/response exchange (`Connection: close` semantics);
+/// returns (status, body).
+fn exchange(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> anyhow::Result<(u16, String)> {
+    let mut s = connect(addr)?;
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\n");
+    if let Some(b) = body {
+        req.push_str(&format!(
+            "Content-Type: application/json\r\nContent-Length: {}\r\n",
+            b.len()
+        ));
+    }
+    req.push_str("\r\n");
+    if let Some(b) = body {
+        req.push_str(b);
+    }
+    s.write_all(req.as_bytes())?;
+    let mut resp = String::new();
+    s.read_to_string(&mut resp)?;
+    let status: u16 = resp
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("no status line in response: {resp:.120}"))?;
+    let payload = resp
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok((status, payload))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    // Spawn serve-http in-process unless --addr points at a live one.
+    let (spawned, addr) = match args.get("addr") {
+        Some(a) => (None, a.parse::<SocketAddr>()?),
+        None => {
+            let cfg = ServingConfig::default_8b().with_policy(Policy::Duet);
+            let server = Server::start(move || Ok(ServerCore::sim(cfg, 1).with_queue_depth(64)))?;
+            let http = HttpServer::start("127.0.0.1:0", server, HttpConfig::default())?;
+            let addr = http.addr();
+            println!("spawned serve-http on {addr}");
+            (Some(http), addr)
+        }
+    };
+
+    // 1. Streaming completion: raw socket, SSE frames as they arrive.
+    let body = r#"{"prompt":"duetserve streaming demo","max_tokens":10,"stream":true}"#;
+    let mut s = connect(addr)?;
+    write!(
+        s,
+        "POST /v1/completions HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut reader = BufReader::new(s);
+    let mut status = String::new();
+    reader.read_line(&mut status)?;
+    if !status.starts_with("HTTP/1.1 200") {
+        anyhow::bail!("streaming request failed: {status}");
+    }
+    let mut streamed = 0u64;
+    for line in reader.lines() {
+        let line = line?;
+        let Some(payload) = line.strip_prefix("data: ") else {
+            continue;
+        };
+        if payload == "[DONE]" {
+            break;
+        }
+        let chunk =
+            json::parse(payload).map_err(|e| anyhow::anyhow!("bad SSE chunk `{payload}`: {e}"))?;
+        let choice = chunk
+            .get("choices")
+            .and_then(|c| c.as_array())
+            .and_then(|c| c.first())
+            .ok_or_else(|| anyhow::anyhow!("chunk without choices: {payload}"))?;
+        if let Some(tok) = choice.get("token_id").and_then(|t| t.as_i64()) {
+            streamed += 1;
+            let at = choice.get("at").and_then(|a| a.as_f64()).unwrap_or(0.0);
+            println!("  token {streamed}: {tok} (engine clock {:.0} ms)", at * 1e3);
+        } else if let Some(fin) = choice.get("finish_reason").and_then(|f| f.as_str()) {
+            println!("  finish_reason: {fin}");
+        }
+    }
+    if streamed != 10 {
+        anyhow::bail!("expected 10 streamed tokens, got {streamed}");
+    }
+
+    // 2. Non-streaming completion.
+    let (status, body) = exchange(
+        addr,
+        "POST",
+        "/v1/completions",
+        Some(r#"{"prompt":[5,11,17,23],"max_tokens":6}"#),
+    )?;
+    let v = json::parse(&body).map_err(|e| anyhow::anyhow!("bad completion body: {e}"))?;
+    let n_tokens = v
+        .get("usage")
+        .and_then(|u| u.get("completion_tokens"))
+        .and_then(|c| c.as_u64())
+        .unwrap_or(0);
+    println!("non-streaming: status {status}, {n_tokens} completion tokens");
+    if status != 200 || n_tokens != 6 {
+        anyhow::bail!("unexpected non-streaming response: {body}");
+    }
+
+    // 3. Health + metrics.
+    let (status, health) = exchange(addr, "GET", "/healthz", None)?;
+    println!("healthz: {status} {health}");
+    let (status, metrics) = exchange(addr, "GET", "/metrics", None)?;
+    let tokens_line = metrics
+        .lines()
+        .find(|l| l.starts_with("duetserve_http_tokens_streamed_total"))
+        .unwrap_or("duetserve_http_tokens_streamed_total <missing>");
+    println!("metrics: {status} ({tokens_line})");
+    if !metrics.contains("duetserve_engine_completed_total") {
+        anyhow::bail!("metrics payload missing engine snapshot:\n{metrics}");
+    }
+
+    // 4. Graceful drain over the wire; the response is the final report.
+    let (status, report) = exchange(addr, "POST", "/shutdown", None)?;
+    let rep = json::parse(&report).map_err(|e| anyhow::anyhow!("bad report: {e}"))?;
+    println!(
+        "shutdown: {status}; completed {} requests, queue-cap {}",
+        rep.get("completed").and_then(|c| c.as_u64()).unwrap_or(0),
+        rep.get("queue_cap")
+            .and_then(|q| q.as_u64())
+            .map(|q| q.to_string())
+            .unwrap_or_else(|| "n/a".into()),
+    );
+    if let Some(http) = spawned {
+        let final_rep = http.join()?;
+        println!(
+            "in-process handle drained too: {} completed ({})",
+            final_rep.completed, final_rep.system
+        );
+        if final_rep.completed != 2 {
+            anyhow::bail!("expected 2 completed requests, got {}", final_rep.completed);
+        }
+    }
+    println!("http transport round trip OK");
+    Ok(())
+}

@@ -64,6 +64,18 @@ impl Args {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Numeric option without a default: `Ok(None)` when absent,
+    /// `Err` (for the caller to surface) when present but not a number —
+    /// a typo'd value must not silently fall back to a default.
+    pub fn usize_opt(&self, key: &str) -> Result<Option<usize>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                format!("--{key} must be a non-negative integer, got `{v}`")
+            }),
+        }
+    }
+
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
@@ -113,6 +125,14 @@ mod tests {
         let a = parse("x");
         assert_eq!(a.f64_or("missing", 2.5), 2.5);
         assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn usize_opt_distinguishes_absent_from_unparseable() {
+        let a = parse("serve --queue-cap 64");
+        assert_eq!(a.usize_opt("queue-cap"), Ok(Some(64)));
+        assert_eq!(a.usize_opt("missing"), Ok(None));
+        assert!(parse("serve --queue-cap 10O").usize_opt("queue-cap").is_err());
     }
 
     #[test]

@@ -948,6 +948,20 @@ impl ServingTopology for ClusterEngine {
         self.metrics.report(&self.system_name())
     }
 
+    fn snapshot_recorder(&self) -> Recorder {
+        // The non-destructive sibling of `fold_workers`: merge what every
+        // worker has recorded so far without retiring any state, with the
+        // wall clock as the max worker activity horizon.
+        let mut rec = self.metrics.clone();
+        let mut duration = rec.duration;
+        for w in &self.workers {
+            rec.merge(&w.core.metrics);
+            duration = duration.max(w.core.last_active);
+        }
+        rec.duration = duration;
+        rec
+    }
+
     fn check_invariants(&self) -> Result<(), String> {
         ClusterEngine::check_invariants(self)
     }

@@ -30,7 +30,7 @@
 //!   the backend holding its token values; newly finished requests are
 //!   visited exactly once with `finished = true`.
 
-use crate::metrics::Report;
+use crate::metrics::{Recorder, Report};
 use crate::request::{Request, RequestId};
 
 use super::backend::ExecutionBackend;
@@ -112,6 +112,13 @@ pub trait ServingTopology {
 
     /// Fold per-worker state into the final merged [`Report`].
     fn fold_report(&mut self) -> Report;
+
+    /// Non-destructive recorder snapshot for live metrics endpoints:
+    /// everything recorded so far, merged across workers, with
+    /// `duration` set to the current activity horizon. Unlike
+    /// [`fold_report`](Self::fold_report) this must not retire any
+    /// state — it can be called repeatedly mid-run.
+    fn snapshot_recorder(&self) -> Recorder;
 
     /// Cross-worker invariants (used on the drain path and by tests).
     fn check_invariants(&self) -> Result<(), String>;
@@ -200,6 +207,12 @@ impl ServingTopology for EngineCore {
     fn fold_report(&mut self) -> Report {
         self.metrics.duration = self.clock;
         self.metrics.report(&ServingTopology::label(self))
+    }
+
+    fn snapshot_recorder(&self) -> Recorder {
+        let mut rec = self.metrics.clone();
+        rec.duration = self.clock;
+        rec
     }
 
     fn check_invariants(&self) -> Result<(), String> {

@@ -4,6 +4,9 @@
 //!   serve      — run a serving experiment (policy x workload); with
 //!                `--backend` the workload goes through the unified
 //!                streaming front-end instead of the batch simulator
+//!   serve-http — expose the same front-end over an OpenAI-compatible
+//!                HTTP/SSE endpoint (POST /v1/completions, GET /healthz,
+//!                GET /metrics, POST /shutdown)
 //!   traces     — print Table-1 statistics of the calibrated traces
 //!   partition  — inspect the Algorithm-1 optimizer for a batch shape
 //!   e2e        — serve the real AOT-compiled tiny model via PJRT
@@ -14,6 +17,7 @@
 //!   duetserve serve --policy duet --trace azure-conv --qps 10 --n 300
 //!   duetserve serve --policy vllm --isl 8000 --osl 200 --qps 6 --n 100
 //!   duetserve serve --backend sim --policy duet --n 50 --qps 8
+//!   duetserve serve-http --addr 127.0.0.1:8080 --backend sim --queue-cap 256
 //!   duetserve partition --decode 64 --ctx 8192 --prefill 8192
 //!   duetserve e2e --requests 16 --max-new 24
 
@@ -25,7 +29,8 @@ use duetserve::model::AttnShape;
 use duetserve::roofline::{BatchShape, Predictor};
 use duetserve::runtime::{artifacts, PjrtBackend};
 use duetserve::sched::{optimize_partition, scheduler_for};
-use duetserve::server::{Server, ServerCore, SubmitOptions};
+use duetserve::server::http::{HttpConfig, HttpServer, DEFAULT_MAX_BODY};
+use duetserve::server::{Server, ServerCore, SubmitOptions, DEFAULT_QUEUE_DEPTH};
 use duetserve::util::tablefmt::Table;
 use duetserve::workload::synthetic::fixed_workload;
 use duetserve::workload::traces::{generate, trace_by_name, TraceKind};
@@ -87,10 +92,14 @@ fn build_workload(args: &Args, qps: f64, seed: u64) -> Workload {
     }
 }
 
-fn cmd_serve(args: &Args) {
-    let cfg = build_config(args);
-    let qps = args.f64_or("qps", 8.0);
-    let seed = args.usize_or("seed", 1) as u64;
+/// Worker-fleet options shared by `serve` and `serve-http`.
+struct FleetOpts {
+    replicas: u32,
+    router: Option<String>,
+    topology: String,
+}
+
+fn parse_fleet_opts(args: &Args) -> FleetOpts {
     let replicas = args.u32_or("replicas", 1);
     if replicas == 0 {
         eprintln!("error: --replicas must be >= 1");
@@ -100,13 +109,6 @@ fn cmd_serve(args: &Args) {
         "router",
         &["round-robin", "rr", "least-loaded", "least-outstanding", "ll", "kv-pressure", "kv"],
     ) {
-        Ok(choice) => choice.map(str::to_string),
-        Err(e) => {
-            eprintln!("error: {e}");
-            std::process::exit(2);
-        }
-    };
-    let backend = match args.one_of("backend", &["sim", "pjrt-stub"]) {
         Ok(choice) => choice.map(str::to_string),
         Err(e) => {
             eprintln!("error: {e}");
@@ -127,8 +129,17 @@ fn cmd_serve(args: &Args) {
         );
         std::process::exit(2);
     }
-    if backend.as_deref() == Some("pjrt-stub")
-        && (replicas > 1 || topology == "disagg" || router.is_some())
+    FleetOpts {
+        replicas,
+        router,
+        topology,
+    }
+}
+
+/// The pjrt backend owns one real device: reject fleet flags with it.
+fn validate_backend_fleet(backend: &str, fleet: &FleetOpts) {
+    if backend == "pjrt-stub"
+        && (fleet.replicas > 1 || fleet.topology == "disagg" || fleet.router.is_some())
     {
         eprintln!(
             "error: --replicas/--router/--topology need simulated workers; \
@@ -136,11 +147,47 @@ fn cmd_serve(args: &Args) {
         );
         std::process::exit(2);
     }
+}
+
+fn cmd_serve(args: &Args) {
+    let cfg = build_config(args);
+    let qps = args.f64_or("qps", 8.0);
+    let seed = args.usize_or("seed", 1) as u64;
+    let fleet = parse_fleet_opts(args);
+    let backend = match args.one_of("backend", &["sim", "pjrt-stub"]) {
+        Ok(choice) => choice.map(str::to_string),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Some(kind) = &backend {
+        validate_backend_fleet(kind, &fleet);
+    }
+    let queue_cap = match args.usize_opt("queue-cap") {
+        Ok(q) => q,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
     let w = build_workload(args, qps, seed);
     if let Some(kind) = backend {
-        cmd_serve_front(&kind, cfg, w, qps, seed, replicas, router, &topology);
+        cmd_serve_front(&kind, cfg, w, qps, seed, &fleet, queue_cap);
         return;
     }
+    if queue_cap.is_some() {
+        println!(
+            "note: --queue-cap applies to the streaming front-end \
+             (serve --backend ... / serve-http); the batch simulator has \
+             no submission queue"
+        );
+    }
+    let FleetOpts {
+        replicas,
+        router,
+        topology,
+    } = fleet;
     println!(
         "serving {} requests ({}) with {} (TP={})",
         w.requests.len(),
@@ -201,59 +248,67 @@ fn cmd_serve(args: &Args) {
     t.print();
 }
 
-/// Serve the workload through the unified streaming front-end: a
-/// `ServingTopology` (one `EngineCore`, or a `ClusterEngine` of sim
-/// workers routed at submit time) behind `server::Server`.
-#[allow(clippy::too_many_arguments)]
-fn cmd_serve_front(
+/// Start the threaded streaming front-end (`server::Server`) over the
+/// requested backend and worker fleet — shared by `serve --backend` and
+/// `serve-http`.
+fn start_front_server(
     kind: &str,
     cfg: ServingConfig,
-    w: Workload,
-    qps: f64,
     seed: u64,
-    replicas: u32,
-    router: Option<String>,
-    topology: &str,
-) {
-    // The whole workload is submitted before any stream is drained, so
-    // the backpressure bound must admit all of it.
-    let depth = w.requests.len().max(1);
-    let multi = replicas > 1 || router.is_some() || topology == "disagg";
-    let server = match kind {
+    fleet: &FleetOpts,
+    depth: usize,
+) -> anyhow::Result<Server> {
+    let multi = fleet.replicas > 1 || fleet.router.is_some() || fleet.topology == "disagg";
+    match kind {
         "sim" if multi => {
-            let base = cfg.clone();
-            let router_name = router.unwrap_or_else(|| default_router(topology).to_string());
-            let topo = topology.to_string();
+            let replicas = fleet.replicas;
+            let router_name = fleet
+                .router
+                .clone()
+                .unwrap_or_else(|| default_router(&fleet.topology).to_string());
+            let topo = fleet.topology.clone();
             println!("front-end cluster: {replicas} sim workers ({topo}), {router_name} routing");
             Server::start(move || {
                 let r = router_by_name(&router_name)
                     .ok_or_else(|| anyhow::anyhow!("unknown router `{router_name}`"))?;
                 let core = if topo == "disagg" {
                     let (p, d) = disagg_split(replicas);
-                    ServerCore::sim_disagg(base, p, d, seed, r)
+                    ServerCore::sim_disagg(cfg, p, d, seed, r)
                 } else {
-                    ServerCore::sim_replicated(base, replicas, seed, r)
+                    ServerCore::sim_replicated(cfg, replicas, seed, r)
                 };
                 Ok(core.with_queue_depth(depth))
             })
         }
-        "sim" => {
-            let base = cfg.clone();
-            Server::start(move || Ok(ServerCore::sim(base, seed).with_queue_depth(depth)))
-        }
-        "pjrt-stub" => {
-            let base = cfg.clone();
-            Server::start(move || {
-                let backend = PjrtBackend::load_default()?;
-                let tuned = backend.tune_config(base);
-                let scheduler = scheduler_for(&tuned);
-                Ok(ServerCore::new(tuned, scheduler, Box::new(backend))
-                    .with_queue_depth(depth))
-            })
-        }
+        "sim" => Server::start(move || Ok(ServerCore::sim(cfg, seed).with_queue_depth(depth))),
+        "pjrt-stub" => Server::start(move || {
+            let backend = PjrtBackend::load_default()?;
+            let tuned = backend.tune_config(cfg);
+            let scheduler = scheduler_for(&tuned);
+            Ok(ServerCore::new(tuned, scheduler, Box::new(backend)).with_queue_depth(depth))
+        }),
         _ => unreachable!("validated by one_of"),
-    };
-    let server = match server {
+    }
+}
+
+/// Serve the workload through the unified streaming front-end: a
+/// `ServingTopology` (one `EngineCore`, or a `ClusterEngine` of sim
+/// workers routed at submit time) behind `server::Server`.
+fn cmd_serve_front(
+    kind: &str,
+    cfg: ServingConfig,
+    w: Workload,
+    qps: f64,
+    seed: u64,
+    fleet: &FleetOpts,
+    queue_cap: Option<usize>,
+) {
+    // The whole workload is submitted before any stream is drained, so
+    // the default backpressure bound must admit all of it; an explicit
+    // --queue-cap overrides that (submissions beyond it are refused and
+    // reported, which is the point of the flag).
+    let depth = queue_cap.unwrap_or_else(|| w.requests.len().max(1)).max(1);
+    let server = match start_front_server(kind, cfg.clone(), seed, fleet, depth) {
         Ok(s) => s,
         Err(e) => {
             // The stub build has no PJRT runtime: report and skip, so CI
@@ -289,12 +344,92 @@ fn cmd_serve_front(
     }
     match server.shutdown() {
         Ok(rep) => {
-            println!("streamed {streamed} tokens");
+            println!(
+                "streamed {streamed} tokens (queue-cap {})",
+                rep.queue_cap
+                    .map(|q| q.to_string())
+                    .unwrap_or_else(|| "n/a".into())
+            );
             let mut t = Table::new(Report::header());
             t.row(rep.row(qps));
             t.print();
         }
         Err(e) => eprintln!("shutdown error: {e}"),
+    }
+}
+
+/// Expose the streaming front-end over the OpenAI-compatible HTTP
+/// transport. Composes with every topology the channel front-end
+/// supports: `--backend sim|pjrt-stub [--replicas N --router R
+/// --topology unified|disagg]`.
+fn cmd_serve_http(args: &Args) {
+    let cfg = build_config(args);
+    let seed = args.usize_or("seed", 1) as u64;
+    let addr = args.str_or("addr", "127.0.0.1:8080");
+    let fleet = parse_fleet_opts(args);
+    let backend = match args.one_of("backend", &["sim", "pjrt-stub"]) {
+        Ok(choice) => choice.unwrap_or("sim").to_string(),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    validate_backend_fleet(&backend, &fleet);
+    let numeric = |key: &str, default: usize| match args.usize_opt(key) {
+        Ok(v) => v.unwrap_or(default),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let queue_cap = numeric("queue-cap", DEFAULT_QUEUE_DEPTH).max(1);
+    let max_body = numeric("max-body", DEFAULT_MAX_BODY);
+    let server = match start_front_server(&backend, cfg.clone(), seed, &fleet, queue_cap) {
+        Ok(s) => s,
+        Err(e) => {
+            // Mirror `serve --backend pjrt-stub`: report and exit cleanly
+            // so CI can probe the stub build unconditionally.
+            println!("serve-http backend `{backend}` unavailable: {e}");
+            return;
+        }
+    };
+    let http_cfg = HttpConfig {
+        model: format!("duetserve/{}", cfg.policy.name()),
+        max_body,
+        handle_signals: true,
+    };
+    let http = match HttpServer::start(&addr, server, http_cfg) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "serve-http: listening on http://{} ({backend} backend, {} policy, queue-cap {queue_cap})",
+        http.addr(),
+        cfg.policy.name()
+    );
+    println!(
+        "  POST /v1/completions | GET /healthz | GET /metrics | \
+         POST /shutdown (graceful drain; SIGTERM/SIGINT drain too)"
+    );
+    match http.join() {
+        Ok(rep) => {
+            println!(
+                "drained cleanly (queue-cap {})",
+                rep.queue_cap
+                    .map(|q| q.to_string())
+                    .unwrap_or_else(|| "n/a".into())
+            );
+            let mut t = Table::new(Report::header());
+            t.row(rep.row(0.0));
+            t.print();
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
     }
 }
 
@@ -399,7 +534,7 @@ fn cmd_config(args: &Args) {
 const USAGE: &str = "\
 duetserve — adaptive prefill/decode GPU multiplexing (paper reproduction)
 
-USAGE: duetserve <serve|traces|partition|e2e|config> [--options]
+USAGE: duetserve <serve|serve-http|traces|partition|e2e|config> [--options]
 
 serve:      --policy vllm|sglang|sglang-chunked|duet|dynamo
             --trace azure-code|azure-conv|mooncake | --isl N --osl N
@@ -415,6 +550,17 @@ serve:      --policy vllm|sglang|sglang-chunked|duet|dynamo
                                        live across a routed cluster;
                                        pjrt-stub skips unless built with
                                        --features xla-pjrt)
+            --queue-cap N             (front-end submission-queue bound;
+                                       beyond it submissions get
+                                       QueueFull backpressure)
+serve-http: --addr HOST:PORT (default 127.0.0.1:8080)
+            --backend sim|pjrt-stub (default sim) --queue-cap N
+            --max-body BYTES --seed N
+            --replicas N --router R --topology unified|disagg
+            plus the serve model/policy flags; exposes the
+            OpenAI-compatible endpoint (see docs/http_api.md):
+            POST /v1/completions (JSON, SSE with \"stream\":true),
+            GET /healthz, GET /metrics, POST /shutdown
 partition:  --decode N --ctx N --prefill N [--tbt-slo F]
 e2e:        --requests N --max-new N   (needs `make artifacts`)
 ";
@@ -423,6 +569,7 @@ fn main() {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
+        Some("serve-http") => cmd_serve_http(&args),
         Some("traces") => cmd_traces(),
         Some("partition") => cmd_partition(&args),
         Some("e2e") => {

@@ -123,6 +123,7 @@ impl Recorder {
             } else {
                 None
             },
+            queue_cap: None,
         }
     }
 }
@@ -153,6 +154,10 @@ pub struct Report {
     /// Fraction of SLO-checked inter-token gaps within their request's
     /// TBT SLO. `None` when no request declared one.
     pub slo_attainment: Option<f64>,
+    /// Effective serving-front-end submission-queue bound (`--queue-cap`)
+    /// for the run. `None` for batch engine runs, which have no
+    /// submission queue.
+    pub queue_cap: Option<usize>,
 }
 
 impl Report {

@@ -1,0 +1,1441 @@
+//! HTTP/OpenAI-compatible streaming transport over [`Server`].
+//!
+//! The offline image has no crates.io, so this is a dependency-free
+//! HTTP/1.1 server on `std::net`: a non-blocking accept loop polling a
+//! shutdown flag, one thread per connection, `Connection: close`
+//! semantics (each request rides its own connection), and the in-crate
+//! [`crate::util::json`] module as the wire format. It is the network
+//! front door to the one request lifecycle in this crate — every
+//! completion goes through [`Server::submit`] into [`ServerCore`] over
+//! whatever [`ServingTopology`](crate::engine::ServingTopology) the
+//! server was started with, so the transport composes with the sim
+//! backend, the PJRT backend, and replicated/disaggregated clusters
+//! without any special cases.
+//!
+//! # Endpoints
+//!
+//! - `POST /v1/completions` — OpenAI-style completion. `"stream": false`
+//!   returns one JSON body; `"stream": true` returns Server-Sent Events
+//!   (`data: {chunk}\n\n` per token, then a finish chunk and
+//!   `data: [DONE]\n\n`). There is no tokenizer in this reproduction:
+//!   `prompt` is either an array of integer token ids or a string
+//!   (mapped byte-per-token, verbatim byte values), and completion
+//!   "text" is the generated token ids space-joined, with the raw ids
+//!   in `token_ids`.
+//!   Trace-replay extensions: `arrival` (engine-clock seconds),
+//!   `slo_tbt_ms`, `priority`.
+//! - `GET /healthz` — liveness.
+//! - `GET /metrics` — Prometheus text: transport counters plus a live,
+//!   non-destructive engine snapshot ([`Server::report_snapshot`]).
+//! - `POST /shutdown` — graceful drain: stop the engine after all
+//!   accepted work completes and answer with the final merged
+//!   [`Report`] as JSON. `SIGTERM`/`SIGINT` trigger the same drain when
+//!   the transport was started with
+//!   [`HttpConfig::handle_signals`].
+//!
+//! There is no authentication anywhere on this surface — `/shutdown`
+//! in particular is a one-request kill switch. The transport assumes a
+//! trusted network; bind loopback (the CLI default) unless the whole
+//! segment is trusted.
+//!
+//! # Error mapping
+//!
+//! | condition                            | status |
+//! |--------------------------------------|--------|
+//! | malformed HTTP or JSON, bad fields   | 400    |
+//! | unknown route                        | 404    |
+//! | wrong method on a known route        | 405    |
+//! | body over [`HttpConfig::max_body`]   | 413    |
+//! | [`SubmitError::QueueFull`]           | 429    |
+//! | draining / engine gone               | 503    |
+//!
+//! A client that disconnects mid-request cancels its request
+//! server-side, so abandoned requests release their slot and KV instead
+//! of decoding to completion: on the SSE path the next write fails and
+//! triggers [`RequestHandle::cancel`]; on the non-streaming path the
+//! handler probes the socket every [`DISCONNECT_PROBE`] while waiting
+//! (note: a half-closed write side reads as a disconnect).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::metrics::Report;
+use crate::server::{
+    FinishReason, HandlePoll, RequestHandle, Server, SubmitError, SubmitOptions, TokenEvent,
+};
+use crate::util::json::{self, Json};
+
+/// Default cap on one request body (413 beyond it).
+pub const DEFAULT_MAX_BODY: usize = 1 << 20;
+
+/// Hard cap on `max_tokens` per completion (400 beyond it). The sim
+/// backend has no `max_context`, so without this bound one hostile
+/// request could decode until the engine clock trips the
+/// `MAX_SIM_TIME` divergence guard and drains every in-flight stream;
+/// 64Ki tokens stays orders of magnitude under that horizon.
+pub const MAX_TOKENS_CAP: u64 = 65_536;
+
+/// Cap on the request line + headers of one request.
+const MAX_HEADER_BYTES: usize = 32 * 1024;
+
+/// Accept-loop poll interval while waiting for connections or shutdown.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// How long the accept thread waits for in-flight connection handlers
+/// after the engine has drained (they only need to flush final writes).
+const CONN_LINGER: Duration = Duration::from_secs(30);
+
+/// Per-socket IO timeouts, so a stalled peer cannot pin a handler thread
+/// forever.
+const IO_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// How often a non-streaming handler probes its socket for a client
+/// disconnect while the completion is still generating. (The SSE path
+/// needs no probe: its per-token writes fail fast on a dead peer.)
+const DISCONNECT_PROBE: Duration = Duration::from_millis(250);
+
+/// Transport configuration.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Reported as `model` in completion responses.
+    pub model: String,
+    /// Request-body cap, bytes (413 beyond it).
+    pub max_body: usize,
+    /// Install a process-wide SIGTERM/SIGINT handler that triggers the
+    /// same graceful drain as `POST /shutdown`. The CLI turns this on;
+    /// tests and examples leave it off.
+    pub handle_signals: bool,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig {
+            model: "duetserve".to_string(),
+            max_body: DEFAULT_MAX_BODY,
+            handle_signals: false,
+        }
+    }
+}
+
+/// Transport-level counters, exported on `/metrics` alongside the engine
+/// snapshot.
+#[derive(Debug, Default)]
+pub struct HttpStats {
+    /// Requests that parsed well enough to be routed.
+    pub requests_total: AtomicU64,
+    /// Completions accepted into the engine.
+    pub completions_total: AtomicU64,
+    /// Requests refused without reaching the engine: 4xx (parse errors,
+    /// bad routes, backpressure) and 503 while draining.
+    pub rejected_total: AtomicU64,
+    /// Token events delivered to clients (streaming and non-streaming).
+    pub tokens_streamed_total: AtomicU64,
+    /// SSE streams currently open.
+    pub active_streams: AtomicU64,
+    /// Connections currently being handled.
+    pub active_connections: AtomicU64,
+}
+
+struct Shared {
+    /// The engine transport; taken (→ `None`) by whichever path drains
+    /// first. Submissions hold the read side only long enough to enqueue.
+    server: RwLock<Option<Server>>,
+    /// Serializes [`Shared::drain`] end to end, so a racing second
+    /// caller blocks until the report is published instead of observing
+    /// the taken-but-not-yet-drained window.
+    drain_lock: Mutex<()>,
+    /// The final drained report, published exactly once.
+    report: Mutex<Option<Report>>,
+    /// Set once the drain has been triggered; the accept loop exits on it.
+    shutdown: AtomicBool,
+    stats: HttpStats,
+    cfg: HttpConfig,
+}
+
+impl Shared {
+    fn server_read(&self) -> std::sync::RwLockReadGuard<'_, Option<Server>> {
+        match self.server.read() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    fn report_lock(&self) -> std::sync::MutexGuard<'_, Option<Report>> {
+        match self.report.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// The single drain point, shared by `POST /shutdown`, SIGTERM and
+    /// [`HttpServer::shutdown`]: take the server, drain the engine
+    /// (completing all accepted work), publish the report, then raise the
+    /// shutdown flag. Idempotent — concurrent and later callers block on
+    /// `drain_lock` until the report is published, then get it.
+    fn drain(&self) -> Option<Report> {
+        let _serialized = match self.drain_lock.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let taken = match self.server.write() {
+            Ok(mut g) => g.take(),
+            Err(poisoned) => poisoned.into_inner().take(),
+        };
+        if let Some(server) = taken {
+            match server.shutdown() {
+                Ok(rep) => *self.report_lock() = Some(rep),
+                Err(e) => eprintln!("http: engine drain failed: {e}"),
+            }
+        }
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.report_lock().clone()
+    }
+}
+
+/// The HTTP front door: bind, accept, and serve until a graceful
+/// shutdown drains the engine.
+pub struct HttpServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve `server`
+    /// on a background accept thread.
+    pub fn start(addr: &str, server: Server, cfg: HttpConfig) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr).map_err(|e| anyhow!("bind {addr}: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| anyhow!("set_nonblocking: {e}"))?;
+        let local = listener.local_addr().map_err(|e| anyhow!("local_addr: {e}"))?;
+        if cfg.handle_signals {
+            sig::install();
+        }
+        let handle_signals = cfg.handle_signals;
+        let shared = Arc::new(Shared {
+            server: RwLock::new(Some(server)),
+            drain_lock: Mutex::new(()),
+            report: Mutex::new(None),
+            shutdown: AtomicBool::new(false),
+            stats: HttpStats::default(),
+            cfg,
+        });
+        let loop_shared = Arc::clone(&shared);
+        let accept =
+            std::thread::spawn(move || accept_loop(listener, loop_shared, handle_signals));
+        Ok(HttpServer {
+            addr: local,
+            shared,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Transport counters (live).
+    pub fn stats(&self) -> &HttpStats {
+        &self.shared.stats
+    }
+
+    /// Block until a shutdown (`POST /shutdown`, SIGTERM, or
+    /// [`shutdown`](HttpServer::shutdown)) has drained the engine;
+    /// returns the final merged report.
+    pub fn join(mut self) -> Result<Report> {
+        let accept = self.accept.take().expect("accept thread already joined");
+        accept
+            .join()
+            .map_err(|_| anyhow!("http accept thread panicked"))?;
+        self.shared
+            .report_lock()
+            .clone()
+            .ok_or_else(|| anyhow!("http server stopped without a drain report"))
+    }
+
+    /// Trigger the graceful drain programmatically and wait for it.
+    pub fn shutdown(self) -> Result<Report> {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.join()
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>, handle_signals: bool) {
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) || (handle_signals && sig::triggered()) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shared.stats.active_connections.fetch_add(1, Ordering::SeqCst);
+                let conn_shared = Arc::clone(&shared);
+                std::thread::spawn(move || {
+                    handle_connection(&conn_shared, stream);
+                    conn_shared.stats.active_connections.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+    // Drain (no-op when a /shutdown handler already did), then give
+    // in-flight handlers a moment to flush: the engine drain guarantees
+    // every open stream has received its terminal event.
+    shared.drain();
+    let t0 = Instant::now();
+    while shared.stats.active_connections.load(Ordering::SeqCst) > 0
+        && t0.elapsed() < CONN_LINGER
+    {
+        std::thread::sleep(ACCEPT_POLL);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Request parsing (pure, unit-tested).
+// ---------------------------------------------------------------------
+
+/// Why a request could not be read off the socket.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum ReadError {
+    /// Protocol violation → 400.
+    Malformed(String),
+    /// Declared body over the cap → 413.
+    TooLarge { limit: usize },
+    /// The client closed the connection before sending anything.
+    Closed,
+}
+
+#[derive(Debug)]
+pub(crate) struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    /// Names lowercased; obs-fold continuation lines joined with a space.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    pub(crate) fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Read one CRLF (or bare-LF) terminated line. `Ok(None)` on EOF. The
+/// read itself is capped at the remaining header budget (not just
+/// checked afterwards), so a peer streaming an endless line cannot grow
+/// the buffer past `MAX_HEADER_BYTES`.
+fn read_crlf_line(r: &mut impl BufRead, budget: &mut usize) -> Result<Option<String>, ReadError> {
+    let mut buf = Vec::new();
+    let n = r
+        .by_ref()
+        .take(*budget as u64 + 1)
+        .read_until(b'\n', &mut buf)
+        .map_err(|e| ReadError::Malformed(format!("read: {e}")))?;
+    if n == 0 {
+        return Ok(None);
+    }
+    *budget = budget
+        .checked_sub(buf.len())
+        .ok_or_else(|| ReadError::Malformed("headers exceed 32 KiB".to_string()))?;
+    while matches!(buf.last(), Some(b'\n' | b'\r')) {
+        buf.pop();
+    }
+    String::from_utf8(buf)
+        .map(Some)
+        .map_err(|_| ReadError::Malformed("non-UTF-8 header bytes".to_string()))
+}
+
+/// Parse one HTTP/1.x request (start line, headers with obs-fold
+/// support, and a `Content-Length` body). `w` carries the interim
+/// `100 Continue` when the client sent `Expect: 100-continue` — without
+/// it, standards-following clients (curl adds the header for bodies
+/// over ~1 KiB) stall before transmitting the body.
+pub(crate) fn read_request(
+    r: &mut impl BufRead,
+    w: &mut impl Write,
+    max_body: usize,
+) -> Result<HttpRequest, ReadError> {
+    let mut budget = MAX_HEADER_BYTES;
+    // RFC 9112 §2.2: be lenient about stray blank lines before the
+    // request line.
+    let start = loop {
+        match read_crlf_line(r, &mut budget)? {
+            None => return Err(ReadError::Closed),
+            Some(l) if l.is_empty() => continue,
+            Some(l) => break l,
+        }
+    };
+    let mut parts = start.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) => (m.to_string(), p.to_string(), v),
+        _ => return Err(ReadError::Malformed(format!("bad request line `{start}`"))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(ReadError::Malformed(format!(
+            "unsupported protocol `{version}`"
+        )));
+    }
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = read_crlf_line(r, &mut budget)?
+            .ok_or_else(|| ReadError::Malformed("connection closed inside headers".to_string()))?;
+        if line.is_empty() {
+            break;
+        }
+        if line.starts_with(' ') || line.starts_with('\t') {
+            // obs-fold: the line continues the previous header's value.
+            let Some(last) = headers.last_mut() else {
+                return Err(ReadError::Malformed(
+                    "continuation line before any header".to_string(),
+                ));
+            };
+            last.1.push(' ');
+            last.1.push_str(line.trim());
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(ReadError::Malformed(format!("header without colon `{line}`")));
+        };
+        if name.is_empty() || name.contains(' ') || name.contains('\t') {
+            return Err(ReadError::Malformed(format!("bad header name `{name}`")));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let mut req = HttpRequest {
+        method,
+        path,
+        headers,
+        body: Vec::new(),
+    };
+    if let Some(te) = req.header("transfer-encoding") {
+        return Err(ReadError::Malformed(format!(
+            "transfer-encoding `{te}` not supported; send a content-length body"
+        )));
+    }
+    if let Some(cl) = req.header("content-length") {
+        let len: usize = cl
+            .trim()
+            .parse()
+            .map_err(|_| ReadError::Malformed(format!("bad content-length `{cl}`")))?;
+        if len > max_body {
+            return Err(ReadError::TooLarge { limit: max_body });
+        }
+        if req
+            .header("expect")
+            .is_some_and(|v| v.eq_ignore_ascii_case("100-continue"))
+        {
+            let _ = write!(w, "HTTP/1.1 100 Continue\r\n\r\n").and_then(|()| w.flush());
+        }
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body).map_err(|_| {
+            ReadError::Malformed(format!(
+                "content-length mismatch: body ended before {len} bytes"
+            ))
+        })?;
+        req.body = body;
+    }
+    Ok(req)
+}
+
+// ---------------------------------------------------------------------
+// Responses.
+// ---------------------------------------------------------------------
+
+fn write_head(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    headers: &[(&str, String)],
+) -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {status} {reason}\r\n")?;
+    for (k, v) in headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "Connection: close\r\n\r\n")
+}
+
+fn respond(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &[u8],
+    extra: &[(&str, String)],
+) -> std::io::Result<()> {
+    let mut headers = vec![
+        ("Content-Type", content_type.to_string()),
+        ("Content-Length", body.len().to_string()),
+    ];
+    headers.extend(extra.iter().map(|(k, v)| (*k, v.clone())));
+    write_head(w, status, reason, &headers)?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+fn respond_json(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    value: &Json,
+) -> std::io::Result<()> {
+    respond(w, status, reason, "application/json", value.dump().as_bytes(), &[])
+}
+
+/// OpenAI-style error body.
+fn error_json(status: u16, message: &str) -> Json {
+    let kind = if status < 500 {
+        "invalid_request_error"
+    } else {
+        "server_error"
+    };
+    Json::obj(vec![(
+        "error",
+        Json::obj(vec![
+            ("message", Json::string(message)),
+            ("type", Json::string(kind)),
+            ("code", Json::Num(f64::from(status))),
+        ]),
+    )])
+}
+
+fn reject(shared: &Shared, w: &mut impl Write, status: u16, reason: &str, message: &str) {
+    shared.stats.rejected_total.fetch_add(1, Ordering::Relaxed);
+    let _ = respond_json(w, status, reason, &error_json(status, message));
+}
+
+/// The drain report as a JSON object (the `POST /shutdown` response
+/// body).
+pub(crate) fn report_json(rep: &Report) -> Json {
+    Json::obj(vec![
+        ("system", Json::string(rep.system.clone())),
+        ("completed", Json::Num(rep.completed as f64)),
+        ("duration_s", Json::Num(rep.duration)),
+        ("throughput_rps", Json::Num(rep.throughput_rps)),
+        ("token_throughput", Json::Num(rep.token_throughput)),
+        ("ttft_mean_s", Json::Num(rep.ttft.mean)),
+        ("tbt_mean_s", Json::Num(rep.tbt.mean)),
+        ("tbt_p99_s", Json::Num(rep.tbt_p99)),
+        ("e2e_mean_s", Json::Num(rep.e2e.mean)),
+        ("iterations", Json::Num(rep.iterations as f64)),
+        ("spatial_iterations", Json::Num(rep.spatial_iterations as f64)),
+        ("mean_sm_util", Json::Num(rep.mean_sm_util)),
+        ("mean_hbm_util", Json::Num(rep.mean_hbm_util)),
+        ("busy_frac", Json::Num(rep.busy_frac)),
+        (
+            "slo_attainment",
+            rep.slo_attainment.map(Json::Num).unwrap_or(Json::Null),
+        ),
+        (
+            "queue_cap",
+            rep.queue_cap
+                .map(|q| Json::Num(q as f64))
+                .unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+fn prom_metric(out: &mut String, name: &str, kind: &str, help: &str, value: f64) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+/// Render the `/metrics` payload: transport counters plus (when the
+/// engine is still up, or after drain from the stored report) the engine
+/// snapshot. The queue-cap gauge comes from the snapshot itself
+/// ([`Report::queue_cap`]), which the engine stamps with the bound it
+/// actually enforces — there is no second copy to keep in sync.
+pub(crate) fn render_prometheus(rep: Option<&Report>, stats: &HttpStats) -> String {
+    let mut out = String::new();
+    prom_metric(
+        &mut out,
+        "duetserve_http_requests_total",
+        "counter",
+        "HTTP requests routed",
+        stats.requests_total.load(Ordering::Relaxed) as f64,
+    );
+    prom_metric(
+        &mut out,
+        "duetserve_http_completions_total",
+        "counter",
+        "Completions accepted into the engine",
+        stats.completions_total.load(Ordering::Relaxed) as f64,
+    );
+    prom_metric(
+        &mut out,
+        "duetserve_http_rejected_total",
+        "counter",
+        "Requests refused without reaching the engine (4xx, or 503 while draining)",
+        stats.rejected_total.load(Ordering::Relaxed) as f64,
+    );
+    prom_metric(
+        &mut out,
+        "duetserve_http_tokens_streamed_total",
+        "counter",
+        "Token events delivered to clients",
+        stats.tokens_streamed_total.load(Ordering::Relaxed) as f64,
+    );
+    prom_metric(
+        &mut out,
+        "duetserve_http_active_streams",
+        "gauge",
+        "SSE streams currently open",
+        stats.active_streams.load(Ordering::SeqCst) as f64,
+    );
+    prom_metric(
+        &mut out,
+        "duetserve_http_active_connections",
+        "gauge",
+        "Connections currently being handled",
+        stats.active_connections.load(Ordering::SeqCst) as f64,
+    );
+    if let Some(r) = rep {
+        if let Some(cap) = r.queue_cap {
+            prom_metric(
+                &mut out,
+                "duetserve_queue_cap",
+                "gauge",
+                "Submission-queue bound in effect (--queue-cap)",
+                cap as f64,
+            );
+        }
+        prom_metric(
+            &mut out,
+            "duetserve_engine_completed_total",
+            "counter",
+            "Requests completed by the engine",
+            r.completed as f64,
+        );
+        prom_metric(
+            &mut out,
+            "duetserve_engine_iterations_total",
+            "counter",
+            "Engine iterations executed",
+            r.iterations as f64,
+        );
+        prom_metric(
+            &mut out,
+            "duetserve_engine_spatial_iterations_total",
+            "counter",
+            "Iterations run under a spatial SM partition",
+            r.spatial_iterations as f64,
+        );
+        prom_metric(
+            &mut out,
+            "duetserve_engine_clock_seconds",
+            "gauge",
+            "Engine-clock time",
+            r.duration,
+        );
+        prom_metric(
+            &mut out,
+            "duetserve_engine_ttft_mean_seconds",
+            "gauge",
+            "Mean time to first token",
+            r.ttft.mean,
+        );
+        prom_metric(
+            &mut out,
+            "duetserve_engine_tbt_mean_seconds",
+            "gauge",
+            "Mean time between tokens",
+            r.tbt.mean,
+        );
+        prom_metric(
+            &mut out,
+            "duetserve_engine_tbt_p99_seconds",
+            "gauge",
+            "p99 time between tokens",
+            r.tbt_p99,
+        );
+        prom_metric(
+            &mut out,
+            "duetserve_engine_sm_util",
+            "gauge",
+            "Duration-weighted mean SM utilization",
+            r.mean_sm_util,
+        );
+        prom_metric(
+            &mut out,
+            "duetserve_engine_hbm_util",
+            "gauge",
+            "Duration-weighted mean HBM utilization",
+            r.mean_hbm_util,
+        );
+        if let Some(att) = r.slo_attainment {
+            prom_metric(
+                &mut out,
+                "duetserve_engine_slo_attainment",
+                "gauge",
+                "Fraction of SLO-checked gaps within their TBT SLO",
+                att,
+            );
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Connection handling.
+// ---------------------------------------------------------------------
+
+fn handle_connection(shared: &Shared, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let req = match read_request(&mut reader, &mut writer, shared.cfg.max_body) {
+        Ok(r) => r,
+        Err(ReadError::Closed) => return,
+        Err(ReadError::Malformed(msg)) => {
+            reject(shared, &mut writer, 400, "Bad Request", &msg);
+            discard_unread(&mut reader);
+            return;
+        }
+        Err(ReadError::TooLarge { limit }) => {
+            reject(
+                shared,
+                &mut writer,
+                413,
+                "Payload Too Large",
+                &format!("request body exceeds {limit} bytes"),
+            );
+            discard_unread(&mut reader);
+            return;
+        }
+    };
+    shared.stats.requests_total.fetch_add(1, Ordering::Relaxed);
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let draining =
+                shared.shutdown.load(Ordering::SeqCst) || shared.server_read().is_none();
+            let status = if draining { "draining" } else { "ok" };
+            let body = Json::obj(vec![
+                ("status", Json::string(status)),
+                ("model", Json::string(shared.cfg.model.clone())),
+            ]);
+            let _ = respond_json(&mut writer, 200, "OK", &body);
+        }
+        ("GET", "/metrics") => {
+            let snapshot = shared
+                .server_read()
+                .as_ref()
+                .and_then(|s| s.report_snapshot())
+                .or_else(|| shared.report_lock().clone());
+            let body = render_prometheus(snapshot.as_ref(), &shared.stats);
+            let _ = respond(
+                &mut writer,
+                200,
+                "OK",
+                "text/plain; version=0.0.4",
+                body.as_bytes(),
+                &[],
+            );
+        }
+        ("POST", "/v1/completions") => handle_completion(shared, &mut writer, &req),
+        ("POST", "/shutdown") => match shared.drain() {
+            Some(rep) => {
+                let _ = respond_json(&mut writer, 200, "OK", &report_json(&rep));
+            }
+            None => {
+                let _ = respond_json(
+                    &mut writer,
+                    500,
+                    "Internal Server Error",
+                    &error_json(500, "engine drain produced no report"),
+                );
+            }
+        },
+        (_, "/healthz" | "/metrics" | "/v1/completions" | "/shutdown") => {
+            reject(
+                shared,
+                &mut writer,
+                405,
+                "Method Not Allowed",
+                &format!("{} not allowed on {}", req.method, req.path),
+            );
+        }
+        _ => {
+            reject(
+                shared,
+                &mut writer,
+                404,
+                "Not Found",
+                &format!("unknown route {} {}", req.method, req.path),
+            );
+        }
+    }
+}
+
+/// After refusing a request whose body was never read (413/400), consume
+/// what the peer already sent (bounded, short timeout) so closing our
+/// side does not turn into a TCP RST that races the error response.
+fn discard_unread(reader: &mut BufReader<TcpStream>) {
+    let _ = reader
+        .get_ref()
+        .set_read_timeout(Some(Duration::from_secs(5)));
+    let _ = std::io::copy(&mut reader.by_ref().take(1 << 22), &mut std::io::sink());
+}
+
+/// Parsed `/v1/completions` body.
+struct CompletionParams {
+    prompt: Vec<i32>,
+    opts: SubmitOptions,
+    stream: bool,
+}
+
+fn parse_completion(v: &Json) -> Result<CompletionParams, String> {
+    let prompt: Vec<i32> = match v.get("prompt") {
+        Some(Json::Str(s)) => s.bytes().map(i32::from).collect(),
+        Some(Json::Arr(items)) => items
+            .iter()
+            .map(|t| {
+                t.as_i64()
+                    .and_then(|x| i32::try_from(x).ok())
+                    .ok_or_else(|| "`prompt` array must hold integer token ids".to_string())
+            })
+            .collect::<Result<_, _>>()?,
+        Some(_) => {
+            return Err("`prompt` must be a string or an array of integer token ids".to_string())
+        }
+        None => return Err("missing `prompt`".to_string()),
+    };
+    let mut opts = SubmitOptions::default();
+    if let Some(mt) = v.get("max_tokens") {
+        opts.max_new_tokens = mt
+            .as_u64()
+            .ok_or_else(|| "`max_tokens` must be a non-negative integer".to_string())?;
+        if opts.max_new_tokens > MAX_TOKENS_CAP {
+            return Err(format!("`max_tokens` must be <= {MAX_TOKENS_CAP}"));
+        }
+    }
+    if let Some(x) = v.get("slo_tbt_ms") {
+        opts.slo_tbt_ms = Some(
+            x.as_f64()
+                .ok_or_else(|| "`slo_tbt_ms` must be a number".to_string())?,
+        );
+    }
+    if let Some(x) = v.get("priority") {
+        let p = x
+            .as_i64()
+            .ok_or_else(|| "`priority` must be an integer".to_string())?;
+        opts.priority = i32::try_from(p).map_err(|_| "`priority` out of range".to_string())?;
+    }
+    if let Some(x) = v.get("arrival") {
+        opts.arrival = Some(
+            x.as_f64()
+                .ok_or_else(|| "`arrival` must be engine-clock seconds".to_string())?,
+        );
+    }
+    let stream = match v.get("stream") {
+        None => false,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => return Err("`stream` must be a boolean".to_string()),
+    };
+    Ok(CompletionParams {
+        prompt,
+        opts,
+        stream,
+    })
+}
+
+fn finish_reason_str(reason: FinishReason) -> &'static str {
+    match reason {
+        // Generation always ends at `max_tokens` in this reproduction, so
+        // the OpenAI name for that outcome is `length`.
+        FinishReason::Completed => "length",
+        FinishReason::Cancelled => "cancelled",
+        FinishReason::Dropped => "dropped",
+    }
+}
+
+/// Token ids space-joined — the `text` stand-in while the reproduction
+/// has no detokenizer.
+fn token_text(tokens: &[i32]) -> String {
+    tokens
+        .iter()
+        .map(|t| t.to_string())
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+fn completion_json(
+    id: u64,
+    model: &str,
+    tokens: &[i32],
+    finish: &str,
+    prompt_tokens: usize,
+) -> Json {
+    Json::obj(vec![
+        ("id", Json::string(format!("cmpl-{id}"))),
+        ("object", Json::string("text_completion")),
+        ("created", Json::Num(0.0)),
+        ("model", Json::string(model)),
+        (
+            "choices",
+            Json::arr(vec![Json::obj(vec![
+                ("index", Json::Num(0.0)),
+                ("text", Json::string(token_text(tokens))),
+                (
+                    "token_ids",
+                    Json::arr(tokens.iter().map(|t| Json::Num(f64::from(*t))).collect()),
+                ),
+                ("finish_reason", Json::string(finish)),
+            ])]),
+        ),
+        (
+            "usage",
+            Json::obj(vec![
+                ("prompt_tokens", Json::Num(prompt_tokens as f64)),
+                ("completion_tokens", Json::Num(tokens.len() as f64)),
+                (
+                    "total_tokens",
+                    Json::Num((prompt_tokens + tokens.len()) as f64),
+                ),
+            ]),
+        ),
+    ])
+}
+
+fn handle_completion(shared: &Shared, w: &mut TcpStream, req: &HttpRequest) {
+    let Ok(body) = std::str::from_utf8(&req.body) else {
+        reject(shared, w, 400, "Bad Request", "body is not UTF-8");
+        return;
+    };
+    let parsed = match json::parse(body) {
+        Ok(v) => v,
+        Err(e) => {
+            reject(shared, w, 400, "Bad Request", &format!("malformed JSON: {e}"));
+            return;
+        }
+    };
+    let params = match parse_completion(&parsed) {
+        Ok(p) => p,
+        Err(msg) => {
+            reject(shared, w, 400, "Bad Request", &msg);
+            return;
+        }
+    };
+    let CompletionParams {
+        prompt,
+        opts,
+        stream,
+    } = params;
+    let prompt_tokens = prompt.len();
+    // Enqueue under the read lock only; streaming happens lock-free so a
+    // concurrent drain can complete these requests.
+    let submitted = {
+        let guard = shared.server_read();
+        guard.as_ref().map(|server| server.submit(prompt, opts))
+    };
+    let Some(submitted) = submitted else {
+        reject(shared, w, 503, "Service Unavailable", "server is draining");
+        return;
+    };
+    let handle = match submitted {
+        Ok(h) => h,
+        Err(SubmitError::QueueFull { depth }) => {
+            shared.stats.rejected_total.fetch_add(1, Ordering::Relaxed);
+            let body = error_json(
+                429,
+                &format!("submission queue full (queue-cap {depth}); retry later"),
+            );
+            let _ = respond(
+                w,
+                429,
+                "Too Many Requests",
+                "application/json",
+                body.dump().as_bytes(),
+                &[("Retry-After", "1".to_string())],
+            );
+            return;
+        }
+        Err(SubmitError::Rejected(why)) => {
+            reject(shared, w, 400, "Bad Request", &why);
+            return;
+        }
+        Err(SubmitError::ShuttingDown) => {
+            reject(shared, w, 503, "Service Unavailable", "server is shutting down");
+            return;
+        }
+    };
+    shared.stats.completions_total.fetch_add(1, Ordering::Relaxed);
+    if stream {
+        stream_completion(shared, w, handle, prompt_tokens);
+    } else {
+        blocking_completion(shared, w, handle, prompt_tokens);
+    }
+}
+
+/// Non-blocking probe: has the peer closed or reset the connection?
+/// Extra buffered request bytes (pipelining attempts) read as alive.
+fn client_gone(w: &TcpStream) -> bool {
+    let mut probe = [0u8; 1];
+    if w.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let gone = match w.peek(&mut probe) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) => e.kind() != std::io::ErrorKind::WouldBlock,
+    };
+    let _ = w.set_nonblocking(false);
+    gone
+}
+
+fn blocking_completion(
+    shared: &Shared,
+    w: &mut TcpStream,
+    handle: RequestHandle,
+    prompt_tokens: usize,
+) {
+    let id = handle.id();
+    let mut tokens = Vec::new();
+    // If the stream closes without a terminal event (engine abort), the
+    // client still gets a well-formed response marked dropped.
+    let mut reason = FinishReason::Dropped;
+    let mut last_probe = Instant::now();
+    loop {
+        // Probe the socket on a fixed cadence even while tokens flow:
+        // an abandoned non-streaming request must not decode to
+        // completion holding a batch slot nobody will read.
+        if last_probe.elapsed() >= DISCONNECT_PROBE {
+            last_probe = Instant::now();
+            if client_gone(w) {
+                handle.cancel();
+                reason = FinishReason::Cancelled;
+                break;
+            }
+        }
+        match handle.next_event_timeout(DISCONNECT_PROBE) {
+            HandlePoll::Event(TokenEvent::Token { value, .. }) => tokens.push(value),
+            HandlePoll::Event(TokenEvent::Done { reason: r }) => {
+                reason = r;
+                break;
+            }
+            HandlePoll::TimedOut => {}
+            HandlePoll::Closed => break,
+        }
+    }
+    shared.stats.tokens_streamed_total.fetch_add(tokens.len() as u64, Ordering::Relaxed);
+    let response = completion_json(
+        id,
+        &shared.cfg.model,
+        &tokens,
+        finish_reason_str(reason),
+        prompt_tokens,
+    );
+    let _ = respond_json(w, 200, "OK", &response);
+}
+
+fn stream_completion(
+    shared: &Shared,
+    w: &mut TcpStream,
+    handle: RequestHandle,
+    prompt_tokens: usize,
+) {
+    shared.stats.active_streams.fetch_add(1, Ordering::SeqCst);
+    let result = stream_events(shared, w, &handle, prompt_tokens);
+    shared.stats.active_streams.fetch_sub(1, Ordering::SeqCst);
+    if result.is_err() {
+        // The client went away mid-stream: cancel the server-side work so
+        // abandoned streams release their slot and KV budget.
+        handle.cancel();
+    }
+}
+
+fn sse_chunk(w: &mut impl Write, payload: &str) -> std::io::Result<()> {
+    w.write_all(b"data: ")?;
+    w.write_all(payload.as_bytes())?;
+    w.write_all(b"\n\n")?;
+    w.flush()
+}
+
+fn stream_events(
+    shared: &Shared,
+    w: &mut TcpStream,
+    handle: &RequestHandle,
+    prompt_tokens: usize,
+) -> std::io::Result<()> {
+    write_head(
+        w,
+        200,
+        "OK",
+        &[
+            ("Content-Type", "text/event-stream".to_string()),
+            ("Cache-Control", "no-cache".to_string()),
+        ],
+    )?;
+    w.flush()?;
+    let id = handle.id();
+    let model = shared.cfg.model.as_str();
+    let mut generated = 0usize;
+    loop {
+        let ev = match handle.next_event_timeout(DISCONNECT_PROBE) {
+            HandlePoll::Event(ev) => ev,
+            HandlePoll::TimedOut => {
+                // Queued or mid-prefill: no tokens are being written, so
+                // the write path cannot see a disconnect — probe the
+                // socket so a vanished client does not hold its queue
+                // slot until admission.
+                if client_gone(w) {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::BrokenPipe,
+                        "client disconnected while waiting for tokens",
+                    ));
+                }
+                continue;
+            }
+            HandlePoll::Closed => break,
+        };
+        match ev {
+            TokenEvent::Token { value, at } => {
+                let chunk = Json::obj(vec![
+                    ("id", Json::string(format!("cmpl-{id}"))),
+                    ("object", Json::string("text_completion")),
+                    ("model", Json::string(model)),
+                    (
+                        "choices",
+                        Json::arr(vec![Json::obj(vec![
+                            ("index", Json::Num(0.0)),
+                            ("text", Json::string(format!("{value} "))),
+                            ("token_id", Json::Num(f64::from(value))),
+                            ("at", Json::Num(at)),
+                            ("finish_reason", Json::Null),
+                        ])]),
+                    ),
+                ]);
+                sse_chunk(w, &chunk.dump())?;
+                generated += 1;
+                shared.stats.tokens_streamed_total.fetch_add(1, Ordering::Relaxed);
+            }
+            TokenEvent::Done { reason } => {
+                let fin = Json::obj(vec![
+                    ("id", Json::string(format!("cmpl-{id}"))),
+                    ("object", Json::string("text_completion")),
+                    ("model", Json::string(model)),
+                    (
+                        "choices",
+                        Json::arr(vec![Json::obj(vec![
+                            ("index", Json::Num(0.0)),
+                            ("text", Json::string("")),
+                            ("finish_reason", Json::string(finish_reason_str(reason))),
+                        ])]),
+                    ),
+                    (
+                        "usage",
+                        Json::obj(vec![
+                            ("prompt_tokens", Json::Num(prompt_tokens as f64)),
+                            ("completion_tokens", Json::Num(generated as f64)),
+                            (
+                                "total_tokens",
+                                Json::Num((prompt_tokens + generated) as f64),
+                            ),
+                        ]),
+                    ),
+                ]);
+                sse_chunk(w, &fin.dump())?;
+                return sse_chunk(w, "[DONE]");
+            }
+        }
+    }
+    // Channel closed without a terminal event (engine abort): still end
+    // the stream in-protocol.
+    sse_chunk(w, "[DONE]")
+}
+
+// ---------------------------------------------------------------------
+// Signal handling (graceful drain on SIGTERM/SIGINT).
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TRIGGERED: AtomicBool = AtomicBool::new(false);
+
+    // std already links libc on every unix target; declaring signal(2)
+    // directly keeps the transport dependency-free. The handler only
+    // stores to an atomic, which is async-signal-safe.
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+    }
+
+    extern "C" fn on_signal(_signum: i32) {
+        TRIGGERED.store(true, Ordering::SeqCst);
+    }
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    pub fn install() {
+        unsafe {
+            signal(SIGTERM, on_signal);
+            signal(SIGINT, on_signal);
+        }
+    }
+
+    pub fn triggered() -> bool {
+        TRIGGERED.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+
+    pub fn triggered() -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse_str(s: &str) -> Result<HttpRequest, ReadError> {
+        read_request(&mut Cursor::new(s.as_bytes().to_vec()), &mut Vec::new(), 1 << 16)
+    }
+
+    #[test]
+    fn expect_100_continue_gets_interim_response() {
+        let mut interim = Vec::new();
+        let req = read_request(
+            &mut Cursor::new(
+                b"POST / HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 2\r\n\r\nok".to_vec(),
+            ),
+            &mut interim,
+            1 << 16,
+        )
+        .unwrap();
+        assert_eq!(req.body, b"ok");
+        assert_eq!(interim, b"HTTP/1.1 100 Continue\r\n\r\n");
+        // No Expect header: nothing interim is written.
+        let mut interim = Vec::new();
+        read_request(
+            &mut Cursor::new(b"POST / HTTP/1.1\r\nContent-Length: 2\r\n\r\nok".to_vec()),
+            &mut interim,
+            1 << 16,
+        )
+        .unwrap();
+        assert!(interim.is_empty());
+    }
+
+    #[test]
+    fn parses_request_line_headers_and_body() {
+        let req = parse_str(
+            "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: 4\r\n\r\nabcd",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/completions");
+        assert_eq!(req.header("content-type"), Some("application/json"));
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn header_names_are_lowercased_and_values_trimmed() {
+        let req = parse_str("GET / HTTP/1.1\r\nX-Thing:   padded value  \r\n\r\n").unwrap();
+        assert_eq!(req.header("x-thing"), Some("padded value"));
+    }
+
+    #[test]
+    fn folds_continuation_lines() {
+        let req = parse_str(
+            "GET / HTTP/1.1\r\nX-Folded: first\r\n  second part\r\n\tthird\r\nHost: h\r\n\r\n",
+        )
+        .unwrap();
+        assert_eq!(req.header("x-folded"), Some("first second part third"));
+        assert_eq!(req.header("host"), Some("h"));
+    }
+
+    #[test]
+    fn continuation_before_any_header_is_malformed() {
+        let err = parse_str("GET / HTTP/1.1\r\n  dangling\r\n\r\n").unwrap_err();
+        assert!(matches!(err, ReadError::Malformed(_)));
+    }
+
+    #[test]
+    fn content_length_mismatch_is_malformed() {
+        // Declares 10 bytes but the connection ends after 4.
+        let err = parse_str("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabcd").unwrap_err();
+        match err {
+            ReadError::Malformed(msg) => assert!(msg.contains("content-length"), "{msg}"),
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_body_is_too_large() {
+        let err = read_request(
+            &mut Cursor::new(b"POST / HTTP/1.1\r\nContent-Length: 99999\r\n\r\n".to_vec()),
+            &mut Vec::new(),
+            1024,
+        )
+        .unwrap_err();
+        assert_eq!(err, ReadError::TooLarge { limit: 1024 });
+    }
+
+    #[test]
+    fn bad_request_lines_are_malformed() {
+        for bad in [
+            "GARBAGE\r\n\r\n",
+            "GET /\r\n\r\n",
+            "GET / HTTP/2\r\n\r\n",
+            "GET / HTTP/1.1 extra\r\n\r\n",
+        ] {
+            assert!(
+                matches!(parse_str(bad), Err(ReadError::Malformed(_))),
+                "`{bad}` must be malformed"
+            );
+        }
+    }
+
+    #[test]
+    fn header_without_colon_is_malformed() {
+        assert!(matches!(
+            parse_str("GET / HTTP/1.1\r\nNoColonHere\r\n\r\n"),
+            Err(ReadError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn eof_before_request_is_closed_not_malformed() {
+        assert_eq!(parse_str("").unwrap_err(), ReadError::Closed);
+    }
+
+    #[test]
+    fn leading_blank_lines_are_tolerated() {
+        let req = parse_str("\r\n\r\nGET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(req.path, "/healthz");
+    }
+
+    #[test]
+    fn transfer_encoding_is_rejected() {
+        assert!(matches!(
+            parse_str("POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"),
+            Err(ReadError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn bare_lf_line_endings_are_accepted() {
+        let req = parse_str("GET /metrics HTTP/1.1\nHost: x\n\n").unwrap();
+        assert_eq!(req.path, "/metrics");
+        assert_eq!(req.header("host"), Some("x"));
+    }
+
+    #[test]
+    fn completion_params_parse_and_validate() {
+        let v = json::parse(
+            r#"{"prompt":[1,2,3],"max_tokens":7,"stream":true,"slo_tbt_ms":50,"priority":2,"arrival":1.5}"#,
+        )
+        .unwrap();
+        let p = parse_completion(&v).unwrap();
+        assert_eq!(p.prompt, vec![1, 2, 3]);
+        assert_eq!(p.opts.max_new_tokens, 7);
+        assert!(p.stream);
+        assert_eq!(p.opts.slo_tbt_ms, Some(50.0));
+        assert_eq!(p.opts.priority, 2);
+        assert_eq!(p.opts.arrival, Some(1.5));
+
+        // String prompts map byte-per-token.
+        let v = json::parse(r#"{"prompt":"AB"}"#).unwrap();
+        let p = parse_completion(&v).unwrap();
+        assert_eq!(p.prompt, vec![65, 66]);
+        assert!(!p.stream);
+        assert_eq!(p.opts.max_new_tokens, SubmitOptions::default().max_new_tokens);
+
+        for bad in [
+            r#"{}"#,
+            r#"{"prompt":5}"#,
+            r#"{"prompt":[1.5]}"#,
+            r#"{"prompt":["a"]}"#,
+            r#"{"prompt":[1],"max_tokens":-1}"#,
+            r#"{"prompt":[1],"max_tokens":"x"}"#,
+            r#"{"prompt":[1],"stream":1}"#,
+            r#"{"prompt":[1],"priority":4000000000}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(parse_completion(&v).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn finish_reasons_map_to_openai_names() {
+        assert_eq!(finish_reason_str(FinishReason::Completed), "length");
+        assert_eq!(finish_reason_str(FinishReason::Cancelled), "cancelled");
+        assert_eq!(finish_reason_str(FinishReason::Dropped), "dropped");
+    }
+
+    #[test]
+    fn completion_json_shape() {
+        let v = completion_json(3, "m", &[10, 20], "length", 5);
+        assert_eq!(v.get("id").and_then(|x| x.as_str()), Some("cmpl-3"));
+        let choice = &v.get("choices").unwrap().as_array().unwrap()[0];
+        assert_eq!(choice.get("text").and_then(|t| t.as_str()), Some("10 20"));
+        assert_eq!(choice.get("token_ids").unwrap().as_array().unwrap().len(), 2);
+        let usage = v.get("usage").unwrap();
+        assert_eq!(usage.get("completion_tokens").and_then(|x| x.as_u64()), Some(2));
+        assert_eq!(usage.get("total_tokens").and_then(|x| x.as_u64()), Some(7));
+        // The response is valid JSON end to end.
+        assert_eq!(json::parse(&v.dump()).unwrap(), v);
+    }
+
+    #[test]
+    fn prometheus_rendering_includes_engine_and_transport_sections() {
+        let stats = HttpStats::default();
+        stats.requests_total.store(4, Ordering::Relaxed);
+        stats.tokens_streamed_total.store(17, Ordering::Relaxed);
+        let mut rep = crate::metrics::Recorder::new().report("unit");
+        rep.queue_cap = Some(64);
+        let text = render_prometheus(Some(&rep), &stats);
+        assert!(text.contains("duetserve_http_requests_total 4"));
+        assert!(text.contains("duetserve_http_tokens_streamed_total 17"));
+        assert!(text.contains("duetserve_http_active_connections 0"));
+        assert!(text.contains("duetserve_queue_cap 64"));
+        assert!(text.contains("duetserve_engine_completed_total 0"));
+        assert!(text.contains("# TYPE duetserve_engine_clock_seconds gauge"));
+        // Without a snapshot, only transport metrics render.
+        let text = render_prometheus(None, &stats);
+        assert!(!text.contains("duetserve_engine_completed_total"));
+        assert!(!text.contains("duetserve_queue_cap"));
+    }
+
+    #[test]
+    fn max_tokens_cap_is_enforced() {
+        let v = json::parse(r#"{"prompt":[1],"max_tokens":1000000000}"#).unwrap();
+        let err = parse_completion(&v).unwrap_err();
+        assert!(err.contains("max_tokens"), "{err}");
+        let v = json::parse(&format!(r#"{{"prompt":[1],"max_tokens":{MAX_TOKENS_CAP}}}"#)).unwrap();
+        assert!(parse_completion(&v).is_ok());
+    }
+}

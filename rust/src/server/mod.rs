@@ -58,18 +58,20 @@
 //! [`FinishReason::Cancelled`]; shutdown drains in-flight and queued work
 //! before the engine thread exits, returning the final [`Report`].
 
+pub mod http;
+
 use std::cmp::Ordering;
 use std::collections::{HashMap, VecDeque};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::config::ServingConfig;
 use crate::engine::{
     ClusterEngine, EngineCore, ExecutionBackend, Router, ServingTopology, SimBackend,
-    TopologyStep,
+    TopologyStep, MAX_SIM_TIME,
 };
 use crate::metrics::{Recorder, Report};
 use crate::request::{Request, RequestId};
@@ -157,6 +159,9 @@ enum Control {
         reply: Sender<std::result::Result<RequestHandle, SubmitError>>,
     },
     Cancel(RequestId),
+    /// Live, non-destructive metrics snapshot (the HTTP transport's
+    /// `/metrics` endpoint).
+    Report(Sender<Report>),
     Shutdown,
 }
 
@@ -211,6 +216,17 @@ impl RequestHandle {
         self.rx.recv().ok()
     }
 
+    /// Blocking wait bounded by `timeout`. `TimedOut` means the request
+    /// is still live but produced nothing yet — transports use the gap
+    /// to probe their connection for client disconnects.
+    pub fn next_event_timeout(&self, timeout: Duration) -> HandlePoll {
+        match self.rx.recv_timeout(timeout) {
+            Ok(ev) => HandlePoll::Event(ev),
+            Err(RecvTimeoutError::Timeout) => HandlePoll::TimedOut,
+            Err(RecvTimeoutError::Disconnected) => HandlePoll::Closed,
+        }
+    }
+
     /// Ask the server to cancel this request. Returns false when the
     /// handle has no control channel (core-driven handles — use
     /// [`ServerCore::cancel`]) or the server is gone.
@@ -220,6 +236,17 @@ impl RequestHandle {
             None => false,
         }
     }
+}
+
+/// Outcome of [`RequestHandle::next_event_timeout`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum HandlePoll {
+    /// The next stream event.
+    Event(TokenEvent),
+    /// Nothing within the timeout; the request is still in flight.
+    TimedOut,
+    /// The stream has ended (all events already consumed).
+    Closed,
 }
 
 struct PendingEntry {
@@ -321,6 +348,12 @@ impl ServerCore {
         self
     }
 
+    /// The effective backpressure bound (`--queue-cap`). Surfaced in the
+    /// drain report ([`Report::queue_cap`]).
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
     /// The single [`EngineCore`] under this server. Panics for
     /// cluster-backed servers — use [`cluster`](ServerCore::cluster).
     pub fn engine(&self) -> &EngineCore {
@@ -362,8 +395,15 @@ impl ServerCore {
         if opts.max_new_tokens == 0 {
             return Err(SubmitError::Rejected("max_new_tokens must be >= 1".into()));
         }
-        if opts.arrival.is_some_and(|a| !a.is_finite()) {
-            return Err(SubmitError::Rejected("arrival must be finite".into()));
+        // Bound the trace-replay arrival override: an arrival past the
+        // divergence guard would jump the engine clock over MAX_SIM_TIME
+        // on the idle-hint path and drain every in-flight request — with
+        // the clock never recovering. One bad (or hostile, over HTTP)
+        // submission must not brick the server.
+        if opts.arrival.is_some_and(|a| !(0.0..=MAX_SIM_TIME).contains(&a)) {
+            return Err(SubmitError::Rejected(format!(
+                "arrival must be within [0, {MAX_SIM_TIME}] engine-clock seconds"
+            )));
         }
         if let Some(mc) = self.topology.max_context() {
             let need = prompt.len() as u64 + opts.max_new_tokens;
@@ -494,6 +534,21 @@ impl ServerCore {
             panic!("serving invariants violated at drain: {e}");
         }
         rep.system = format!("server/{}", rep.system);
+        rep.queue_cap = Some(self.queue_depth);
+        rep
+    }
+
+    /// Live, non-destructive metrics snapshot: what has been recorded so
+    /// far, without draining. [`ServingTopology::fold_report`] is a
+    /// drain-time operation (the cluster implementation retires worker
+    /// state while folding), so this goes through the topology's
+    /// [`snapshot_recorder`](ServingTopology::snapshot_recorder) seam
+    /// instead. Powers the HTTP transport's `/metrics` endpoint.
+    pub fn report_snapshot(&self) -> Report {
+        let rec = self.topology.snapshot_recorder();
+        let mut rep = rec.report(&self.topology.label());
+        rep.system = format!("server/{}", rep.system);
+        rep.queue_cap = Some(self.queue_depth);
         rep
     }
 
@@ -575,6 +630,7 @@ impl ServerCore {
         }
         let mut rep = self.topology.fold_report();
         rep.system = "server/aborted".to_string();
+        rep.queue_cap = Some(self.queue_depth);
         rep
     }
 }
@@ -595,6 +651,10 @@ fn apply_control(core: &mut ServerCore, ctl: Control, handle_ctl: &Sender<Contro
         }
         Control::Cancel(id) => {
             core.cancel(id);
+            false
+        }
+        Control::Report(reply) => {
+            let _ = reply.send(core.report_snapshot());
             false
         }
         Control::Shutdown => true,
@@ -738,6 +798,15 @@ impl Server {
         }
     }
 
+    /// Live, non-destructive metrics snapshot from the engine thread
+    /// ([`ServerCore::report_snapshot`]). `None` when the engine thread
+    /// is gone.
+    pub fn report_snapshot(&self) -> Option<Report> {
+        let (reply, reply_rx) = channel();
+        self.tx.send(Control::Report(reply)).ok()?;
+        reply_rx.recv().ok()
+    }
+
     /// Drain in-flight and queued work, stop the engine thread, and
     /// return the final report.
     pub fn shutdown(mut self) -> Result<Report> {
@@ -834,6 +903,20 @@ mod tests {
             ),
             Err(SubmitError::Rejected(_))
         ));
+        // Arrivals past the divergence guard (or negative) would wedge
+        // the engine clock: rejected up front.
+        for bad in [-1.0, MAX_SIM_TIME * 2.0, f64::INFINITY] {
+            assert!(matches!(
+                s.submit(
+                    prompt(4),
+                    SubmitOptions {
+                        arrival: Some(bad),
+                        ..Default::default()
+                    }
+                ),
+                Err(SubmitError::Rejected(_))
+            ));
+        }
         let h = s.submit(prompt(4), SubmitOptions::default()).unwrap();
         assert_eq!(h.id(), 0);
         assert_eq!(s.queued(), 1);

@@ -1,6 +1,7 @@
 //! In-tree infrastructure substrates (the offline build has no rand /
 //! criterion / proptest / serde — see DESIGN.md "Dependency reality").
 
+pub mod json;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

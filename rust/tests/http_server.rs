@@ -1,0 +1,411 @@
+//! HTTP transport integration: real sockets against a spawned
+//! `serve-http`-equivalent server. Covers the acceptance criterion that
+//! the drained `metrics::Report` of an HTTP-served run matches an
+//! equivalent in-process `ServerCore` run (same trace + seed), plus the
+//! error-code mapping, queue-cap backpressure over the wire,
+//! client-disconnect cancellation, and the cluster-backed front door.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::time::Duration;
+
+use duetserve::config::{Policy, ServingConfig};
+use duetserve::server::http::{HttpConfig, HttpServer};
+use duetserve::server::{Server, ServerCore, SubmitOptions};
+use duetserve::util::json::{self, Json};
+use duetserve::workload::synthetic::jittered_workload;
+
+fn cfg() -> ServingConfig {
+    ServingConfig::default_8b().with_policy(Policy::VllmChunked)
+}
+
+fn start_http(c: ServingConfig, seed: u64, queue_cap: usize, max_body: usize) -> HttpServer {
+    let server =
+        Server::start(move || Ok(ServerCore::sim(c, seed).with_queue_depth(queue_cap))).unwrap();
+    HttpServer::start(
+        "127.0.0.1:0",
+        server,
+        HttpConfig {
+            max_body,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    s
+}
+
+/// One request/response exchange over a fresh connection.
+fn exchange(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let mut s = connect(addr);
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: x\r\n");
+    if let Some(b) = body {
+        req.push_str(&format!(
+            "Content-Type: application/json\r\nContent-Length: {}\r\n",
+            b.len()
+        ));
+    }
+    req.push_str("\r\n");
+    if let Some(b) = body {
+        req.push_str(b);
+    }
+    s.write_all(req.as_bytes()).unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    let status: u16 = resp
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in `{resp}`"));
+    let payload = resp
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, payload)
+}
+
+/// Open a streaming completion and return the reader once the 200
+/// status line has arrived (headers/frames still unread).
+fn open_sse(addr: SocketAddr, body: &str) -> BufReader<TcpStream> {
+    let mut s = connect(addr);
+    write!(
+        s,
+        "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut r = BufReader::new(s);
+    let mut status = String::new();
+    r.read_line(&mut status).unwrap();
+    assert!(status.starts_with("HTTP/1.1 200"), "streaming got {status}");
+    r
+}
+
+/// Consume SSE frames to `[DONE]`; returns (token ids, finish reason).
+fn read_sse(r: BufReader<TcpStream>) -> (Vec<i64>, String) {
+    let mut toks = Vec::new();
+    let mut finish = String::new();
+    for line in r.lines() {
+        let line = line.unwrap();
+        let Some(p) = line.strip_prefix("data: ") else {
+            continue;
+        };
+        if p == "[DONE]" {
+            break;
+        }
+        let v = json::parse(p).unwrap_or_else(|e| panic!("bad SSE chunk `{p}`: {e}"));
+        let c = &v.get("choices").unwrap().as_array().unwrap()[0];
+        if let Some(t) = c.get("token_id").and_then(|t| t.as_i64()) {
+            toks.push(t);
+        } else if let Some(f) = c.get("finish_reason").and_then(|f| f.as_str()) {
+            finish = f.to_string();
+        }
+    }
+    (toks, finish)
+}
+
+/// Run one streaming completion to `[DONE]`; returns (token ids, finish
+/// reason).
+fn sse_completion(addr: SocketAddr, body: &str) -> (Vec<i64>, String) {
+    read_sse(open_sse(addr, body))
+}
+
+fn prompt_tokens(n: usize) -> Vec<i32> {
+    (0..n).map(|i| (i % 997) as i32).collect()
+}
+
+fn completion_body(prompt: &[i32], max_tokens: u64, arrival: f64, stream: bool) -> String {
+    Json::obj(vec![
+        (
+            "prompt",
+            Json::arr(prompt.iter().map(|t| Json::Num(f64::from(*t))).collect()),
+        ),
+        ("max_tokens", Json::Num(max_tokens as f64)),
+        ("arrival", Json::Num(arrival)),
+        ("stream", Json::Bool(stream)),
+    ])
+    .dump()
+}
+
+/// The acceptance property: serving a trace over real sockets (mixed
+/// streaming and non-streaming, sequential so the interaction order is
+/// deterministic) produces the same token values and the same drained
+/// `Report` as an equivalent in-process `ServerCore` run with the same
+/// trace and seed.
+#[test]
+fn http_run_matches_in_process_server_core() {
+    let seed = 11;
+    let w = jittered_workload(8, 900, 12, 0.3, 5.0, seed).sorted_by_arrival();
+
+    // HTTP path: every request fully drained before the next (the
+    // response/[DONE] is the barrier), so the engine sees the same
+    // submit→idle sequence the in-process mirror replays below.
+    let http = start_http(cfg(), seed, 64, 1 << 20);
+    let addr = http.addr();
+    let mut http_tokens: Vec<Vec<i64>> = Vec::new();
+    for (i, r) in w.requests.iter().enumerate() {
+        let prompt = prompt_tokens(r.prompt_len as usize);
+        let body = completion_body(&prompt, r.output_len, r.arrival, i % 2 == 0);
+        if i % 2 == 0 {
+            let (toks, finish) = sse_completion(addr, &body);
+            assert_eq!(finish, "length", "request {i}");
+            http_tokens.push(toks);
+        } else {
+            let (status, resp) = exchange(addr, "POST", "/v1/completions", Some(&body));
+            assert_eq!(status, 200, "request {i}: {resp}");
+            let v = json::parse(&resp).unwrap();
+            let choice = &v.get("choices").unwrap().as_array().unwrap()[0];
+            assert_eq!(
+                choice.get("finish_reason").and_then(|f| f.as_str()),
+                Some("length")
+            );
+            let toks: Vec<i64> = choice
+                .get("token_ids")
+                .unwrap()
+                .as_array()
+                .unwrap()
+                .iter()
+                .map(|t| t.as_i64().unwrap())
+                .collect();
+            let usage = v.get("usage").unwrap();
+            assert_eq!(
+                usage.get("prompt_tokens").and_then(|p| p.as_u64()),
+                Some(r.prompt_len)
+            );
+            assert_eq!(
+                usage.get("completion_tokens").and_then(|c| c.as_u64()),
+                Some(toks.len() as u64)
+            );
+            http_tokens.push(toks);
+        }
+    }
+    let http_rep = http.shutdown().unwrap();
+
+    // In-process mirror: same trace, same seed, same submit→drain
+    // interaction pattern.
+    let mut mirror = ServerCore::sim(cfg(), seed).with_queue_depth(64);
+    let mut mirror_tokens: Vec<Vec<i64>> = Vec::new();
+    for r in &w.requests {
+        let h = mirror
+            .submit(
+                prompt_tokens(r.prompt_len as usize),
+                SubmitOptions {
+                    max_new_tokens: r.output_len,
+                    arrival: Some(r.arrival),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        mirror.run_to_idle();
+        mirror_tokens.push(h.collect().into_iter().map(i64::from).collect());
+    }
+    let mirror_rep = mirror.finish();
+
+    assert_eq!(http_tokens, mirror_tokens, "token values must match");
+    let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()));
+    assert_eq!(http_rep.completed, mirror_rep.completed);
+    assert_eq!(http_rep.iterations, mirror_rep.iterations);
+    assert_eq!(http_rep.queue_cap, Some(64));
+    assert_eq!(mirror_rep.queue_cap, Some(64));
+    assert!(
+        close(http_rep.ttft.mean, mirror_rep.ttft.mean),
+        "ttft {} != {}",
+        http_rep.ttft.mean,
+        mirror_rep.ttft.mean
+    );
+    assert!(
+        close(http_rep.tbt.mean, mirror_rep.tbt.mean),
+        "tbt {} != {}",
+        http_rep.tbt.mean,
+        mirror_rep.tbt.mean
+    );
+    assert!(
+        close(http_rep.duration, mirror_rep.duration),
+        "duration {} != {}",
+        http_rep.duration,
+        mirror_rep.duration
+    );
+    assert_eq!(http_rep.system, mirror_rep.system);
+}
+
+#[test]
+fn http_error_code_mapping() {
+    let http = start_http(cfg(), 3, 8, 4096);
+    let addr = http.addr();
+
+    // Unknown route → 404; wrong method on a known route → 405.
+    assert_eq!(exchange(addr, "GET", "/nope", None).0, 404);
+    assert_eq!(exchange(addr, "GET", "/v1/completions", None).0, 405);
+    assert_eq!(exchange(addr, "POST", "/healthz", None).0, 405);
+
+    // Malformed JSON / bad fields → 400.
+    let (status, body) = exchange(addr, "POST", "/v1/completions", Some("{not json"));
+    assert_eq!(status, 400);
+    assert!(body.contains("malformed JSON"), "{body}");
+    assert_eq!(
+        exchange(
+            addr,
+            "POST",
+            "/v1/completions",
+            Some(r#"{"prompt":[1],"max_tokens":"six"}"#)
+        )
+        .0,
+        400
+    );
+    // Validation inside ServerCore (empty prompt) also maps to 400.
+    assert_eq!(
+        exchange(addr, "POST", "/v1/completions", Some(r#"{"prompt":[]}"#)).0,
+        400
+    );
+
+    // Body over the configured cap → 413.
+    let big = completion_body(&[7; 2000], 4, 0.0, false);
+    assert!(big.len() > 4096);
+    let (status, body) = exchange(addr, "POST", "/v1/completions", Some(&big));
+    assert_eq!(status, 413);
+    assert!(body.contains("4096"), "{body}");
+
+    // Declared content-length longer than the sent body → 400 once the
+    // client half-closes.
+    let mut s = connect(addr);
+    s.write_all(
+        b"POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: 50\r\n\r\nshort",
+    )
+    .unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+    assert!(resp.contains("content-length mismatch"), "{resp}");
+
+    // Nothing was ever accepted: the drain report is empty.
+    let rep = http.shutdown().unwrap();
+    assert_eq!(rep.completed, 0);
+}
+
+#[test]
+fn healthz_and_metrics_endpoints() {
+    let http = start_http(cfg(), 5, 32, 1 << 20);
+    let addr = http.addr();
+
+    let (status, body) = exchange(addr, "GET", "/healthz", None);
+    assert_eq!(status, 200);
+    let v = json::parse(&body).unwrap();
+    assert_eq!(v.get("status").and_then(|s| s.as_str()), Some("ok"));
+
+    let (toks, finish) = sse_completion(addr, &completion_body(&prompt_tokens(256), 5, 0.0, true));
+    assert_eq!(toks.len(), 5);
+    assert_eq!(finish, "length");
+
+    let (status, metrics) = exchange(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    for needle in [
+        "# TYPE duetserve_http_requests_total counter",
+        "duetserve_http_tokens_streamed_total 5",
+        "duetserve_queue_cap 32",
+        "duetserve_engine_completed_total 1",
+        "duetserve_engine_iterations_total",
+    ] {
+        assert!(metrics.contains(needle), "missing `{needle}` in:\n{metrics}");
+    }
+
+    // The live snapshot must be non-destructive: serving continues and
+    // the final report still counts everything.
+    let (toks, _) = sse_completion(addr, &completion_body(&prompt_tokens(128), 3, 0.0, true));
+    assert_eq!(toks.len(), 3);
+    let rep = http.shutdown().unwrap();
+    assert_eq!(rep.completed, 2);
+}
+
+/// Backpressure over the wire (429 once `queued() >= queue-cap`) and
+/// client-disconnect cancellation (dropping a streaming connection frees
+/// the slot so queued work proceeds).
+#[test]
+fn http_backpressure_and_disconnect_cancel() {
+    let mut c = cfg();
+    c.max_batch = 1; // one running slot: everything else queues
+    let http = start_http(c, 7, 2, 1 << 20);
+    let addr = http.addr();
+
+    // r0: long-running stream; read up to its first token so it is
+    // admitted out of the queue before anything else is submitted.
+    let mut r0 = open_sse(addr, &completion_body(&prompt_tokens(1000), 30_000, 0.0, true));
+    let mut line = String::new();
+    loop {
+        line.clear();
+        r0.read_line(&mut line).unwrap();
+        if line.starts_with("data: ") {
+            break; // first token streamed → r0 is running
+        }
+        assert!(!line.is_empty(), "stream ended before first token");
+    }
+
+    // r1 and r2 fill the submission queue (cap 2) behind the busy slot;
+    // their SSE headers arrive but no tokens yet.
+    let r1 = open_sse(addr, &completion_body(&prompt_tokens(64), 8, 0.0, true));
+    let r2 = open_sse(addr, &completion_body(&prompt_tokens(64), 8, 0.0, true));
+
+    // r3 must bounce off the full queue with 429.
+    let (status, body) = exchange(
+        addr,
+        "POST",
+        "/v1/completions",
+        Some(&completion_body(&prompt_tokens(8), 2, 0.0, false)),
+    );
+    assert_eq!(status, 429, "{body}");
+    assert!(body.contains("queue full") || body.contains("queue-cap"), "{body}");
+
+    // Disconnect r0 mid-stream: the transport cancels it server-side,
+    // freeing the single slot — which is the only way r1/r2 can finish
+    // their 8 tokens (r0 alone would hold the slot for 30k tokens).
+    drop(r0);
+    let (toks1, finish1) = read_sse(r1);
+    assert_eq!((toks1.len(), finish1.as_str()), (8, "length"));
+    let (toks2, finish2) = read_sse(r2);
+    assert_eq!((toks2.len(), finish2.as_str()), (8, "length"));
+
+    // Only r1 and r2 completed; r0 was cancelled, r3 never accepted.
+    let rep = http.shutdown().unwrap();
+    assert_eq!(rep.completed, 2);
+}
+
+/// The transport composes with a routed multi-worker cluster: the same
+/// wire surface over `ServerCore::sim_replicated`, with the merged
+/// cross-worker drain report coming back from `/shutdown`.
+#[test]
+fn http_over_replicated_cluster() {
+    let server = Server::start_sim_replicated(cfg(), 2, 9, "least-outstanding").unwrap();
+    let http = HttpServer::start("127.0.0.1:0", server, HttpConfig::default()).unwrap();
+    let addr = http.addr();
+    for i in 0..6 {
+        let body = completion_body(&prompt_tokens(512 + 128 * (i % 3)), 6, 0.0, false);
+        let (status, resp) = exchange(addr, "POST", "/v1/completions", Some(&body));
+        assert_eq!(status, 200, "{resp}");
+        let v = json::parse(&resp).unwrap();
+        let choice = &v.get("choices").unwrap().as_array().unwrap()[0];
+        assert_eq!(
+            choice.get("token_ids").unwrap().as_array().unwrap().len(),
+            6
+        );
+    }
+    // /metrics over a cluster exercises the non-destructive cross-worker
+    // snapshot.
+    let (status, metrics) = exchange(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    assert!(metrics.contains("duetserve_engine_completed_total 6"), "{metrics}");
+
+    // Drain over the wire; the response body is the merged report.
+    let (status, report) = exchange(addr, "POST", "/shutdown", None);
+    assert_eq!(status, 200);
+    let v = json::parse(&report).unwrap();
+    assert_eq!(v.get("completed").and_then(|c| c.as_u64()), Some(6));
+    let system = v.get("system").and_then(|s| s.as_str()).unwrap().to_string();
+    assert!(system.contains("x2"), "cluster label missing: {system}");
+    let rep = http.join().unwrap();
+    assert_eq!(rep.completed, 6);
+    assert!(rep.system.contains("x2"));
+}
