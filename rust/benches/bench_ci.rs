@@ -1,0 +1,150 @@
+//! CI perf-trajectory snapshot: one small fig2-style throughput/latency
+//! row, one hot-path engine number, and the O(1)-scrape demonstration —
+//! `/metrics`-style recorder snapshots timed before and after 100k
+//! synthetic samples, in exact (per-sample history) vs streaming
+//! (aggregates + quantile sketch) mode. Emits `BENCH_ci.json` for the CI
+//! workflow to upload as an artifact, so the perf trajectory is tracked
+//! per PR.
+//!
+//!     cargo bench --bench bench_ci
+
+use std::time::Instant;
+
+use duetserve::config::{Policy, ServingConfig};
+use duetserve::engine::{engine_for, ReplicatedEngine};
+use duetserve::metrics::{Recorder, RecorderMode};
+use duetserve::request::Request;
+use duetserve::util::json::Json;
+use duetserve::util::tablefmt::banner;
+use duetserve::workload::synthetic::fixed_workload;
+
+/// Mean µs per call of `f` over `iters` runs (after `warmup`).
+fn time_us<T>(warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> f64 {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let t = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(f());
+    }
+    t.elapsed().as_secs_f64() / iters as f64 * 1e6
+}
+
+/// A recorder loaded with `n` synthetic finished requests (3 tokens ⇒
+/// 2 tbt gaps each, plus ttft/e2e samples).
+fn loaded_recorder(mode: RecorderMode, n: u64) -> Recorder {
+    let mut rec = Recorder::with_mode(mode);
+    for i in 0..n {
+        let mut r = Request::new(i, 0.0, 64, 3);
+        r.advance_prefill(64);
+        let base = 0.05 + (i % 1000) as f64 * 1e-4;
+        r.advance_decode(base);
+        r.advance_decode(base + 0.02 + (i % 97) as f64 * 1e-4);
+        r.advance_decode(base + 0.05 + (i % 53) as f64 * 1e-4);
+        rec.record_finished(&r);
+    }
+    rec.duration = n as f64 * 0.1;
+    rec
+}
+
+/// The live `/metrics` path per scrape: non-destructive snapshot (clone)
+/// + report build.
+fn scrape_us(rec: &Recorder) -> f64 {
+    time_us(3, 30, || {
+        let snap = rec.clone();
+        snap.report("scrape")
+    })
+}
+
+fn main() {
+    banner("CI bench: throughput row + scrape-cost demonstration");
+
+    // Fig2-style row (small: one qps point, CI budget).
+    let qps = 6.0;
+    let w = fixed_workload(60, 8000, 200, qps, 0xF16_2);
+    let mut agg = ReplicatedEngine::new(
+        ServingConfig::default_8b().with_policy(Policy::VllmChunked),
+        2,
+        1,
+    );
+    let ra = agg.run(w);
+    let mut duet = engine_for(ServingConfig::default_8b().with_policy(Policy::Duet), 1);
+    let t0 = Instant::now();
+    let rd = duet.run(fixed_workload(60, 4096, 64, 8.0, 5));
+    let duet_wall = t0.elapsed().as_secs_f64();
+
+    // Scrape latency before/after N = 100k synthetic samples, both
+    // recorder modes. Streaming must stay flat (O(1) in samples); exact
+    // grows with history — the contrast the acceptance criterion asks
+    // CI to demonstrate.
+    let n_small = 1_000u64;
+    let n_large = 100_000u64;
+    let stream_small = scrape_us(&loaded_recorder(RecorderMode::Streaming, n_small));
+    let stream_large = scrape_us(&loaded_recorder(RecorderMode::Streaming, n_large));
+    let exact_small = scrape_us(&loaded_recorder(RecorderMode::Exact, n_small));
+    let exact_large = scrape_us(&loaded_recorder(RecorderMode::Exact, n_large));
+    let stream_ratio = stream_large / stream_small.max(1e-9);
+    let exact_ratio = exact_large / exact_small.max(1e-9);
+
+    println!(
+        "agg 2x vLLM @qps {qps}: {:.0} tok/s, tbt-p99 {:.1} ms | duet: {:.0} it/s, {:.1} µs sched",
+        ra.token_throughput,
+        ra.tbt_p99 * 1e3,
+        rd.iterations as f64 / duet_wall,
+        rd.sched_overhead_per_iter * 1e6,
+    );
+    println!(
+        "scrape µs @1k/@100k samples — streaming: {stream_small:.1}/{stream_large:.1} \
+         (x{stream_ratio:.2}), exact: {exact_small:.1}/{exact_large:.1} (x{exact_ratio:.2})"
+    );
+
+    let out = Json::obj(vec![
+        (
+            "fig2_point",
+            Json::obj(vec![
+                ("qps", Json::Num(qps)),
+                ("agg_token_throughput", Json::Num(ra.token_throughput)),
+                ("agg_tbt_p99_ms", Json::Num(ra.tbt_p99 * 1e3)),
+                ("agg_ttft_mean_s", Json::Num(ra.ttft.mean)),
+                ("agg_completed", Json::Num(ra.completed as f64)),
+            ]),
+        ),
+        (
+            "hotpath",
+            Json::obj(vec![
+                (
+                    "duet_iters_per_s",
+                    Json::Num(rd.iterations as f64 / duet_wall),
+                ),
+                (
+                    "duet_sched_overhead_us_per_iter",
+                    Json::Num(rd.sched_overhead_per_iter * 1e6),
+                ),
+                ("duet_tbt_p99_ms", Json::Num(rd.tbt_p99 * 1e3)),
+            ]),
+        ),
+        (
+            "scrape_latency",
+            Json::obj(vec![
+                ("n_small", Json::Num(n_small as f64)),
+                ("n_large", Json::Num(n_large as f64)),
+                ("streaming_us_small", Json::Num(stream_small)),
+                ("streaming_us_large", Json::Num(stream_large)),
+                ("streaming_ratio", Json::Num(stream_ratio)),
+                ("exact_us_small", Json::Num(exact_small)),
+                ("exact_us_large", Json::Num(exact_large)),
+                ("exact_ratio", Json::Num(exact_ratio)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_ci.json", out.dump()).expect("write BENCH_ci.json");
+    println!("wrote BENCH_ci.json");
+
+    // Guardrail, not a flaky threshold: a streaming scrape after 100k
+    // samples must not cost 100× a 1k-sample scrape (it is O(sketch),
+    // not O(samples)); generous bound so CI noise cannot trip it.
+    assert!(
+        stream_ratio < 20.0,
+        "streaming scrape cost grew with samples: x{stream_ratio:.1}"
+    );
+}

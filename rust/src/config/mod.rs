@@ -9,4 +9,4 @@ pub mod serving;
 pub use gpu::GpuSpec;
 pub use model::ModelSpec;
 pub use parse::{Config, Value};
-pub use serving::{Policy, ServingConfig};
+pub use serving::{Policy, ServingConfig, DEFAULT_MAX_ENGINE_TIME};

@@ -3,6 +3,15 @@
 use crate::config::gpu::GpuSpec;
 use crate::config::model::ModelSpec;
 
+/// Default divergence horizon in engine-clock seconds per epoch
+/// (historically `engine::MAX_SIM_TIME`). A core whose *epoch-local*
+/// clock passes this has diverged (arrival rate above capacity with an
+/// unbounded queue) and drains. Long-lived serving re-bases the clock to
+/// a new epoch whenever the topology goes fully idle, re-arming this
+/// guard — see `ServingConfig::max_engine_time` and the engine-epoch
+/// machinery in `engine::core`.
+pub const DEFAULT_MAX_ENGINE_TIME: f64 = 3.0e4;
+
 /// Which scheduling policy an engine runs. Mirrors the paper's baselines
 /// (§5.1) plus the ablation configurations (Appendix A).
 #[derive(Debug, Clone, PartialEq)]
@@ -68,6 +77,11 @@ pub struct ServingConfig {
     /// Scheduler admission: stop admitting prefill when free KV blocks drop
     /// below this fraction.
     pub kv_watermark: f64,
+    /// Per-epoch divergence horizon, engine-clock seconds
+    /// ([`DEFAULT_MAX_ENGINE_TIME`]). Overridable (hidden
+    /// `--max-engine-time` CLI flag) so CI soak tests can exercise
+    /// epoch re-basing without simulating 3·10⁴ engine-seconds.
+    pub max_engine_time: f64,
 }
 
 impl ServingConfig {
@@ -85,6 +99,7 @@ impl ServingConfig {
             kv_block_tokens: 16,
             max_lookahead: 16,
             kv_watermark: 0.02,
+            max_engine_time: DEFAULT_MAX_ENGINE_TIME,
         }
     }
 

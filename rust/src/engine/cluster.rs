@@ -49,7 +49,7 @@
 use std::collections::VecDeque;
 
 use crate::config::{GpuSpec, ServingConfig};
-use crate::metrics::{Recorder, Report};
+use crate::metrics::{Recorder, RecorderMode, Report};
 use crate::request::{Phase, Request, RequestId};
 use crate::sched::{
     scheduler_for, IterationPlan, PrefillOnlyScheduler, SchedInput, Scheduler,
@@ -58,7 +58,7 @@ use crate::sim::DispatchMode;
 use crate::workload::Workload;
 
 use super::backend::{DecodeSlot, ExecutionBackend, IterationBatch};
-use super::core::{CoreStep, EngineCore, MAX_SIM_TIME};
+use super::core::{CoreStep, EngineCore, REBASE_FRACTION};
 use super::router::{RouteCandidate, Router};
 use super::topology::{ServingTopology, TopologyStep};
 
@@ -151,6 +151,13 @@ pub struct ClusterEngine {
     /// advanced — only it can carry new tokens, so the live-serving pump
     /// visits just that worker instead of rescanning the fleet.
     stepped_worker: Option<usize>,
+    /// Engine-clock epochs completed (cluster-wide clock re-bases).
+    pub epoch: u64,
+    /// Engine-clock seconds accumulated in previous epochs. All workers
+    /// are shifted by a *common* delta at re-base, so one offset is the
+    /// cluster's absolute time base (worker clocks keep their relative
+    /// stagger).
+    pub epoch_offset: f64,
 }
 
 impl ClusterEngine {
@@ -255,6 +262,8 @@ impl ClusterEngine {
             name,
             folded: false,
             stepped_worker: None,
+            epoch: 0,
+            epoch_offset: 0.0,
         }
     }
 
@@ -318,13 +327,47 @@ impl ClusterEngine {
         self.pending.insert(pos, r);
     }
 
-    /// The cluster's arrival reference clock: the smallest worker clock,
-    /// i.e. the time of the next event.
+    /// The cluster's arrival reference clock (epoch-local): the smallest
+    /// worker clock, i.e. the time of the next event.
     pub fn clock(&self) -> f64 {
         self.workers
             .iter()
             .map(|w| w.core.clock)
             .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Re-base the cluster clock to a new epoch when *every* queue is
+    /// empty — no pending arrivals, no in-flight KV transfers, no queued
+    /// or running work on any worker — and the epoch has consumed enough
+    /// of the divergence horizon. All workers shift by one **common**
+    /// delta (the minimum worker clock), preserving their relative
+    /// stagger so the next epoch's min-clock event order is exactly the
+    /// shifted continuation of this one; per-worker `max_engine_time`
+    /// guards re-arm because local clocks drop toward 0. Returns whether
+    /// a re-base happened.
+    pub fn rebase_epoch(&mut self) -> bool {
+        if !self.all_done() {
+            return false;
+        }
+        let delta = self.clock();
+        if !delta.is_finite() || delta <= REBASE_FRACTION * self.cfg.max_engine_time {
+            return false;
+        }
+        self.shift_all(delta);
+        true
+    }
+
+    /// The cluster-wide shift primitive shared by the threshold re-base
+    /// and the forced pre-jump re-base: one common delta for every
+    /// worker plus the cluster-level schedules.
+    fn shift_all(&mut self, delta: f64) {
+        for w in &mut self.workers {
+            w.core.shift_clock(delta);
+            w.offline_until -= delta;
+        }
+        self.next_planner_check -= delta;
+        self.epoch_offset += delta;
+        self.epoch += 1;
     }
 
     /// Run the event loop until no work remains, then fold every worker's
@@ -352,7 +395,9 @@ impl ClusterEngine {
             self.dropped += w.core.dropped;
             self.finished.append(&mut w.core.finished);
             w.core.pumped_finished = 0;
-            duration = duration.max(w.core.last_active);
+            // Absolute last-active time: invariant across epoch re-bases
+            // (a worker idle since epoch 0 still contributes 0).
+            duration = duration.max(w.core.total_active());
         }
         self.metrics.duration = duration;
     }
@@ -436,13 +481,16 @@ impl ClusterEngine {
     /// stream up front.
     pub fn step_next(&mut self, next_arrival: Option<f64>) -> TopologyStep {
         if self.all_done() && next_arrival.is_none() {
+            // Fully idle with no future arrival hinted: the only safe
+            // moment to re-base the epoch clock.
+            self.rebase_epoch();
             self.stepped_worker = None;
             return TopologyStep::Exhausted;
         }
         let idx = self.min_clock_worker();
         self.stepped_worker = Some(idx);
         let now = self.workers[idx].core.clock;
-        if now > MAX_SIM_TIME {
+        if now > self.cfg.max_engine_time {
             // Diverged: drain bookkeeping everywhere and report every
             // request that was discarded so streams can be closed.
             let mut victims: Vec<RequestId> = self.pending.iter().map(|r| r.id).collect();
@@ -852,6 +900,42 @@ impl ServingTopology for ClusterEngine {
         ClusterEngine::clock(self)
     }
 
+    fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn epoch_offset(&self) -> f64 {
+        self.epoch_offset
+    }
+
+    fn max_engine_time(&self) -> f64 {
+        self.cfg.max_engine_time
+    }
+
+    fn rebase_if_idle(&mut self) -> bool {
+        self.rebase_epoch()
+    }
+
+    fn rebase_now(&mut self) -> bool {
+        if !self.all_done() {
+            return false;
+        }
+        let delta = self.clock();
+        if !delta.is_finite() || delta <= 0.0 {
+            return false;
+        }
+        self.shift_all(delta);
+        true
+    }
+
+    fn set_recorder_mode(&mut self, mode: RecorderMode) {
+        self.metrics.set_mode(mode);
+        for w in &mut self.workers {
+            w.core.metrics.set_mode(mode);
+            w.core.trim_finished = mode == RecorderMode::Streaming;
+        }
+    }
+
     fn inject(&mut self, req: Request) {
         ClusterEngine::inject(self, req);
     }
@@ -945,18 +1029,22 @@ impl ServingTopology for ClusterEngine {
 
     fn fold_report(&mut self) -> Report {
         self.fold_workers();
-        self.metrics.report(&self.system_name())
+        let mut rep = self.metrics.report(&self.system_name());
+        rep.engine_epoch = self.epoch;
+        rep.engine_uptime_s = self.epoch_offset + ClusterEngine::clock(self);
+        rep
     }
 
     fn snapshot_recorder(&self) -> Recorder {
         // The non-destructive sibling of `fold_workers`: merge what every
         // worker has recorded so far without retiring any state, with the
-        // wall clock as the max worker activity horizon.
+        // wall clock as the max worker activity horizon (absolute time,
+        // invariant across epoch re-bases).
         let mut rec = self.metrics.clone();
         let mut duration = rec.duration;
         for w in &self.workers {
             rec.merge(&w.core.metrics);
-            duration = duration.max(w.core.last_active);
+            duration = duration.max(w.core.total_active());
         }
         rec.duration = duration;
         rec

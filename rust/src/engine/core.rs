@@ -25,11 +25,25 @@ use crate::sim::DispatchMode;
 use super::backend::{DecodeSlot, ExecutionBackend, IterationBatch, PrefillSlice, SimBackend};
 use super::{IterEvent, IterKind};
 
-/// Hard cap on simulated time — a run that exceeds this has diverged
-/// (arrival rate above capacity with an unbounded queue). Shared by every
-/// engine topology; the drain-on-divergence bookkeeping lives in
-/// [`EngineCore::drain_diverged`].
-pub const MAX_SIM_TIME: f64 = 3.0e4;
+/// Default cap on *epoch-local* simulated time — a run whose local clock
+/// exceeds this has diverged (arrival rate above capacity with an
+/// unbounded queue). Shared by every engine topology; the effective
+/// per-instance value is [`crate::config::ServingConfig::max_engine_time`]
+/// and the drain-on-divergence bookkeeping lives in
+/// [`EngineCore::drain_diverged`]. On the serving path the guard
+/// *re-arms*: when a topology goes fully idle past
+/// [`REBASE_FRACTION`] of its horizon, the local clock re-bases to a new
+/// epoch ([`EngineCore::rebase_epoch`]) and cross-epoch time accumulates
+/// in `epoch_offset`, so a long-lived instance never hits a hard
+/// end-of-life cliff.
+pub const MAX_SIM_TIME: f64 = crate::config::DEFAULT_MAX_ENGINE_TIME;
+
+/// Fraction of the divergence horizon an idle epoch must have consumed
+/// before the clock re-bases. Below it, idle topologies keep their clock
+/// (so paper-scale live runs take *byte-identical* event trajectories to
+/// batch replay — the live ≡ batch property tests never observe a
+/// re-base); above it, re-basing keeps weeks-uptime serving honest.
+pub const REBASE_FRACTION: f64 = 0.5;
 
 /// What one call to [`EngineCore::step_once`] did.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -101,11 +115,23 @@ pub struct EngineCore {
     scheduler: Box<dyn Scheduler>,
     pub(crate) backend: Box<dyn ExecutionBackend>,
     pub(crate) kv: KvManager,
-    /// Local virtual clock, seconds.
+    /// Local virtual clock, seconds *within the current epoch*. Re-based
+    /// to 0 when the worker goes fully idle past the re-base threshold
+    /// ([`EngineCore::rebase_epoch`]); absolute engine time is
+    /// [`EngineCore::total_time`].
     pub clock: f64,
     /// Clock value after the last *executed* iteration (excludes idle
     /// jumps/parking — the cluster uses it for wall-time accounting).
+    /// Epoch-local and shifted on re-base, so it may go negative when
+    /// the last activity happened in a previous epoch; the invariant
+    /// `epoch_offset + last_active == absolute last-active time` always
+    /// holds ([`EngineCore::total_active`]).
     pub last_active: f64,
+    /// Engine-clock epochs completed (number of clock re-bases).
+    pub epoch: u64,
+    /// Engine-clock seconds accumulated in all previous epochs; added to
+    /// the local clock wherever absolute time is reported.
+    pub epoch_offset: f64,
     /// Arrived-and-routed-here requests, not yet admitted (FCFS).
     pub(crate) waiting: VecDeque<Request>,
     pub(crate) running: Vec<Request>,
@@ -114,6 +140,11 @@ pub struct EngineCore {
     /// it were already pumped to their token streams
     /// ([`super::ServingTopology::pump`]).
     pub(crate) pumped_finished: usize,
+    /// Release finished requests once their tokens have been pumped
+    /// (enabled with streaming metrics on long-lived serving paths, so
+    /// resident state stays O(in-flight) instead of O(total served);
+    /// batch engines keep the vector for post-run inspection).
+    pub(crate) trim_finished: bool,
     pub metrics: Recorder,
     /// Requests dropped because their prompt can never fit in KV.
     pub dropped: u64,
@@ -149,10 +180,13 @@ impl EngineCore {
             kv,
             clock: 0.0,
             last_active: 0.0,
+            epoch: 0,
+            epoch_offset: 0.0,
             waiting: VecDeque::new(),
             running: Vec::new(),
             finished: Vec::new(),
             pumped_finished: 0,
+            trim_finished: false,
             metrics: Recorder::new(),
             dropped: 0,
             preemptions: 0,
@@ -197,6 +231,44 @@ impl EngineCore {
         !self.waiting.is_empty() || !self.running.is_empty()
     }
 
+    /// Absolute engine time: epoch offset + the epoch-local clock.
+    /// Monotone across re-bases (the serving uptime counter).
+    pub fn total_time(&self) -> f64 {
+        self.epoch_offset + self.clock
+    }
+
+    /// Absolute time of the last executed iteration, invariant across
+    /// re-bases (wall-time accounting for merged reports).
+    pub fn total_active(&self) -> f64 {
+        self.epoch_offset + self.last_active
+    }
+
+    /// Shift the local time base down by `delta` (the re-base
+    /// primitive): local clocks move toward 0 while every absolute
+    /// quantity (`total_time`, `total_active`) is preserved. The caller
+    /// must guarantee no queued or running work references the old base.
+    pub(crate) fn shift_clock(&mut self, delta: f64) {
+        debug_assert!(!self.has_local_work(), "re-base with work in flight");
+        self.clock -= delta;
+        self.last_active -= delta;
+        self.epoch_offset += delta;
+        self.epoch += 1;
+    }
+
+    /// Re-base the local clock to a new epoch when this worker is fully
+    /// idle and the current epoch has consumed enough of its divergence
+    /// horizon ([`REBASE_FRACTION`] of `cfg.max_engine_time`). Resets the
+    /// local clock to 0 — re-arming the `max_engine_time` divergence
+    /// guard — while `epoch_offset` keeps absolute time monotone.
+    /// Returns whether a re-base happened.
+    pub fn rebase_epoch(&mut self) -> bool {
+        if self.has_local_work() || self.clock <= REBASE_FRACTION * self.cfg.max_engine_time {
+            return false;
+        }
+        self.shift_clock(self.clock);
+        true
+    }
+
     /// Tokens this worker still has to process (remaining prompt +
     /// remaining output across waiting and running) — the load signal for
     /// least-outstanding-token routing.
@@ -238,6 +310,7 @@ impl EngineCore {
             finished,
             backend,
             pumped_finished,
+            trim_finished,
             ..
         } = self;
         for r in running.iter() {
@@ -247,6 +320,13 @@ impl EngineCore {
             let r = &finished[*pumped_finished];
             *pumped_finished += 1;
             f(r, &mut **backend, true);
+        }
+        // Long-lived serving: everything up to the watermark (== len
+        // after the loop above) has been delivered to its stream; retire
+        // the payloads so resident state stays O(in-flight).
+        if *trim_finished && !finished.is_empty() {
+            finished.clear();
+            *pumped_finished = 0;
         }
     }
 

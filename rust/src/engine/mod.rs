@@ -50,7 +50,7 @@ pub mod replicated;
 pub mod router;
 pub mod topology;
 
-pub use self::core::{CoreStep, EngineCore, MAX_SIM_TIME};
+pub use self::core::{CoreStep, EngineCore, MAX_SIM_TIME, REBASE_FRACTION};
 pub use backend::{DecodeSlot, ExecutionBackend, IterationBatch, PrefillSlice, SimBackend};
 pub use cluster::{ClusterEngine, Worker, WorkerRole};
 pub use disagg::DisaggEngine;
@@ -122,7 +122,7 @@ impl SimEngine {
         if self.pending.is_empty() && !self.core.has_local_work() {
             return false;
         }
-        if self.core.clock > MAX_SIM_TIME {
+        if self.core.clock > self.core.cfg.max_engine_time {
             // Diverged: drain bookkeeping and stop.
             self.core.dropped += self.pending.len() as u64;
             self.pending.clear();

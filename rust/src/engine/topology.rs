@@ -30,16 +30,16 @@
 //!   the backend holding its token values; newly finished requests are
 //!   visited exactly once with `finished = true`.
 
-use crate::metrics::{Recorder, Report};
+use crate::metrics::{Recorder, RecorderMode, Report};
 use crate::request::{Request, RequestId};
 
 use super::backend::ExecutionBackend;
 use super::cluster::ClusterEngine;
-use super::core::{CoreStep, EngineCore, MAX_SIM_TIME};
+use super::core::{CoreStep, EngineCore};
 
 /// Clock nudge when a scheduler idles while admitted work remains (a
 /// defensive should-not-happen state): keeps the clock moving so the
-/// [`MAX_SIM_TIME`] divergence guard can trip instead of the caller
+/// `max_engine_time` divergence guard can trip instead of the caller
 /// livelocking. Matches the cluster loop's parking epsilon, and
 /// [`super::SimEngine::step`] applies the identical nudge so the
 /// serving-path ≡ simulation property holds even in this state.
@@ -54,8 +54,9 @@ pub enum TopologyStep {
     /// The head waiting request can never be admitted (prompt exceeds
     /// KV) and was dropped; its stream must be closed.
     Dropped(RequestId),
-    /// The clock passed [`MAX_SIM_TIME`]: all queued and in-flight work
-    /// was drained. The ids are every request that was discarded; their
+    /// The epoch-local clock passed the divergence horizon
+    /// (`cfg.max_engine_time`): all queued and in-flight work was
+    /// drained. The ids are every request that was discarded; their
     /// streams must be closed.
     Diverged(Vec<RequestId>),
     /// No queued or running work remains and no future arrival was
@@ -71,10 +72,49 @@ pub trait ServingTopology {
     /// cluster).
     fn label(&self) -> String;
 
-    /// The arrival reference clock: requests with `arrival <= clock()`
-    /// are due for [`inject`](Self::inject). For a cluster this is the
-    /// minimum worker clock (the time of the next event).
+    /// The arrival reference clock, *epoch-local*: requests with
+    /// (epoch-local) `arrival <= clock()` are due for
+    /// [`inject`](Self::inject). For a cluster this is the minimum
+    /// worker clock (the time of the next event). Absolute engine time
+    /// is `epoch_offset() + clock()` — callers that hold arrivals in
+    /// absolute coordinates (the serving front-end) convert with
+    /// [`epoch_offset`](Self::epoch_offset).
     fn clock(&self) -> f64;
+
+    /// Engine-clock epochs completed (clock re-bases). 0 until the
+    /// topology first re-bases.
+    fn epoch(&self) -> u64;
+
+    /// Engine-clock seconds accumulated in previous epochs; the base of
+    /// the current epoch on the absolute timeline.
+    fn epoch_offset(&self) -> f64;
+
+    /// The per-epoch divergence horizon in effect
+    /// (`cfg.max_engine_time`).
+    fn max_engine_time(&self) -> f64;
+
+    /// Re-base the virtual clock to a new epoch if the topology is fully
+    /// idle (no queued, running, or in-transfer work anywhere) and the
+    /// current epoch consumed enough of its divergence horizon. Re-arms
+    /// the divergence guard; absolute time stays monotone via
+    /// [`epoch_offset`](Self::epoch_offset). Idempotent — returns
+    /// whether a re-base happened.
+    fn rebase_if_idle(&mut self) -> bool;
+
+    /// Unconditional re-base (no horizon threshold) when the topology is
+    /// fully idle and any clock progress exists. The serving front-end
+    /// uses this before an idle jump that would otherwise overshoot the
+    /// divergence horizon — together with the submit bound
+    /// (`arrival ≤ uptime + max_engine_time`) it guarantees an accepted
+    /// arrival can never trip the guard by itself. Returns whether a
+    /// re-base happened.
+    fn rebase_now(&mut self) -> bool;
+
+    /// Switch every recorder under this topology (and the corresponding
+    /// finished-request retention) between exact per-sample history and
+    /// O(1) streaming aggregates. Serving front-ends select
+    /// [`RecorderMode::Streaming`] at construction.
+    fn set_recorder_mode(&mut self, mode: RecorderMode);
 
     /// Accept one due request (route it, enqueue it).
     fn inject(&mut self, req: Request);
@@ -143,12 +183,41 @@ impl ServingTopology for EngineCore {
         self.clock
     }
 
+    fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn epoch_offset(&self) -> f64 {
+        self.epoch_offset
+    }
+
+    fn max_engine_time(&self) -> f64 {
+        self.cfg.max_engine_time
+    }
+
+    fn rebase_if_idle(&mut self) -> bool {
+        self.rebase_epoch()
+    }
+
+    fn rebase_now(&mut self) -> bool {
+        if self.has_local_work() || self.clock <= 0.0 {
+            return false;
+        }
+        self.shift_clock(self.clock);
+        true
+    }
+
+    fn set_recorder_mode(&mut self, mode: RecorderMode) {
+        self.metrics.set_mode(mode);
+        self.trim_finished = mode == RecorderMode::Streaming;
+    }
+
     fn inject(&mut self, req: Request) {
         EngineCore::inject(self, req);
     }
 
     fn step(&mut self, next_arrival: Option<f64>) -> TopologyStep {
-        if self.clock > MAX_SIM_TIME {
+        if self.clock > self.cfg.max_engine_time {
             let mut victims: Vec<RequestId> = self.waiting.iter().map(|r| r.id).collect();
             victims.extend(self.running.iter().map(|r| r.id));
             self.drain_diverged();
@@ -171,7 +240,12 @@ impl ServingTopology for EngineCore {
                     self.clock += IDLE_NUDGE;
                     TopologyStep::Progressed
                 }
-                None => TopologyStep::Exhausted,
+                None => {
+                    // Fully idle with no future arrival hinted: the only
+                    // safe moment to re-base the epoch clock.
+                    self.rebase_epoch();
+                    TopologyStep::Exhausted
+                }
             },
         }
     }
@@ -205,13 +279,16 @@ impl ServingTopology for EngineCore {
     }
 
     fn fold_report(&mut self) -> Report {
-        self.metrics.duration = self.clock;
-        self.metrics.report(&ServingTopology::label(self))
+        self.metrics.duration = self.total_time();
+        let mut rep = self.metrics.report(&ServingTopology::label(self));
+        rep.engine_epoch = self.epoch;
+        rep.engine_uptime_s = self.total_time();
+        rep
     }
 
     fn snapshot_recorder(&self) -> Recorder {
         let mut rec = self.metrics.clone();
-        rec.duration = self.clock;
+        rec.duration = self.total_time();
         rec
     }
 

@@ -59,6 +59,15 @@ fn build_config(args: &Args) -> ServingConfig {
     cfg.tbt_slo = args.f64_or("tbt-slo", cfg.tbt_slo);
     cfg.max_batch = args.u32_or("max-batch", cfg.max_batch);
     cfg.policy = policy_by_name(&args.str_or("policy", "duet")).unwrap_or(Policy::Duet);
+    // Hidden testability knob: shrink the per-epoch divergence horizon so
+    // CI soak runs can drive a server across several engine-clock epochs
+    // without simulating 3e4 engine-seconds per epoch. Not part of the
+    // documented surface; production deployments keep the default.
+    cfg.max_engine_time = args.f64_or("max-engine-time", cfg.max_engine_time);
+    if cfg.max_engine_time.is_nan() || cfg.max_engine_time <= 0.0 {
+        eprintln!("error: --max-engine-time must be a positive number of engine-seconds");
+        std::process::exit(2);
+    }
     cfg
 }
 

@@ -1,23 +1,239 @@
 //! Serving metrics: TTFT, TBT, request throughput, GPU utilization
 //! (§5.1 "Metrics").
+//!
+//! The recorder runs in one of two [`RecorderMode`]s:
+//!
+//! - [`Exact`](RecorderMode::Exact) (the default): per-sample history is
+//!   kept and every report statistic is computed from the exact vectors —
+//!   what the 13 `benches/fig*.rs` reproductions and the batch engines
+//!   need. Memory grows with samples, which is fine for bounded runs.
+//! - [`Streaming`](RecorderMode::Streaming): the serving path. Each
+//!   latency series keeps only running count/mean/min/max/M2 plus a
+//!   mergeable [`QuantileSketch`], so recorder state, `Recorder::merge`,
+//!   and every `/metrics` scrape are O(1) in total samples served — a
+//!   weeks-uptime `serve-http` instance neither grows memory with
+//!   traffic nor clones sample vectors per scrape. Means, counts and
+//!   extrema stay exact; p50/p90/p99 are within the sketch's rank-error
+//!   budget (property-tested in `tests/metrics_streaming.rs`).
+//!
+//! Both modes maintain the running state, so recorders of different
+//! modes merge soundly (an exact recorder merged with a streaming one
+//! degrades to streaming statistics for the merged series).
+
+pub mod sketch;
 
 use crate::request::Request;
-use crate::util::stats::{self, Summary};
+use crate::util::stats::Summary;
+
+pub use sketch::QuantileSketch;
+
+/// How a [`Recorder`] stores its latency series.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RecorderMode {
+    /// Keep every sample; report statistics are exact (benches, batch
+    /// engine runs — inherently bounded workloads).
+    #[default]
+    Exact,
+    /// Running aggregates + quantile sketch only; O(1) resident state
+    /// and scrape cost regardless of traffic served (serving paths).
+    Streaming,
+}
+
+/// Duration-weighted running mean (utilization series). Exact in both
+/// recorder modes — the weighted mean needs only the two running sums.
+#[derive(Debug, Clone, Copy, Default)]
+struct WeightedMean {
+    weight: f64,
+    weighted_sum: f64,
+}
+
+impl WeightedMean {
+    fn add(&mut self, w: f64, v: f64) {
+        self.weight += w;
+        self.weighted_sum += w * v;
+    }
+
+    fn merge(&mut self, other: &WeightedMean) {
+        self.weight += other.weight;
+        self.weighted_sum += other.weighted_sum;
+    }
+
+    fn mean(&self) -> f64 {
+        if self.weight == 0.0 {
+            0.0
+        } else {
+            self.weighted_sum / self.weight
+        }
+    }
+}
+
+/// One latency series (ttft / tbt / e2e): running moments + sketch,
+/// plus the exact sample vector when the recorder is in
+/// [`RecorderMode::Exact`].
+#[derive(Debug, Clone)]
+pub struct SeriesStat {
+    n: u64,
+    mean: f64,
+    /// Sum of squared deviations (Welford M2); population std = √(M2/n).
+    m2: f64,
+    min: f64,
+    max: f64,
+    sketch: QuantileSketch,
+    /// `Some` in exact mode; dropped on conversion to streaming.
+    samples: Option<Vec<f64>>,
+}
+
+impl SeriesStat {
+    fn with_mode(mode: RecorderMode) -> SeriesStat {
+        SeriesStat {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sketch: QuantileSketch::default(),
+            samples: match mode {
+                RecorderMode::Exact => Some(Vec::new()),
+                RecorderMode::Streaming => None,
+            },
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        // Exactly one percentile source per mode: the sample history is
+        // authoritative in exact mode (the sketch is materialized from
+        // it lazily if the series ever degrades to streaming), so exact
+        // recorders — every bench and batch engine — pay zero sketch
+        // maintenance on the hot path.
+        match &mut self.samples {
+            Some(v) => v.push(x),
+            None => self.sketch.insert(x),
+        }
+    }
+
+    /// Rebuild the sketch from the exact history (insertion order), for
+    /// a series about to lose its samples. No-op in streaming mode.
+    fn materialize_sketch(&mut self) {
+        let Some(v) = &self.samples else { return };
+        let mut sk = QuantileSketch::default();
+        for &x in v {
+            sk.insert(x);
+        }
+        self.sketch = sk;
+    }
+
+    /// Fold another series in. Running state always merges; exact sample
+    /// history survives only when both sides have it (otherwise this
+    /// series degrades to streaming statistics, its sketch materialized
+    /// from the history it is about to drop).
+    pub fn merge(&mut self, other: &SeriesStat) {
+        if other.n == 0 {
+            return;
+        }
+        // Exact absorbing streaming: degrade — capture our history as a
+        // sketch first, then drop it.
+        if self.samples.is_some() && other.samples.is_none() {
+            self.materialize_sketch();
+            self.samples = None;
+        }
+        if let (Some(s), Some(os)) = (&mut self.samples, &other.samples) {
+            // Both exact: the concatenated history stays authoritative
+            // (sketches stay unmaintained on this path).
+            s.extend_from_slice(os);
+        } else {
+            // The merged series is streaming: fold the other side's
+            // percentile state — its live sketch, or (when the other
+            // side is exact and never maintained one) a sketch built
+            // from its history.
+            match &other.samples {
+                Some(os) => {
+                    let mut tmp = QuantileSketch::default();
+                    for &x in os.iter() {
+                        tmp.insert(x);
+                    }
+                    self.sketch.merge(&tmp);
+                }
+                None => self.sketch.merge(&other.sketch),
+            }
+        }
+        if self.n == 0 {
+            self.n = other.n;
+            self.mean = other.mean;
+            self.m2 = other.m2;
+            self.min = other.min;
+            self.max = other.max;
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let n = n1 + n2;
+        let delta = other.mean - self.mean;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / n;
+        self.mean += delta * n2 / n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.n += other.n;
+    }
+
+    fn drop_samples(&mut self) {
+        self.materialize_sketch();
+        self.samples = None;
+    }
+
+    /// Whether exact per-sample history is present for this series.
+    fn has_samples(&self) -> bool {
+        self.samples.is_some()
+    }
+
+    pub fn summary(&self) -> Summary {
+        match &self.samples {
+            Some(v) => Summary::of(v),
+            None => {
+                if self.n == 0 {
+                    return Summary::of(&[]);
+                }
+                // Flush the sketch once for all three quantile queries.
+                let sk = self.sketch.flushed();
+                Summary {
+                    n: self.n as usize,
+                    mean: self.mean,
+                    std: if self.n < 2 {
+                        0.0
+                    } else {
+                        (self.m2 / self.n as f64).max(0.0).sqrt()
+                    },
+                    min: self.min,
+                    p50: sk.quantile(0.50),
+                    p90: sk.quantile(0.90),
+                    p99: sk.quantile(0.99),
+                    max: self.max,
+                }
+            }
+        }
+    }
+}
 
 /// Per-run metrics recorder. Engines feed it finished requests and
 /// iteration-level utilization samples; benches read the report.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct Recorder {
-    /// (duration-weighted) SM utilization samples: (weight_s, util).
-    sm_util: Vec<(f64, f64)>,
-    hbm_util: Vec<(f64, f64)>,
-    /// Wall-clock duration of the run (set at finish).
+    mode: RecorderMode,
+    sm_util: WeightedMean,
+    hbm_util: WeightedMean,
+    /// Wall-clock duration of the run (set at finish; cumulative across
+    /// engine-clock epochs on the serving path).
     pub duration: f64,
     pub iterations: u64,
     pub spatial_iterations: u64,
-    ttft: Vec<f64>,
-    tbt: Vec<f64>,
-    e2e: Vec<f64>,
+    ttft: SeriesStat,
+    tbt: SeriesStat,
+    e2e: SeriesStat,
     pub completed: u64,
     pub output_tokens: u64,
     pub total_tokens: u64,
@@ -34,16 +250,84 @@ pub struct Recorder {
     pub slo_violations: u64,
 }
 
+impl Default for Recorder {
+    fn default() -> Recorder {
+        Recorder::with_mode(RecorderMode::Exact)
+    }
+}
+
 impl Recorder {
+    /// Exact-mode recorder (per-sample history; the batch/bench default).
     pub fn new() -> Recorder {
         Recorder::default()
+    }
+
+    /// Streaming-mode recorder: O(1) resident state in samples served.
+    pub fn streaming() -> Recorder {
+        Recorder::with_mode(RecorderMode::Streaming)
+    }
+
+    pub fn with_mode(mode: RecorderMode) -> Recorder {
+        Recorder {
+            mode,
+            sm_util: WeightedMean::default(),
+            hbm_util: WeightedMean::default(),
+            duration: 0.0,
+            iterations: 0,
+            spatial_iterations: 0,
+            ttft: SeriesStat::with_mode(mode),
+            tbt: SeriesStat::with_mode(mode),
+            e2e: SeriesStat::with_mode(mode),
+            completed: 0,
+            output_tokens: 0,
+            total_tokens: 0,
+            sched_overhead: 0.0,
+            busy_time: 0.0,
+            slo_checked: 0,
+            slo_violations: 0,
+        }
+    }
+
+    pub fn mode(&self) -> RecorderMode {
+        self.mode
+    }
+
+    /// Switch storage mode. Exact → streaming drops the sample history
+    /// (the running state is already maintained). Streaming → exact is
+    /// only meaningful on an empty recorder — discarded samples cannot
+    /// be recovered, so a non-empty recorder stays streaming.
+    pub fn set_mode(&mut self, mode: RecorderMode) {
+        if mode == self.mode {
+            return;
+        }
+        match mode {
+            RecorderMode::Streaming => {
+                self.ttft.drop_samples();
+                self.tbt.drop_samples();
+                self.e2e.drop_samples();
+                self.mode = RecorderMode::Streaming;
+            }
+            RecorderMode::Exact => {
+                // Reattach empty histories only — iteration-level state
+                // (util sums, counters, duration) already recorded must
+                // survive the mode switch.
+                if self.ttft.n == 0 && self.tbt.n == 0 && self.e2e.n == 0 {
+                    self.ttft = SeriesStat::with_mode(RecorderMode::Exact);
+                    self.tbt = SeriesStat::with_mode(RecorderMode::Exact);
+                    self.e2e = SeriesStat::with_mode(RecorderMode::Exact);
+                    self.mode = RecorderMode::Exact;
+                }
+            }
+        }
     }
 
     pub fn record_finished(&mut self, r: &Request) {
         if let Some(t) = r.ttft() {
             self.ttft.push(t);
         }
-        self.tbt.extend(r.tbt_samples());
+        for g in r.tbt_samples() {
+            self.tbt.push(g);
+        }
         if let Some(t) = r.e2e_latency() {
             self.e2e.push(t);
         }
@@ -58,7 +342,7 @@ impl Recorder {
     }
 
     /// Merge everything another recorder accumulated — iteration-level
-    /// state *and* per-request latency samples. The cluster engine folds
+    /// state *and* per-request latency series. The cluster engine folds
     /// each worker's recorder into one system-level recorder with this
     /// (`duration` is left to the caller: wall time is a max over
     /// workers, not a sum).
@@ -69,54 +353,60 @@ impl Recorder {
     /// (`slo_checked`/`slo_violations`) are summed so
     /// [`Report::slo_attainment`] stays correct across cross-worker
     /// merges (regression-tested by `merge_preserves_slo_attainment`).
+    /// In streaming mode the merge is O(sketch size), not O(samples) —
+    /// the live `/metrics` fold stays O(1) in traffic served.
     pub fn merge(&mut self, other: &Recorder) {
-        self.sm_util.extend_from_slice(&other.sm_util);
-        self.hbm_util.extend_from_slice(&other.hbm_util);
+        self.sm_util.merge(&other.sm_util);
+        self.hbm_util.merge(&other.hbm_util);
         self.iterations += other.iterations;
         self.spatial_iterations += other.spatial_iterations;
         self.sched_overhead += other.sched_overhead;
         self.busy_time += other.busy_time;
-        self.ttft.extend_from_slice(&other.ttft);
-        self.tbt.extend_from_slice(&other.tbt);
-        self.e2e.extend_from_slice(&other.e2e);
+        self.ttft.merge(&other.ttft);
+        self.tbt.merge(&other.tbt);
+        self.e2e.merge(&other.e2e);
         self.completed += other.completed;
         self.output_tokens += other.output_tokens;
         self.total_tokens += other.total_tokens;
         self.slo_checked += other.slo_checked;
         self.slo_violations += other.slo_violations;
+        // An exact recorder that absorbed a streaming one lost its
+        // sample history for the merged series: keep the mode accessor
+        // truthful about what report() will answer from.
+        if self.mode == RecorderMode::Exact
+            && !(self.ttft.has_samples() && self.tbt.has_samples() && self.e2e.has_samples())
+        {
+            self.mode = RecorderMode::Streaming;
+        }
     }
 
     pub fn record_util(&mut self, weight_s: f64, sm: f64, hbm: f64) {
         if weight_s > 0.0 {
-            self.sm_util.push((weight_s, sm.clamp(0.0, 1.0)));
-            self.hbm_util.push((weight_s, hbm.clamp(0.0, 1.0)));
+            self.sm_util.add(weight_s, sm.clamp(0.0, 1.0));
+            self.hbm_util.add(weight_s, hbm.clamp(0.0, 1.0));
         }
-    }
-
-    fn weighted_mean(samples: &[(f64, f64)]) -> f64 {
-        let w: f64 = samples.iter().map(|(w, _)| w).sum();
-        if w == 0.0 {
-            return 0.0;
-        }
-        samples.iter().map(|(w, v)| w * v).sum::<f64>() / w
     }
 
     pub fn report(&self, system: &str) -> Report {
+        let tbt = self.tbt.summary();
         Report {
             system: system.to_string(),
             completed: self.completed,
             duration: self.duration,
             throughput_rps: self.completed as f64 / self.duration.max(1e-9),
             token_throughput: self.total_tokens as f64 / self.duration.max(1e-9),
-            ttft: Summary::of(&self.ttft),
-            tbt: Summary::of(&self.tbt),
-            e2e: Summary::of(&self.e2e),
-            mean_sm_util: Self::weighted_mean(&self.sm_util),
-            mean_hbm_util: Self::weighted_mean(&self.hbm_util),
+            ttft: self.ttft.summary(),
+            tbt,
+            e2e: self.e2e.summary(),
+            mean_sm_util: self.sm_util.mean(),
+            mean_hbm_util: self.hbm_util.mean(),
             iterations: self.iterations,
             spatial_iterations: self.spatial_iterations,
             sched_overhead_per_iter: self.sched_overhead / self.iterations.max(1) as f64,
-            tbt_p99: stats::percentile(&self.tbt, 99.0),
+            // Identical to `stats::percentile(.., 99.0)` in exact mode
+            // (Summary::of computes the same interpolated rank), without
+            // a second sort/flush of the series.
+            tbt_p99: tbt.p99,
             busy_frac: self.busy_time / self.duration.max(1e-9),
             slo_attainment: if self.slo_checked > 0 {
                 Some(1.0 - self.slo_violations as f64 / self.slo_checked as f64)
@@ -124,6 +414,8 @@ impl Recorder {
                 None
             },
             queue_cap: None,
+            engine_epoch: 0,
+            engine_uptime_s: 0.0,
         }
     }
 }
@@ -158,6 +450,13 @@ pub struct Report {
     /// for the run. `None` for batch engine runs, which have no
     /// submission queue.
     pub queue_cap: Option<usize>,
+    /// Engine-clock epoch at report time: how many times the topology
+    /// re-based its virtual clock after going fully idle (re-arming the
+    /// divergence guard). 0 for batch runs, which never re-base.
+    pub engine_epoch: u64,
+    /// Total engine-clock seconds elapsed across all epochs (monotone
+    /// per instance; the serving `/metrics` uptime counter).
+    pub engine_uptime_s: f64,
 }
 
 impl Report {
@@ -306,5 +605,64 @@ mod tests {
         m.duration = 1.0;
         let rep = m.report("x");
         assert_eq!(rep.row(1.0).len(), Report::header().len());
+    }
+
+    #[test]
+    fn streaming_mode_matches_exact_counts_and_means() {
+        let mut exact = Recorder::new();
+        let mut stream = Recorder::streaming();
+        for i in 0..50u64 {
+            let mut r = Request::new(i, 0.0, 16, 3);
+            r.advance_prefill(16);
+            let base = 0.5 + i as f64 * 0.01;
+            r.advance_decode(base);
+            r.advance_decode(base + 0.1);
+            r.advance_decode(base + 0.25);
+            exact.record_finished(&r);
+            stream.record_finished(&r);
+        }
+        exact.duration = 10.0;
+        stream.duration = 10.0;
+        let re = exact.report("e");
+        let rs = stream.report("s");
+        assert_eq!(re.completed, rs.completed);
+        assert_eq!(re.tbt.n, rs.tbt.n);
+        assert!((re.ttft.mean - rs.ttft.mean).abs() < 1e-9);
+        assert!((re.tbt.mean - rs.tbt.mean).abs() < 1e-9);
+        assert!((re.e2e.mean - rs.e2e.mean).abs() < 1e-9);
+        assert_eq!(re.ttft.min, rs.ttft.min);
+        assert_eq!(re.ttft.max, rs.ttft.max);
+    }
+
+    #[test]
+    fn exact_merged_with_streaming_degrades_to_streaming_stats() {
+        let mut exact = Recorder::new();
+        exact.record_finished(&finished_request());
+        let mut stream = Recorder::streaming();
+        stream.record_finished(&finished_request());
+        exact.merge(&stream);
+        exact.duration = 2.0;
+        // The merged recorder no longer holds exact history — and says so.
+        assert_eq!(exact.mode(), RecorderMode::Streaming);
+        // Counts and means still cover both sides after the mode clash.
+        let rep = exact.report("mixed");
+        assert_eq!(rep.completed, 2);
+        assert_eq!(rep.tbt.n, 4);
+        assert!((rep.tbt.mean - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn set_mode_round_trip() {
+        let mut m = Recorder::new();
+        m.set_mode(RecorderMode::Streaming);
+        assert_eq!(m.mode(), RecorderMode::Streaming);
+        // Empty streaming recorder may switch back to exact.
+        m.set_mode(RecorderMode::Exact);
+        assert_eq!(m.mode(), RecorderMode::Exact);
+        // Non-empty streaming recorder stays streaming (history is gone).
+        let mut s = Recorder::streaming();
+        s.record_finished(&finished_request());
+        s.set_mode(RecorderMode::Exact);
+        assert_eq!(s.mode(), RecorderMode::Streaming);
     }
 }

@@ -1,0 +1,393 @@
+//! Mergeable Greenwald–Khanna quantile summary (ε-approximate ranks).
+//!
+//! The streaming [`Recorder`](super::Recorder) needs percentiles over an
+//! unbounded latency stream without keeping the samples — a weeks-uptime
+//! `serve-http` instance cannot clone O(total samples) per `/metrics`
+//! scrape. This is the classic GK01 summary, implemented in-crate (the
+//! offline image has no crates.io): a sorted list of `(value, g, Δ)`
+//! tuples where `g` is the gap in minimum rank to the previous tuple and
+//! `Δ` bounds the rank uncertainty of the tuple itself, so any rank `r`
+//! can be answered within `±⌈εn⌉` positions from O(1/ε · log εn) state.
+//!
+//! Properties relied on elsewhere:
+//! - **Deterministic**: no randomization; the same insert sequence always
+//!   yields the same summary (epoch-re-base regression tests compare
+//!   reports across runs).
+//! - **Mergeable**: [`merge`](QuantileSketch::merge) concatenates two
+//!   summaries' tuples by value and re-compresses. Rank bounds stay
+//!   *valid* after a merge, but the error budget grows to roughly
+//!   ε₁ + ε₂ (the well-known GK merge bound) — the cluster folds each
+//!   worker once into the system recorder, so merged error stays O(ε·W).
+//! - **Bounded**: inserts are buffered ([`BUF_CAP`]) and flushed in one
+//!   sorted merge pass; a hard backstop ([`MAX_ENTRIES`]) force-compacts
+//!   in the astronomically unlikely case compression ever falls behind,
+//!   trading extra ε for a guaranteed memory ceiling.
+
+/// Default rank-error target for recorder series (0.5% of n).
+pub const DEFAULT_EPS: f64 = 0.005;
+
+/// Pending inserts held unsorted before a flush pass.
+const BUF_CAP: usize = 256;
+
+/// Hard ceiling on stored tuples. GK stays far below this at ε = 0.005
+/// (≈ 2–3k tuples at n = 10⁹); the backstop only guards the memory
+/// bound, never correctness (rank bounds remain valid, error grows).
+const MAX_ENTRIES: usize = 8192;
+
+/// One GK tuple: `v` covers ranks `[rmin, rmin + delta]` where `rmin` is
+/// the running sum of `g` up to and including this tuple.
+#[derive(Debug, Clone)]
+struct Entry {
+    v: f64,
+    g: u64,
+    delta: u64,
+}
+
+/// ε-approximate streaming quantile summary.
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    eps: f64,
+    /// Total observations (including buffered ones).
+    n: u64,
+    /// Sorted by `v`.
+    entries: Vec<Entry>,
+    buf: Vec<f64>,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> QuantileSketch {
+        QuantileSketch::new(DEFAULT_EPS)
+    }
+}
+
+impl QuantileSketch {
+    pub fn new(eps: f64) -> QuantileSketch {
+        assert!(eps > 0.0 && eps < 0.5, "eps must be in (0, 0.5)");
+        QuantileSketch {
+            eps,
+            n: 0,
+            entries: Vec::new(),
+            buf: Vec::with_capacity(BUF_CAP),
+        }
+    }
+
+    /// Observations inserted so far.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Stored tuples (diagnostic; bounded by [`MAX_ENTRIES`]).
+    pub fn entry_count(&self) -> usize {
+        self.entries.len() + self.buf.len()
+    }
+
+    pub fn insert(&mut self, x: f64) {
+        if !x.is_finite() {
+            return; // latencies are finite; never poison the summary
+        }
+        self.n += 1;
+        self.buf.push(x);
+        if self.buf.len() >= BUF_CAP {
+            self.flush();
+        }
+    }
+
+    /// `⌊2εn⌋` — the GK band capacity at the current stream length.
+    fn capacity(&self) -> u64 {
+        ((2.0 * self.eps * self.n as f64).floor() as u64).max(1)
+    }
+
+    /// Fold the pending buffer into the tuple list (one sorted merge
+    /// pass), then compress.
+    fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        let mut b = std::mem::take(&mut self.buf);
+        b.sort_by(f64::total_cmp);
+        let delta_new = self.capacity().saturating_sub(1);
+        let old = std::mem::take(&mut self.entries);
+        let mut merged: Vec<Entry> = Vec::with_capacity(old.len() + b.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < old.len() || j < b.len() {
+            let take_old = j >= b.len() || (i < old.len() && old[i].v <= b[j]);
+            if take_old {
+                merged.push(old[i].clone());
+                i += 1;
+            } else {
+                // A new observation inserted as the global min or max is
+                // rank-certain (Δ = 0); interior inserts carry the full
+                // band uncertainty, as in the GK insert rule.
+                let is_first = merged.is_empty();
+                let is_last = i >= old.len() && j + 1 >= b.len();
+                let delta = if is_first || is_last { 0 } else { delta_new };
+                merged.push(Entry { v: b[j], g: 1, delta });
+                j += 1;
+            }
+        }
+        self.entries = merged;
+        self.compress();
+    }
+
+    /// GK compress: absorb a tuple into its successor whenever the
+    /// combined band `g_i + g_{i+1} + Δ_{i+1} ≤ ⌊2εn⌋` — rank bounds stay
+    /// exact, resolution stays within ε.
+    fn compress(&mut self) {
+        let cap = self.capacity();
+        if self.entries.len() < 3 {
+            return;
+        }
+        let old = std::mem::take(&mut self.entries);
+        let mut out: Vec<Entry> = Vec::with_capacity(old.len());
+        let mut iter = old.into_iter().rev();
+        let mut cur = iter.next().expect("len >= 3 checked above");
+        for prev in iter {
+            if prev.g + cur.g + cur.delta <= cap {
+                cur.g += prev.g; // absorb: cur keeps its (larger) value
+            } else {
+                out.push(cur);
+                cur = prev;
+            }
+        }
+        out.push(cur);
+        out.reverse();
+        self.entries = out;
+
+        // Memory backstop: force pairwise absorption if the summary ever
+        // outgrows the hard cap (keeps bounds valid, widens error).
+        while self.entries.len() > MAX_ENTRIES {
+            let old = std::mem::take(&mut self.entries);
+            let mut out = Vec::with_capacity(old.len() / 2 + 1);
+            let mut it = old.into_iter();
+            while let Some(a) = it.next() {
+                match it.next() {
+                    Some(mut b) => {
+                        b.g += a.g;
+                        out.push(b);
+                    }
+                    None => out.push(a),
+                }
+            }
+            self.entries = out;
+        }
+    }
+
+    /// A fully flushed copy: callers answering several quantiles per
+    /// scrape take one of these so the buffered inserts are sorted and
+    /// merged exactly once, not per query.
+    pub fn flushed(&self) -> QuantileSketch {
+        let mut c = self.clone();
+        c.flush();
+        c
+    }
+
+    /// Value at quantile `q ∈ [0, 1]`, within `±⌈εn⌉` ranks of the true
+    /// order statistic. 0.0 on an empty sketch (matching
+    /// [`crate::util::stats::percentile`] on an empty slice).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        if self.buf.is_empty() {
+            return Self::query(&self.entries, self.n, self.eps, q);
+        }
+        // One-off queries on a dirty sketch flush a clone so `&self`
+        // callers stay side-effect free; batch callers use `flushed()`.
+        let c = self.flushed();
+        Self::query(&c.entries, c.n, c.eps, q)
+    }
+
+    fn query(entries: &[Entry], n: u64, eps: f64, q: f64) -> f64 {
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let margin = ((eps * n as f64).ceil() as u64).max(1);
+        let mut rmin = 0u64;
+        for (i, e) in entries.iter().enumerate() {
+            rmin += e.g;
+            match entries.get(i + 1) {
+                Some(nx) => {
+                    if rmin + nx.g + nx.delta > rank + margin {
+                        return e.v;
+                    }
+                }
+                None => return e.v,
+            }
+        }
+        0.0
+    }
+
+    /// Fold another summary into this one. Rank bounds remain valid;
+    /// the error budget grows toward `ε_self + ε_other` (standard GK
+    /// merge behavior) — callers that merge W summaries should budget
+    /// O(ε·W) rank error.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        if other.n == 0 {
+            return;
+        }
+        self.flush();
+        let mut o = other.clone();
+        o.flush();
+        if self.n == 0 {
+            self.n = o.n;
+            self.entries = o.entries;
+            return;
+        }
+        let a = std::mem::take(&mut self.entries);
+        let b = o.entries;
+        let mut merged: Vec<Entry> = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() || j < b.len() {
+            let take_a = j >= b.len() || (i < a.len() && a[i].v <= b[j].v);
+            if take_a {
+                merged.push(a[i].clone());
+                i += 1;
+            } else {
+                merged.push(b[j].clone());
+                j += 1;
+            }
+        }
+        self.entries = merged;
+        self.n += o.n;
+        self.compress();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    /// Rank distance between the sketch's answer and the true order
+    /// statistic, in fractions of n (0.0 = exact).
+    fn rank_error(sorted: &[f64], got: f64, q: f64) -> f64 {
+        let n = sorted.len() as f64;
+        let below = sorted.iter().filter(|&&x| x < got).count() as f64;
+        let at_or_below = sorted.iter().filter(|&&x| x <= got).count() as f64;
+        let target = (q * n).ceil().max(1.0);
+        // `got` occupies the rank interval [below+1, at_or_below].
+        if target < below + 1.0 {
+            (below + 1.0 - target) / n
+        } else if target > at_or_below {
+            (target - at_or_below) / n
+        } else {
+            0.0
+        }
+    }
+
+    fn assert_quantiles_close(values: &[f64], sketch: &QuantileSketch, tol: f64) {
+        let mut sorted = values.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        for &q in &[0.01, 0.25, 0.5, 0.9, 0.99] {
+            let got = sketch.quantile(q);
+            let err = rank_error(&sorted, got, q);
+            assert!(
+                err <= tol,
+                "q={q}: rank error {err:.4} > {tol} (got {got}, exact {})",
+                stats::percentile_sorted(&sorted, q * 100.0)
+            );
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut s = QuantileSketch::default();
+        assert_eq!(s.quantile(0.5), 0.0);
+        s.insert(42.0);
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.quantile(0.0), 42.0);
+        assert_eq!(s.quantile(0.5), 42.0);
+        assert_eq!(s.quantile(1.0), 42.0);
+    }
+
+    #[test]
+    fn non_finite_inserts_are_ignored() {
+        let mut s = QuantileSketch::default();
+        s.insert(f64::NAN);
+        s.insert(f64::INFINITY);
+        assert_eq!(s.count(), 0);
+        s.insert(1.0);
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.quantile(0.5), 1.0);
+    }
+
+    #[test]
+    fn ascending_stream_within_eps() {
+        let mut s = QuantileSketch::default();
+        let values: Vec<f64> = (0..50_000).map(|i| i as f64).collect();
+        for &v in &values {
+            s.insert(v);
+        }
+        assert_quantiles_close(&values, &s, 0.015);
+        assert!(s.entry_count() < MAX_ENTRIES, "summary stays compact");
+    }
+
+    #[test]
+    fn descending_and_constant_streams() {
+        let mut d = QuantileSketch::default();
+        let desc: Vec<f64> = (0..30_000).rev().map(|i| i as f64 * 0.5).collect();
+        for &v in &desc {
+            d.insert(v);
+        }
+        assert_quantiles_close(&desc, &d, 0.015);
+
+        let mut c = QuantileSketch::default();
+        for _ in 0..10_000 {
+            c.insert(7.25);
+        }
+        assert_eq!(c.quantile(0.5), 7.25);
+        assert_eq!(c.quantile(0.99), 7.25);
+    }
+
+    #[test]
+    fn merge_of_sketches_tracks_concatenated_stream() {
+        // Heavy-tailed halves: merged summary must answer within the
+        // (documented) 2ε merge budget of the concatenated stream.
+        let half_a: Vec<f64> = (0..20_000).map(|i| 1.0 / (1.0 + (i % 997) as f64)).collect();
+        let half_b: Vec<f64> = (0..20_000).map(|i| 10.0 + (i % 463) as f64).collect();
+        let mut a = QuantileSketch::default();
+        let mut b = QuantileSketch::default();
+        for &v in &half_a {
+            a.insert(v);
+        }
+        for &v in &half_b {
+            b.insert(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 40_000);
+        let mut all = half_a;
+        all.extend_from_slice(&half_b);
+        assert_quantiles_close(&all, &a, 0.03);
+    }
+
+    #[test]
+    fn merge_into_empty_adopts_other() {
+        let mut a = QuantileSketch::default();
+        let mut b = QuantileSketch::default();
+        for i in 0..1000 {
+            b.insert(i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 1000);
+        let vals: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        assert_quantiles_close(&vals, &a, 0.02);
+        // Merging an empty sketch is a no-op.
+        let before = a.count();
+        a.merge(&QuantileSketch::default());
+        assert_eq!(a.count(), before);
+    }
+
+    #[test]
+    fn determinism_same_stream_same_answers() {
+        let mk = || {
+            let mut s = QuantileSketch::default();
+            for i in 0..10_000u64 {
+                s.insert(((i * 2654435761) % 10_007) as f64);
+            }
+            s
+        };
+        let (a, b) = (mk(), mk());
+        for &q in &[0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q), b.quantile(q));
+        }
+    }
+}

@@ -77,8 +77,9 @@ pub const DEFAULT_MAX_BODY: usize = 1 << 20;
 /// Hard cap on `max_tokens` per completion (400 beyond it). The sim
 /// backend has no `max_context`, so without this bound one hostile
 /// request could decode until the engine clock trips the
-/// `MAX_SIM_TIME` divergence guard and drains every in-flight stream;
-/// 64Ki tokens stays orders of magnitude under that horizon.
+/// `max_engine_time` divergence guard and drains every in-flight
+/// stream; 64Ki tokens stays orders of magnitude under the default
+/// horizon.
 pub const MAX_TOKENS_CAP: u64 = 65_536;
 
 /// Cap on the request line + headers of one request.
@@ -553,6 +554,8 @@ pub(crate) fn report_json(rep: &Report) -> Json {
                 .map(|q| Json::Num(q as f64))
                 .unwrap_or(Json::Null),
         ),
+        ("engine_epoch", Json::Num(rep.engine_epoch as f64)),
+        ("uptime_engine_seconds", Json::Num(rep.engine_uptime_s)),
     ])
 }
 
@@ -649,6 +652,21 @@ pub(crate) fn render_prometheus(rep: Option<&Report>, stats: &HttpStats) -> Stri
             "gauge",
             "Engine-clock time",
             r.duration,
+        );
+        prom_metric(
+            &mut out,
+            "duetserve_engine_epoch",
+            "gauge",
+            "Engine-clock epoch (increments when the idle engine re-bases its \
+             clock, re-arming the divergence guard)",
+            r.engine_epoch as f64,
+        );
+        prom_metric(
+            &mut out,
+            "duetserve_uptime_engine_seconds_total",
+            "counter",
+            "Total engine-clock seconds elapsed across all epochs",
+            r.engine_uptime_s,
         );
         prom_metric(
             &mut out,
@@ -1424,6 +1442,8 @@ mod tests {
         assert!(text.contains("duetserve_queue_cap 64"));
         assert!(text.contains("duetserve_engine_completed_total 0"));
         assert!(text.contains("# TYPE duetserve_engine_clock_seconds gauge"));
+        assert!(text.contains("duetserve_engine_epoch 0"));
+        assert!(text.contains("# TYPE duetserve_uptime_engine_seconds_total counter"));
         // Without a snapshot, only transport metrics render.
         let text = render_prometheus(None, &stats);
         assert!(!text.contains("duetserve_engine_completed_total"));

@@ -71,9 +71,9 @@ use anyhow::{anyhow, Result};
 use crate::config::ServingConfig;
 use crate::engine::{
     ClusterEngine, EngineCore, ExecutionBackend, Router, ServingTopology, SimBackend,
-    TopologyStep, MAX_SIM_TIME,
+    TopologyStep,
 };
-use crate::metrics::{Recorder, Report};
+use crate::metrics::{Recorder, RecorderMode, Report};
 use crate::request::{Request, RequestId};
 use crate::sched::{scheduler_for, Scheduler};
 
@@ -290,7 +290,15 @@ impl ServerCore {
     }
 
     /// Core over any serving topology (single core or cluster).
-    pub fn over(topology: Box<dyn ServingTopology>) -> ServerCore {
+    ///
+    /// Serving is the long-lived path, so recorders default to
+    /// [`RecorderMode::Streaming`]: resident metrics state and every
+    /// live `/metrics` snapshot are O(1) in total samples served
+    /// (running aggregates + quantile sketch), and pumped finished
+    /// requests are released instead of accumulating. Batch engines and
+    /// benches construct their own topologies and keep exact history.
+    pub fn over(mut topology: Box<dyn ServingTopology>) -> ServerCore {
+        topology.set_recorder_mode(RecorderMode::Streaming);
         ServerCore {
             topology,
             pending: VecDeque::new(),
@@ -370,10 +378,18 @@ impl ServerCore {
             .expect("server is single-core; use ServerCore::engine()")
     }
 
-    /// The topology's arrival reference clock (min worker clock for a
-    /// cluster).
+    /// The topology's arrival reference clock on the **absolute**
+    /// engine timeline (epoch offset + epoch-local clock; min worker
+    /// clock for a cluster). Monotone across epoch re-bases —
+    /// submissions, SSE `at` stamps and reports all live on this
+    /// timeline.
     pub fn clock(&self) -> f64 {
-        self.topology.clock()
+        self.topology.epoch_offset() + self.topology.clock()
+    }
+
+    /// Engine-clock epochs completed by the topology underneath.
+    pub fn epoch(&self) -> u64 {
+        self.topology.epoch()
     }
 
     /// Accepted but not yet admitted requests (backpressure signal).
@@ -395,14 +411,19 @@ impl ServerCore {
         if opts.max_new_tokens == 0 {
             return Err(SubmitError::Rejected("max_new_tokens must be >= 1".into()));
         }
-        // Bound the trace-replay arrival override: an arrival past the
-        // divergence guard would jump the engine clock over MAX_SIM_TIME
-        // on the idle-hint path and drain every in-flight request — with
-        // the clock never recovering. One bad (or hostile, over HTTP)
+        // Bound the trace-replay arrival override, per-epoch: an arrival
+        // too far past the divergence horizon would jump the engine
+        // clock over `max_engine_time` on the idle-hint path and drain
+        // every in-flight request. Arrivals are on the absolute
+        // timeline; anything within one horizon of the current uptime is
+        // safe, because a fully idle topology re-bases its epoch before
+        // jumping to a future arrival. One bad (or hostile, over HTTP)
         // submission must not brick the server.
-        if opts.arrival.is_some_and(|a| !(0.0..=MAX_SIM_TIME).contains(&a)) {
+        let horizon = self.clock() + self.topology.max_engine_time();
+        if opts.arrival.is_some_and(|a| !(0.0..=horizon).contains(&a)) {
             return Err(SubmitError::Rejected(format!(
-                "arrival must be within [0, {MAX_SIM_TIME}] engine-clock seconds"
+                "arrival must be within [0, {horizon}] engine-clock seconds \
+                 (current uptime + max engine time per epoch)"
             )));
         }
         if let Some(mc) = self.topology.max_context() {
@@ -420,7 +441,9 @@ impl ServerCore {
         }
         let id = self.next_id;
         self.next_id += 1;
-        let arrival = opts.arrival.unwrap_or_else(|| self.topology.clock());
+        // "Now" on the absolute timeline; converted back to the owning
+        // epoch's local coordinates at injection time.
+        let arrival = opts.arrival.unwrap_or_else(|| self.clock());
         let mut req = Request::new(id, arrival, prompt.len() as u64, opts.max_new_tokens)
             .with_prompt_tokens(prompt);
         if let Some(ms) = opts.slo_tbt_ms {
@@ -482,14 +505,39 @@ impl ServerCore {
     /// `cluster_server_matches_cluster_engine_metrics` pin it; a change
     /// to either side must keep those property tests green).
     pub fn step(&mut self) -> bool {
+        if !self.topology.has_work() {
+            // Fully idle engine (pending submissions live on the
+            // absolute timeline and convert at injection, so a re-base
+            // here is transparent to them). This must run *before* any
+            // idle jump toward a future arrival — re-basing first keeps
+            // the jump within the fresh epoch's divergence horizon.
+            self.topology.rebase_if_idle();
+        }
         self.admit_pending();
         if self.pending.is_empty() && !self.topology.has_work() {
             return false;
         }
-        // Everything ≤ clock() was injected above, so the head of the
-        // submission queue is strictly in the future: hint it so idle
-        // workers jump there instead of parking.
-        let hint = self.pending.front().map(|e| e.req.arrival);
+        // Everything due was injected above, so the head of the
+        // submission queue is strictly in the future: hint it (in the
+        // current epoch's local coordinates) so idle workers jump there
+        // instead of parking.
+        let mut off = self.topology.epoch_offset();
+        if let Some(e) = self.pending.front() {
+            // An idle jump to the next submission must stay inside the
+            // divergence horizon. When the gap overshoots it, force a
+            // re-base first (the topology is necessarily fully idle for
+            // a jump to happen): the submit bound
+            // `arrival ≤ uptime + max_engine_time` guarantees the
+            // post-re-base local arrival fits the fresh epoch, so an
+            // accepted submission can never trip the guard by itself.
+            if (e.req.arrival - off).max(0.0) > self.topology.max_engine_time()
+                && self.topology.rebase_now()
+            {
+                off = self.topology.epoch_offset();
+                self.admit_pending();
+            }
+        }
+        let hint = self.pending.front().map(|e| (e.req.arrival - off).max(0.0));
         match self.topology.step(hint) {
             TopologyStep::Progressed => {
                 self.pump_tokens();
@@ -549,13 +597,24 @@ impl ServerCore {
         let mut rep = rec.report(&self.topology.label());
         rep.system = format!("server/{}", rep.system);
         rep.queue_cap = Some(self.queue_depth);
+        rep.engine_epoch = self.topology.epoch();
+        rep.engine_uptime_s = self.clock();
         rep
     }
 
     fn admit_pending(&mut self) {
+        // Pending arrivals are absolute; the topology clock is
+        // epoch-local. Compare and inject in local coordinates — the
+        // *same* `(arrival - offset).max(0)` expression the step hint
+        // uses, so an idle jump to a hinted arrival always makes that
+        // arrival due on the next admit pass (no float drift between
+        // the two conversions).
+        let off = self.topology.epoch_offset();
         while let Some(e) = self.pending.front() {
-            if e.req.arrival <= self.topology.clock() {
-                let e = self.pending.pop_front().unwrap();
+            let local = (e.req.arrival - off).max(0.0);
+            if local <= self.topology.clock() {
+                let mut e = self.pending.pop_front().unwrap();
+                e.req.arrival = local;
                 self.topology.inject(e.req);
             } else {
                 break;
@@ -566,12 +625,18 @@ impl ServerCore {
     /// Emit newly produced tokens to their streams. Values come from the
     /// owning worker's backend (real argmax on PJRT, synthetic in
     /// simulation); timestamps come from the request's engine-clock token
-    /// times.
+    /// times, re-based onto the absolute timeline (epoch offset + local
+    /// time) so `at` stamps stay monotone per connection across epoch
+    /// re-bases.
     fn pump_tokens(&mut self) {
         let streams = &mut self.streams;
         let mut completed: Vec<RequestId> = Vec::new();
+        // One offset covers every request the pump can visit: a cluster
+        // shifts all workers by a common delta, and re-bases only happen
+        // while fully idle, so no in-flight request straddles epochs.
+        let off = self.topology.epoch_offset();
         self.topology.pump(&mut |r, backend, finished| {
-            Self::pump_one(streams, backend, r);
+            Self::pump_one(streams, backend, r, off);
             if finished {
                 completed.push(r.id);
             }
@@ -585,11 +650,14 @@ impl ServerCore {
         streams: &mut HashMap<RequestId, StreamState>,
         backend: &mut dyn ExecutionBackend,
         r: &Request,
+        epoch_offset: f64,
     ) {
         let Some(st) = streams.get_mut(&r.id) else { return };
         // Recompute preemption replays the request from scratch: progress
         // regressed, or token 0 now carries a different timestamp. Replay
         // consumption from the backend, but do not re-emit to the client.
+        // (`first_at` compares epoch-local stamps; a request never spans
+        // a re-base, so the comparison base is stable.)
         if r.generated < st.seen
             || (st.seen > 0 && r.generated > 0 && r.token_times[0] != st.first_at)
         {
@@ -598,13 +666,16 @@ impl ServerCore {
         while st.seen < r.generated {
             let idx = st.seen;
             let value = backend.pop_token(r.id, idx);
-            let at = r.token_times[idx as usize];
+            let at_local = r.token_times[idx as usize];
             if idx == 0 {
-                st.first_at = at;
+                st.first_at = at_local;
             }
             st.seen += 1;
             if idx >= st.emitted {
-                let _ = st.tx.send(TokenEvent::Token { value, at });
+                let _ = st.tx.send(TokenEvent::Token {
+                    value,
+                    at: epoch_offset + at_local,
+                });
                 st.emitted = idx + 1;
             }
         }
@@ -829,7 +900,7 @@ impl Drop for Server {
 mod tests {
     use super::*;
     use crate::config::Policy;
-    use crate::engine::IterationBatch;
+    use crate::engine::{IterationBatch, MAX_SIM_TIME};
     use crate::hw::PartitionPlan;
     use crate::sim::{DispatchMode, ExecResult, SpatialResult};
 

@@ -1,0 +1,272 @@
+//! Engine-clock epoch regression tests: a trace spanning one or more
+//! idle re-bases must produce the identical merged `Report` as the same
+//! trace served inside a single epoch (modulo the epoch counters), over
+//! both a single `EngineCore` and a 2-worker `ClusterEngine` — and the
+//! divergence guard must genuinely re-arm, so cumulative engine time can
+//! run past the per-epoch horizon with zero drops.
+
+use duetserve::config::{Policy, ServingConfig};
+use duetserve::engine::{router_by_name, REBASE_FRACTION};
+use duetserve::metrics::Report;
+use duetserve::server::{FinishReason, RequestHandle, ServerCore, SubmitOptions, TokenEvent};
+
+fn cfg(max_engine_time: f64) -> ServingConfig {
+    let mut c = ServingConfig::default_8b().with_policy(Policy::VllmChunked);
+    c.max_engine_time = max_engine_time;
+    c
+}
+
+fn prompt(n: usize) -> Vec<i32> {
+    (0..n).map(|i| (i % 811) as i32).collect()
+}
+
+/// Bursts of (arrival, prompt_len, max_new_tokens) separated by idle
+/// gaps long enough to cross the re-base threshold when the horizon is
+/// small.
+fn bursts() -> Vec<Vec<(f64, usize, u64)>> {
+    (0..3)
+        .map(|b| {
+            let t0 = b as f64 * 30.0;
+            (0..3).map(|i| (t0, 512 + i * 64, 8)).collect()
+        })
+        .collect()
+}
+
+/// Feed the bursts through a `ServerCore` the live way (submit a burst,
+/// drain it, submit the next — the pattern under which the engine goes
+/// fully idle between bursts), then return every stream's events plus
+/// the final report.
+fn serve_bursts(mut s: ServerCore) -> (Vec<Vec<TokenEvent>>, Report) {
+    let mut handles: Vec<RequestHandle> = Vec::new();
+    for burst in bursts() {
+        for (arrival, isl, osl) in burst {
+            let h = s
+                .submit(
+                    prompt(isl),
+                    SubmitOptions {
+                        max_new_tokens: osl,
+                        arrival: Some(arrival),
+                        ..Default::default()
+                    },
+                )
+                .expect("submission within the epoch horizon");
+            handles.push(h);
+        }
+        s.run_to_idle();
+    }
+    let rep = s.finish();
+    let events = handles.into_iter().map(|h| h.collect_events()).collect();
+    (events, rep)
+}
+
+fn token_times(events: &[TokenEvent]) -> Vec<f64> {
+    events
+        .iter()
+        .filter_map(|e| match e {
+            TokenEvent::Token { at, .. } => Some(*at),
+            TokenEvent::Done { .. } => None,
+        })
+        .collect()
+}
+
+fn assert_reports_match(multi: &Report, single: &Report) {
+    let close = |a: f64, b: f64| (a - b).abs() <= 1e-6 * (1.0 + a.abs().max(b.abs()));
+    assert_eq!(multi.completed, single.completed, "completed");
+    assert_eq!(multi.iterations, single.iterations, "iterations");
+    assert!(
+        close(multi.duration, single.duration),
+        "duration {} != {}",
+        multi.duration,
+        single.duration
+    );
+    assert!(
+        close(multi.ttft.mean, single.ttft.mean),
+        "ttft {} != {}",
+        multi.ttft.mean,
+        single.ttft.mean
+    );
+    assert!(
+        close(multi.tbt.mean, single.tbt.mean),
+        "tbt {} != {}",
+        multi.tbt.mean,
+        single.tbt.mean
+    );
+    assert!(
+        close(multi.engine_uptime_s, single.engine_uptime_s),
+        "uptime {} != {}",
+        multi.engine_uptime_s,
+        single.engine_uptime_s
+    );
+}
+
+/// Single `EngineCore`: a small horizon forces a re-base in each
+/// inter-burst idle gap; the merged report must match the same trace
+/// served in one epoch under the default horizon, and the absolute
+/// (epoch-offset-re-based) SSE `at` stamps must match too.
+#[test]
+fn engine_core_report_identical_across_epoch_rebase() {
+    // Horizon 40 ⇒ re-base threshold 20 < the 30 s burst spacing.
+    let (ev_multi, rep_multi) = serve_bursts(ServerCore::sim(cfg(40.0), 7));
+    let (ev_single, rep_single) = serve_bursts(ServerCore::sim(cfg(3.0e4), 7));
+
+    assert!(
+        rep_multi.engine_epoch >= 2,
+        "idle-separated bursts must re-base: epoch {}",
+        rep_multi.engine_epoch
+    );
+    assert_eq!(rep_single.engine_epoch, 0, "default horizon never re-bases");
+    assert_reports_match(&rep_multi, &rep_single);
+
+    // Token timestamps live on the absolute timeline in both runs:
+    // monotone per stream, and equal across runs within float noise.
+    assert_eq!(ev_multi.len(), ev_single.len());
+    for (m, s) in ev_multi.iter().zip(&ev_single) {
+        assert_eq!(
+            m.last(),
+            Some(&TokenEvent::Done {
+                reason: FinishReason::Completed
+            })
+        );
+        let (tm, ts) = (token_times(m), token_times(s));
+        assert_eq!(tm.len(), ts.len());
+        assert!(tm.windows(2).all(|w| w[1] >= w[0]), "at stamps monotone");
+        for (a, b) in tm.iter().zip(&ts) {
+            assert!((a - b).abs() <= 1e-6 * (1.0 + a.abs()), "at {a} != {b}");
+        }
+    }
+}
+
+/// 2-worker `ClusterEngine` behind the serving front-end: the cluster
+/// re-bases all workers by a common delta, and the merged cross-epoch
+/// drain report matches the single-epoch run.
+#[test]
+fn cluster_report_identical_across_epoch_rebase() {
+    let mk = |horizon: f64| {
+        ServerCore::sim_replicated(
+            cfg(horizon),
+            2,
+            11,
+            router_by_name("least-outstanding").expect("known router"),
+        )
+    };
+    let (ev_multi, rep_multi) = serve_bursts(mk(40.0));
+    let (ev_single, rep_single) = serve_bursts(mk(3.0e4));
+
+    assert!(
+        rep_multi.engine_epoch >= 2,
+        "cluster must re-base between bursts: epoch {}",
+        rep_multi.engine_epoch
+    );
+    assert_eq!(rep_single.engine_epoch, 0);
+    assert_reports_match(&rep_multi, &rep_single);
+    for (m, s) in ev_multi.iter().zip(&ev_single) {
+        let (tm, ts) = (token_times(m), token_times(s));
+        assert_eq!(tm.len(), ts.len());
+        assert!(tm.windows(2).all(|w| w[1] >= w[0]));
+        for (a, b) in tm.iter().zip(&ts) {
+            assert!((a - b).abs() <= 1e-6 * (1.0 + a.abs()), "at {a} != {b}");
+        }
+    }
+}
+
+/// An accepted arrival must never trip the divergence guard by itself:
+/// when the idle epoch sits *below* the threshold re-base point, a
+/// submission near the `uptime + horizon` bound would previously make
+/// the idle jump overshoot the horizon and drain itself — the serving
+/// front-end now forces a re-base before any over-horizon jump.
+#[test]
+fn forced_rebase_absorbs_over_horizon_idle_jump() {
+    let horizon = 10.0;
+    let mut s = ServerCore::sim(cfg(horizon), 5);
+    let first = s
+        .submit(
+            prompt(2048),
+            SubmitOptions {
+                max_new_tokens: 32,
+                arrival: Some(0.0),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    s.run_to_idle();
+    let uptime = s.clock();
+    assert!(
+        uptime > 0.0 && uptime < REBASE_FRACTION * horizon,
+        "scenario needs an epoch below the re-base threshold: {uptime}"
+    );
+    // Within the submit bound, but past the *current* epoch's remaining
+    // horizon (local arrival > max_engine_time while offset is 0).
+    let far = horizon + 0.5 * uptime;
+    let second = s
+        .submit(
+            prompt(256),
+            SubmitOptions {
+                max_new_tokens: 4,
+                arrival: Some(far),
+                ..Default::default()
+            },
+        )
+        .expect("within uptime + horizon");
+    s.run_to_idle();
+    assert_eq!(s.engine().dropped, 0, "over-horizon jump must not diverge");
+    assert!(s.epoch() >= 1, "the jump must have forced a re-base");
+    let rep = s.finish();
+    assert_eq!(rep.completed, 2);
+    for h in [first, second] {
+        assert_eq!(
+            h.collect_events().last(),
+            Some(&TokenEvent::Done {
+                reason: FinishReason::Completed
+            })
+        );
+    }
+}
+
+/// The point of the whole exercise: with a tiny horizon, cumulative
+/// engine time runs well past the old hard cliff while every request
+/// still completes — the divergence guard re-arms per epoch instead of
+/// dropping all traffic forever.
+#[test]
+fn divergence_guard_rearms_past_old_horizon() {
+    let horizon = 10.0;
+    let mut s = ServerCore::sim(cfg(horizon), 3);
+    let mut handles = Vec::new();
+    // Each burst sits just over half the horizon away from the previous
+    // one, so every idle gap crosses the re-base threshold and total
+    // engine time ends several horizons deep.
+    for b in 0..4 {
+        let arrival = b as f64 * 6.0;
+        for _ in 0..2 {
+            handles.push(
+                s.submit(
+                    prompt(256),
+                    SubmitOptions {
+                        max_new_tokens: 6,
+                        arrival: Some(arrival),
+                        ..Default::default()
+                    },
+                )
+                .expect("arrival within the rolling epoch horizon"),
+            );
+        }
+        s.run_to_idle();
+    }
+    assert_eq!(s.engine().dropped, 0, "no divergence drops");
+    let rep = s.finish();
+    assert_eq!(rep.completed, 8);
+    assert!(
+        rep.engine_uptime_s > horizon,
+        "uptime {} must pass the per-epoch horizon {horizon}",
+        rep.engine_uptime_s
+    );
+    assert!(rep.engine_epoch >= 2, "epoch {}", rep.engine_epoch);
+    for h in handles {
+        let ev = h.collect_events();
+        assert_eq!(
+            ev.last(),
+            Some(&TokenEvent::Done {
+                reason: FinishReason::Completed
+            })
+        );
+    }
+}

@@ -1,0 +1,277 @@
+//! Streaming-recorder properties: the quantile sketch answers within its
+//! rank-error budget against `stats::percentile` on the exact vectors
+//! (across adversarial distributions), sketch merges track concatenated
+//! streams, and `Recorder::merge` in streaming mode preserves every
+//! counted field — including the SLO-attainment counts — without keeping
+//! per-sample history.
+
+use duetserve::metrics::{QuantileSketch, Recorder, RecorderMode};
+use duetserve::request::Request;
+use duetserve::util::proptest::check;
+use duetserve::util::stats;
+
+/// Rank distance (as a fraction of n) between the sketch's answer and
+/// the true order statistic: 0 when `got` actually occupies the target
+/// rank in the sorted exact vector.
+fn rank_error(sorted: &[f64], got: f64, q: f64) -> f64 {
+    let n = sorted.len() as f64;
+    let below = sorted.iter().filter(|&&x| x < got).count() as f64;
+    let at_or_below = sorted.iter().filter(|&&x| x <= got).count() as f64;
+    let target = (q * n).ceil().max(1.0);
+    if target < below + 1.0 {
+        (below + 1.0 - target) / n
+    } else if target > at_or_below {
+        (target - at_or_below) / n
+    } else {
+        0.0
+    }
+}
+
+/// Adversarial sample streams: sorted, reverse-sorted, constant,
+/// bimodal, heavy-tailed, and sawtooth.
+fn adversarial_stream(kind: usize, n: usize, seed: u64) -> Vec<f64> {
+    let mix = |i: usize| ((i as u64).wrapping_mul(2654435761).wrapping_add(seed) % 100_003) as f64;
+    (0..n)
+        .map(|i| match kind % 6 {
+            // ascending / descending / constant
+            0 => i as f64,
+            1 => (n - i) as f64,
+            2 => 42.125,
+            // bimodal: tight cluster + far cluster
+            3 => {
+                if i % 7 == 0 {
+                    1000.0 + mix(i) / 1e4
+                } else {
+                    1.0 + mix(i) / 1e6
+                }
+            }
+            // heavy near zero
+            4 => 1.0 / (1.0 + mix(i) / 100.0),
+            // sawtooth + jitter
+            _ => (i % 97) as f64 + mix(i) / 1e6,
+        })
+        .collect()
+}
+
+/// Single-stream accuracy: p50 and p99 within the sketch's rank-error
+/// budget (ε = 0.005, asserted with 2ε slack for rank-convention skew).
+#[test]
+fn sketch_quantiles_within_rank_eps_of_exact() {
+    check(12, |g| {
+        let kind = g.usize_range(0, 5);
+        let n = g.usize_range(2_000, 30_000);
+        let values = adversarial_stream(kind, n, g.case_seed);
+        let mut sk = QuantileSketch::default();
+        for &v in &values {
+            sk.insert(v);
+        }
+        let mut sorted = values.clone();
+        sorted.sort_by(f64::total_cmp);
+        for &q in &[0.5, 0.9, 0.99] {
+            let got = sk.quantile(q);
+            let err = rank_error(&sorted, got, q);
+            if err > 0.015 {
+                return Err(format!(
+                    "kind {kind} n {n} q {q}: rank error {err:.4} (got {got}, exact {})",
+                    stats::percentile_sorted(&sorted, q * 100.0)
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Merge property: merging sketches built over two halves answers within
+/// the (documented) doubled budget of a sketch over the concatenation —
+/// and both stay close to the exact percentiles.
+#[test]
+fn sketch_merge_equals_concatenated_stream_within_eps() {
+    check(10, |g| {
+        let kind_a = g.usize_range(0, 5);
+        let kind_b = g.usize_range(0, 5);
+        let na = g.usize_range(1_000, 15_000);
+        let nb = g.usize_range(1_000, 15_000);
+        let a_vals = adversarial_stream(kind_a, na, g.case_seed);
+        let b_vals = adversarial_stream(kind_b, nb, g.case_seed.wrapping_add(1));
+
+        let mut merged = QuantileSketch::default();
+        let mut other = QuantileSketch::default();
+        let mut concat = QuantileSketch::default();
+        for &v in &a_vals {
+            merged.insert(v);
+            concat.insert(v);
+        }
+        for &v in &b_vals {
+            other.insert(v);
+            concat.insert(v);
+        }
+        merged.merge(&other);
+        if merged.count() != (na + nb) as u64 {
+            return Err(format!("merged count {} != {}", merged.count(), na + nb));
+        }
+
+        let mut sorted: Vec<f64> = a_vals;
+        sorted.extend_from_slice(&b_vals);
+        sorted.sort_by(f64::total_cmp);
+        for &q in &[0.5, 0.99] {
+            for (label, sk) in [("merged", &merged), ("concat", &concat)] {
+                let err = rank_error(&sorted, sk.quantile(q), q);
+                // Concatenated stream: ε budget. Merged: ε_a + ε_b.
+                let tol = if label == "merged" { 0.03 } else { 0.015 };
+                if err > tol {
+                    return Err(format!(
+                        "{label} q {q}: rank error {err:.4} > {tol} \
+                         (kinds {kind_a}/{kind_b}, n {na}+{nb})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn finished_request(id: u64, base: f64, gaps: &[f64], slo: Option<f64>) -> Request {
+    let mut r = Request::new(id, 0.0, 16, gaps.len() as u64 + 1);
+    if let Some(s) = slo {
+        r = r.with_slo_tbt(s);
+    }
+    r.advance_prefill(16);
+    let mut t = base;
+    r.advance_decode(t);
+    for g in gaps {
+        t += g;
+        r.advance_decode(t);
+    }
+    r
+}
+
+/// `Recorder::merge` of streaming recorders ≡ one streaming recorder fed
+/// the concatenated request stream: every counted field exactly, means
+/// within float noise, percentiles within the sketch merge budget — and
+/// the PR-2 SLO-attainment fields survive exactly.
+#[test]
+fn streaming_recorder_merge_equals_concatenated_feed() {
+    check(8, |g| {
+        let n_a = g.usize_range(50, 400);
+        let n_b = g.usize_range(50, 400);
+        let mut a = Recorder::streaming();
+        let mut b = Recorder::streaming();
+        let mut concat = Recorder::streaming();
+        let mut mk = |i: usize, which: u64| {
+            let gap = 0.01 + ((i as u64 * 37 + which * 13) % 100) as f64 * 1e-3;
+            let slo = if i % 3 == 0 { Some(0.05) } else { None };
+            let base = 0.2 + i as f64 * 0.01;
+            finished_request(which * 10_000 + i as u64, base, &[gap, gap * 2.0], slo)
+        };
+        for i in 0..n_a {
+            let r = mk(i, 0);
+            a.record_finished(&r);
+            concat.record_finished(&r);
+        }
+        for i in 0..n_b {
+            let r = mk(i, 1);
+            b.record_finished(&r);
+            concat.record_finished(&r);
+        }
+        a.merge(&b);
+        a.duration = 100.0;
+        concat.duration = 100.0;
+
+        let ra = a.report("merged");
+        let rc = concat.report("concat");
+        if ra.completed != rc.completed || ra.tbt.n != rc.tbt.n {
+            return Err(format!(
+                "counts diverge: completed {}/{}, tbt n {}/{}",
+                ra.completed,
+                rc.completed,
+                ra.tbt.n,
+                rc.tbt.n
+            ));
+        }
+        if (a.slo_checked, a.slo_violations) != (concat.slo_checked, concat.slo_violations) {
+            return Err(format!(
+                "slo counts diverge: {}/{} vs {}/{}",
+                a.slo_checked,
+                a.slo_violations,
+                concat.slo_checked,
+                concat.slo_violations
+            ));
+        }
+        match (ra.slo_attainment, rc.slo_attainment) {
+            (Some(x), Some(y)) if (x - y).abs() < 1e-12 => {}
+            (None, None) => {}
+            other => return Err(format!("slo attainment diverged: {other:?}")),
+        }
+        let close = |x: f64, y: f64| (x - y).abs() <= 1e-9 * (1.0 + x.abs().max(y.abs()));
+        if !close(ra.tbt.mean, rc.tbt.mean) || !close(ra.ttft.mean, rc.ttft.mean) {
+            return Err(format!(
+                "means diverge: tbt {} vs {}, ttft {} vs {}",
+                ra.tbt.mean,
+                rc.tbt.mean,
+                ra.ttft.mean,
+                rc.ttft.mean
+            ));
+        }
+        // Extrema are exact in streaming mode.
+        if ra.tbt.min != rc.tbt.min || ra.tbt.max != rc.tbt.max {
+            return Err("extrema diverge".into());
+        }
+        // Percentiles: both are sketch answers; merged carries the
+        // doubled budget. Compare against each other in value space via
+        // rank error over an exactly reconstructed gap list.
+        let mut gaps: Vec<f64> = Vec::new();
+        for i in 0..n_a {
+            let g0 = 0.01 + ((i as u64 * 37) % 100) as f64 * 1e-3;
+            gaps.push(g0);
+            gaps.push(g0 * 2.0);
+        }
+        for i in 0..n_b {
+            let g0 = 0.01 + ((i as u64 * 37 + 13) % 100) as f64 * 1e-3;
+            gaps.push(g0);
+            gaps.push(g0 * 2.0);
+        }
+        gaps.sort_by(f64::total_cmp);
+        for (label, rep) in [("merged", &ra), ("concat", &rc)] {
+            for (q, got) in [(0.5, rep.tbt.p50), (0.99, rep.tbt.p99)] {
+                let err = rank_error(&gaps, got, q);
+                if err > 0.03 {
+                    return Err(format!("{label} tbt q{q}: rank error {err:.4}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Streaming recorders agree with exact recorders on everything exact
+/// (counts, means, extrema, SLO fields) for the same request stream.
+#[test]
+fn streaming_report_matches_exact_report_on_exact_fields() {
+    let mut exact = Recorder::new();
+    let mut stream = Recorder::streaming();
+    assert_eq!(exact.mode(), RecorderMode::Exact);
+    assert_eq!(stream.mode(), RecorderMode::Streaming);
+    for i in 0..300u64 {
+        let gap = 0.02 + (i % 50) as f64 * 1e-3;
+        let r = finished_request(i, 0.1 + i as f64 * 0.05, &[gap, gap, gap * 3.0], Some(0.06));
+        exact.record_finished(&r);
+        stream.record_finished(&r);
+    }
+    exact.duration = 50.0;
+    stream.duration = 50.0;
+    let re = exact.report("exact");
+    let rs = stream.report("stream");
+    assert_eq!(re.completed, rs.completed);
+    assert_eq!((re.ttft.n, re.tbt.n, re.e2e.n), (rs.ttft.n, rs.tbt.n, rs.e2e.n));
+    let close = |x: f64, y: f64| (x - y).abs() <= 1e-9 * (1.0 + x.abs().max(y.abs()));
+    assert!(close(re.ttft.mean, rs.ttft.mean));
+    assert!(close(re.tbt.mean, rs.tbt.mean));
+    assert!(close(re.e2e.mean, rs.e2e.mean));
+    assert!(close(re.tbt.std, rs.tbt.std), "std {} vs {}", re.tbt.std, rs.tbt.std);
+    assert_eq!(re.tbt.min, rs.tbt.min);
+    assert_eq!(re.tbt.max, rs.tbt.max);
+    assert_eq!(re.slo_attainment, rs.slo_attainment);
+    // Approximate percentiles land within the sketch budget of exact.
+    let rel = (re.tbt.p99 - rs.tbt.p99).abs() / re.tbt.p99.max(1e-12);
+    assert!(rel < 0.2, "p99 {} vs exact {}", rs.tbt.p99, re.tbt.p99);
+}
