@@ -10,7 +10,7 @@
 use std::time::Instant;
 
 use duetserve::config::{GpuSpec, ModelSpec, Policy, ServingConfig};
-use duetserve::engine::engine_for;
+use duetserve::engine::{engine_for, ClusterEngine, RoundRobinRouter, TopologyStep};
 use duetserve::model::AttnShape;
 use duetserve::roofline::{BatchShape, Predictor};
 use duetserve::sched::optimize_partition;
@@ -18,6 +18,29 @@ use duetserve::sim::{DispatchMode, GpuExecutor};
 use duetserve::util::stats::Summary;
 use duetserve::util::tablefmt::{banner, Table};
 use duetserve::workload::synthetic::fixed_workload;
+
+/// µs per cluster event (`step_next`) draining a synthetic workload at
+/// fleet size `n` — heap-driven event queue vs the retained naive-scan
+/// reference over the identical event trajectory.
+fn cluster_step_us(n: u32, naive: bool) -> f64 {
+    let cfg = ServingConfig::default_8b().with_policy(Policy::VllmChunked);
+    let mut cluster =
+        ClusterEngine::replicated(cfg, n, 0xF1EE7, Box::new(RoundRobinRouter::new()));
+    cluster.set_naive_scan(naive);
+    let w = fixed_workload(2 * n as usize, 512, 8, n as f64 * 8.0, 0xC1);
+    for r in w.sorted_by_arrival().requests {
+        cluster.inject(r);
+    }
+    let t = Instant::now();
+    let mut steps = 0u64;
+    loop {
+        match cluster.step_next(None) {
+            TopologyStep::Exhausted | TopologyStep::Diverged(_) => break,
+            _ => steps += 1,
+        }
+    }
+    t.elapsed().as_secs_f64() / steps.max(1) as f64 * 1e6
+}
 
 /// Time `f` over `iters` runs (after `warmup`), returning per-call stats.
 fn time_it<T>(warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> Summary {
@@ -76,6 +99,20 @@ fn main() {
             exec.run(&mixed, 132, DispatchMode::Eager, None)
         }),
     );
+
+    // Fleet coordinator cost: µs per cluster event at N=8 and N=256
+    // replicas, heap event queue vs the retained naive O(N)-scan
+    // reference (same trajectory; the gap is pure coordinator overhead).
+    for n in [8u32, 256] {
+        bench(
+            &format!("cluster step_next N={n} (heap queue)"),
+            Summary::of(&[cluster_step_us(n, false)]),
+        );
+        bench(
+            &format!("cluster step_next N={n} (naive scan)"),
+            Summary::of(&[cluster_step_us(n, true)]),
+        );
+    }
 
     // Whole-engine iteration throughput: iterations/second of simulated
     // serving (scheduling + bookkeeping per simulated iteration).

@@ -1,0 +1,241 @@
+//! Indexed min-heap over per-worker clocks — the event queue behind
+//! [`ClusterEngine`](super::ClusterEngine)'s discrete-event loop.
+//!
+//! The cluster used to pick the next worker with an O(N) scan per event
+//! (`min_clock_worker`), which is the wrong shape for fleet-scale sweeps:
+//! at N = 1000 every park nudge costs a full fleet scan. This heap makes
+//! the pick O(1) and each clock mutation O(log N), while reproducing the
+//! scan's selection *bit-exactly*:
+//!
+//! - ordering is [`f64::total_cmp`] on the key, then ascending worker
+//!   index — exactly the "first of the equal minimums" that
+//!   `Iterator::min_by` returns, so trajectories are byte-identical to
+//!   the naive reference (property-tested in `tests/fleet_hotpath.rs`);
+//! - [`shift_all`](MinClockHeap::shift_all) subtracts one common delta
+//!   from every key *in place*. IEEE-754 subtraction of a common finite
+//!   value is monotone (a ≤ b ⇒ a−x ≤ b−x), so the heap property is
+//!   preserved without re-ordering — the epoch re-base keeps relative
+//!   order bit-exact, which the live ≡ batch replay property relies on.
+
+/// Indexed binary min-heap keyed by `f64` worker clocks. Worker indices
+/// are dense `0..n`; `update` is O(log n), `peek`/`min_key` are O(1).
+#[derive(Debug, Clone)]
+pub struct MinClockHeap {
+    /// Heap array of worker indices.
+    heap: Vec<u32>,
+    /// `pos[w]` = position of worker `w` in `heap`.
+    pos: Vec<u32>,
+    /// `keys[w]` = worker `w`'s clock.
+    keys: Vec<f64>,
+}
+
+impl MinClockHeap {
+    /// Heap over workers `0..n`, all with key 0.0. With equal keys the
+    /// identity layout is already a valid heap with worker 0 at the root.
+    pub fn new(n: usize) -> MinClockHeap {
+        assert!(n <= u32::MAX as usize, "worker index space");
+        MinClockHeap {
+            heap: (0..n as u32).collect(),
+            pos: (0..n as u32).collect(),
+            keys: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// The worker with the minimum key (ties: lowest index — identical to
+    /// `min_by(total_cmp)` over worker order).
+    pub fn peek(&self) -> usize {
+        self.heap[0] as usize
+    }
+
+    /// The minimum key.
+    pub fn min_key(&self) -> f64 {
+        self.keys[self.heap[0] as usize]
+    }
+
+    /// Worker `w`'s current key.
+    pub fn key(&self, w: usize) -> f64 {
+        self.keys[w]
+    }
+
+    /// Set worker `w`'s key and restore heap order (sift whichever way).
+    pub fn update(&mut self, w: usize, key: f64) {
+        self.keys[w] = key;
+        let at = self.pos[w] as usize;
+        let up = self.sift_up(at);
+        if up == at {
+            self.sift_down(at);
+        }
+    }
+
+    /// Subtract one common `delta` from every key, in place. Monotone in
+    /// IEEE-754, so heap order is untouched (no sifting) and relative
+    /// order across workers stays bit-exact — the epoch re-base contract.
+    pub fn shift_all(&mut self, delta: f64) {
+        for k in &mut self.keys {
+            *k -= delta;
+        }
+    }
+
+    /// Strict heap order: key, then worker index (total, NaN-safe).
+    fn less(&self, a: u32, b: u32) -> bool {
+        self.keys[a as usize]
+            .total_cmp(&self.keys[b as usize])
+            .then(a.cmp(&b))
+            .is_lt()
+    }
+
+    fn sift_up(&mut self, mut at: usize) -> usize {
+        while at > 0 {
+            let parent = (at - 1) / 2;
+            if self.less(self.heap[at], self.heap[parent]) {
+                self.swap(at, parent);
+                at = parent;
+            } else {
+                break;
+            }
+        }
+        at
+    }
+
+    fn sift_down(&mut self, mut at: usize) {
+        loop {
+            let l = 2 * at + 1;
+            if l >= self.heap.len() {
+                break;
+            }
+            let r = l + 1;
+            let child = if r < self.heap.len() && self.less(self.heap[r], self.heap[l]) {
+                r
+            } else {
+                l
+            };
+            if self.less(self.heap[child], self.heap[at]) {
+                self.swap(at, child);
+                at = child;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn swap(&mut self, a: usize, b: usize) {
+        self.heap.swap(a, b);
+        self.pos[self.heap[a] as usize] = a as u32;
+        self.pos[self.heap[b] as usize] = b as u32;
+    }
+
+    /// Debug validation: heap order and pos/heap inverse mapping.
+    #[cfg(test)]
+    fn check(&self) {
+        for (i, &w) in self.heap.iter().enumerate() {
+            assert_eq!(self.pos[w as usize] as usize, i, "pos/heap mismatch");
+            if i > 0 {
+                let parent = self.heap[(i - 1) / 2];
+                assert!(!self.less(w, parent), "heap order violated at {i}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference: the naive scan the heap replaces.
+    fn naive_min(keys: &[f64]) -> usize {
+        keys.iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    #[test]
+    fn fresh_heap_picks_worker_zero() {
+        let h = MinClockHeap::new(8);
+        assert_eq!(h.peek(), 0);
+        assert_eq!(h.min_key(), 0.0);
+        assert_eq!(h.len(), 8);
+        assert!(!h.is_empty());
+    }
+
+    #[test]
+    fn update_tracks_minimum_and_ties_break_low_index() {
+        let mut h = MinClockHeap::new(4);
+        h.update(0, 5.0);
+        h.update(1, 3.0);
+        h.update(2, 3.0);
+        h.update(3, 9.0);
+        h.check();
+        // Tie at 3.0: worker 1 (lower index) wins, like min_by.
+        assert_eq!(h.peek(), 1);
+        h.update(1, 10.0);
+        h.check();
+        assert_eq!(h.peek(), 2);
+        h.update(3, 0.5);
+        h.check();
+        assert_eq!(h.peek(), 3);
+        assert_eq!(h.min_key(), 0.5);
+    }
+
+    #[test]
+    fn matches_naive_scan_under_random_updates() {
+        use crate::util::proptest::check;
+        check(64, |g| {
+            let n = g.usize_range(1, 33);
+            let mut h = MinClockHeap::new(n);
+            let mut keys = vec![0.0f64; n];
+            for _ in 0..g.usize_range(1, 200) {
+                let w = g.usize_range(0, n - 1);
+                // Quantized keys to force frequent ties.
+                let k = g.u64_range(0, 20) as f64 * 0.25;
+                h.update(w, k);
+                keys[w] = k;
+                if h.peek() != naive_min(&keys) {
+                    return Err(format!(
+                        "heap picked {} naive picked {} keys {keys:?}",
+                        h.peek(),
+                        naive_min(&keys)
+                    ));
+                }
+                if h.min_key() != keys[h.peek()] {
+                    return Err("min_key mismatch".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shift_all_preserves_order_bit_exactly() {
+        let mut h = MinClockHeap::new(5);
+        for (w, k) in [(0, 7.25), (1, 3.5), (2, 3.5), (3, 12.0), (4, 3.75)] {
+            h.update(w, k);
+        }
+        let order_before = h.peek();
+        h.shift_all(3.5);
+        h.check();
+        assert_eq!(h.peek(), order_before);
+        // x - x == +0.0 exactly in IEEE-754.
+        assert_eq!(h.min_key(), 0.0);
+        assert_eq!(h.key(4), 0.25);
+    }
+
+    #[test]
+    fn nan_key_does_not_panic() {
+        let mut h = MinClockHeap::new(3);
+        h.update(1, f64::NAN);
+        h.update(2, 1.0);
+        h.check();
+        // total_cmp sorts NaN above every finite value: never the pick.
+        assert_eq!(h.peek(), 0);
+    }
+}

@@ -18,7 +18,11 @@
 //! cancel, backpressure and graceful drain) across N workers.
 //!
 //! Each [`step_next`] advances whichever worker has the smallest local
-//! clock:
+//! clock, picked O(1) from an indexed min-heap event queue
+//! ([`MinClockHeap`]) that is updated on every clock mutation (step,
+//! park, offline jump, epoch re-base) — the retained naive O(N) scan
+//! stays behind [`set_naive_scan`](ClusterEngine::set_naive_scan) as the
+//! property-tested reference and bench baseline:
 //!
 //! [`inject`]: ClusterEngine::inject
 //! [`step_next`]: ClusterEngine::step_next
@@ -54,10 +58,10 @@ use crate::request::{Phase, Request, RequestId};
 use crate::sched::{
     scheduler_for, IterationPlan, PrefillOnlyScheduler, SchedInput, Scheduler,
 };
-use crate::sim::DispatchMode;
 use crate::workload::Workload;
 
-use super::backend::{DecodeSlot, ExecutionBackend, IterationBatch};
+use super::backend::ExecutionBackend;
+use super::clockheap::MinClockHeap;
 use super::core::{CoreStep, EngineCore, REBASE_FRACTION};
 use super::router::{RouteCandidate, Router};
 use super::topology::{ServingTopology, TopologyStep};
@@ -158,6 +162,45 @@ pub struct ClusterEngine {
     /// cluster's absolute time base (worker clocks keep their relative
     /// stagger).
     pub epoch_offset: f64,
+    /// Event queue: indexed min-heap over worker clocks, kept in sync
+    /// with every clock mutation, so the next-event pick is O(1) and each
+    /// event O(log N) instead of an O(N) fleet scan. Selection order is
+    /// bit-identical to the naive scan (total order on clock, ties to the
+    /// lowest worker index).
+    clocks: MinClockHeap,
+    /// Running maximum worker clock. Valid as a scalar because worker
+    /// clocks are monotone non-decreasing except for the common-delta
+    /// epoch re-base shift (which subtracts the same delta here).
+    max_clock: f64,
+    /// Incrementally maintained per-worker load board, in worker-index
+    /// order: `loads[i]` always equals a fresh [`RouteCandidate`]
+    /// snapshot of worker `i` (re-synced after every event that touches
+    /// the worker), so routing no longer recomputes O(queue) load sums
+    /// across the fleet per arrival.
+    loads: Vec<RouteCandidate>,
+    /// `busy[i]` == `workers[i].core.has_local_work()`, with the count of
+    /// `true` entries in `busy_count` — O(1) `all_done`.
+    busy: Vec<bool>,
+    busy_count: usize,
+    /// Sum of worker waiting-queue lengths — O(1) `queued()`.
+    total_queue: usize,
+    /// Scratch: router candidates for the current decision (reused).
+    cand_scratch: Vec<RouteCandidate>,
+    /// Scratch: per-decision overlaid copy of `cand_scratch`.
+    cand_overlay: Vec<RouteCandidate>,
+    /// Scratch: in-flight transfer-assignment overlays, indexed by worker.
+    extra_queue: Vec<usize>,
+    extra_tokens: Vec<u64>,
+    extra_kv: Vec<u64>,
+    /// Scratch: (request, transfer-duration) pairs extracted from a
+    /// prefill worker per event.
+    extract_scratch: Vec<(Request, f64)>,
+    /// Pin the retained O(N)-scan reference implementation (naive
+    /// min-clock selection, per-decision candidate rebuilds with
+    /// recomputed load sums, allocating transfer routing). Trajectories
+    /// must be byte-identical to the fast path — property-tested in
+    /// `tests/fleet_hotpath.rs` — and it is the bench baseline.
+    naive_scan: bool,
 }
 
 impl ClusterEngine {
@@ -245,6 +288,18 @@ impl ClusterEngine {
         router: Box<dyn Router>,
         name: String,
     ) -> ClusterEngine {
+        assert!(!workers.is_empty(), "cluster has no workers");
+        let n = workers.len();
+        let loads: Vec<RouteCandidate> = workers
+            .iter()
+            .enumerate()
+            .map(|(i, w)| RouteCandidate {
+                worker: i,
+                queue_len: 0,
+                outstanding_tokens: 0,
+                kv_free_tokens: w.core.kv_free_tokens(),
+            })
+            .collect();
         ClusterEngine {
             cfg,
             workers,
@@ -264,7 +319,76 @@ impl ClusterEngine {
             stepped_worker: None,
             epoch: 0,
             epoch_offset: 0.0,
+            clocks: MinClockHeap::new(n),
+            max_clock: 0.0,
+            loads,
+            busy: vec![false; n],
+            busy_count: 0,
+            total_queue: 0,
+            cand_scratch: Vec::new(),
+            cand_overlay: Vec::new(),
+            extra_queue: Vec::new(),
+            extra_tokens: Vec::new(),
+            extra_kv: Vec::new(),
+            extract_scratch: Vec::new(),
+            naive_scan: false,
         }
+    }
+
+    /// Switch to (or away from) the retained naive-scan reference path:
+    /// O(N) min-clock scans, per-decision candidate snapshots with
+    /// recomputed O(queue) load sums, and allocating transfer routing.
+    /// Event trajectories are identical either way (property-tested);
+    /// this exists as the comparison baseline for benches and tests.
+    pub fn set_naive_scan(&mut self, on: bool) {
+        self.naive_scan = on;
+    }
+
+    /// The worker the last [`step_next`](ClusterEngine::step_next)
+    /// advanced (None after Exhausted/Diverged).
+    pub fn last_stepped(&self) -> Option<usize> {
+        self.stepped_worker
+    }
+
+    /// Re-sync worker `i`'s entry on the incremental load board and the
+    /// busy/queue counters after an event touched it.
+    fn sync_worker(&mut self, i: usize) {
+        let core = &self.workers[i].core;
+        let q = core.queue_len();
+        self.total_queue = self.total_queue + q - self.loads[i].queue_len;
+        self.loads[i] = RouteCandidate {
+            worker: i,
+            queue_len: q,
+            outstanding_tokens: core.outstanding_tokens(),
+            kv_free_tokens: core.kv_free_tokens(),
+        };
+        let b = core.has_local_work();
+        if b != self.busy[i] {
+            self.busy[i] = b;
+            if b {
+                self.busy_count += 1;
+            } else {
+                self.busy_count -= 1;
+            }
+        }
+    }
+
+    fn sync_all(&mut self) {
+        for i in 0..self.workers.len() {
+            self.sync_worker(i);
+        }
+    }
+
+    /// Post-event bookkeeping for worker `idx`: publish its (possibly
+    /// advanced) clock to the event queue, fold it into the running max,
+    /// and re-sync its load-board entry.
+    fn finish_event(&mut self, idx: usize) {
+        let c = self.workers[idx].core.clock;
+        self.clocks.update(idx, c);
+        if c > self.max_clock {
+            self.max_clock = c;
+        }
+        self.sync_worker(idx);
     }
 
     /// Swap the routing policy (builder-style, before `run`). The router
@@ -328,12 +452,17 @@ impl ClusterEngine {
     }
 
     /// The cluster's arrival reference clock (epoch-local): the smallest
-    /// worker clock, i.e. the time of the next event.
+    /// worker clock, i.e. the time of the next event. O(1) off the event
+    /// queue (the naive reference folds over the fleet).
     pub fn clock(&self) -> f64 {
-        self.workers
-            .iter()
-            .map(|w| w.core.clock)
-            .fold(f64::INFINITY, f64::min)
+        if self.naive_scan {
+            return self
+                .workers
+                .iter()
+                .map(|w| w.core.clock)
+                .fold(f64::INFINITY, f64::min);
+        }
+        self.clocks.min_key()
     }
 
     /// Re-base the cluster clock to a new epoch when *every* queue is
@@ -365,6 +494,10 @@ impl ClusterEngine {
             w.core.shift_clock(delta);
             w.offline_until -= delta;
         }
+        // One common delta is monotone under IEEE-754 subtraction, so the
+        // event queue keeps its order bit-exactly without re-sifting.
+        self.clocks.shift_all(delta);
+        self.max_clock -= delta;
         self.next_planner_check -= delta;
         self.epoch_offset += delta;
         self.epoch += 1;
@@ -420,25 +553,97 @@ impl ClusterEngine {
                 return Err(format!("request {} produced a token before arrival", r.id));
             }
         }
+        // The incremental structures must equal recomputed-from-scratch
+        // state at every quiescent point, in both scan modes (they are
+        // maintained unconditionally; `naive_scan` only changes reads).
+        let mut queue_sum = 0;
+        let mut busy_sum = 0;
+        for (i, w) in self.workers.iter().enumerate() {
+            let fresh = RouteCandidate {
+                worker: i,
+                queue_len: w.core.queue_len(),
+                outstanding_tokens: w.core.recompute_outstanding(),
+                kv_free_tokens: w.core.kv_free_tokens(),
+            };
+            if self.loads[i] != fresh {
+                return Err(format!(
+                    "load board stale for worker {i}: {:?} != fresh {:?}",
+                    self.loads[i], fresh
+                ));
+            }
+            if self.busy[i] != w.core.has_local_work() {
+                return Err(format!("busy flag stale for worker {i}"));
+            }
+            if self.clocks.key(i).to_bits() != w.core.clock.to_bits() {
+                return Err(format!(
+                    "event queue stale for worker {i}: key {} != clock {}",
+                    self.clocks.key(i),
+                    w.core.clock
+                ));
+            }
+            queue_sum += fresh.queue_len;
+            busy_sum += usize::from(self.busy[i]);
+        }
+        if self.total_queue != queue_sum {
+            return Err(format!(
+                "total_queue {} != recomputed {queue_sum}",
+                self.total_queue
+            ));
+        }
+        if self.busy_count != busy_sum {
+            return Err(format!(
+                "busy_count {} != recomputed {busy_sum}",
+                self.busy_count
+            ));
+        }
+        if self.min_clock_worker()
+            != self
+                .workers
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.core.clock.total_cmp(&b.1.core.clock))
+                .map(|(i, _)| i)
+                .expect("cluster has no workers")
+        {
+            return Err("event queue min pick != naive scan pick".into());
+        }
+        if self.max_clock.to_bits() != self.max_clock_scan().to_bits() {
+            return Err(format!(
+                "running max clock {} != fleet scan {}",
+                self.max_clock,
+                self.max_clock_scan()
+            ));
+        }
         Ok(())
     }
 
     fn all_done(&self) -> bool {
-        self.pending.is_empty()
-            && self.transfers.is_empty()
-            && self.workers.iter().all(|w| !w.core.has_local_work())
+        if self.naive_scan {
+            return self.pending.is_empty()
+                && self.transfers.is_empty()
+                && self.workers.iter().all(|w| !w.core.has_local_work());
+        }
+        self.pending.is_empty() && self.transfers.is_empty() && self.busy_count == 0
     }
 
+    /// The next-event worker. O(1) off the event queue; the naive
+    /// reference scans (`min_by` keeps the first of equal minimums —
+    /// exactly the heap's total-order-then-lowest-index tie-break, so the
+    /// two paths pick identically).
     fn min_clock_worker(&self) -> usize {
-        self.workers
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.core.clock.partial_cmp(&b.1.core.clock).unwrap())
-            .map(|(i, _)| i)
-            .expect("cluster has no workers")
+        if self.naive_scan {
+            return self
+                .workers
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.core.clock.total_cmp(&b.1.core.clock))
+                .map(|(i, _)| i)
+                .expect("cluster has no workers");
+        }
+        self.clocks.peek()
     }
 
-    fn max_clock(&self) -> f64 {
+    fn max_clock_scan(&self) -> f64 {
         self.workers
             .iter()
             .map(|w| w.core.clock)
@@ -454,7 +659,13 @@ impl ClusterEngine {
                 core.clock = core.clock.max(t);
             }
             None => {
-                let max_all = self.max_clock();
+                // Clocks are monotone outside the common re-base shift,
+                // so the running max equals the fleet scan.
+                let max_all = if self.naive_scan {
+                    self.max_clock_scan()
+                } else {
+                    self.max_clock
+                };
                 self.workers[idx].core.clock = max_all + PARK_EPS;
             }
         }
@@ -505,6 +716,7 @@ impl ClusterEngine {
             for w in &mut self.workers {
                 w.core.drain_diverged();
             }
+            self.sync_all();
             self.stepped_worker = None;
             return TopologyStep::Diverged(victims);
         }
@@ -519,6 +731,7 @@ impl ClusterEngine {
 
         if self.workers[idx].offline_until > now {
             self.workers[idx].core.clock = self.workers[idx].offline_until;
+            self.finish_event(idx);
             return TopologyStep::Progressed;
         }
 
@@ -530,20 +743,47 @@ impl ClusterEngine {
                 None
             }
         };
+        self.finish_event(idx);
         match dropped {
             Some(id) => TopologyStep::Dropped(id),
             None => TopologyStep::Progressed,
         }
     }
 
-    /// Snapshot the workers satisfying `eligible` for a routing
-    /// decision. Offline workers are excluded unless *every* eligible
-    /// worker is offline (then the request must queue somewhere).
-    fn candidates_where(&self, now: f64, eligible: impl Fn(&Worker) -> bool) -> Vec<RouteCandidate> {
+    /// Fill `cand_scratch` with the load-board entries of the workers
+    /// satisfying `eligible`, in worker order — an allocation-free copy
+    /// of already-maintained O(1) signals (the load board is re-synced
+    /// after every event, so these equal fresh snapshots). Offline
+    /// workers are excluded unless *every* eligible worker is offline
+    /// (then the request must queue somewhere).
+    fn fill_candidates(&mut self, now: f64, eligible: impl Fn(&Worker) -> bool) {
+        self.cand_scratch.clear();
+        for (i, w) in self.workers.iter().enumerate() {
+            if eligible(w) && w.offline_until <= now {
+                self.cand_scratch.push(self.loads[i]);
+            }
+        }
+        if self.cand_scratch.is_empty() {
+            for (i, w) in self.workers.iter().enumerate() {
+                if eligible(w) {
+                    self.cand_scratch.push(self.loads[i]);
+                }
+            }
+        }
+    }
+
+    /// The naive reference: rebuild candidate snapshots from worker state
+    /// per decision, recomputing each load sum in O(queue) — the
+    /// per-arrival cost profile the load board replaced.
+    fn candidates_where_naive(
+        &self,
+        now: f64,
+        eligible: impl Fn(&Worker) -> bool,
+    ) -> Vec<RouteCandidate> {
         let snapshot = |(i, w): (usize, &Worker)| RouteCandidate {
             worker: i,
             queue_len: w.core.queue_len(),
-            outstanding_tokens: w.core.outstanding_tokens(),
+            outstanding_tokens: w.core.recompute_outstanding(),
             kv_free_tokens: w.core.kv_free_tokens(),
         };
         let online: Vec<RouteCandidate> = self
@@ -564,34 +804,41 @@ impl ClusterEngine {
             .collect()
     }
 
-    /// Arrival-side router candidates (unified/prefill workers).
-    fn route_candidates(&self, now: f64) -> Vec<RouteCandidate> {
-        self.candidates_where(now, Worker::accepts_arrivals)
-    }
-
     /// Route every arrival with `arrival ≤ now` to a worker, at arrival
     /// time, through the pluggable router.
     fn dispatch_arrivals(&mut self, now: f64) {
         while self.pending.front().is_some_and(|r| r.arrival <= now) {
             let req = self.pending.pop_front().unwrap();
-            let candidates = self.route_candidates(now);
-            assert!(
-                !candidates.is_empty(),
-                "no worker accepts arrivals (topology without prefill/unified workers)"
-            );
-            let choice = self.router.route(&req, &candidates);
-            assert!(
-                candidates.iter().any(|c| c.worker == choice),
-                "router `{}` dispatched to ineligible worker {choice}",
-                self.router.name()
-            );
+            let choice = if self.naive_scan {
+                let candidates = self.candidates_where_naive(now, Worker::accepts_arrivals);
+                assert!(
+                    !candidates.is_empty(),
+                    "no worker accepts arrivals (topology without prefill/unified workers)"
+                );
+                let c = self.router.route(&req, &candidates);
+                assert!(
+                    candidates.iter().any(|x| x.worker == c),
+                    "router `{}` dispatched to ineligible worker {c}",
+                    self.router.name()
+                );
+                c
+            } else {
+                self.fill_candidates(now, Worker::accepts_arrivals);
+                assert!(
+                    !self.cand_scratch.is_empty(),
+                    "no worker accepts arrivals (topology without prefill/unified workers)"
+                );
+                let c = self.router.route(&req, &self.cand_scratch);
+                assert!(
+                    self.cand_scratch.iter().any(|x| x.worker == c),
+                    "router `{}` dispatched to ineligible worker {c}",
+                    self.router.name()
+                );
+                c
+            };
             self.workers[choice].core.inject(req);
+            self.sync_worker(choice);
         }
-    }
-
-    /// Decode-side router candidates, preferring online decode workers.
-    fn transfer_candidates(&self, now: f64) -> Vec<RouteCandidate> {
-        self.candidates_where(now, |w| w.role == WorkerRole::Decode)
     }
 
     /// Route every ready, unrouted transfer to a decode worker through
@@ -599,7 +846,71 @@ impl ClusterEngine {
     /// are no longer hard-wired to the least-loaded decode worker).
     /// In-flight assignments are folded into the candidates' load signals
     /// so a burst of simultaneous transfers spreads across workers.
+    /// Allocation-free: overlays and candidate copies live in reused
+    /// scratch buffers, and the common no-routable-transfer tick returns
+    /// before touching any of them.
     fn route_transfers(&mut self, now: f64) {
+        if self.naive_scan {
+            return self.route_transfers_naive(now);
+        }
+        if !self
+            .transfers
+            .iter()
+            .any(|t| t.assigned.is_none() && t.ready_at <= now)
+        {
+            return;
+        }
+        let n = self.workers.len();
+        self.extra_queue.clear();
+        self.extra_queue.resize(n, 0);
+        self.extra_tokens.clear();
+        self.extra_tokens.resize(n, 0);
+        self.extra_kv.clear();
+        self.extra_kv.resize(n, 0);
+        for t in &self.transfers {
+            if let Some(w) = t.assigned {
+                self.extra_queue[w] += 1;
+                self.extra_tokens[w] += t.request.output_len - t.request.generated;
+                self.extra_kv[w] += t.request.context_len();
+            }
+        }
+        // Worker state cannot change inside this loop; fill the base
+        // candidates once and re-apply only the in-flight-assignment
+        // overlay per decision.
+        self.fill_candidates(now, |w| w.role == WorkerRole::Decode);
+        if self.cand_scratch.is_empty() {
+            return; // topology without decode workers
+        }
+        let mut i = 0;
+        while i < self.transfers.len() {
+            if self.transfers[i].assigned.is_none() && self.transfers[i].ready_at <= now {
+                self.cand_overlay.clear();
+                self.cand_overlay.extend_from_slice(&self.cand_scratch);
+                for c in &mut self.cand_overlay {
+                    c.queue_len += self.extra_queue[c.worker];
+                    c.outstanding_tokens += self.extra_tokens[c.worker];
+                    c.kv_free_tokens = c.kv_free_tokens.saturating_sub(self.extra_kv[c.worker]);
+                }
+                let choice = self.router.route(&self.transfers[i].request, &self.cand_overlay);
+                assert!(
+                    self.cand_overlay.iter().any(|c| c.worker == choice),
+                    "router `{}` routed a transfer to ineligible worker {choice}",
+                    self.router.name()
+                );
+                self.transfers[i].assigned = Some(choice);
+                self.extra_queue[choice] += 1;
+                self.extra_tokens[choice] +=
+                    self.transfers[i].request.output_len - self.transfers[i].request.generated;
+                self.extra_kv[choice] += self.transfers[i].request.context_len();
+            }
+            i += 1;
+        }
+    }
+
+    /// The naive transfer-routing reference: the pre-event-queue body,
+    /// with its three per-call overlay allocations and per-decision
+    /// snapshot rebuild.
+    fn route_transfers_naive(&mut self, now: f64) {
         let n = self.workers.len();
         let mut extra_queue = vec![0usize; n];
         let mut extra_tokens = vec![0u64; n];
@@ -611,14 +922,13 @@ impl ClusterEngine {
                 extra_kv[w] += t.request.context_len();
             }
         }
-        // Worker state cannot change inside this loop; snapshot the base
-        // candidates once (lazily — most ticks have no routable transfer)
-        // and re-apply only the in-flight-assignment overlay per decision.
         let mut base: Option<Vec<RouteCandidate>> = None;
         let mut i = 0;
         while i < self.transfers.len() {
             if self.transfers[i].assigned.is_none() && self.transfers[i].ready_at <= now {
-                let base = base.get_or_insert_with(|| self.transfer_candidates(now));
+                let base = base.get_or_insert_with(|| {
+                    self.candidates_where_naive(now, |w| w.role == WorkerRole::Decode)
+                });
                 if base.is_empty() {
                     return; // topology without decode workers
                 }
@@ -679,30 +989,23 @@ impl ClusterEngine {
         let allow_drop = self.pending.is_empty() && hint.is_none();
         match self.workers[idx].core.step_once(allow_drop) {
             CoreStep::Executed => {
-                let t_end = self.workers[idx].core.clock;
-                let mut outgoing = Vec::new();
-                {
-                    let core = &mut self.workers[idx].core;
-                    let mut i = 0;
-                    while i < core.running.len() {
-                        if core.running[i].phase == Phase::Decode {
-                            let r = core.running.remove(i);
-                            // The prefill worker holds no paged KV for a
-                            // request once its cache leaves for decode.
-                            let _ = core.kv.release(r.id);
-                            core.backend.release(r.id);
-                            let ready_at = t_end + core.backend.kv_transfer_time(r.context_len());
-                            outgoing.push(Transfer {
-                                request: r,
-                                ready_at,
-                                assigned: None,
-                            });
-                        } else {
-                            i += 1;
-                        }
-                    }
+                // The prefill worker holds no paged KV for a request once
+                // its cache leaves for decode; the extraction reuses one
+                // cluster-level scratch vec instead of allocating per
+                // event.
+                let mut out = std::mem::take(&mut self.extract_scratch);
+                out.clear();
+                let core = &mut self.workers[idx].core;
+                let t_end = core.clock;
+                core.extract_decode_ready(&mut out);
+                for (r, dt) in out.drain(..) {
+                    self.transfers.push(Transfer {
+                        request: r,
+                        ready_at: t_end + dt,
+                        assigned: None,
+                    });
                 }
-                self.transfers.append(&mut outgoing);
+                self.extract_scratch = out;
                 None
             }
             CoreStep::DroppedHead(id) => Some(id),
@@ -727,23 +1030,19 @@ impl ClusterEngine {
         while i < self.transfers.len() {
             if self.transfers[i].assigned == Some(idx) && self.transfers[i].ready_at <= now {
                 let t = self.transfers.swap_remove(i);
-                let mut r = t.request;
-                let id = r.id;
-                let core = &mut self.workers[idx].core;
-                core.kv.register(id);
-                if core.kv.append(id, r.context_len()).is_err() {
-                    // Decode KV full: bounce the transfer back for
-                    // re-routing (possibly to another worker) later.
-                    let _ = core.kv.release(id);
-                    self.transfers.push(Transfer {
-                        request: r,
-                        ready_at: now + 0.05,
-                        assigned: None,
-                    });
-                    break;
+                match self.workers[idx].core.admit_transferred(t.request) {
+                    Ok(()) => {}
+                    Err(r) => {
+                        // Decode KV full: bounce the transfer back for
+                        // re-routing (possibly to another worker) later.
+                        self.transfers.push(Transfer {
+                            request: r,
+                            ready_at: now + 0.05,
+                            assigned: None,
+                        });
+                        break;
+                    }
                 }
-                r.phase = Phase::Decode;
-                core.running.push(r);
             } else {
                 i += 1;
             }
@@ -760,32 +1059,7 @@ impl ClusterEngine {
             return;
         }
 
-        let core = &mut self.workers[idx].core;
-        let sms = core.cfg.gpu.num_sms;
-        let batch = IterationBatch::decode_only(
-            core.running
-                .iter()
-                .map(|r| DecodeSlot {
-                    id: r.id,
-                    context_len: r.context_len(),
-                })
-                .collect(),
-        );
-        let res = core.backend.run_aggregated(&batch, sms, DispatchMode::Graph);
-        let dur = res.total();
-        let t_end = now + dur;
-        core.clock = t_end;
-        core.last_active = t_end;
-        core.metrics.busy_time += res.gpu_time;
-        core.metrics
-            .record_util(res.gpu_time, res.sm_util, res.hbm_util);
-        core.metrics.iterations += 1;
-
-        for r in core.running.iter_mut() {
-            let _ = core.kv.append(r.id, 1);
-            r.advance_decode(t_end);
-        }
-        core.retire_finished();
+        self.workers[idx].core.decode_step_transferred();
     }
 
     /// Dynamo-planner emulation: flip one worker's role when the phases
@@ -816,11 +1090,11 @@ impl ClusterEngine {
                 .min_by_key(|(_, w)| w.core.running_len())
                 .map(|(i, _)| i);
             if let Some(v) = victim {
-                let drained: Vec<Request> = self.workers[v].core.running.drain(..).collect();
-                for r in &drained {
-                    let _ = self.workers[v].core.kv.release(r.id);
-                    self.workers[v].core.backend.release(r.id);
-                }
+                // Decode workers queue nothing (transfers go straight to
+                // running), so displacing everything drains exactly the
+                // running set the old role held.
+                let mut drained: Vec<Request> = Vec::new();
+                self.workers[v].core.displace_all(&mut drained);
                 // Transfers already routed to this worker must be
                 // re-routed: it no longer decodes.
                 for t in &mut self.transfers {
@@ -837,6 +1111,7 @@ impl ClusterEngine {
                     let tgt = self.lightest_prefill_worker(now);
                     self.workers[tgt].core.inject_front(fresh);
                 }
+                self.sync_all();
             }
         // Decode overloaded, prefill side keeping up: P -> D.
         } else if queue_pressure < 4 * p_count && decode_load > 8 * d_count.max(1) && p_count > 1 {
@@ -847,13 +1122,8 @@ impl ClusterEngine {
             if let Some(v) = victim {
                 // Displace both the queued prompts and the in-flight
                 // (partially prefilled) ones — prefill progress is lost.
-                let mut moved: Vec<Request> =
-                    self.workers[v].core.waiting.drain(..).collect();
-                moved.extend(self.workers[v].core.running.drain(..));
-                for r in &moved {
-                    let _ = self.workers[v].core.kv.release(r.id);
-                    self.workers[v].core.backend.release(r.id);
-                }
+                let mut moved: Vec<Request> = Vec::new();
+                self.workers[v].core.displace_all(&mut moved);
                 self.workers[v].role = WorkerRole::Decode;
                 self.workers[v].offline_until = now + self.reconfig_s;
                 self.reconfigs += 1;
@@ -863,6 +1133,7 @@ impl ClusterEngine {
                     let tgt = self.lightest_prefill_worker(now);
                     self.workers[tgt].core.inject(r.reset_for_retry());
                 }
+                self.sync_all();
             }
         }
     }
@@ -949,12 +1220,15 @@ impl ServingTopology for ClusterEngine {
     }
 
     fn queued(&self) -> usize {
-        self.pending.len()
-            + self
-                .workers
-                .iter()
-                .map(|w| w.core.queue_len())
-                .sum::<usize>()
+        if self.naive_scan {
+            return self.pending.len()
+                + self
+                    .workers
+                    .iter()
+                    .map(|w| w.core.queue_len())
+                    .sum::<usize>();
+        }
+        self.pending.len() + self.total_queue
     }
 
     fn cancel(&mut self, id: RequestId) -> bool {
@@ -970,7 +1244,13 @@ impl ServingTopology for ClusterEngine {
             self.transfers.remove(pos);
             return true;
         }
-        self.workers.iter_mut().any(|w| w.core.cancel_local(id))
+        for i in 0..self.workers.len() {
+            if self.workers[i].core.cancel_local(id) {
+                self.sync_worker(i);
+                return true;
+            }
+        }
+        false
     }
 
     fn max_context(&self) -> Option<u64> {
@@ -992,7 +1272,7 @@ impl ServingTopology for ClusterEngine {
         self.dropped += n;
     }
 
-    fn pump(&mut self, f: &mut dyn FnMut(&Request, &mut dyn ExecutionBackend, bool)) {
+    fn pump(&mut self, f: &mut dyn FnMut(&[Request], &mut dyn ExecutionBackend, bool)) {
         let stepped = self.stepped_worker;
         let (workers, transfers) = (&mut self.workers, &self.transfers);
         // Tokens only appear on the worker an event just advanced; pump
@@ -1022,7 +1302,11 @@ impl ServingTopology for ClusterEngine {
                 );
             }
             for t in transfers.iter() {
-                f(&t.request, &mut *w0.core.backend, false);
+                f(
+                    std::slice::from_ref(&t.request),
+                    &mut *w0.core.backend,
+                    false,
+                );
             }
         }
     }

@@ -10,7 +10,7 @@
 //! execute: that is the [`ExecutionBackend`] seam (simulated roofline
 //! executor or the real PJRT runtime).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
 use crate::config::ServingConfig;
@@ -56,55 +56,108 @@ pub enum CoreStep {
     DroppedHead(RequestId),
 }
 
+/// Running-set size above which per-iteration id lookups go through a
+/// position map instead of linear scans. Below it the map build costs
+/// more than the scans it saves (the N=1 whole-iteration bench row).
+const POS_MAP_MIN: usize = 16;
+
+/// Remaining work of one request (unprefilled prompt + ungenerated
+/// output) — the unit of the incremental `outstanding` load signal.
+fn work_of(r: &Request) -> u64 {
+    r.remaining_prompt() + (r.output_len - r.generated)
+}
+
+/// Reusable per-iteration buffers. They are *taken* into the
+/// [`IterationBatch`] when it is built and recovered by destructuring the
+/// batch after the backend call, so steady-state iterations allocate
+/// nothing on the decode path (the prefill slice vec stays per-iteration:
+/// it borrows `running` and is at most a few chunks long).
+#[derive(Default)]
+struct StepScratch {
+    dec_slots: Vec<DecodeSlot>,
+    dec_shapes: Vec<AttnShape>,
+    pre_shapes: Vec<AttnShape>,
+    /// id → index into `running`, rebuilt per iteration for large running
+    /// sets. Positions go stale the moment a preemption removes a running
+    /// entry — callers gate lookups on a `preemptions` snapshot.
+    pos: HashMap<RequestId, usize>,
+}
+
+/// O(1) lookup of a running request through the per-iteration position
+/// map while `fresh` (no preemption has shifted positions since the map
+/// was built); linear scan otherwise. A free function so callers can hold
+/// disjoint borrows of other `EngineCore` fields.
+fn find_running<'a>(
+    running: &'a mut [Request],
+    pos: &HashMap<RequestId, usize>,
+    fresh: bool,
+    id: RequestId,
+) -> Option<&'a mut Request> {
+    if fresh {
+        let &i = pos.get(&id)?;
+        let r = &mut running[i];
+        debug_assert_eq!(r.id, id, "stale running position map");
+        return Some(r);
+    }
+    running.iter_mut().find(|r| r.id == id)
+}
+
 /// Build the backend batch descriptor for a planned iteration from the
-/// running set. A free function (not a method) so the caller can hold the
-/// borrow of `running` while mutably using other `EngineCore` fields.
+/// running set, into caller-provided scratch storage. A free function
+/// (not a method) so the caller can hold the borrow of `running` while
+/// mutably using other `EngineCore` fields. `pos` is an optional id →
+/// index map over `running` (O(1) lookups for large batches).
 fn iteration_batch<'a>(
     running: &'a [Request],
     decode: &[RequestId],
     prefill: &[PrefillChunk],
+    pos: Option<&HashMap<RequestId, usize>>,
+    mut dec_slots: Vec<DecodeSlot>,
+    mut dec_shapes: Vec<AttnShape>,
+    mut pre_shapes: Vec<AttnShape>,
 ) -> IterationBatch<'a> {
-    let find = |id: RequestId| running.iter().find(|r| r.id == id);
-    let dec: Vec<DecodeSlot> = decode
-        .iter()
-        .filter_map(|&id| find(id))
-        .map(|r| DecodeSlot {
-            id: r.id,
-            context_len: r.context_len(),
-        })
-        .collect();
-    let pre: Vec<PrefillSlice<'a>> = prefill
-        .iter()
-        .filter_map(|c| find(c.id).map(|r| (r, c.tokens)))
-        .map(|(r, q)| PrefillSlice {
-            id: r.id,
-            chunk_tokens: q,
-            context_len: r.context_len(),
-            completes_prompt: q == r.remaining_prompt(),
-            prompt: r.prompt_tokens.as_deref(),
-        })
-        .collect();
-    let dec_shape = BatchShape::from_shapes(
-        dec.iter()
-            .map(|d| AttnShape {
+    dec_slots.clear();
+    dec_shapes.clear();
+    pre_shapes.clear();
+    let find = |id: RequestId| -> Option<&'a Request> {
+        match pos {
+            Some(m) => m.get(&id).map(|&i| &running[i]),
+            None => running.iter().find(|r| r.id == id),
+        }
+    };
+    for &id in decode {
+        if let Some(r) = find(id) {
+            dec_slots.push(DecodeSlot {
+                id: r.id,
+                context_len: r.context_len(),
+            });
+            dec_shapes.push(AttnShape {
                 q: 1,
-                c: d.context_len,
-            })
-            .collect(),
-    );
-    let pre_shape = BatchShape::from_shapes(
-        pre.iter()
-            .map(|p| AttnShape {
-                q: p.chunk_tokens,
-                c: p.context_len,
-            })
-            .collect(),
-    );
+                c: r.context_len(),
+            });
+        }
+    }
+    let mut pre: Vec<PrefillSlice<'a>> = Vec::with_capacity(prefill.len());
+    for c in prefill {
+        if let Some(r) = find(c.id) {
+            pre.push(PrefillSlice {
+                id: r.id,
+                chunk_tokens: c.tokens,
+                context_len: r.context_len(),
+                completes_prompt: c.tokens == r.remaining_prompt(),
+                prompt: r.prompt_tokens.as_deref(),
+            });
+            pre_shapes.push(AttnShape {
+                q: c.tokens,
+                c: r.context_len(),
+            });
+        }
+    }
     IterationBatch {
-        decode: dec,
+        decode: dec_slots,
         prefill: pre,
-        dec_shape,
-        pre_shape,
+        dec_shape: BatchShape::from_shapes(dec_shapes),
+        pre_shape: BatchShape::from_shapes(pre_shapes),
     }
 }
 
@@ -157,6 +210,12 @@ pub struct EngineCore {
     /// Detailed per-iteration log (Fig. 10); disabled by default.
     pub log_events: bool,
     pub events: Vec<IterEvent>,
+    /// Incrementally maintained outstanding work (remaining prompt +
+    /// output tokens across waiting and running) — the O(1) router load
+    /// signal; equals [`EngineCore::recompute_outstanding`] at every
+    /// step boundary (invariant-checked).
+    outstanding: u64,
+    scratch: StepScratch,
 }
 
 impl EngineCore {
@@ -194,6 +253,8 @@ impl EngineCore {
             spatial_degrade_warned: false,
             log_events: false,
             events: Vec::new(),
+            outstanding: 0,
+            scratch: StepScratch::default(),
         }
     }
 
@@ -215,6 +276,7 @@ impl EngineCore {
     pub fn inject(&mut self, mut r: Request) {
         r.phase = Phase::Waiting;
         self.kv.register(r.id);
+        self.outstanding += work_of(&r);
         self.waiting.push_back(r);
     }
 
@@ -223,6 +285,7 @@ impl EngineCore {
     pub fn inject_front(&mut self, mut r: Request) {
         r.phase = Phase::Waiting;
         self.kv.register(r.id);
+        self.outstanding += work_of(&r);
         self.waiting.push_front(r);
     }
 
@@ -271,12 +334,19 @@ impl EngineCore {
 
     /// Tokens this worker still has to process (remaining prompt +
     /// remaining output across waiting and running) — the load signal for
-    /// least-outstanding-token routing.
+    /// least-outstanding-token routing. O(1): maintained incrementally on
+    /// every queue mutation and token advance.
     pub fn outstanding_tokens(&self) -> u64 {
+        self.outstanding
+    }
+
+    /// The O(queues) reference for the incremental `outstanding` counter
+    /// (invariant checks and the naive-scan cluster reference).
+    pub fn recompute_outstanding(&self) -> u64 {
         self.waiting
             .iter()
             .chain(self.running.iter())
-            .map(|r| r.remaining_prompt() + (r.output_len - r.generated))
+            .map(work_of)
             .sum()
     }
 
@@ -296,14 +366,16 @@ impl EngineCore {
         self.kv.total_blocks() * self.kv.block_tokens() as u64
     }
 
-    /// Visit this worker's requests that may carry new tokens — every
-    /// running request, then each finished request exactly once (tracked
-    /// by `pumped_finished`) with the flag set — paired with the backend
-    /// holding their token values. Streaming front-ends drive this
-    /// through [`super::ServingTopology::pump`].
+    /// Visit this worker's requests that may carry new tokens — the
+    /// running set as one slice, then the not-yet-pumped tail of
+    /// `finished` as one slice with the flag set (each finished request
+    /// is visited exactly once, tracked by `pumped_finished`) — paired
+    /// with the backend holding their token values. Batched slices, not
+    /// per-request closure calls: the serving path drains tokens in
+    /// chunks ([`super::ServingTopology::pump`]).
     pub(crate) fn pump_local(
         &mut self,
-        f: &mut dyn FnMut(&Request, &mut dyn ExecutionBackend, bool),
+        f: &mut dyn FnMut(&[Request], &mut dyn ExecutionBackend, bool),
     ) {
         let EngineCore {
             running,
@@ -313,16 +385,15 @@ impl EngineCore {
             trim_finished,
             ..
         } = self;
-        for r in running.iter() {
-            f(r, &mut **backend, false);
+        if !running.is_empty() {
+            f(running, &mut **backend, false);
         }
-        while *pumped_finished < finished.len() {
-            let r = &finished[*pumped_finished];
-            *pumped_finished += 1;
-            f(r, &mut **backend, true);
+        if *pumped_finished < finished.len() {
+            f(&finished[*pumped_finished..], &mut **backend, true);
+            *pumped_finished = finished.len();
         }
         // Long-lived serving: everything up to the watermark (== len
-        // after the loop above) has been delivered to its stream; retire
+        // after the visit above) has been delivered to its stream; retire
         // the payloads so resident state stays O(in-flight).
         if *trim_finished && !finished.is_empty() {
             finished.clear();
@@ -338,11 +409,13 @@ impl EngineCore {
         if let Some(pos) = self.waiting.iter().position(|r| r.id == id) {
             let r = self.waiting.remove(pos).unwrap();
             let _ = self.kv.release(r.id);
+            self.outstanding -= work_of(&r);
             return true;
         }
         if let Some(pos) = self.running.iter().position(|r| r.id == id) {
             let r = self.running.remove(pos);
             let _ = self.kv.release(r.id);
+            self.outstanding -= work_of(&r);
             return true;
         }
         false
@@ -358,12 +431,19 @@ impl EngineCore {
             self.backend.release(r.id);
             n += 1;
         }
-        for r in self.running.drain(..) {
-            let _ = self.kv.release(r.id);
-            self.backend.release(r.id);
+        let EngineCore {
+            running,
+            kv,
+            backend,
+            ..
+        } = self;
+        for r in running.drain(..) {
+            let _ = kv.release(r.id);
+            backend.release(r.id);
             n += 1;
         }
         self.dropped += n;
+        self.outstanding = 0;
         n
     }
 
@@ -394,6 +474,7 @@ impl EngineCore {
                     let _ = self.kv.release(r.id);
                     self.backend.release(r.id);
                     self.dropped += 1;
+                    self.outstanding -= work_of(&r);
                     CoreStep::DroppedHead(r.id)
                 } else {
                     CoreStep::Idle
@@ -458,9 +539,11 @@ impl EngineCore {
                             let _ = self.kv.release(v.id);
                             self.backend.release(v.id);
                             self.preemptions += 1;
+                            self.outstanding -= work_of(&v);
                             // Recompute preemption: progress is lost.
                             let fresh = v.reset_for_retry();
                             self.kv.register(fresh.id);
+                            self.outstanding += work_of(&fresh);
                             self.waiting.push_front(fresh);
                         }
                         None => return false, // single request larger than KV
@@ -470,9 +553,32 @@ impl EngineCore {
         }
     }
 
+    /// Rebuild the id → running-index map when the running set is large
+    /// enough to amortize it. Returns whether the map is in use this
+    /// iteration.
+    fn build_pos_map(&mut self) -> bool {
+        if self.running.len() < POS_MAP_MIN {
+            return false;
+        }
+        self.scratch.pos.clear();
+        for (i, r) in self.running.iter().enumerate() {
+            self.scratch.pos.insert(r.id, i);
+        }
+        true
+    }
+
     fn exec_aggregated(&mut self, decode: Vec<RequestId>, prefill: Vec<PrefillChunk>, sched_s: f64) {
         self.admit_scheduled(&prefill);
-        let batch = iteration_batch(&self.running, &decode, &prefill);
+        let use_pos = self.build_pos_map();
+        let batch = iteration_batch(
+            &self.running,
+            &decode,
+            &prefill,
+            use_pos.then_some(&self.scratch.pos),
+            std::mem::take(&mut self.scratch.dec_slots),
+            std::mem::take(&mut self.scratch.dec_shapes),
+            std::mem::take(&mut self.scratch.pre_shapes),
+        );
         // Decode-only batches replay captured graphs; any prefill in the
         // batch forces eager dispatch (dynamic shapes — §4.3).
         let mode = if batch.pre_shape.is_empty() {
@@ -484,35 +590,52 @@ impl EngineCore {
         let res = self
             .backend
             .run_aggregated(&batch, self.cfg.gpu.num_sms, mode);
-        drop(batch);
+        let IterationBatch {
+            decode: dec_slots,
+            prefill: pre_slices,
+            dec_shape,
+            pre_shape,
+        } = batch;
+        drop(pre_slices); // ends the borrow of `running`
+        self.scratch.dec_slots = dec_slots;
+        self.scratch.dec_shapes = dec_shape.shapes;
+        self.scratch.pre_shapes = pre_shape.shapes;
         // The virtual clock stays deterministic: measured CPU scheduling
         // time is *reported* (metrics/events) but not added to simulated
         // time — it is µs against ~100 ms iterations (Fig. 10).
         let dur = res.total();
         let t_end = self.clock + dur;
+        let preempt_snap = self.preemptions;
 
         // KV appends + request state updates.
         for &id in &decode {
             if self.kv_append_or_preempt(id, 1) {
-                if let Some(r) = self.running.iter_mut().find(|r| r.id == id) {
+                let fresh = use_pos && self.preemptions == preempt_snap;
+                if let Some(r) = find_running(&mut self.running, &self.scratch.pos, fresh, id) {
                     if r.phase == Phase::Decode {
                         r.advance_decode(t_end);
+                        self.outstanding -= 1;
                     }
                 }
             }
         }
         for c in &prefill {
             if self.kv_append_or_preempt(c.id, c.tokens) {
-                if let Some(pos) = self.running.iter().position(|r| r.id == c.id) {
-                    let r = &mut self.running[pos];
+                let fresh = use_pos && self.preemptions == preempt_snap;
+                if let Some(r) = find_running(&mut self.running, &self.scratch.pos, fresh, c.id) {
                     r.advance_prefill(c.tokens);
+                    self.outstanding -= c.tokens;
                     if r.phase == Phase::Decode {
                         // Prompt completed: this forward's logits produce
                         // the first output token.
                         let id = r.id;
                         if self.kv_append_or_preempt(id, 1) {
-                            if let Some(r) = self.running.iter_mut().find(|r| r.id == id) {
+                            let fresh = use_pos && self.preemptions == preempt_snap;
+                            if let Some(r) =
+                                find_running(&mut self.running, &self.scratch.pos, fresh, id)
+                            {
                                 r.advance_decode(t_end);
+                                self.outstanding -= 1;
                             }
                         }
                     }
@@ -549,13 +672,32 @@ impl EngineCore {
         sched_s: f64,
     ) {
         self.admit_scheduled(&prefill);
-        let batch = iteration_batch(&self.running, &decode, &prefill);
+        let use_pos = self.build_pos_map();
+        let batch = iteration_batch(
+            &self.running,
+            &decode,
+            &prefill,
+            use_pos.then_some(&self.scratch.pos),
+            std::mem::take(&mut self.scratch.dec_slots),
+            std::mem::take(&mut self.scratch.dec_shapes),
+            std::mem::take(&mut self.scratch.pre_shapes),
+        );
         let pre_tokens = batch.pre_shape.n_tokens;
         let res = self.backend.run_spatial(&batch, &plan);
-        drop(batch);
+        let IterationBatch {
+            decode: dec_slots,
+            prefill: pre_slices,
+            dec_shape,
+            pre_shape,
+        } = batch;
+        drop(pre_slices); // ends the borrow of `running`
+        self.scratch.dec_slots = dec_slots;
+        self.scratch.dec_shapes = dec_shape.shapes;
+        self.scratch.pre_shapes = pre_shape.shapes;
         let dur = res.span;
         let t_end = self.clock + dur;
         let k = plan.k.max(1);
+        let preempt_snap = self.preemptions;
 
         // Look-ahead decode: reserve k slots per request up front (§4.3),
         // then run k uninterrupted steps; step i completes at
@@ -567,18 +709,18 @@ impl EngineCore {
         for i in 0..k {
             let t_tok = t0 + res.dec.dispatch_time + (i + 1) as f64 * res.t_decode_step;
             for &id in &decode {
-                let done = self
-                    .running
-                    .iter()
-                    .find(|r| r.id == id)
+                let fresh = use_pos && self.preemptions == preempt_snap;
+                let done = find_running(&mut self.running, &self.scratch.pos, fresh, id)
                     .map(|r| r.phase != Phase::Decode)
                     .unwrap_or(true);
                 if done {
                     continue; // finished mid-look-ahead: slot wasted
                 }
                 if self.kv_append_or_preempt(id, 1) {
-                    if let Some(r) = self.running.iter_mut().find(|r| r.id == id) {
+                    let fresh = use_pos && self.preemptions == preempt_snap;
+                    if let Some(r) = find_running(&mut self.running, &self.scratch.pos, fresh, id) {
                         r.advance_decode(t_tok.min(t_end));
+                        self.outstanding -= 1;
                     }
                 }
             }
@@ -587,14 +729,19 @@ impl EngineCore {
         // Prefill side advances at the synchronization point.
         for c in &prefill {
             if self.kv_append_or_preempt(c.id, c.tokens) {
-                if let Some(pos) = self.running.iter().position(|r| r.id == c.id) {
-                    let r = &mut self.running[pos];
+                let fresh = use_pos && self.preemptions == preempt_snap;
+                if let Some(r) = find_running(&mut self.running, &self.scratch.pos, fresh, c.id) {
                     r.advance_prefill(c.tokens);
+                    self.outstanding -= c.tokens;
                     if r.phase == Phase::Decode {
                         let id = r.id;
                         if self.kv_append_or_preempt(id, 1) {
-                            if let Some(r) = self.running.iter_mut().find(|r| r.id == id) {
+                            let fresh = use_pos && self.preemptions == preempt_snap;
+                            if let Some(r) =
+                                find_running(&mut self.running, &self.scratch.pos, fresh, id)
+                            {
                                 r.advance_decode(t_end);
+                                self.outstanding -= 1;
                             }
                         }
                     }
@@ -650,9 +797,125 @@ impl EngineCore {
         }
     }
 
+    /// Pull every finished-prefill (now Decode-phase) request out of this
+    /// worker, releasing its local KV — the disaggregated prefill→decode
+    /// hand-off. Appends `(request, transfer_time)` pairs to `out` in
+    /// queue order; the caller owns `out` so the per-event Vec the old
+    /// extraction loop allocated disappears.
+    pub(crate) fn extract_decode_ready(&mut self, out: &mut Vec<(Request, f64)>) {
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].phase == Phase::Decode {
+                let r = self.running.remove(i); // keep arrival order
+                let _ = self.kv.release(r.id);
+                self.backend.release(r.id);
+                self.outstanding -= work_of(&r);
+                let dt = self.backend.kv_transfer_time(r.context_len());
+                out.push((r, dt));
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Admit a transferred (already-prefilled) request into this worker's
+    /// running set, materializing its KV context. Err(request) hands the
+    /// request back untouched when KV space is insufficient.
+    pub(crate) fn admit_transferred(&mut self, mut r: Request) -> Result<(), Request> {
+        self.kv.register(r.id);
+        if self.kv.append(r.id, r.context_len()).is_err() {
+            let _ = self.kv.release(r.id);
+            return Err(r);
+        }
+        r.phase = Phase::Decode;
+        self.outstanding += work_of(&r);
+        self.running.push(r);
+        Ok(())
+    }
+
+    /// One decode-only iteration over everything running — the
+    /// decode-worker step in a disaggregated cluster. Uses the same
+    /// scratch buffers as [`exec_aggregated`](Self::exec_aggregated); the
+    /// batch replays a captured graph (decode-only shapes are static).
+    pub(crate) fn decode_step_transferred(&mut self) {
+        let mut dec_slots = std::mem::take(&mut self.scratch.dec_slots);
+        let mut dec_shapes = std::mem::take(&mut self.scratch.dec_shapes);
+        dec_slots.clear();
+        dec_shapes.clear();
+        for r in &self.running {
+            dec_slots.push(DecodeSlot {
+                id: r.id,
+                context_len: r.context_len(),
+            });
+            dec_shapes.push(AttnShape {
+                q: 1,
+                c: r.context_len(),
+            });
+        }
+        let batch = IterationBatch {
+            decode: dec_slots,
+            prefill: Vec::new(),
+            dec_shape: BatchShape::from_shapes(dec_shapes),
+            pre_shape: BatchShape::default(),
+        };
+        let res = self
+            .backend
+            .run_aggregated(&batch, self.cfg.gpu.num_sms, DispatchMode::Graph);
+        let IterationBatch {
+            decode: dec_slots,
+            dec_shape,
+            ..
+        } = batch;
+        self.scratch.dec_slots = dec_slots;
+        self.scratch.dec_shapes = dec_shape.shapes;
+        let t_end = self.clock + res.total();
+        self.metrics.busy_time += res.gpu_time;
+        self.metrics
+            .record_util(res.gpu_time, res.sm_util, res.hbm_util);
+        self.metrics.iterations += 1;
+        let EngineCore {
+            running,
+            kv,
+            outstanding,
+            ..
+        } = self;
+        for r in running.iter_mut() {
+            let _ = kv.append(r.id, 1);
+            r.advance_decode(t_end);
+            *outstanding -= 1;
+        }
+        self.clock = t_end;
+        self.last_active = t_end;
+        self.retire_finished();
+    }
+
+    /// Displace all local work (waiting first, then running, preserving
+    /// order) into `out`, releasing KV and backend state — the
+    /// reconfiguration planner's role-flip drain.
+    pub(crate) fn displace_all(&mut self, out: &mut Vec<Request>) {
+        while let Some(r) = self.waiting.pop_front() {
+            let _ = self.kv.release(r.id);
+            self.backend.release(r.id);
+            out.push(r);
+        }
+        for r in self.running.drain(..) {
+            let _ = self.kv.release(r.id);
+            self.backend.release(r.id);
+            out.push(r);
+        }
+        self.outstanding = 0;
+    }
+
     /// Engine-level invariants, used by property tests.
     pub fn check_invariants(&self) -> Result<(), String> {
         self.kv.check_invariants()?;
+        let expect = self.recompute_outstanding();
+        if self.outstanding != expect {
+            return Err(format!(
+                "incremental outstanding {} != recomputed {expect}",
+                self.outstanding
+            ));
+        }
         for r in &self.running {
             if r.phase == Phase::Finished {
                 return Err(format!("finished request {} still running", r.id));

@@ -18,7 +18,15 @@
 //!      incrementally fed discrete-event loop (smallest local clock acts
 //!      next; `inject`/`step_next`/`drain`) with a shared arrival stream
 //!      and a prefill→decode KV-transfer queue — the batch
-//!      `run(workload)` is a thin replay over the same loop;
+//!      `run(workload)` is a thin replay over the same loop. The loop is
+//!      driven by an **event queue** ([`clockheap::MinClockHeap`]): an
+//!      indexed binary min-heap over per-worker clocks, updated on every
+//!      clock mutation (step, park, offline jump, epoch re-base), so the
+//!      next-event pick is O(1) and each event O(log N) instead of an
+//!      O(N) fleet scan. Worker load signals (queue depth, outstanding
+//!      tokens, free KV) are maintained incrementally on a per-worker
+//!      candidate board, refreshed only for the worker an event touched,
+//!      so routing decisions stop rebuilding O(N) snapshots per arrival;
 //!    - [`ReplicatedEngine`]: cluster of unified replicas (Fig. 2 "Agg");
 //!    - [`DisaggEngine`]: cluster of role-tagged prefill/decode workers
 //!      with NVLink transfers and the optional Dynamo-style
@@ -42,6 +50,7 @@
 //!    [`router::Router`] seam at submit time.
 
 pub mod backend;
+pub mod clockheap;
 pub mod cluster;
 pub mod core;
 pub mod disagg;
@@ -52,6 +61,7 @@ pub mod topology;
 
 pub use self::core::{CoreStep, EngineCore, MAX_SIM_TIME, REBASE_FRACTION};
 pub use backend::{DecodeSlot, ExecutionBackend, IterationBatch, PrefillSlice, SimBackend};
+pub use clockheap::MinClockHeap;
 pub use cluster::{ClusterEngine, Worker, WorkerRole};
 pub use disagg::DisaggEngine;
 pub use events::{IterEvent, IterKind};

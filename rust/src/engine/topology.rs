@@ -146,9 +146,11 @@ pub trait ServingTopology {
 
     /// Visit every request that may have produced tokens since the last
     /// call — running, in transfer, and newly finished — with the
-    /// backend that holds its token values. Newly finished requests are
-    /// visited exactly once, with the flag set.
-    fn pump(&mut self, f: &mut dyn FnMut(&Request, &mut dyn ExecutionBackend, bool));
+    /// backend that holds its token values. Requests arrive in batched
+    /// slices (one per worker queue), not per-request closure calls; a
+    /// slice with the flag set holds newly finished requests, each
+    /// visited exactly once across calls.
+    fn pump(&mut self, f: &mut dyn FnMut(&[Request], &mut dyn ExecutionBackend, bool));
 
     /// Fold per-worker state into the final merged [`Report`].
     fn fold_report(&mut self) -> Report;
@@ -274,7 +276,7 @@ impl ServingTopology for EngineCore {
         self.dropped += n;
     }
 
-    fn pump(&mut self, f: &mut dyn FnMut(&Request, &mut dyn ExecutionBackend, bool)) {
+    fn pump(&mut self, f: &mut dyn FnMut(&[Request], &mut dyn ExecutionBackend, bool)) {
         self.pump_local(f);
     }
 

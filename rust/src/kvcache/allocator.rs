@@ -33,11 +33,22 @@ impl BlockAllocator {
     /// Allocate exactly `n` blocks, or Err(free_count) without side
     /// effects.
     pub fn allocate(&mut self, n: u64) -> Result<Vec<BlockId>, u64> {
+        let mut out = Vec::new();
+        self.allocate_into(n, &mut out)?;
+        Ok(out)
+    }
+
+    /// Allocate exactly `n` blocks by appending them to `out` (the hot
+    /// path: block tables grow in place without an intermediate Vec per
+    /// append). Err(free_count) without side effects when blocks run out.
+    pub fn allocate_into(&mut self, n: u64, out: &mut Vec<BlockId>) -> Result<(), u64> {
         if n > self.free_list.len() as u64 {
             return Err(self.free_list.len() as u64);
         }
         let at = self.free_list.len() - n as usize;
-        Ok(self.free_list.split_off(at))
+        out.extend_from_slice(&self.free_list[at..]);
+        self.free_list.truncate(at);
+        Ok(())
     }
 
     /// Return blocks to the pool. Double-free is a bug upstream and
@@ -66,6 +77,21 @@ mod tests {
         assert_eq!(b1.len(), 4);
         assert_eq!(a.free(), 6);
         a.release(&b1);
+        assert_eq!(a.free(), 10);
+    }
+
+    #[test]
+    fn allocate_into_appends_without_intermediate_vec() {
+        let mut a = BlockAllocator::new(10);
+        let mut table = a.allocate(2).unwrap();
+        a.allocate_into(3, &mut table).unwrap();
+        assert_eq!(table.len(), 5);
+        assert_eq!(a.free(), 5);
+        // Failure leaves both the pool and the output untouched.
+        assert_eq!(a.allocate_into(6, &mut table), Err(5));
+        assert_eq!(table.len(), 5);
+        assert_eq!(a.free(), 5);
+        a.release(&table);
         assert_eq!(a.free(), 10);
     }
 

@@ -117,14 +117,12 @@ impl KvManager {
         let needed_tokens = (table.tokens + tokens).saturating_sub(capacity);
         let need_blocks = needed_tokens.div_ceil(bt);
         if need_blocks > 0 {
-            let got = self
-                .alloc
-                .allocate(need_blocks)
+            self.alloc
+                .allocate_into(need_blocks, &mut table.blocks)
                 .map_err(|free| KvError::OutOfBlocks {
                     need: need_blocks,
                     free,
                 })?;
-            table.blocks.extend(got);
         }
         table.tokens += tokens;
         table.reserved_tokens = table.reserved_tokens.saturating_sub(tokens);
@@ -145,14 +143,12 @@ impl KvManager {
         let needed_tokens = want.saturating_sub(capacity);
         let need_blocks = needed_tokens.div_ceil(bt);
         if need_blocks > 0 {
-            let got = self
-                .alloc
-                .allocate(need_blocks)
+            self.alloc
+                .allocate_into(need_blocks, &mut table.blocks)
                 .map_err(|free| KvError::OutOfBlocks {
                     need: need_blocks,
                     free,
                 })?;
-            table.blocks.extend(got);
         }
         table.reserved_tokens += tokens;
         Ok(())

@@ -463,7 +463,9 @@ impl ServerCore {
         // submission order (FCFS).
         let priority = opts.priority;
         let pos = self.pending.make_contiguous().partition_point(|e| {
-            match e.req.arrival.partial_cmp(&arrival).expect("arrival must not be NaN") {
+            // total_cmp: a NaN arrival (impossible, but defensively) sorts
+            // last instead of panicking the serving thread.
+            match e.req.arrival.total_cmp(&arrival) {
                 Ordering::Less => true,
                 Ordering::Greater => false,
                 Ordering::Equal => e.priority >= priority,
@@ -635,10 +637,12 @@ impl ServerCore {
         // shifts all workers by a common delta, and re-bases only happen
         // while fully idle, so no in-flight request straddles epochs.
         let off = self.topology.epoch_offset();
-        self.topology.pump(&mut |r, backend, finished| {
-            Self::pump_one(streams, backend, r, off);
-            if finished {
-                completed.push(r.id);
+        self.topology.pump(&mut |reqs, backend, finished| {
+            for r in reqs {
+                Self::pump_one(streams, backend, r, off);
+                if finished {
+                    completed.push(r.id);
+                }
             }
         });
         for id in completed {

@@ -24,7 +24,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut s: Vec<f64> = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     percentile_sorted(&s, p)
 }
 
@@ -81,7 +81,7 @@ impl Summary {
             };
         }
         let mut s = xs.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
         Summary {
             n: s.len(),
             mean: mean(&s),

@@ -58,7 +58,7 @@ impl Workload {
     /// merged workloads (multi-tenant experiments) go through this.
     pub fn sorted_by_arrival(mut self) -> Workload {
         self.requests
-            .sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+            .sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         self
     }
 }

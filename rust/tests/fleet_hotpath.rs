@@ -1,0 +1,360 @@
+//! Fleet hot-path equivalence: the heap-driven event queue and the
+//! incremental load board must reproduce the retained naive O(N)-scan
+//! reference *byte-identically*.
+//!
+//! Two clusters built identically — one pinned to the naive reference via
+//! `set_naive_scan(true)` — are stepped in lockstep and must agree, at
+//! every event, on which worker stepped, the step outcome, and every
+//! worker clock bit-for-bit, through epoch re-bases (common-delta
+//! `shift_all`), worker offline windows, park nudges and prefill→decode
+//! transfer routing. Separately, the incrementally maintained load
+//! signals must equal recomputed-from-scratch snapshots after randomized
+//! inject/step/cancel/re-base sequences under all three routers (the
+//! board ≡ recompute assertions live in `ClusterEngine::check_invariants`
+//! and `EngineCore::check_invariants`).
+
+use duetserve::config::{Policy, ServingConfig};
+use duetserve::engine::{router_by_name, ClusterEngine, ServingTopology, TopologyStep};
+use duetserve::request::Request;
+use duetserve::util::proptest::check;
+use duetserve::workload::synthetic::jittered_workload;
+
+const ROUTERS: [&str; 3] = ["round-robin", "least-outstanding", "kv-pressure"];
+
+/// Cap on lockstep events so a livelock fails loudly instead of hanging.
+const MAX_EVENTS: u64 = 500_000;
+
+fn replicated_pair(n: u32, router: &str, seed: u64) -> (ClusterEngine, ClusterEngine) {
+    let cfg = ServingConfig::default_8b().with_policy(Policy::VllmChunked);
+    let fast = ClusterEngine::replicated(cfg.clone(), n, seed, router_by_name(router).unwrap());
+    let mut naive = ClusterEngine::replicated(cfg, n, seed, router_by_name(router).unwrap());
+    naive.set_naive_scan(true);
+    (fast, naive)
+}
+
+fn disagg_pair(p: u32, d: u32, router: &str, seed: u64) -> (ClusterEngine, ClusterEngine) {
+    let cfg = ServingConfig::default_8b().with_policy(Policy::DisaggPD {
+        prefill_gpus: p,
+        decode_gpus: d,
+    });
+    let fast = ClusterEngine::disagg(cfg.clone(), p, d, seed, router_by_name(router).unwrap());
+    let mut naive = ClusterEngine::disagg(cfg, p, d, seed, router_by_name(router).unwrap());
+    naive.set_naive_scan(true);
+    (fast, naive)
+}
+
+/// Compare every worker clock bit-for-bit.
+fn clocks_equal(fast: &ClusterEngine, naive: &ClusterEngine) -> Result<(), String> {
+    for (i, (wf, wn)) in fast.workers.iter().zip(naive.workers.iter()).enumerate() {
+        if wf.core.clock.to_bits() != wn.core.clock.to_bits() {
+            return Err(format!(
+                "worker {i} clock diverged: heap {} vs naive {}",
+                wf.core.clock, wn.core.clock
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Step both clusters until both report `Exhausted`, asserting the event
+/// trajectories are identical. Returns the number of events.
+fn lockstep_drain(fast: &mut ClusterEngine, naive: &mut ClusterEngine) -> Result<u64, String> {
+    let mut events = 0u64;
+    loop {
+        let sf = fast.step_next(None);
+        let sn = naive.step_next(None);
+        if sf != sn {
+            return Err(format!("event {events}: heap {sf:?} vs naive {sn:?}"));
+        }
+        if fast.last_stepped() != naive.last_stepped() {
+            return Err(format!(
+                "event {events}: heap stepped {:?}, naive stepped {:?}",
+                fast.last_stepped(),
+                naive.last_stepped()
+            ));
+        }
+        clocks_equal(fast, naive).map_err(|e| format!("event {events}: {e}"))?;
+        if events % 64 == 0 {
+            fast.check_invariants()
+                .map_err(|e| format!("event {events}: heap invariants: {e}"))?;
+            naive
+                .check_invariants()
+                .map_err(|e| format!("event {events}: naive invariants: {e}"))?;
+        }
+        if matches!(sf, TopologyStep::Exhausted | TopologyStep::Diverged(_)) {
+            return Ok(events);
+        }
+        events += 1;
+        if events > MAX_EVENTS {
+            return Err("event cap exceeded (livelock?)".into());
+        }
+    }
+}
+
+/// Re-base both clusters' clocks by the common-delta shift and verify it
+/// happened identically (bit-exact stagger preservation).
+fn lockstep_rebase(fast: &mut ClusterEngine, naive: &mut ClusterEngine) -> Result<(), String> {
+    let before: Vec<u64> = fast.workers.iter().map(|w| w.core.clock.to_bits()).collect();
+    let rf = ServingTopology::rebase_now(fast);
+    let rn = ServingTopology::rebase_now(naive);
+    if rf != rn {
+        return Err(format!("re-base disagreed: heap {rf}, naive {rn}"));
+    }
+    clocks_equal(fast, naive).map_err(|e| format!("after re-base: {e}"))?;
+    if fast.epoch_offset.to_bits() != naive.epoch_offset.to_bits() {
+        return Err("epoch_offset diverged after re-base".into());
+    }
+    if rf {
+        // Relative order across workers must be exactly preserved: the
+        // same comparison result for every pair, before and after.
+        let after: Vec<u64> = fast.workers.iter().map(|w| w.core.clock.to_bits()).collect();
+        for i in 0..before.len() {
+            for j in (i + 1)..before.len() {
+                let cmp_before = f64::from_bits(before[i]).total_cmp(&f64::from_bits(before[j]));
+                let cmp_after = f64::from_bits(after[i]).total_cmp(&f64::from_bits(after[j]));
+                if cmp_before != cmp_after {
+                    return Err(format!(
+                        "re-base reordered workers {i} and {j}: {cmp_before:?} -> {cmp_after:?}"
+                    ));
+                }
+            }
+        }
+        fast.check_invariants()
+            .map_err(|e| format!("heap invariants after re-base: {e}"))?;
+    }
+    Ok(())
+}
+
+/// Final merged reports must agree on every deterministic field.
+fn reports_equal(fast: &mut ClusterEngine, naive: &mut ClusterEngine) -> Result<(), String> {
+    let rf = ServingTopology::fold_report(fast);
+    let rn = ServingTopology::fold_report(naive);
+    if rf.completed != rn.completed {
+        return Err(format!("completed: {} vs {}", rf.completed, rn.completed));
+    }
+    if rf.iterations != rn.iterations {
+        return Err(format!("iterations: {} vs {}", rf.iterations, rn.iterations));
+    }
+    if rf.duration.to_bits() != rn.duration.to_bits() {
+        return Err(format!("duration: {} vs {}", rf.duration, rn.duration));
+    }
+    if rf.tbt_p99.to_bits() != rn.tbt_p99.to_bits() {
+        return Err(format!("tbt_p99: {} vs {}", rf.tbt_p99, rn.tbt_p99));
+    }
+    if rf.ttft.mean.to_bits() != rn.ttft.mean.to_bits() {
+        return Err(format!("ttft mean: {} vs {}", rf.ttft.mean, rn.ttft.mean));
+    }
+    if rf.engine_epoch != rn.engine_epoch {
+        return Err(format!(
+            "engine epoch: {} vs {}",
+            rf.engine_epoch, rn.engine_epoch
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn heap_trajectory_matches_naive_scan_replicated() {
+    let sizes = [1u32, 2, 8, 33];
+    check(12, |g| {
+        let n = *g.choose(&sizes);
+        let router = *g.choose(&ROUTERS);
+        let (mut fast, mut naive) = replicated_pair(n, router, g.case_seed);
+
+        // Wave 1: a batch of arrivals drained to exhaustion.
+        let reqs = g.usize_range(4, 24);
+        let w = jittered_workload(
+            reqs,
+            g.u64_range(64, 4000),
+            g.u64_range(1, 32),
+            0.3,
+            g.f64_range(1.0, 12.0),
+            g.case_seed,
+        );
+        for r in w.requests {
+            fast.inject(r.clone());
+            naive.inject(r);
+        }
+        lockstep_drain(&mut fast, &mut naive).map_err(|e| format!("wave 1 (n={n}): {e}"))?;
+
+        // Epoch re-base between the waves: both clusters shift every
+        // clock by the same common delta, bit-exactly.
+        lockstep_rebase(&mut fast, &mut naive).map_err(|e| format!("n={n}: {e}"))?;
+
+        // An offline window on a random worker (the reconfiguration
+        // downtime path): the loop must jump that worker's clock and
+        // routing must exclude it, identically on both sides.
+        let k = g.usize_range(0, n as usize - 1);
+        let off = g.f64_range(0.1, 5.0);
+        fast.workers[k].offline_until = fast.workers[k].core.clock + off;
+        naive.workers[k].offline_until = naive.workers[k].core.clock + off;
+
+        // Wave 2: epoch-local arrivals near zero after the re-base.
+        let w2 = jittered_workload(
+            g.usize_range(2, 12),
+            g.u64_range(64, 2000),
+            g.u64_range(1, 16),
+            0.3,
+            g.f64_range(1.0, 8.0),
+            g.case_seed ^ 0xBEEF,
+        );
+        for mut r in w2.requests {
+            r.id += 100_000;
+            fast.inject(r.clone());
+            naive.inject(r);
+        }
+        lockstep_drain(&mut fast, &mut naive).map_err(|e| format!("wave 2 (n={n}): {e}"))?;
+
+        reports_equal(&mut fast, &mut naive).map_err(|e| format!("reports (n={n}): {e}"))
+    });
+}
+
+#[test]
+fn heap_trajectory_matches_naive_scan_disagg() {
+    // Disaggregated topologies exercise what replication cannot: decode
+    // workers parking behind the fleet, transfer-ready routing through
+    // the in-flight overlay, KV-full bounces, and (when the planner is
+    // on) role flips with reconfiguration downtime.
+    let shapes = [(1u32, 1u32), (2, 1), (1, 2), (3, 5)];
+    check(8, |g| {
+        let (p, d) = *g.choose(&shapes);
+        let router = *g.choose(&ROUTERS);
+        let (mut fast, mut naive) = disagg_pair(p, d, router, g.case_seed);
+        if g.bool(0.5) {
+            let reconfig = g.f64_range(1.0, 10.0);
+            let interval = g.f64_range(5.0, 20.0);
+            for c in [&mut fast, &mut naive] {
+                c.reconfigurable = true;
+                c.reconfig_s = reconfig;
+                c.planner_interval = interval;
+            }
+        }
+        let w = jittered_workload(
+            g.usize_range(5, 30),
+            g.u64_range(200, 6000),
+            g.u64_range(4, 48),
+            0.3,
+            g.f64_range(1.0, 8.0),
+            g.case_seed,
+        );
+        for r in w.requests {
+            fast.inject(r.clone());
+            naive.inject(r);
+        }
+        lockstep_drain(&mut fast, &mut naive).map_err(|e| format!("{p}P{d}D: {e}"))?;
+        reports_equal(&mut fast, &mut naive).map_err(|e| format!("reports ({p}P{d}D): {e}"))
+    });
+}
+
+#[test]
+fn incremental_load_signals_match_recompute_after_random_ops() {
+    // The load board, busy/queue counters, incremental outstanding-token
+    // sums and the event queue must all equal recomputed-from-scratch
+    // state after arbitrary interleavings of inject / step / cancel /
+    // re-base, under every router. `check_invariants` holds the
+    // board ≡ recompute assertions (and the per-worker incremental
+    // `outstanding` ≡ recompute check inside `EngineCore`).
+    check(16, |g| {
+        let router = *g.choose(&ROUTERS);
+        let disagg = g.bool(0.4);
+        let mut cluster = if disagg {
+            let p = g.u64_range(1, 3) as u32;
+            let d = g.u64_range(1, 3) as u32;
+            disagg_pair(p, d, router, g.case_seed).0
+        } else {
+            replicated_pair(g.u64_range(1, 9) as u32, router, g.case_seed).0
+        };
+
+        let mut next_id = 0u64;
+        let mut known: Vec<u64> = Vec::new();
+        let mut steps = 0u64;
+        for _ in 0..g.usize_range(3, 10) {
+            // A burst of arrivals around the current clock.
+            for _ in 0..g.usize_range(1, 8) {
+                let r = Request::new(
+                    next_id,
+                    ClusterEngine::clock(&cluster) + g.f64_range(0.0, 0.5),
+                    g.u64_range(32, 4000),
+                    g.u64_range(1, 24),
+                );
+                known.push(next_id);
+                next_id += 1;
+                cluster.inject(r);
+            }
+            // Advance some events.
+            for _ in 0..g.usize_range(1, 40) {
+                if matches!(
+                    cluster.step_next(None),
+                    TopologyStep::Exhausted | TopologyStep::Diverged(_)
+                ) {
+                    break;
+                }
+                steps += 1;
+            }
+            // Cancel a random known request (any stage, or already
+            // finished — both outcomes are legal; the board must stay
+            // consistent either way).
+            if !known.is_empty() && g.bool(0.5) {
+                let id = *g.choose(&known);
+                ServingTopology::cancel(&mut cluster, id);
+            }
+            // Occasionally force a re-base if the cluster happens to be
+            // idle (no-op otherwise).
+            if g.bool(0.3) {
+                ServingTopology::rebase_now(&mut cluster);
+            }
+            cluster
+                .check_invariants()
+                .map_err(|e| format!("after burst ({router}, {steps} steps): {e}"))?;
+        }
+        // Drain to the end: the final quiescent state must also agree.
+        loop {
+            match cluster.step_next(None) {
+                TopologyStep::Exhausted | TopologyStep::Diverged(_) => break,
+                _ => steps += 1,
+            }
+            if steps > MAX_EVENTS {
+                return Err("event cap exceeded (livelock?)".into());
+            }
+        }
+        cluster
+            .check_invariants()
+            .map_err(|e| format!("after drain ({router}): {e}"))
+    });
+}
+
+#[test]
+fn queued_and_clock_reads_match_naive_scan() {
+    // The O(1) reads the serving front-end uses every tick — `queued()`
+    // (backpressure) and `clock()` (arrival reference) — must equal the
+    // naive fleet folds at every event.
+    let (mut fast, mut naive) = replicated_pair(8, "least-outstanding", 7);
+    let w = jittered_workload(30, 2000, 24, 0.3, 6.0, 7);
+    for r in w.requests {
+        fast.inject(r.clone());
+        naive.inject(r);
+    }
+    let mut guard = 0u64;
+    loop {
+        let done = matches!(
+            fast.step_next(None),
+            TopologyStep::Exhausted | TopologyStep::Diverged(_)
+        );
+        naive.step_next(None);
+        assert_eq!(
+            ServingTopology::queued(&fast),
+            ServingTopology::queued(&naive),
+            "queued() diverged from naive fold"
+        );
+        assert_eq!(
+            ClusterEngine::clock(&fast).to_bits(),
+            ClusterEngine::clock(&naive).to_bits(),
+            "clock() diverged from naive fold"
+        );
+        if done {
+            break;
+        }
+        guard += 1;
+        assert!(guard < MAX_EVENTS, "event cap exceeded");
+    }
+}
