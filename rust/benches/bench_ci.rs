@@ -12,12 +12,14 @@ use std::time::Instant;
 
 use duetserve::config::{Policy, ServingConfig};
 use duetserve::engine::{
-    engine_for, ClusterEngine, ReplicatedEngine, RoundRobinRouter, ServingTopology, TopologyStep,
+    engine_for, router_by_name, ClusterEngine, ReplicatedEngine, RoundRobinRouter,
+    ServingTopology, TopologyStep,
 };
 use duetserve::metrics::{Recorder, RecorderMode};
 use duetserve::request::Request;
 use duetserve::util::json::Json;
 use duetserve::util::tablefmt::banner;
+use duetserve::workload::sessions::shared_prefix_workload;
 use duetserve::workload::synthetic::fixed_workload;
 
 /// Mean µs per call of `f` over `iters` runs (after `warmup`).
@@ -93,6 +95,51 @@ fn fleet_steps_per_s(n: u32, naive: bool) -> (f64, u64) {
     (steps as f64 / secs, steps)
 }
 
+/// Nearest-rank percentile of an ascending-sorted sample.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+/// One prefix-cache hit-rate sweep point: 48 shared-prefix requests
+/// (constant 2048-token prompts split `shared`+`unique`) over a 2-worker
+/// replicated cluster with the prefix cache on, routed by `router`.
+/// Returns the JSON row plus the TTFT p50 and computed-prefill-token
+/// figures the guardrails compare across hit rates.
+fn prefix_sweep_point(shared: u64, unique: u64, router: &str) -> (Json, f64, u64) {
+    let cfg = ServingConfig::default_8b()
+        .with_policy(Policy::VllmChunked)
+        .with_prefix_cache(true);
+    // Low qps + short outputs: turns finish before the next same-tenant
+    // arrival, so decayed blocks are actually there to hit.
+    let w = shared_prefix_workload(48, shared, unique, 16, 2.0, 2, 0xCA_FE);
+    let mut e = ReplicatedEngine::new(cfg, 2, 7)
+        .with_router(router_by_name(router).expect("known router"));
+    let rep = e.run(w);
+    assert_eq!(
+        rep.completed, 48,
+        "prefix sweep ({shared}+{unique}, {router}) did not complete"
+    );
+    let mut ttfts: Vec<f64> = e.finished.iter().filter_map(|r| r.ttft()).collect();
+    ttfts.sort_by(f64::total_cmp);
+    let p50 = percentile(&ttfts, 0.50);
+    let p99 = percentile(&ttfts, 0.99);
+    let row = Json::obj(vec![
+        ("hit_rate", Json::Num(shared as f64 / (shared + unique) as f64)),
+        ("router", Json::string(router)),
+        ("ttft_p50_s", Json::Num(p50)),
+        ("ttft_p99_s", Json::Num(p99)),
+        ("token_throughput", Json::Num(rep.token_throughput)),
+        ("prefix_hits", Json::Num(rep.prefix_hits as f64)),
+        ("prefix_cached_tokens", Json::Num(rep.prefix_cached_tokens as f64)),
+        ("prefilled_tokens", Json::Num(rep.prefilled_tokens as f64)),
+    ]);
+    (row, p50, rep.prefilled_tokens)
+}
+
 fn main() {
     banner("CI bench: throughput row + scrape-cost demonstration");
 
@@ -141,6 +188,21 @@ fn main() {
     let fleet_speedup_n8 = heap_n8 / naive_n8.max(1e-9);
     let fleet_speedup_n256 = heap_n256 / naive_n256.max(1e-9);
 
+    // Prefix-cache hit-rate sweep: TTFT/throughput at hit rates ~0, ~0.5
+    // and ~0.9 (block-aligned shared/unique splits of a constant
+    // 2048-token prompt), cache-aware kv-overlap routing vs round-robin.
+    let mut sweep_rows = Vec::new();
+    let mut overlap_points = Vec::new(); // (shared, ttft_p50, prefilled) per hit rate
+    for &(shared, unique) in &[(0u64, 2048u64), (1024, 1024), (1840, 208)] {
+        for router in ["kv-overlap", "round-robin"] {
+            let (row, p50, prefilled) = prefix_sweep_point(shared, unique, router);
+            if router == "kv-overlap" {
+                overlap_points.push((shared, p50, prefilled));
+            }
+            sweep_rows.push(row);
+        }
+    }
+
     println!(
         "agg 2x vLLM @qps {qps}: {:.0} tok/s, tbt-p99 {:.1} ms | duet: {:.0} it/s, {:.1} µs sched",
         ra.token_throughput,
@@ -156,6 +218,14 @@ fn main() {
         "fleet steps/s — N=8: heap {heap_n8:.0} vs naive {naive_n8:.0} \
          (x{fleet_speedup_n8:.1}), N=256: heap {heap_n256:.0} vs naive {naive_n256:.0} \
          (x{fleet_speedup_n256:.1}, {steps_n256} steps)"
+    );
+    println!(
+        "prefix sweep (kv-overlap) ttft p50: {:.1} ms @hit 0 -> {:.1} ms @hit 0.9; \
+         prefilled tokens {} -> {}",
+        overlap_points[0].1 * 1e3,
+        overlap_points[2].1 * 1e3,
+        overlap_points[0].2,
+        overlap_points[2].2,
     );
 
     let out = Json::obj(vec![
@@ -198,6 +268,10 @@ fn main() {
             ]),
         ),
         (
+            "prefix_sweep",
+            Json::obj(vec![("rows", Json::arr(sweep_rows))]),
+        ),
+        (
             "scrape_latency",
             Json::obj(vec![
                 ("n_small", Json::Num(n_small as f64)),
@@ -230,5 +304,22 @@ fn main() {
     assert!(
         fleet_speedup_n256 >= 5.0,
         "N=256 fleet event loop only x{fleet_speedup_n256:.1} over naive scan (need >= 5)"
+    );
+
+    // Prefix-cache guardrails (engine-clock metrics, so CI wall-clock
+    // noise cannot touch them): with 90% of every prompt cacheable and
+    // kv-overlap routing, TTFT p50 must strictly improve over the
+    // disjoint-prompt baseline, and the prefill volume actually computed
+    // must drop by at least the cached-prefix fraction (here: to ≤25%,
+    // leaving generous room for the per-tenant cold misses).
+    let (_, p50_cold, prefilled_cold) = overlap_points[0];
+    let (_, p50_hot, prefilled_hot) = overlap_points[2];
+    assert!(
+        p50_hot < p50_cold,
+        "hit-rate 0.9 ttft p50 {p50_hot:.4}s must beat hit-rate 0 {p50_cold:.4}s"
+    );
+    assert!(
+        prefilled_hot * 4 <= prefilled_cold,
+        "prefill volume must drop with the cached fraction: {prefilled_hot} vs {prefilled_cold}"
     );
 }

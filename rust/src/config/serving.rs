@@ -82,6 +82,12 @@ pub struct ServingConfig {
     /// `--max-engine-time` CLI flag) so CI soak tests can exercise
     /// epoch re-basing without simulating 3·10⁴ engine-seconds.
     pub max_engine_time: f64,
+    /// Block-level prefix caching (`kvcache::prefix`): finished requests
+    /// decay their prompt KV blocks into a cached LRU pool and admission
+    /// seeds new requests with the longest cached prefix. Off by default
+    /// — reuse only helps when prompts actually overlap, and the
+    /// zero-overlap equivalence tests pin the off-path behavior.
+    pub prefix_cache: bool,
 }
 
 impl ServingConfig {
@@ -100,6 +106,7 @@ impl ServingConfig {
             max_lookahead: 16,
             kv_watermark: 0.02,
             max_engine_time: DEFAULT_MAX_ENGINE_TIME,
+            prefix_cache: false,
         }
     }
 
@@ -111,6 +118,11 @@ impl ServingConfig {
     pub fn with_model(mut self, model: ModelSpec, tp: u32) -> ServingConfig {
         self.model = model;
         self.tp = tp;
+        self
+    }
+
+    pub fn with_prefix_cache(mut self, on: bool) -> ServingConfig {
+        self.prefix_cache = on;
         self
     }
 

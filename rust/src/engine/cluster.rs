@@ -298,6 +298,8 @@ impl ClusterEngine {
                 queue_len: 0,
                 outstanding_tokens: 0,
                 kv_free_tokens: w.core.kv_free_tokens(),
+                prefix_resident_tokens: w.core.prefix_resident_tokens(),
+                prefix_overlap_tokens: 0,
             })
             .collect();
         ClusterEngine {
@@ -361,6 +363,10 @@ impl ClusterEngine {
             queue_len: q,
             outstanding_tokens: core.outstanding_tokens(),
             kv_free_tokens: core.kv_free_tokens(),
+            prefix_resident_tokens: core.prefix_resident_tokens(),
+            // Per-request overlap is a dispatch-time signal, filled into
+            // the per-decision candidate copies, never the board.
+            prefix_overlap_tokens: 0,
         };
         let b = core.has_local_work();
         if b != self.busy[i] {
@@ -564,6 +570,8 @@ impl ClusterEngine {
                 queue_len: w.core.queue_len(),
                 outstanding_tokens: w.core.recompute_outstanding(),
                 kv_free_tokens: w.core.kv_free_tokens(),
+                prefix_resident_tokens: w.core.prefix_resident_tokens(),
+                prefix_overlap_tokens: 0,
             };
             if self.loads[i] != fresh {
                 return Err(format!(
@@ -785,6 +793,8 @@ impl ClusterEngine {
             queue_len: w.core.queue_len(),
             outstanding_tokens: w.core.recompute_outstanding(),
             kv_free_tokens: w.core.kv_free_tokens(),
+            prefix_resident_tokens: w.core.prefix_resident_tokens(),
+            prefix_overlap_tokens: 0,
         };
         let online: Vec<RouteCandidate> = self
             .workers
@@ -809,12 +819,28 @@ impl ClusterEngine {
     fn dispatch_arrivals(&mut self, now: f64) {
         while self.pending.front().is_some_and(|r| r.arrival <= now) {
             let req = self.pending.pop_front().unwrap();
+            // Cache-aware dispatch signal: with prefix caching on, probe
+            // every eligible worker's index for this prompt once and fill
+            // the per-decision candidate copies (the board keeps overlap
+            // at 0 — it is request-specific). Identical on both scan
+            // paths, preserving the fast ≡ naive trajectory property.
+            let keys = if self.cfg.prefix_cache {
+                crate::kvcache::block_keys(&req, self.cfg.kv_block_tokens)
+            } else {
+                Vec::new()
+            };
             let choice = if self.naive_scan {
-                let candidates = self.candidates_where_naive(now, Worker::accepts_arrivals);
+                let mut candidates = self.candidates_where_naive(now, Worker::accepts_arrivals);
                 assert!(
                     !candidates.is_empty(),
                     "no worker accepts arrivals (topology without prefill/unified workers)"
                 );
+                if !keys.is_empty() {
+                    for c in &mut candidates {
+                        c.prefix_overlap_tokens =
+                            self.workers[c.worker].core.prefix_overlap_tokens(&keys);
+                    }
+                }
                 let c = self.router.route(&req, &candidates);
                 assert!(
                     candidates.iter().any(|x| x.worker == c),
@@ -828,6 +854,12 @@ impl ClusterEngine {
                     !self.cand_scratch.is_empty(),
                     "no worker accepts arrivals (topology without prefill/unified workers)"
                 );
+                if !keys.is_empty() {
+                    for c in &mut self.cand_scratch {
+                        c.prefix_overlap_tokens =
+                            self.workers[c.worker].core.prefix_overlap_tokens(&keys);
+                    }
+                }
                 let c = self.router.route(&req, &self.cand_scratch);
                 assert!(
                     self.cand_scratch.iter().any(|x| x.worker == c),

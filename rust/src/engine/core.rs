@@ -14,7 +14,7 @@ use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
 
 use crate::config::ServingConfig;
-use crate::kvcache::KvManager;
+use crate::kvcache::{block_keys, BlockKey, KvManager};
 use crate::metrics::Recorder;
 use crate::model::AttnShape;
 use crate::request::{Phase, Request, RequestId};
@@ -231,7 +231,10 @@ impl EngineCore {
         scheduler: Box<dyn Scheduler>,
         backend: Box<dyn ExecutionBackend>,
     ) -> EngineCore {
-        let kv = KvManager::new(cfg.kv_capacity_blocks(), cfg.kv_block_tokens);
+        let mut kv = KvManager::new(cfg.kv_capacity_blocks(), cfg.kv_block_tokens);
+        if cfg.prefix_cache {
+            kv.enable_prefix_cache();
+        }
         EngineCore {
             cfg,
             scheduler,
@@ -276,6 +279,7 @@ impl EngineCore {
     pub fn inject(&mut self, mut r: Request) {
         r.phase = Phase::Waiting;
         self.kv.register(r.id);
+        self.seed_prefix(&mut r);
         self.outstanding += work_of(&r);
         self.waiting.push_back(r);
     }
@@ -285,8 +289,55 @@ impl EngineCore {
     pub fn inject_front(&mut self, mut r: Request) {
         r.phase = Phase::Waiting;
         self.kv.register(r.id);
+        self.seed_prefix(&mut r);
         self.outstanding += work_of(&r);
         self.waiting.push_front(r);
+    }
+
+    /// Prefix-cache admission match: seed the request's block table with
+    /// the longest cached prefix of its prompt and advance `prefilled`
+    /// past the hit, so the scheduler only plans the uncached suffix.
+    /// Capped below the full prompt — a total hit still runs one forward
+    /// pass to produce the first-token logits. Runs at injection time,
+    /// *before* the incremental `outstanding` signal counts the request
+    /// and before any scheduler sees it.
+    fn seed_prefix(&mut self, r: &mut Request) {
+        if !self.kv.prefix_enabled() || r.prefilled != 0 || r.generated != 0 {
+            return;
+        }
+        let keys = block_keys(r, self.kv.block_tokens());
+        if keys.is_empty() {
+            return;
+        }
+        let matched = self.kv.seed_prefix(r.id, &keys, r.prompt_len - 1);
+        if matched > 0 {
+            r.advance_prefill(matched);
+            r.phase = Phase::Waiting; // not admitted yet; stays queued
+            self.metrics.prefix_hits += 1;
+            self.metrics.prefix_cached_tokens += matched;
+        }
+    }
+
+    /// Whether this worker's KV manager runs the prefix cache.
+    pub fn prefix_enabled(&self) -> bool {
+        self.kv.prefix_enabled()
+    }
+
+    /// Prompt tokens resident in this worker's prefix index (held +
+    /// cached) — the router's residency signal.
+    pub fn prefix_resident_tokens(&self) -> u64 {
+        self.kv.prefix_resident_tokens()
+    }
+
+    /// Longest cached prefix this worker holds for a prompt identified by
+    /// `keys`, in tokens — the `kv-overlap` routing signal.
+    pub fn prefix_overlap_tokens(&self, keys: &[BlockKey]) -> u64 {
+        self.kv.probe_prefix(keys)
+    }
+
+    /// Chained block keys for `r` under this worker's block size.
+    pub fn prefix_keys(&self, r: &Request) -> Vec<BlockKey> {
+        block_keys(r, self.kv.block_tokens())
     }
 
     /// Any admitted or queued work on this worker?
@@ -625,6 +676,7 @@ impl EngineCore {
                 if let Some(r) = find_running(&mut self.running, &self.scratch.pos, fresh, c.id) {
                     r.advance_prefill(c.tokens);
                     self.outstanding -= c.tokens;
+                    self.metrics.prefilled_tokens += c.tokens;
                     if r.phase == Phase::Decode {
                         // Prompt completed: this forward's logits produce
                         // the first output token.
@@ -733,6 +785,7 @@ impl EngineCore {
                 if let Some(r) = find_running(&mut self.running, &self.scratch.pos, fresh, c.id) {
                     r.advance_prefill(c.tokens);
                     self.outstanding -= c.tokens;
+                    self.metrics.prefilled_tokens += c.tokens;
                     if r.phase == Phase::Decode {
                         let id = r.id;
                         if self.kv_append_or_preempt(id, 1) {
@@ -788,12 +841,24 @@ impl EngineCore {
         while i < self.running.len() {
             if self.running[i].phase == Phase::Finished {
                 let r = self.running.swap_remove(i);
-                let _ = self.kv.release(r.id);
+                if self.kv.prefix_enabled() {
+                    // Decay the request's full prompt blocks into the
+                    // cached pool instead of freeing them.
+                    let keys = block_keys(&r, self.kv.block_tokens());
+                    let _ = self.kv.finish_release(r.id, &keys);
+                } else {
+                    let _ = self.kv.release(r.id);
+                }
                 self.metrics.record_finished(&r);
                 self.finished.push(r);
             } else {
                 i += 1;
             }
+        }
+        if self.kv.prefix_enabled() {
+            // The manager's eviction counter is cumulative; assignment
+            // (not +=) keeps the recorder merge-correct across workers.
+            self.metrics.prefix_evictions = self.kv.prefix_evictions();
         }
     }
 

@@ -67,7 +67,8 @@ pub use disagg::DisaggEngine;
 pub use events::{IterEvent, IterKind};
 pub use replicated::ReplicatedEngine;
 pub use router::{
-    router_by_name, KvPressureRouter, LeastOutstandingRouter, RoundRobinRouter, Router,
+    router_by_name, KvOverlapRouter, KvPressureRouter, LeastOutstandingRouter, RoundRobinRouter,
+    Router,
 };
 pub use topology::{ServingTopology, TopologyStep};
 

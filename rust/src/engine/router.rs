@@ -34,6 +34,13 @@ pub struct RouteCandidate {
     pub outstanding_tokens: u64,
     /// Free KV-cache tokens on that worker.
     pub kv_free_tokens: u64,
+    /// Prompt tokens resident in the worker's prefix cache (held +
+    /// cached blocks). 0 when prefix caching is disabled.
+    pub prefix_resident_tokens: u64,
+    /// Longest cached prefix the worker holds for *this* request's
+    /// prompt, in tokens. Filled per decision at arrival dispatch when
+    /// prefix caching is enabled; 0 otherwise (including transfers).
+    pub prefix_overlap_tokens: u64,
 }
 
 /// Picks a destination worker for each arriving request.
@@ -124,6 +131,39 @@ impl Router for KvPressureRouter {
     }
 }
 
+/// Join the worker already holding the longest cached prefix of this
+/// request's prompt (Dynamo-KV-Router-style cache-aware dispatch):
+/// maximal overlap first, ties toward free KV, then least outstanding
+/// work — so with a cold cache it degrades to `kv-pressure` behavior.
+#[derive(Debug, Default)]
+pub struct KvOverlapRouter;
+
+impl KvOverlapRouter {
+    pub fn new() -> KvOverlapRouter {
+        KvOverlapRouter
+    }
+}
+
+impl Router for KvOverlapRouter {
+    fn name(&self) -> &'static str {
+        "kv-overlap"
+    }
+
+    fn route(&mut self, _req: &Request, candidates: &[RouteCandidate]) -> usize {
+        candidates
+            .iter()
+            .max_by_key(|c| {
+                (
+                    c.prefix_overlap_tokens,
+                    c.kv_free_tokens,
+                    std::cmp::Reverse(c.outstanding_tokens),
+                )
+            })
+            .expect("route called with no candidates")
+            .worker
+    }
+}
+
 /// Router factory by name (CLI / bench surface).
 pub fn router_by_name(name: &str) -> Option<Box<dyn Router>> {
     match name {
@@ -132,6 +172,7 @@ pub fn router_by_name(name: &str) -> Option<Box<dyn Router>> {
             Some(Box::new(LeastOutstandingRouter::new()))
         }
         "kv-pressure" | "kv" => Some(Box::new(KvPressureRouter::new())),
+        "kv-overlap" | "overlap" => Some(Box::new(KvOverlapRouter::new())),
         _ => None,
     }
 }
@@ -146,6 +187,8 @@ mod tests {
             queue_len: 0,
             outstanding_tokens: outstanding,
             kv_free_tokens: kv_free,
+            prefix_resident_tokens: 0,
+            prefix_overlap_tokens: 0,
         }
     }
 
@@ -192,12 +235,34 @@ mod tests {
     }
 
     #[test]
+    fn kv_overlap_prefers_cached_prefix_then_free_kv() {
+        let mut r = KvOverlapRouter::new();
+        let mut a = cand(0, 10, 9000);
+        let mut b = cand(1, 500, 100);
+        b.prefix_overlap_tokens = 2048;
+        // Overlap dominates every load signal.
+        assert_eq!(r.route(&req(), &[a, b]), 1);
+        // No overlap anywhere → most free KV (kv-pressure degradation).
+        b.prefix_overlap_tokens = 0;
+        assert_eq!(r.route(&req(), &[a, b]), 0);
+        // Overlap tie → free KV breaks it.
+        a.prefix_overlap_tokens = 1024;
+        b.prefix_overlap_tokens = 1024;
+        assert_eq!(r.route(&req(), &[a, b]), 0);
+        // Full tie on overlap + KV → least outstanding wins.
+        let c = vec![cand(0, 70, 9000), cand(1, 30, 9000)];
+        assert_eq!(r.route(&req(), &c), 1);
+    }
+
+    #[test]
     fn factory_resolves_aliases() {
         for (name, expect) in [
             ("round-robin", "round-robin"),
             ("rr", "round-robin"),
             ("least-loaded", "least-outstanding"),
             ("kv", "kv-pressure"),
+            ("kv-overlap", "kv-overlap"),
+            ("overlap", "kv-overlap"),
         ] {
             assert_eq!(router_by_name(name).unwrap().name(), expect);
         }

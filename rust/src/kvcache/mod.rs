@@ -6,10 +6,21 @@
 //! and implements the look-ahead preallocation DuetServe's §4.3 engine
 //! needs (reserve `k` future decode slots up front so k decode steps can
 //! run without CPU synchronization).
+//!
+//! With the optional [`prefix`] subsystem enabled, block tables can begin
+//! with *shared* blocks (refcounted in the [`PrefixIndex`]); finished
+//! requests decay their full prompt blocks into a cached LRU pool instead
+//! of freeing them, and allocation under pressure evicts cached blocks
+//! before reporting [`KvError::OutOfBlocks`]. Cached blocks count as free
+//! in every capacity signal (`free_blocks`, `free_fraction`,
+//! `can_append`), so a prefix-enabled manager serving *disjoint* prompts
+//! is capacity-indistinguishable from a plain one.
 
 pub mod allocator;
+pub mod prefix;
 
 pub use allocator::BlockAllocator;
+pub use prefix::{block_keys, BlockKey, PrefixIndex};
 
 use crate::request::RequestId;
 use std::collections::HashMap;
@@ -47,6 +58,9 @@ pub struct BlockTable {
     pub tokens: u64,
     /// Tokens *reserved* ahead of time (look-ahead decode slots).
     pub reserved_tokens: u64,
+    /// The first `shared` entries of `blocks` are prefix-cache blocks
+    /// refcounted in the [`PrefixIndex`]; the rest are privately owned.
+    pub shared: usize,
 }
 
 /// KV-cache manager: allocator + block tables + watermark admission.
@@ -55,6 +69,8 @@ pub struct KvManager {
     alloc: BlockAllocator,
     block_tokens: u32,
     tables: HashMap<RequestId, BlockTable>,
+    /// Prefix cache (None = plain vLLM-style paging, the default).
+    prefix: Option<PrefixIndex>,
 }
 
 impl KvManager {
@@ -63,11 +79,25 @@ impl KvManager {
             alloc: BlockAllocator::new(total_blocks),
             block_tokens,
             tables: HashMap::new(),
+            prefix: None,
         }
     }
 
+    /// Turn on block-level prefix caching (before any traffic).
+    pub fn enable_prefix_cache(&mut self) {
+        self.prefix.get_or_insert_with(PrefixIndex::new);
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Free capacity in blocks. Cached (unreferenced) prefix blocks are
+    /// reclaimable on demand, so they count as free — this keeps every
+    /// admission signal identical to a prefix-less manager when no
+    /// prompt ever overlaps.
     pub fn free_blocks(&self) -> u64 {
-        self.alloc.free()
+        self.alloc.free() + self.prefix.as_ref().map_or(0, |p| p.cached())
     }
 
     pub fn total_blocks(&self) -> u64 {
@@ -75,7 +105,7 @@ impl KvManager {
     }
 
     pub fn free_fraction(&self) -> f64 {
-        self.alloc.free() as f64 / self.alloc.total().max(1) as f64
+        self.free_blocks() as f64 / self.alloc.total().max(1) as f64
     }
 
     pub fn block_tokens(&self) -> u32 {
@@ -88,15 +118,19 @@ impl KvManager {
     }
 
     /// Can `tokens` additional tokens be appended for `id` without
-    /// exceeding capacity? (Headroom in already-held blocks counts.)
+    /// exceeding capacity? Headroom in already-held blocks counts, but
+    /// only the part not spoken for by look-ahead reservations.
     pub fn can_append(&self, id: RequestId, tokens: u64) -> bool {
         let headroom = self
             .tables
             .get(&id)
-            .map(|t| t.blocks.len() as u64 * self.block_tokens as u64 - t.tokens)
+            .map(|t| {
+                (t.blocks.len() as u64 * self.block_tokens as u64)
+                    .saturating_sub(t.tokens + t.reserved_tokens)
+            })
             .unwrap_or(0);
         let extra = tokens.saturating_sub(headroom);
-        extra == 0 || self.blocks_for(extra) <= self.alloc.free()
+        extra == 0 || self.blocks_for(extra) <= self.free_blocks()
     }
 
     /// Register a request (no allocation yet).
@@ -104,25 +138,50 @@ impl KvManager {
         self.tables.entry(id).or_default();
     }
 
+    /// Allocate `need` blocks into `out`, evicting LRU cached prefix
+    /// blocks first when the free list alone cannot cover the request.
+    /// On failure reports the reclaimable capacity (free + cached).
+    fn allocate_evicting(
+        alloc: &mut BlockAllocator,
+        prefix: &mut Option<PrefixIndex>,
+        need: u64,
+        out: &mut Vec<BlockId>,
+    ) -> Result<(), u64> {
+        if need > alloc.free() {
+            if let Some(pool) = prefix {
+                let shortfall = need - alloc.free();
+                let mut freed = Vec::new();
+                pool.evict(shortfall, &mut freed);
+                alloc.release(&freed);
+            }
+        }
+        alloc
+            .allocate_into(need, out)
+            .map_err(|free| free + prefix.as_ref().map_or(0, |p| p.cached()))
+    }
+
     /// Append `tokens` tokens to `id`'s cache, allocating blocks as
     /// needed. Fails atomically (no partial allocation) when blocks run
     /// out.
     pub fn append(&mut self, id: RequestId, tokens: u64) -> Result<(), KvError> {
         let bt = self.block_tokens as u64;
-        let table = self
-            .tables
-            .get_mut(&id)
-            .ok_or(KvError::UnknownRequest(id))?;
+        let KvManager {
+            alloc,
+            prefix,
+            tables,
+            ..
+        } = self;
+        let table = tables.get_mut(&id).ok_or(KvError::UnknownRequest(id))?;
         let capacity = table.blocks.len() as u64 * bt;
         let needed_tokens = (table.tokens + tokens).saturating_sub(capacity);
         let need_blocks = needed_tokens.div_ceil(bt);
         if need_blocks > 0 {
-            self.alloc
-                .allocate_into(need_blocks, &mut table.blocks)
-                .map_err(|free| KvError::OutOfBlocks {
+            Self::allocate_evicting(alloc, prefix, need_blocks, &mut table.blocks).map_err(
+                |free| KvError::OutOfBlocks {
                     need: need_blocks,
                     free,
-                })?;
+                },
+            )?;
         }
         table.tokens += tokens;
         table.reserved_tokens = table.reserved_tokens.saturating_sub(tokens);
@@ -134,30 +193,121 @@ impl KvManager {
     /// ever taking the allocator lock / syncing with the CPU.
     pub fn reserve(&mut self, id: RequestId, tokens: u64) -> Result<(), KvError> {
         let bt = self.block_tokens as u64;
-        let table = self
-            .tables
-            .get_mut(&id)
-            .ok_or(KvError::UnknownRequest(id))?;
+        let KvManager {
+            alloc,
+            prefix,
+            tables,
+            ..
+        } = self;
+        let table = tables.get_mut(&id).ok_or(KvError::UnknownRequest(id))?;
         let capacity = table.blocks.len() as u64 * bt;
         let want = table.tokens + table.reserved_tokens + tokens;
         let needed_tokens = want.saturating_sub(capacity);
         let need_blocks = needed_tokens.div_ceil(bt);
         if need_blocks > 0 {
-            self.alloc
-                .allocate_into(need_blocks, &mut table.blocks)
-                .map_err(|free| KvError::OutOfBlocks {
+            Self::allocate_evicting(alloc, prefix, need_blocks, &mut table.blocks).map_err(
+                |free| KvError::OutOfBlocks {
                     need: need_blocks,
                     free,
-                })?;
+                },
+            )?;
         }
         table.reserved_tokens += tokens;
         Ok(())
     }
 
-    /// Release everything held by `id` (request finished or preempted).
+    /// Seed `id`'s (empty) block table with the longest cached prefix of
+    /// `keys`, capped at `max_tokens` (callers cap below the full prompt
+    /// so at least one token is left to prefill). Returns the number of
+    /// prompt tokens covered by the shared blocks (0 when the prefix
+    /// cache is disabled or nothing matches).
+    pub fn seed_prefix(&mut self, id: RequestId, keys: &[BlockKey], max_tokens: u64) -> u64 {
+        let bt = self.block_tokens as u64;
+        let Some(pool) = self.prefix.as_mut() else {
+            return 0;
+        };
+        let table = self
+            .tables
+            .get_mut(&id)
+            .expect("seed_prefix before register");
+        assert!(
+            table.blocks.is_empty() && table.tokens == 0,
+            "seed_prefix into a non-empty table"
+        );
+        let max_blocks = (max_tokens / bt) as usize;
+        let n = pool.acquire(keys, max_blocks, &mut table.blocks);
+        table.shared = n;
+        table.tokens = n as u64 * bt;
+        table.tokens
+    }
+
+    /// Longest cached prefix of `keys` in tokens (read-only; the routing
+    /// overlap signal). 0 when the prefix cache is disabled.
+    pub fn probe_prefix(&self, keys: &[BlockKey]) -> u64 {
+        self.prefix
+            .as_ref()
+            .map_or(0, |p| p.matched(keys) as u64 * self.block_tokens as u64)
+    }
+
+    /// Tokens of prompt content resident in the prefix index (held +
+    /// cached): the router's residency signal.
+    pub fn prefix_resident_tokens(&self) -> u64 {
+        self.prefix
+            .as_ref()
+            .map_or(0, |p| p.resident() * self.block_tokens as u64)
+    }
+
+    /// Cached prefix blocks evicted under allocation pressure (lifetime).
+    pub fn prefix_evictions(&self) -> u64 {
+        self.prefix.as_ref().map_or(0, |p| p.evictions())
+    }
+
+    /// Cached (unreferenced, evictable) prefix blocks.
+    pub fn cached_blocks(&self) -> u64 {
+        self.prefix.as_ref().map_or(0, |p| p.cached())
+    }
+
+    /// Release everything held by `id` (preemption, cancel, transfer —
+    /// any path where the KV content is *not* known-good to completion).
+    /// Shared blocks drop their reference (decaying to cached when this
+    /// was the last holder); private blocks free outright.
     pub fn release(&mut self, id: RequestId) -> Result<(), KvError> {
         let table = self.tables.remove(&id).ok_or(KvError::UnknownRequest(id))?;
-        self.alloc.release(&table.blocks);
+        if let Some(pool) = self.prefix.as_mut() {
+            for b in &table.blocks[..table.shared] {
+                pool.decref(*b);
+            }
+            self.alloc.release(&table.blocks[table.shared..]);
+        } else {
+            self.alloc.release(&table.blocks);
+        }
+        Ok(())
+    }
+
+    /// Release a *finished* request, decaying its full prompt blocks
+    /// (identified by `keys`, as produced by [`block_keys`]) into the
+    /// cached pool for future reuse. Blocks holding the prompt tail or
+    /// generated tokens, and blocks whose content is already indexed,
+    /// free normally. Equivalent to [`release`](KvManager::release) when
+    /// the prefix cache is disabled.
+    pub fn finish_release(&mut self, id: RequestId, keys: &[BlockKey]) -> Result<(), KvError> {
+        let Some(pool) = self.prefix.as_mut() else {
+            return self.release(id);
+        };
+        let table = self.tables.remove(&id).ok_or(KvError::UnknownRequest(id))?;
+        let mut freed: Vec<BlockId> = Vec::new();
+        for (i, b) in table.blocks.iter().enumerate() {
+            if i < table.shared {
+                pool.decref(*b);
+            } else if i < keys.len() {
+                if !pool.insert(keys[i], *b) {
+                    freed.push(*b); // content already cached elsewhere
+                }
+            } else {
+                freed.push(*b);
+            }
+        }
+        self.alloc.release(&freed);
         Ok(())
     }
 
@@ -173,20 +323,36 @@ impl KvManager {
 
     /// Used blocks across all requests.
     pub fn used_blocks(&self) -> u64 {
-        self.alloc.total() - self.alloc.free()
+        self.alloc.total() - self.free_blocks()
     }
 
     /// Invariant check used by property tests: allocator accounting must
-    /// match the sum of table holdings, and no block may appear twice.
+    /// match the sum of table holdings plus prefix-index residency, no
+    /// block may appear twice, and shared-block refcounts must equal
+    /// live-table membership.
     pub fn check_invariants(&self) -> Result<(), String> {
-        let mut seen = std::collections::HashSet::new();
-        let mut held = 0u64;
+        let mut refs: HashMap<BlockId, u32> = HashMap::new();
+        let mut private = std::collections::HashSet::new();
+        let mut held_private = 0u64;
         for (id, t) in &self.tables {
-            held += t.blocks.len() as u64;
-            for b in &t.blocks {
-                if !seen.insert(*b) {
+            if t.shared > t.blocks.len() {
+                return Err(format!(
+                    "req {id}: shared {} exceeds table size {}",
+                    t.shared,
+                    t.blocks.len()
+                ));
+            }
+            if t.shared > 0 && self.prefix.is_none() {
+                return Err(format!("req {id}: shared blocks without a prefix index"));
+            }
+            for b in &t.blocks[..t.shared] {
+                *refs.entry(*b).or_insert(0) += 1;
+            }
+            for b in &t.blocks[t.shared..] {
+                if !private.insert(*b) {
                     return Err(format!("block {b} double-owned (req {id})"));
                 }
+                held_private += 1;
             }
             let cap = t.blocks.len() as u64 * self.block_tokens as u64;
             if t.tokens + t.reserved_tokens > cap {
@@ -196,9 +362,24 @@ impl KvManager {
                 ));
             }
         }
-        if held + self.alloc.free() != self.alloc.total() {
+        let mut pool_blocks = 0u64;
+        if let Some(pool) = &self.prefix {
+            pool.check_invariants(&refs)?;
+            pool_blocks = pool.resident();
+            for b in &private {
+                if pool.contains_block(*b) {
+                    return Err(format!("private block {b} also in the prefix index"));
+                }
+            }
+        }
+        for b in refs.keys() {
+            if private.contains(b) {
+                return Err(format!("block {b} owned both shared and private"));
+            }
+        }
+        if held_private + pool_blocks + self.alloc.free() != self.alloc.total() {
             return Err(format!(
-                "leak: held {held} + free {} != total {}",
+                "leak: private {held_private} + prefix {pool_blocks} + free {} != total {}",
                 self.alloc.free(),
                 self.alloc.total()
             ));
@@ -269,6 +450,27 @@ mod tests {
     }
 
     #[test]
+    fn can_append_counts_reservations_against_headroom() {
+        // Regression: headroom used to ignore reserved_tokens, promising
+        // capacity the look-ahead slots had already claimed.
+        let mut kv = KvManager::new(2, 16);
+        kv.register(1);
+        kv.append(1, 10).unwrap(); // 1 block, 6 tokens of headroom
+        assert!(kv.can_append(1, 6), "headroom genuinely free before reserving");
+        kv.reserve(1, 6).unwrap(); // look-ahead claims those 6 slots
+        kv.register(2);
+        kv.append(2, 16).unwrap(); // allocator now empty
+        assert_eq!(kv.free_blocks(), 0);
+        assert!(
+            !kv.can_append(1, 1),
+            "reserved look-ahead slots are not spare headroom"
+        );
+        kv.release(2).unwrap();
+        assert!(kv.can_append(1, 6), "a fresh block restores capacity");
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
     fn free_fraction_for_watermark() {
         let mut kv = KvManager::new(100, 16);
         kv.register(1);
@@ -277,36 +479,136 @@ mod tests {
     }
 
     #[test]
+    fn seed_matches_cached_prefix_and_caps_below_full_prompt() {
+        let mut kv = KvManager::new(16, 16);
+        kv.enable_prefix_cache();
+        let keys = [100u64, 200, 300, 400];
+        // First request computes everything, finishes, decays 4 blocks.
+        kv.register(1);
+        kv.append(1, 70).unwrap(); // 64 prompt-block tokens + tail
+        kv.finish_release(1, &keys).unwrap();
+        assert_eq!(kv.cached_blocks(), 4);
+        assert_eq!(kv.free_blocks(), 16, "cached blocks count as free");
+        assert_eq!(kv.prefix_resident_tokens(), 64);
+
+        // Identical prompt: seeds the shared prefix, capped below the
+        // full prompt so one token is left to prefill.
+        kv.register(2);
+        let seeded = kv.seed_prefix(2, &keys, 64 - 1);
+        assert_eq!(seeded, 48, "cap of 63 tokens admits 3 full blocks");
+        assert_eq!(kv.blocks_of(2), 3);
+        assert_eq!(kv.tokens_of(2), 48);
+        assert_eq!(kv.probe_prefix(&keys), 64);
+        kv.check_invariants().unwrap();
+        kv.release(2).unwrap(); // decay back
+        assert_eq!(kv.cached_blocks(), 4);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn allocation_pressure_evicts_cached_blocks_before_failing() {
+        let mut kv = KvManager::new(4, 16);
+        kv.enable_prefix_cache();
+        kv.register(1);
+        kv.append(1, 64).unwrap();
+        kv.finish_release(1, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(kv.cached_blocks(), 4);
+        assert_eq!(kv.free_blocks(), 4);
+        // A new request needs 3 fresh blocks: LRU eviction makes room.
+        kv.register(2);
+        kv.append(2, 48).unwrap();
+        assert_eq!(kv.prefix_evictions(), 3);
+        assert_eq!(kv.cached_blocks(), 1);
+        // And true exhaustion still fails atomically.
+        let err = kv.append(2, 32).unwrap_err();
+        assert_eq!(err, KvError::OutOfBlocks { need: 2, free: 1 });
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn duplicate_content_frees_instead_of_double_indexing() {
+        let mut kv = KvManager::new(8, 16);
+        kv.enable_prefix_cache();
+        // Two concurrent requests with identical prompts, neither seeded
+        // (the cache was cold when both arrived).
+        kv.register(1);
+        kv.register(2);
+        kv.append(1, 32).unwrap();
+        kv.append(2, 32).unwrap();
+        kv.finish_release(1, &[7, 8]).unwrap();
+        kv.finish_release(2, &[7, 8]).unwrap();
+        assert_eq!(kv.cached_blocks(), 2, "second copy freed, not indexed");
+        assert_eq!(kv.free_blocks(), 8);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
     fn property_no_leak_under_random_ops() {
         use crate::util::proptest::check;
-        check(64, |g| {
+        check(96, |g| {
             let total = g.u64_range(4, 64);
+            let with_prefix = g.bool();
             let mut kv = KvManager::new(total, 16);
-            let mut live: Vec<RequestId> = Vec::new();
+            if with_prefix {
+                kv.enable_prefix_cache();
+            }
+            // Requests in the same class share a key chain, so seeded
+            // prefixes, duplicate decays and refcount sharing all occur.
+            let keys_for = |class: u64| -> Vec<BlockKey> {
+                (0..6).map(|i| class * 1000 + 100 + i).collect()
+            };
+            let mut live: Vec<(RequestId, u64)> = Vec::new();
             let mut next_id = 0u64;
             for _ in 0..g.usize_range(5, 60) {
-                match g.u64_range(0, 3) {
+                match g.u64_range(0, 5) {
                     0 => {
+                        let class = g.u64_range(0, 2);
                         kv.register(next_id);
-                        live.push(next_id);
+                        // Half the new requests try to seed the cached
+                        // prefix of their class (max 5 of the 6 blocks).
+                        if g.bool() {
+                            kv.seed_prefix(next_id, &keys_for(class), 6 * 16 - 1);
+                        }
+                        live.push((next_id, class));
                         next_id += 1;
                     }
                     1 if !live.is_empty() => {
-                        let id = *g.choose(&live);
+                        let (id, _) = *g.choose(&live);
                         let _ = kv.append(id, g.u64_range(1, 64));
                     }
                     2 if !live.is_empty() => {
-                        let id = *g.choose(&live);
+                        let (id, _) = *g.choose(&live);
                         let _ = kv.reserve(id, g.u64_range(1, 32));
                     }
                     3 if !live.is_empty() => {
+                        // Preemption-style release: progress discarded,
+                        // shared blocks decay.
                         let idx = g.usize_range(0, live.len() - 1);
-                        let id = live.swap_remove(idx);
+                        let (id, _) = live.swap_remove(idx);
                         kv.release(id).map_err(|e| e.to_string())?;
+                    }
+                    4 | 5 if !live.is_empty() => {
+                        // Finish: full prompt blocks decay into the pool.
+                        let idx = g.usize_range(0, live.len() - 1);
+                        let (id, class) = live.swap_remove(idx);
+                        kv.finish_release(id, &keys_for(class))
+                            .map_err(|e| e.to_string())?;
                     }
                     _ => {}
                 }
                 kv.check_invariants()?;
+            }
+            // Draining every request must leave zero private holdings.
+            for (id, _) in live {
+                kv.release(id).map_err(|e| e.to_string())?;
+            }
+            kv.check_invariants()?;
+            if kv.free_blocks() != kv.total_blocks() {
+                return Err(format!(
+                    "drained manager not fully free: {} of {}",
+                    kv.free_blocks(),
+                    kv.total_blocks()
+                ));
             }
             Ok(())
         });

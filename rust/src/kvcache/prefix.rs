@@ -1,0 +1,373 @@
+//! Block-granular prefix caching (SGLang-radix-style; Zheng et al. 2024).
+//!
+//! [`PrefixIndex`] lets finished requests *decay* their prompt KV blocks
+//! into a cached pool instead of freeing them, so later requests with an
+//! overlapping prompt skip recomputing the shared prefix.
+//!
+//! The index is keyed by **chained block hashes**: block `i`'s key mixes
+//! block `i-1`'s key with block `i`'s content, so one key identifies the
+//! entire token prefix up to and including that block (vLLM's prefix-hash
+//! trick). A flat `HashMap` over chained keys is equivalent to a radix
+//! tree over token sequences — longest-prefix match is "walk the keys in
+//! order until the first miss" — without the tree's pointer chasing.
+//!
+//! Lifecycle of a cached block:
+//!
+//! - **held** (`refs > 0`): shared by one or more live block tables;
+//!   never evictable.
+//! - **cached** (`refs == 0`): content retained speculatively, sitting in
+//!   a deterministic LRU (ordered by a logical touch tick). Cached blocks
+//!   count as *free* for every capacity signal — they are reclaimed on
+//!   demand by [`evict`](PrefixIndex::evict) before the allocator reports
+//!   `OutOfBlocks`.
+//!
+//! Only *full prompt* blocks are indexable: a block holding the prompt
+//! tail plus generated tokens is not a pure function of the prompt and
+//! frees normally.
+
+use std::collections::{BTreeSet, HashMap};
+
+use super::BlockId;
+use crate::request::Request;
+
+/// Chained content hash identifying a whole prompt prefix at block
+/// granularity.
+pub type BlockKey = u64;
+
+const CHAIN_SEED: u64 = 0x6b76_7072_6566_6978; // "kvprefix"
+const BLOCK_SALT: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// SplitMix64 finalizer: a cheap, well-mixed 64-bit permutation.
+fn mix(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// Chained block keys for `r`'s prompt, one per **full** prompt block
+/// (`prompt_len / block_tokens`, floor). Real token ids are hashed when
+/// the request carries them; synthetic requests fall back to a
+/// deterministic hash of `(prefix_id, block index)`, so two synthetic
+/// requests share exactly the blocks where their `prefix_id` matches.
+/// A request with neither payload nor `prefix_id` has no cacheable
+/// identity and returns no keys.
+pub fn block_keys(r: &Request, block_tokens: u32) -> Vec<BlockKey> {
+    let full = (r.prompt_len / block_tokens as u64) as usize;
+    let mut keys = Vec::with_capacity(full);
+    if let Some(tokens) = &r.prompt_tokens {
+        let mut chain = CHAIN_SEED;
+        for block in tokens.chunks_exact(block_tokens as usize) {
+            let mut h = chain;
+            for t in block {
+                h = mix(h ^ (*t as u32 as u64));
+            }
+            chain = mix(h ^ BLOCK_SALT);
+            keys.push(chain);
+        }
+    } else if let Some(pid) = r.prefix_id {
+        let mut chain = mix(pid ^ CHAIN_SEED);
+        for i in 0..full {
+            chain = mix(chain ^ (i as u64).wrapping_mul(BLOCK_SALT));
+            keys.push(chain);
+        }
+    }
+    debug_assert!(keys.len() <= full);
+    keys
+}
+
+#[derive(Debug)]
+struct CachedBlock {
+    key: BlockKey,
+    /// Live block tables currently sharing this block.
+    refs: u32,
+    /// Logical LRU tick of the last release into the cached pool; only
+    /// meaningful while `refs == 0` (it addresses the `lru` entry).
+    last_use: u64,
+}
+
+/// The prefix index + cached-block pool (one per [`KvManager`]).
+///
+/// [`KvManager`]: super::KvManager
+#[derive(Debug, Default)]
+pub struct PrefixIndex {
+    /// Chained prefix key → physical block holding that content.
+    by_key: HashMap<BlockKey, BlockId>,
+    /// Every block the index knows about (held or cached).
+    blocks: HashMap<BlockId, CachedBlock>,
+    /// Evictable blocks (`refs == 0`), ordered oldest-touch first. The
+    /// `(tick, id)` pair makes eviction order deterministic.
+    lru: BTreeSet<(u64, BlockId)>,
+    /// Logical clock bumped on every pool insertion.
+    tick: u64,
+    /// Cached blocks reclaimed under allocation pressure (lifetime
+    /// counter).
+    evictions: u64,
+}
+
+impl PrefixIndex {
+    pub fn new() -> PrefixIndex {
+        PrefixIndex::default()
+    }
+
+    /// Longest cached prefix of `keys`, in blocks (read-only probe; the
+    /// routing signal).
+    pub fn matched(&self, keys: &[BlockKey]) -> usize {
+        keys.iter()
+            .take_while(|k| self.by_key.contains_key(k))
+            .count()
+    }
+
+    /// Take a reference on the longest cached prefix of `keys` (capped at
+    /// `max_blocks`), appending the shared block ids to `out` in prefix
+    /// order. Returns the number of blocks acquired.
+    pub fn acquire(
+        &mut self,
+        keys: &[BlockKey],
+        max_blocks: usize,
+        out: &mut Vec<BlockId>,
+    ) -> usize {
+        let mut n = 0;
+        for key in keys.iter().take(max_blocks) {
+            let Some(&b) = self.by_key.get(key) else { break };
+            let c = self.blocks.get_mut(&b).expect("indexed block missing");
+            if c.refs == 0 {
+                self.lru.remove(&(c.last_use, b));
+            }
+            c.refs += 1;
+            out.push(b);
+            n += 1;
+        }
+        n
+    }
+
+    /// Decay a finished request's private block into the cached pool
+    /// under `key`. Returns false when the content is already indexed
+    /// (the caller frees the duplicate block to the allocator instead).
+    pub fn insert(&mut self, key: BlockKey, block: BlockId) -> bool {
+        if self.by_key.contains_key(&key) {
+            return false;
+        }
+        self.tick += 1;
+        self.by_key.insert(key, block);
+        let prev = self.blocks.insert(
+            block,
+            CachedBlock {
+                key,
+                refs: 0,
+                last_use: self.tick,
+            },
+        );
+        assert!(prev.is_none(), "block {block} already cached");
+        self.lru.insert((self.tick, block));
+        true
+    }
+
+    /// Drop one table's reference on a shared block; the last reference
+    /// decays it into the cached (evictable) pool rather than freeing it.
+    pub fn decref(&mut self, block: BlockId) {
+        let c = self.blocks.get_mut(&block).expect("decref of unknown block");
+        assert!(c.refs > 0, "refcount underflow on block {block}");
+        c.refs -= 1;
+        if c.refs == 0 {
+            self.tick += 1;
+            c.last_use = self.tick;
+            self.lru.insert((self.tick, block));
+        }
+    }
+
+    /// Reclaim up to `want` cached blocks, oldest first, pushing the
+    /// freed ids into `freed` (the caller returns them to the
+    /// allocator). Returns the number evicted.
+    pub fn evict(&mut self, want: u64, freed: &mut Vec<BlockId>) -> u64 {
+        let mut n = 0;
+        while n < want {
+            let Some(&(tick, b)) = self.lru.iter().next() else {
+                break;
+            };
+            self.lru.remove(&(tick, b));
+            let c = self.blocks.remove(&b).expect("lru entry without block");
+            debug_assert_eq!(c.refs, 0, "evicting a referenced block");
+            let owner = self.by_key.remove(&c.key);
+            debug_assert_eq!(owner, Some(b));
+            freed.push(b);
+            n += 1;
+        }
+        self.evictions += n;
+        n
+    }
+
+    /// Evictable (`refs == 0`) blocks — these count as free capacity.
+    pub fn cached(&self) -> u64 {
+        self.lru.len() as u64
+    }
+
+    /// Every block the index holds content for (held + cached): the
+    /// router's residency signal.
+    pub fn resident(&self) -> u64 {
+        self.blocks.len() as u64
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn contains_block(&self, b: BlockId) -> bool {
+        self.blocks.contains_key(&b)
+    }
+
+    /// Internal consistency against the block tables' view:
+    /// `expected_refs[b]` is how many live tables list shared block `b`.
+    pub fn check_invariants(
+        &self,
+        expected_refs: &HashMap<BlockId, u32>,
+    ) -> Result<(), String> {
+        if self.by_key.len() != self.blocks.len() {
+            return Err(format!(
+                "key index size {} != block set size {}",
+                self.by_key.len(),
+                self.blocks.len()
+            ));
+        }
+        let mut zero = 0u64;
+        for (b, c) in &self.blocks {
+            if self.by_key.get(&c.key) != Some(b) {
+                return Err(format!("block {b}: key→block index mismatch"));
+            }
+            let want = expected_refs.get(b).copied().unwrap_or(0);
+            if c.refs != want {
+                return Err(format!(
+                    "block {b}: refs {} != table membership {want}",
+                    c.refs
+                ));
+            }
+            let in_lru = self.lru.contains(&(c.last_use, *b));
+            if (c.refs == 0) != in_lru {
+                return Err(format!(
+                    "block {b}: refs {} but lru membership {in_lru}",
+                    c.refs
+                ));
+            }
+            if c.refs == 0 {
+                zero += 1;
+            }
+        }
+        for b in expected_refs.keys() {
+            if !self.blocks.contains_key(b) {
+                return Err(format!("shared block {b} missing from prefix index"));
+            }
+        }
+        if zero != self.lru.len() as u64 {
+            return Err(format!(
+                "lru size {} != zero-ref block count {zero}",
+                self.lru.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req_with_tokens(id: u64, tokens: Vec<i32>) -> Request {
+        let n = tokens.len() as u64;
+        Request::new(id, 0.0, n, 1).with_prompt_tokens(tokens)
+    }
+
+    #[test]
+    fn chained_keys_share_prefix_and_diverge_at_first_difference() {
+        let a = req_with_tokens(1, (0..64).collect());
+        let mut btoks: Vec<i32> = (0..64).collect();
+        btoks[40] = 999; // differs inside block 2
+        let b = req_with_tokens(2, btoks);
+        let ka = block_keys(&a, 16);
+        let kb = block_keys(&b, 16);
+        assert_eq!(ka.len(), 4);
+        assert_eq!(ka[..2], kb[..2], "identical prefix blocks share keys");
+        assert_ne!(ka[2], kb[2], "divergent block gets a new key");
+        assert_ne!(ka[3], kb[3], "chain propagates the divergence");
+    }
+
+    #[test]
+    fn partial_tail_block_is_not_keyed() {
+        let r = req_with_tokens(1, (0..40).collect());
+        assert_eq!(block_keys(&r, 16).len(), 2); // 40/16 = 2 full blocks
+    }
+
+    #[test]
+    fn fallback_keys_follow_prefix_id() {
+        let a = Request::new(1, 0.0, 64, 1).with_prefix_id(7);
+        let b = Request::new(2, 0.0, 48, 1).with_prefix_id(7);
+        let c = Request::new(3, 0.0, 64, 1).with_prefix_id(8);
+        let ka = block_keys(&a, 16);
+        let kb = block_keys(&b, 16);
+        let kc = block_keys(&c, 16);
+        assert_eq!(ka[..3], kb[..3], "same prefix_id shares every block");
+        assert!(ka.iter().zip(&kc).all(|(x, y)| x != y));
+        // No identity at all → nothing cacheable.
+        assert!(block_keys(&Request::new(4, 0.0, 64, 1), 16).is_empty());
+    }
+
+    #[test]
+    fn acquire_decay_evict_roundtrip() {
+        let mut idx = PrefixIndex::new();
+        assert!(idx.insert(11, 0));
+        assert!(idx.insert(22, 1));
+        assert!(!idx.insert(11, 2), "duplicate content is rejected");
+        assert_eq!(idx.cached(), 2);
+        assert_eq!(idx.resident(), 2);
+
+        // Longest-prefix acquire stops at the first miss.
+        let mut table = Vec::new();
+        let n = idx.acquire(&[11, 99, 22], 8, &mut table);
+        assert_eq!(n, 1);
+        assert_eq!(table, vec![0]);
+        assert_eq!(idx.cached(), 1, "held block left the LRU");
+
+        // A held block is never evicted.
+        let mut freed = Vec::new();
+        assert_eq!(idx.evict(10, &mut freed), 1);
+        assert_eq!(freed, vec![1]);
+        assert_eq!(idx.evictions(), 1);
+
+        // Decay back to cached, then evict.
+        idx.decref(0);
+        assert_eq!(idx.cached(), 1);
+        freed.clear();
+        assert_eq!(idx.evict(1, &mut freed), 1);
+        assert_eq!(freed, vec![0]);
+        assert_eq!(idx.resident(), 0);
+        idx.check_invariants(&HashMap::new()).unwrap();
+    }
+
+    #[test]
+    fn eviction_is_lru_ordered() {
+        let mut idx = PrefixIndex::new();
+        idx.insert(1, 10);
+        idx.insert(2, 20);
+        idx.insert(3, 30);
+        // Touch block 10 (acquire + decay) so it becomes most recent.
+        let mut t = Vec::new();
+        idx.acquire(&[1], 8, &mut t);
+        idx.decref(10);
+        let mut freed = Vec::new();
+        idx.evict(2, &mut freed);
+        assert_eq!(freed, vec![20, 30], "oldest-touched evict first");
+        idx.check_invariants(&HashMap::new()).unwrap();
+    }
+
+    #[test]
+    fn acquire_respects_block_cap() {
+        let mut idx = PrefixIndex::new();
+        idx.insert(1, 10);
+        idx.insert(2, 20);
+        let mut t = Vec::new();
+        assert_eq!(idx.acquire(&[1, 2], 1, &mut t), 1);
+        assert_eq!(t, vec![10]);
+        assert_eq!(idx.matched(&[1, 2]), 2, "probe ignores the cap");
+    }
+}

@@ -32,6 +32,7 @@ use duetserve::sched::{optimize_partition, scheduler_for};
 use duetserve::server::http::{HttpConfig, HttpServer, DEFAULT_MAX_BODY};
 use duetserve::server::{Server, ServerCore, SubmitOptions, DEFAULT_QUEUE_DEPTH};
 use duetserve::util::tablefmt::Table;
+use duetserve::workload::sessions::{session_workload, SessionProfile};
 use duetserve::workload::synthetic::fixed_workload;
 use duetserve::workload::traces::{generate, trace_by_name, TraceKind};
 use duetserve::workload::Workload;
@@ -68,6 +69,7 @@ fn build_config(args: &Args) -> ServingConfig {
         eprintln!("error: --max-engine-time must be a positive number of engine-seconds");
         std::process::exit(2);
     }
+    cfg.prefix_cache = args.flag("prefix-cache");
     cfg
 }
 
@@ -92,6 +94,20 @@ fn default_router(topology: &str) -> &'static str {
 
 fn build_workload(args: &Args, qps: f64, seed: u64) -> Workload {
     let n = args.usize_or("n", 200);
+    if args.str_or("workload", "") == "sessions" {
+        let mix = SessionProfile::default_mix();
+        let p = SessionProfile {
+            sessions: args.usize_or("sessions", mix.sessions),
+            turns: args.usize_or("turns", mix.turns),
+            system_tokens: args.usize_or("system-tokens", mix.system_tokens as usize) as u64,
+            user_tokens: args.usize_or("user-tokens", mix.user_tokens as usize) as u64,
+            output_tokens: args.usize_or("osl", mix.output_tokens as usize) as u64,
+            tenants: args.usize_or("tenants", mix.tenants),
+            session_qps: qps,
+            mean_think_s: args.f64_or("think", mix.mean_think_s),
+        };
+        return session_workload(&p, seed);
+    }
     if let Some(kind) = args.get("trace").and_then(trace_by_name) {
         generate(kind, Some(n), qps, seed)
     } else {
@@ -116,7 +132,17 @@ fn parse_fleet_opts(args: &Args) -> FleetOpts {
     }
     let router = match args.one_of(
         "router",
-        &["round-robin", "rr", "least-loaded", "least-outstanding", "ll", "kv-pressure", "kv"],
+        &[
+            "round-robin",
+            "rr",
+            "least-loaded",
+            "least-outstanding",
+            "ll",
+            "kv-pressure",
+            "kv",
+            "kv-overlap",
+            "overlap",
+        ],
     ) {
         Ok(choice) => choice.map(str::to_string),
         Err(e) => {
@@ -204,6 +230,7 @@ fn cmd_serve(args: &Args) {
         cfg.policy.name(),
         cfg.tp
     );
+    let prefix_cache = cfg.prefix_cache;
     let rep = if topology == "disagg" {
         // Explicit --topology disagg: split the --replicas worker budget
         // into prefill and decode roles. This wins over the policy's own
@@ -252,6 +279,12 @@ fn cmd_serve(args: &Args) {
             }
         }
     };
+    if prefix_cache {
+        println!(
+            "prefix cache: {} hits, {} cached tokens, {} evictions",
+            rep.prefix_hits, rep.prefix_cached_tokens, rep.prefix_evictions
+        );
+    }
     let mut t = Table::new(Report::header());
     t.row(rep.row(qps));
     t.print();
@@ -334,9 +367,13 @@ fn cmd_serve_front(
     );
     let mut handles = Vec::new();
     for r in &w.requests {
-        // Trace requests carry lengths, not token values: synthesize a
-        // deterministic prompt of the right length.
-        let prompt: Vec<i32> = (0..r.prompt_len).map(|j| (j % 1024) as i32).collect();
+        // Session workloads carry real (materialized) prompt tokens; trace
+        // requests carry lengths only, so synthesize a deterministic
+        // prompt of the right length.
+        let prompt: Vec<i32> = r
+            .prompt_tokens
+            .clone()
+            .unwrap_or_else(|| (0..r.prompt_len).map(|j| (j % 1024) as i32).collect());
         let opts = SubmitOptions {
             max_new_tokens: r.output_len,
             arrival: Some(r.arrival),
@@ -547,9 +584,21 @@ USAGE: duetserve <serve|serve-http|traces|partition|e2e|config> [--options]
 
 serve:      --policy vllm|sglang|sglang-chunked|duet|dynamo
             --trace azure-code|azure-conv|mooncake | --isl N --osl N
+            --workload sessions       (multi-turn conversations with
+                                       per-tenant shared system prompts;
+                                       --sessions N --turns N --tenants N
+                                       --system-tokens N --user-tokens N
+                                       --think F tune the mix)
             --qps F --n N --model qwen3-8b|qwen3-14b|qwen3-32b --tp N
             --budget N --tbt-slo F --seed N
-            --replicas N --router round-robin|least-loaded|kv-pressure
+            --prefix-cache            (block-level prefix caching: finished
+                                       requests decay prompt KV blocks into
+                                       a cached LRU pool; admission seeds
+                                       the longest cached prefix)
+            --replicas N --router round-robin|least-loaded|kv-pressure|
+                                  kv-overlap (cache-aware: prefers the
+                                       worker holding the longest cached
+                                       prefix of the arriving prompt)
             --topology unified|disagg (disagg splits --replicas into
                                        prefill + decode role workers;
                                        needs --replicas >= 2)

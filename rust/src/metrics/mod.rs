@@ -248,6 +248,18 @@ pub struct Recorder {
     pub slo_checked: u64,
     /// Of those, gaps that exceeded the request's SLO.
     pub slo_violations: u64,
+    /// Requests whose admission matched a non-empty cached prefix
+    /// (`kvcache::prefix`).
+    pub prefix_hits: u64,
+    /// Prompt tokens served from cached prefix blocks instead of being
+    /// prefilled.
+    pub prefix_cached_tokens: u64,
+    /// Cached prefix blocks evicted under KV allocation pressure.
+    pub prefix_evictions: u64,
+    /// Prompt tokens actually computed by prefill iterations (equals the
+    /// prompt volume minus cache hits; the prefix bench's compute-drop
+    /// signal).
+    pub prefilled_tokens: u64,
 }
 
 impl Default for Recorder {
@@ -285,6 +297,10 @@ impl Recorder {
             busy_time: 0.0,
             slo_checked: 0,
             slo_violations: 0,
+            prefix_hits: 0,
+            prefix_cached_tokens: 0,
+            prefix_evictions: 0,
+            prefilled_tokens: 0,
         }
     }
 
@@ -370,6 +386,10 @@ impl Recorder {
         self.total_tokens += other.total_tokens;
         self.slo_checked += other.slo_checked;
         self.slo_violations += other.slo_violations;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_cached_tokens += other.prefix_cached_tokens;
+        self.prefix_evictions += other.prefix_evictions;
+        self.prefilled_tokens += other.prefilled_tokens;
         // An exact recorder that absorbed a streaming one lost its
         // sample history for the merged series: keep the mode accessor
         // truthful about what report() will answer from.
@@ -416,6 +436,10 @@ impl Recorder {
             queue_cap: None,
             engine_epoch: 0,
             engine_uptime_s: 0.0,
+            prefix_hits: self.prefix_hits,
+            prefix_cached_tokens: self.prefix_cached_tokens,
+            prefix_evictions: self.prefix_evictions,
+            prefilled_tokens: self.prefilled_tokens,
         }
     }
 }
@@ -457,6 +481,14 @@ pub struct Report {
     /// Total engine-clock seconds elapsed across all epochs (monotone
     /// per instance; the serving `/metrics` uptime counter).
     pub engine_uptime_s: f64,
+    /// Requests that matched a non-empty cached prefix at admission.
+    pub prefix_hits: u64,
+    /// Prompt tokens served from the prefix cache instead of prefilled.
+    pub prefix_cached_tokens: u64,
+    /// Cached prefix blocks evicted under KV pressure.
+    pub prefix_evictions: u64,
+    /// Prompt tokens actually computed by prefill iterations.
+    pub prefilled_tokens: u64,
 }
 
 impl Report {
@@ -597,6 +629,27 @@ mod tests {
         a.merge(&Recorder::new());
         assert_eq!(a.slo_checked, 4);
         assert_eq!(a.slo_violations, 1);
+    }
+
+    #[test]
+    fn merge_sums_prefix_counters() {
+        let mut a = Recorder::new();
+        a.prefix_hits = 2;
+        a.prefix_cached_tokens = 96;
+        a.prefix_evictions = 1;
+        a.prefilled_tokens = 500;
+        let mut b = Recorder::new();
+        b.prefix_hits = 3;
+        b.prefix_cached_tokens = 64;
+        b.prefix_evictions = 4;
+        b.prefilled_tokens = 700;
+        a.merge(&b);
+        a.duration = 1.0;
+        let rep = a.report("p");
+        assert_eq!(rep.prefix_hits, 5);
+        assert_eq!(rep.prefix_cached_tokens, 160);
+        assert_eq!(rep.prefix_evictions, 5);
+        assert_eq!(rep.prefilled_tokens, 1200);
     }
 
     #[test]

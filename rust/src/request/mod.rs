@@ -47,6 +47,12 @@ pub struct Request {
     /// Per-request decode TBT SLO in seconds, when the submitter set one
     /// (attainment is accounted in `metrics::Recorder`).
     pub slo_tbt: Option<f64>,
+    /// Synthetic prefix identity (tenant / shared-system-prompt class)
+    /// for workloads that carry no real token payload: two requests with
+    /// the same `prefix_id` are treated as sharing their entire common
+    /// prompt prefix by the prefix cache (`kvcache::prefix::block_keys`).
+    /// Ignored when `prompt_tokens` is present.
+    pub prefix_id: Option<u64>,
 }
 
 impl Request {
@@ -66,6 +72,7 @@ impl Request {
             token_times: Vec::new(),
             prompt_tokens: None,
             slo_tbt: None,
+            prefix_id: None,
         }
     }
 
@@ -87,6 +94,12 @@ impl Request {
         self
     }
 
+    /// Attach a synthetic prefix identity (see [`Request::prefix_id`]).
+    pub fn with_prefix_id(mut self, prefix_id: u64) -> Request {
+        self.prefix_id = Some(prefix_id);
+        self
+    }
+
     /// A fresh copy for recompute-style retry (preemption, role
     /// reconfiguration): identity and payload survive, all progress is
     /// discarded.
@@ -94,6 +107,7 @@ impl Request {
         let mut fresh = Request::new(self.id, self.arrival, self.prompt_len, self.output_len);
         fresh.prompt_tokens = self.prompt_tokens.clone();
         fresh.slo_tbt = self.slo_tbt;
+        fresh.prefix_id = self.prefix_id;
         fresh
     }
 
@@ -216,11 +230,13 @@ mod tests {
     fn reset_for_retry_keeps_identity_drops_progress() {
         let mut r = Request::new(3, 1.5, 4, 8)
             .with_prompt_tokens(vec![9, 8, 7, 6])
-            .with_slo_tbt(0.1);
+            .with_slo_tbt(0.1)
+            .with_prefix_id(42);
         r.advance_prefill(4);
         r.advance_decode(2.0);
         let fresh = r.reset_for_retry();
         assert_eq!(fresh.id, 3);
+        assert_eq!(fresh.prefix_id, Some(42));
         assert_eq!(fresh.arrival, 1.5);
         assert_eq!(fresh.prompt_len, 4);
         assert_eq!(fresh.output_len, 8);

@@ -223,9 +223,11 @@ pub fn build_chunked_batch(
         if budget == 0 || batch_slots == 0 {
             break;
         }
-        // Admission control: the whole prompt (plus one output token) must
-        // fit above the watermark, otherwise admitting risks thrashing.
-        let need = r.prompt_len + 1;
+        // Admission control: the not-yet-prefilled prompt suffix (plus one
+        // output token) must fit above the watermark, otherwise admitting
+        // risks thrashing. With prefix caching a seeded request's cached
+        // prefix is already resident, so only the suffix costs KV.
+        let need = r.remaining_prompt() + 1;
         if need > kv_free || kv_free - need < watermark_tokens {
             break; // FCFS: do not skip ahead of a blocked head-of-line
         }

@@ -44,16 +44,18 @@ impl Scheduler for SglangDefaultScheduler {
                 if prefill.len() >= self.max_batch {
                     break;
                 }
-                let need = r.prompt_len + 1;
-                if need > kv_free || tokens + r.prompt_len > self.prefill_batch_tokens {
+                // Prefix-seeded requests only need KV (and prefill work)
+                // for the uncached prompt suffix.
+                let need = r.remaining_prompt() + 1;
+                if need > kv_free || tokens + r.remaining_prompt() > self.prefill_batch_tokens {
                     break;
                 }
                 prefill.push(PrefillChunk {
                     id: r.id,
-                    tokens: r.prompt_len,
+                    tokens: r.remaining_prompt(),
                     admit: true,
                 });
-                tokens += r.prompt_len;
+                tokens += r.remaining_prompt();
                 kv_free -= need;
             }
             // Unfinished running prefills also continue here.

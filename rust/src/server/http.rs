@@ -556,6 +556,10 @@ pub(crate) fn report_json(rep: &Report) -> Json {
         ),
         ("engine_epoch", Json::Num(rep.engine_epoch as f64)),
         ("uptime_engine_seconds", Json::Num(rep.engine_uptime_s)),
+        ("prefix_hits", Json::Num(rep.prefix_hits as f64)),
+        ("prefix_cached_tokens", Json::Num(rep.prefix_cached_tokens as f64)),
+        ("prefix_evictions", Json::Num(rep.prefix_evictions as f64)),
+        ("prefilled_tokens", Json::Num(rep.prefilled_tokens as f64)),
     ])
 }
 
@@ -712,6 +716,34 @@ pub(crate) fn render_prometheus(rep: Option<&Report>, stats: &HttpStats) -> Stri
                 att,
             );
         }
+        prom_metric(
+            &mut out,
+            "duetserve_prefix_hits_total",
+            "counter",
+            "Requests seeded with a non-empty cached prefix at admission",
+            r.prefix_hits as f64,
+        );
+        prom_metric(
+            &mut out,
+            "duetserve_prefix_cached_tokens_total",
+            "counter",
+            "Prompt tokens served from the prefix cache instead of prefill",
+            r.prefix_cached_tokens as f64,
+        );
+        prom_metric(
+            &mut out,
+            "duetserve_prefix_evictions_total",
+            "counter",
+            "Cached-unreferenced KV blocks evicted under allocation pressure",
+            r.prefix_evictions as f64,
+        );
+        prom_metric(
+            &mut out,
+            "duetserve_prefilled_tokens_total",
+            "counter",
+            "Prompt tokens actually computed by prefill",
+            r.prefilled_tokens as f64,
+        );
     }
     out
 }
@@ -1435,6 +1467,8 @@ mod tests {
         stats.tokens_streamed_total.store(17, Ordering::Relaxed);
         let mut rep = crate::metrics::Recorder::new().report("unit");
         rep.queue_cap = Some(64);
+        rep.prefix_hits = 3;
+        rep.prefix_cached_tokens = 96;
         let text = render_prometheus(Some(&rep), &stats);
         assert!(text.contains("duetserve_http_requests_total 4"));
         assert!(text.contains("duetserve_http_tokens_streamed_total 17"));
@@ -1444,10 +1478,15 @@ mod tests {
         assert!(text.contains("# TYPE duetserve_engine_clock_seconds gauge"));
         assert!(text.contains("duetserve_engine_epoch 0"));
         assert!(text.contains("# TYPE duetserve_uptime_engine_seconds_total counter"));
+        assert!(text.contains("duetserve_prefix_hits_total 3"));
+        assert!(text.contains("duetserve_prefix_cached_tokens_total 96"));
+        assert!(text.contains("duetserve_prefix_evictions_total 0"));
+        assert!(text.contains("# TYPE duetserve_prefilled_tokens_total counter"));
         // Without a snapshot, only transport metrics render.
         let text = render_prometheus(None, &stats);
         assert!(!text.contains("duetserve_engine_completed_total"));
         assert!(!text.contains("duetserve_queue_cap"));
+        assert!(!text.contains("duetserve_prefix_hits_total"));
     }
 
     #[test]

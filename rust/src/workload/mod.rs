@@ -9,10 +9,12 @@
 //! the fixed-ISL/OSL workloads of Table 2 and the Fig. 2 demo workload.
 
 pub mod arrivals;
+pub mod sessions;
 pub mod synthetic;
 pub mod traces;
 
 pub use arrivals::poisson_arrivals;
+pub use sessions::{session_workload, shared_prefix_workload, SessionProfile};
 pub use synthetic::fixed_workload;
 pub use traces::{trace_by_name, TraceKind, TraceStats};
 

@@ -1,0 +1,279 @@
+//! Multi-turn session workloads for prefix-cache evaluation.
+//!
+//! Real conversational traffic (Azure Conversation, Mooncake) is not a
+//! stream of independent prompts: turn `k` of a session resends turn
+//! `k-1`'s entire context plus the assistant's reply and one new user
+//! message, and every session under a tenant opens with the same system
+//! prompt. That structure is exactly what block-level prefix caching
+//! (`kvcache::prefix`) exploits, so these generators *materialize* prompt
+//! token ids deterministically: turn `k`'s token vector is a strict
+//! extension of turn `k-1`'s, and same-tenant sessions share their system
+//! prefix byte-for-byte. The prefix index then discovers the sharing
+//! through content hashes alone — nothing here talks to the cache.
+//!
+//! Arrivals follow the existing processes: session starts are Poisson
+//! ([`poisson_arrivals`]), turns within a session are separated by
+//! exponential think times.
+
+use crate::request::Request;
+use crate::util::rng::Rng;
+use crate::workload::arrivals::poisson_arrivals;
+use crate::workload::Workload;
+
+/// Shape of a multi-turn session mix.
+#[derive(Debug, Clone)]
+pub struct SessionProfile {
+    /// Number of concurrent conversation sessions.
+    pub sessions: usize,
+    /// Turns per session (each turn is one request).
+    pub turns: usize,
+    /// Shared system-prompt length per tenant, tokens.
+    pub system_tokens: u64,
+    /// New user-message length per turn, tokens.
+    pub user_tokens: u64,
+    /// Assistant reply length per turn (the request's `output_len`; the
+    /// reply is replayed into the next turn's prompt as history).
+    pub output_tokens: u64,
+    /// Tenants; session `s` belongs to tenant `s % tenants` and shares its
+    /// system prompt with every other session of that tenant.
+    pub tenants: usize,
+    /// Session-start rate (sessions/second, Poisson).
+    pub session_qps: f64,
+    /// Mean user think time between a turn's arrival and the next, seconds.
+    pub mean_think_s: f64,
+}
+
+impl SessionProfile {
+    /// A small default mix: 32 sessions × 4 turns, 512-token system
+    /// prompts over 4 tenants — enough history growth to exercise reuse
+    /// and eviction at modest KV capacities.
+    pub fn default_mix() -> SessionProfile {
+        SessionProfile {
+            sessions: 32,
+            turns: 4,
+            system_tokens: 512,
+            user_tokens: 128,
+            output_tokens: 64,
+            tenants: 4,
+            session_qps: 2.0,
+            mean_think_s: 2.0,
+        }
+    }
+}
+
+/// SplitMix64 finalizer — local copy so token-id derivation does not
+/// depend on `kvcache` internals.
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Deterministic token id `i` of content stream `stream` (vocab 32000).
+fn tok(stream: u64, i: u64) -> i32 {
+    (splitmix(splitmix(stream) ^ i) % 32_000) as i32
+}
+
+/// Append `n` tokens of content stream `stream` to `buf`.
+fn extend_stream(buf: &mut Vec<i32>, stream: u64, n: u64) {
+    buf.extend((0..n).map(|i| tok(stream, i)));
+}
+
+/// Multi-turn conversations with per-tenant shared system prompts.
+///
+/// Turn `k` of session `s` (tenant `t = s % tenants`) carries the prompt
+/// `system(t) ‖ user(s,0) ‖ reply(s,0) ‖ … ‖ user(s,k)` — a strict token
+/// extension of turn `k-1`'s prompt plus that turn's replayed reply. All
+/// content is deterministic in `seed`, so reruns are reproducible and the
+/// cache-off/cache-on comparison sees identical work.
+pub fn session_workload(p: &SessionProfile, seed: u64) -> Workload {
+    assert!(p.sessions > 0 && p.turns > 0 && p.tenants > 0);
+    assert!(
+        p.system_tokens + p.user_tokens > 0,
+        "turns need a non-empty prompt"
+    );
+    let mut rng = Rng::new(seed ^ 0x5e55);
+    let starts = poisson_arrivals(&mut rng, p.sessions, p.session_qps);
+    let mut requests = Vec::with_capacity(p.sessions * p.turns);
+    let mut id = 0u64;
+    for (s, &start) in starts.iter().enumerate() {
+        let tenant = (s % p.tenants) as u64;
+        // Content streams are keyed off the seed so two workloads with
+        // different seeds do not accidentally share cache entries.
+        let session_key = splitmix(seed) ^ splitmix(0x5e55_0000 + s as u64);
+        let mut history: Vec<i32> = Vec::new();
+        extend_stream(&mut history, splitmix(seed) ^ tenant, p.system_tokens);
+        let mut at = start;
+        for turn in 0..p.turns {
+            extend_stream(&mut history, session_key ^ (2 * turn as u64), p.user_tokens);
+            let prompt = history.clone();
+            requests.push(
+                Request::new(id, at, prompt.len() as u64, p.output_tokens)
+                    .with_prompt_tokens(prompt),
+            );
+            id += 1;
+            // Replay the assistant reply into the next turn's history.
+            extend_stream(
+                &mut history,
+                session_key ^ (2 * turn as u64 + 1),
+                p.output_tokens,
+            );
+            at += rng.exponential(1.0 / p.mean_think_s.max(1e-9));
+        }
+    }
+    Workload {
+        name: format!("sessions-{}x{}", p.sessions, p.turns),
+        requests,
+    }
+    .sorted_by_arrival()
+}
+
+/// Single-turn requests whose prompts open with a tenant-shared prefix of
+/// `shared_tokens` and end with a per-request unique suffix of
+/// `unique_tokens` — the bench knob for sweeping prefix-cache hit rates:
+/// after warm-up the cacheable fraction of prefill is
+/// `shared_tokens / (shared_tokens + unique_tokens)` (rounded down to KV
+/// block granularity). `shared_tokens = 0` degenerates to fully disjoint
+/// prompts.
+pub fn shared_prefix_workload(
+    n: usize,
+    shared_tokens: u64,
+    unique_tokens: u64,
+    osl: u64,
+    qps: f64,
+    tenants: usize,
+    seed: u64,
+) -> Workload {
+    assert!(tenants > 0);
+    assert!(shared_tokens + unique_tokens > 0, "empty prompt");
+    let mut rng = Rng::new(seed ^ 0x5e56);
+    let arrivals = poisson_arrivals(&mut rng, n, qps);
+    let requests = arrivals
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| {
+            let tenant = (i % tenants) as u64;
+            let mut prompt = Vec::with_capacity((shared_tokens + unique_tokens) as usize);
+            extend_stream(&mut prompt, splitmix(seed) ^ tenant, shared_tokens);
+            extend_stream(
+                &mut prompt,
+                splitmix(seed ^ 0xffff) ^ splitmix(i as u64 + 1),
+                unique_tokens,
+            );
+            Request::new(i as u64, t, prompt.len() as u64, osl).with_prompt_tokens(prompt)
+        })
+        .collect();
+    Workload {
+        name: format!("shared-prefix-{shared_tokens}+{unique_tokens}"),
+        requests,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn turn_prompts_strictly_extend_previous_turns() {
+        let p = SessionProfile {
+            sessions: 3,
+            turns: 4,
+            system_tokens: 32,
+            user_tokens: 8,
+            output_tokens: 4,
+            tenants: 2,
+            session_qps: 5.0,
+            mean_think_s: 0.5,
+        };
+        let w = session_workload(&p, 7);
+        assert_eq!(w.requests.len(), 12);
+        // Group back by session via id order (ids were assigned
+        // session-major before the arrival sort).
+        let mut by_id = w.requests.clone();
+        by_id.sort_by_key(|r| r.id);
+        for s in 0..3 {
+            let turns = &by_id[s * 4..(s + 1) * 4];
+            for k in 1..4 {
+                let prev = turns[k - 1].prompt_tokens.as_ref().unwrap();
+                let cur = turns[k].prompt_tokens.as_ref().unwrap();
+                assert!(cur.starts_with(prev), "turn {k} must extend turn {}", k - 1);
+                // history grows by the replayed reply + new user message
+                assert_eq!(cur.len(), prev.len() + 4 + 8);
+            }
+            // turn arrivals are monotone within the session
+            for k in 1..4 {
+                assert!(turns[k].arrival > turns[k - 1].arrival);
+            }
+        }
+    }
+
+    #[test]
+    fn same_tenant_sessions_share_the_system_prompt() {
+        let p = SessionProfile {
+            sessions: 4,
+            turns: 1,
+            system_tokens: 64,
+            user_tokens: 8,
+            output_tokens: 2,
+            tenants: 2,
+            session_qps: 5.0,
+            mean_think_s: 0.5,
+        };
+        let mut by_id = session_workload(&p, 9).requests;
+        by_id.sort_by_key(|r| r.id);
+        let sys = |r: &Request| r.prompt_tokens.as_ref().unwrap()[..64].to_vec();
+        // sessions 0 and 2 are tenant 0; 1 and 3 are tenant 1
+        assert_eq!(sys(&by_id[0]), sys(&by_id[2]));
+        assert_eq!(sys(&by_id[1]), sys(&by_id[3]));
+        assert_ne!(sys(&by_id[0]), sys(&by_id[1]));
+        // user turns differ across sessions even within a tenant
+        assert_ne!(
+            by_id[0].prompt_tokens.as_ref().unwrap()[64..],
+            by_id[2].prompt_tokens.as_ref().unwrap()[64..]
+        );
+    }
+
+    #[test]
+    fn arrivals_sorted_and_ids_unique() {
+        let w = session_workload(&SessionProfile::default_mix(), 3);
+        assert!(w
+            .requests
+            .windows(2)
+            .all(|p| p[0].arrival <= p[1].arrival));
+        let mut ids: Vec<u64> = w.requests.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), w.requests.len());
+    }
+
+    #[test]
+    fn shared_prefix_splits_at_the_declared_boundary() {
+        let w = shared_prefix_workload(6, 48, 16, 4, 10.0, 2, 11);
+        assert_eq!(w.requests.len(), 6);
+        for r in &w.requests {
+            assert_eq!(r.prompt_len, 64);
+            assert_eq!(r.output_len, 4);
+        }
+        let toks = |i: usize| w.requests[i].prompt_tokens.as_ref().unwrap();
+        // same tenant (0 and 2): identical shared prefix, distinct suffix
+        assert_eq!(toks(0)[..48], toks(2)[..48]);
+        assert_ne!(toks(0)[48..], toks(2)[48..]);
+        // different tenants (0 and 1): prefixes differ
+        assert_ne!(toks(0)[..48], toks(1)[..48]);
+    }
+
+    #[test]
+    fn zero_shared_prefix_is_fully_disjoint() {
+        let w = shared_prefix_workload(4, 0, 32, 2, 10.0, 2, 13);
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                assert_ne!(
+                    w.requests[i].prompt_tokens.as_ref().unwrap()[..8],
+                    w.requests[j].prompt_tokens.as_ref().unwrap()[..8],
+                    "suffix streams must diverge immediately"
+                );
+            }
+        }
+    }
+}

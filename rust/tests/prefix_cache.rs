@@ -1,0 +1,240 @@
+//! Prefix-cache subsystem properties.
+//!
+//! The load-bearing guarantee is *zero-overlap equivalence*: with the
+//! prefix cache enabled but no shared content anywhere in the workload,
+//! the engine must be behaviorally indistinguishable from the cache-off
+//! path — identical reports and identical per-request token streams —
+//! because every capacity signal (`free_blocks`, watermarks, admission)
+//! counts cached-unreferenced blocks as free. On top of that: shared
+//! prompts must actually hit, and eviction under KV pressure must never
+//! corrupt accounting.
+
+use duetserve::config::{Policy, ServingConfig};
+use duetserve::engine::{engine_for, router_by_name, ReplicatedEngine};
+use duetserve::metrics::Report;
+use duetserve::request::Request;
+use duetserve::util::proptest::check;
+use duetserve::workload::sessions::{session_workload, shared_prefix_workload, SessionProfile};
+use duetserve::workload::Workload;
+
+fn policies() -> Vec<Policy> {
+    vec![Policy::VllmChunked, Policy::SglangDefault, Policy::Duet]
+}
+
+/// Compare the observable outcome of two runs: merged report metrics and
+/// the exact token-time streams of every finished request.
+fn assert_equivalent(
+    label: &str,
+    rep_off: &Report,
+    rep_on: &Report,
+    fin_off: &[Request],
+    fin_on: &[Request],
+) -> Result<(), String> {
+    if rep_on.prefix_hits != 0 || rep_on.prefix_cached_tokens != 0 {
+        return Err(format!(
+            "{label}: disjoint prompts must not hit: {} hits, {} tokens",
+            rep_on.prefix_hits, rep_on.prefix_cached_tokens
+        ));
+    }
+    if rep_on.completed != rep_off.completed
+        || rep_on.iterations != rep_off.iterations
+        || rep_on.prefilled_tokens != rep_off.prefilled_tokens
+    {
+        return Err(format!(
+            "{label}: counters diverged: completed {}/{}, iterations {}/{}, prefilled {}/{}",
+            rep_on.completed,
+            rep_off.completed,
+            rep_on.iterations,
+            rep_off.iterations,
+            rep_on.prefilled_tokens,
+            rep_off.prefilled_tokens
+        ));
+    }
+    let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()));
+    if !close(rep_on.duration, rep_off.duration)
+        || !close(rep_on.ttft.mean, rep_off.ttft.mean)
+        || !close(rep_on.tbt.mean, rep_off.tbt.mean)
+    {
+        return Err(format!(
+            "{label}: timing diverged: duration {}/{} ttft {}/{} tbt {}/{}",
+            rep_on.duration,
+            rep_off.duration,
+            rep_on.ttft.mean,
+            rep_off.ttft.mean,
+            rep_on.tbt.mean,
+            rep_off.tbt.mean
+        ));
+    }
+    let mut off: Vec<&Request> = fin_off.iter().collect();
+    let mut on: Vec<&Request> = fin_on.iter().collect();
+    off.sort_by_key(|r| r.id);
+    on.sort_by_key(|r| r.id);
+    if off.len() != on.len() {
+        return Err(format!(
+            "{label}: finished sets differ: {} vs {}",
+            on.len(),
+            off.len()
+        ));
+    }
+    for (a, b) in off.iter().zip(on.iter()) {
+        if a.id != b.id {
+            return Err(format!("{label}: finished ids differ: {} vs {}", a.id, b.id));
+        }
+        if a.token_times != b.token_times {
+            return Err(format!(
+                "{label}: request {} token stream diverged (len {} vs {})",
+                a.id,
+                a.token_times.len(),
+                b.token_times.len()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn zero_overlap_prefix_cache_is_metric_identical_on_the_engine() {
+    let pols = policies();
+    check(16, |g| {
+        let n = g.usize_range(6, 24);
+        let unique = g.u64_range(48, 4000);
+        let osl = g.u64_range(1, 48);
+        let qps = g.f64_range(0.5, 12.0);
+        let policy = g.choose(&pols).clone();
+        // shared_tokens = 0: every prompt is a fully disjoint token stream.
+        let w = shared_prefix_workload(n, 0, unique, osl, qps, 2, g.case_seed);
+        let label = format!("{policy:?}/n={n}/isl={unique}");
+
+        let cfg = ServingConfig::default_8b().with_policy(policy);
+        let mut off = engine_for(cfg.clone().with_prefix_cache(false), g.case_seed);
+        let rep_off = off.run(w.clone());
+        let mut on = engine_for(cfg.with_prefix_cache(true), g.case_seed);
+        let rep_on = on.run(w);
+
+        on.check_invariants().map_err(|m| format!("{label}: {m}"))?;
+        assert_equivalent(&label, &rep_off, &rep_on, &off.finished, &on.finished)
+    });
+}
+
+#[test]
+fn zero_overlap_prefix_cache_is_metric_identical_on_a_cluster() {
+    check(10, |g| {
+        let n = g.usize_range(6, 20);
+        let unique = g.u64_range(48, 3000);
+        let osl = g.u64_range(1, 32);
+        let qps = g.f64_range(1.0, 10.0);
+        let routers = ["round-robin", "least-outstanding", "kv-overlap"];
+        let router = *g.choose(&routers);
+        let w = shared_prefix_workload(n, 0, unique, osl, qps, 2, g.case_seed);
+        let label = format!("2x/{router}/n={n}");
+
+        let cfg = ServingConfig::default_8b().with_policy(Policy::VllmChunked);
+        let run = |prefix: bool, w: Workload| {
+            let mut e = ReplicatedEngine::new(cfg.clone().with_prefix_cache(prefix), 2, g.case_seed)
+                .with_router(router_by_name(router).expect("known router"));
+            let rep = e.run(w);
+            e.check_invariants().map(|()| (rep, e.finished.clone()))
+        };
+        let (rep_off, fin_off) = run(false, w.clone()).map_err(|m| format!("{label}: {m}"))?;
+        let (rep_on, fin_on) = run(true, w).map_err(|m| format!("{label}: {m}"))?;
+        assert_equivalent(&label, &rep_off, &rep_on, &fin_off, &fin_on)
+    });
+}
+
+#[test]
+fn shared_system_prompts_hit_and_cut_prefill_work() {
+    // Sequential same-tenant requests (low qps → each finishes before the
+    // next arrives): every request after the first per tenant must be
+    // seeded from the cache, and the computed prefill volume must drop by
+    // exactly the cached-token count.
+    let tenants = 2;
+    let n = 10;
+    let w = shared_prefix_workload(n, 1024, 64, 4, 0.2, tenants, 17);
+    let total_prompt: u64 = w.requests.iter().map(|r| r.prompt_len).sum();
+
+    let cfg = ServingConfig::default_8b().with_policy(Policy::VllmChunked);
+    let mut off = engine_for(cfg.clone().with_prefix_cache(false), 1);
+    let rep_off = off.run(w.clone());
+    let mut on = engine_for(cfg.with_prefix_cache(true), 1);
+    let rep_on = on.run(w);
+    on.check_invariants().unwrap();
+
+    assert_eq!(rep_off.prefilled_tokens, total_prompt);
+    assert!(
+        rep_on.prefix_hits >= (n - tenants) as u64,
+        "every warm request must hit: {} hits",
+        rep_on.prefix_hits
+    );
+    // At this load nothing is preempted, so prefill work + cached tokens
+    // partition the prompt volume exactly.
+    assert_eq!(
+        rep_on.prefilled_tokens + rep_on.prefix_cached_tokens,
+        total_prompt
+    );
+    // 1024 of 1088 prompt tokens are shareable: at least half the total
+    // prefill must have been served from cache.
+    assert!(
+        rep_on.prefix_cached_tokens * 2 >= total_prompt,
+        "cached {} of {total_prompt}",
+        rep_on.prefix_cached_tokens
+    );
+    assert_eq!(rep_on.completed, rep_off.completed);
+}
+
+#[test]
+fn multi_turn_sessions_reuse_their_own_history() {
+    // Turn k's prompt extends turn k-1's, so with think times long enough
+    // for turns to finish, later turns hit their session's decayed blocks.
+    let p = SessionProfile {
+        sessions: 4,
+        turns: 3,
+        system_tokens: 256,
+        user_tokens: 64,
+        output_tokens: 8,
+        tenants: 2,
+        session_qps: 1.0,
+        mean_think_s: 4.0,
+    };
+    let w = session_workload(&p, 23);
+    let n = w.requests.len() as u64;
+    let cfg = ServingConfig::default_8b()
+        .with_policy(Policy::VllmChunked)
+        .with_prefix_cache(true);
+    let mut e = engine_for(cfg, 2);
+    let rep = e.run(w);
+    e.check_invariants().unwrap();
+    assert_eq!(rep.completed + e.dropped, n);
+    assert!(
+        rep.prefix_hits > 0 && rep.prefix_cached_tokens > 0,
+        "session turns must reuse history: {} hits, {} tokens",
+        rep.prefix_hits,
+        rep.prefix_cached_tokens
+    );
+}
+
+#[test]
+fn eviction_under_kv_pressure_preserves_invariants() {
+    // Tiny KV + shared prompts: finished requests decay blocks into the
+    // cached pool, and new allocations must evict them (never failing
+    // while cached blocks exist). The engine must survive — via LRU
+    // eviction and, past that, recompute preemption — with accounting
+    // intact.
+    let mut cfg = ServingConfig::default_8b().with_policy(Policy::VllmChunked);
+    cfg.gpu_mem_util = 0.22;
+    cfg = cfg.with_prefix_cache(true);
+    let kv_tokens = cfg.kv_capacity_tokens();
+    assert!(kv_tokens > 2000, "test needs some KV: {kv_tokens}");
+    let mut e = engine_for(cfg, 5);
+    // Prompts ~kv/3 each, mostly-disjoint content (shared system prefix of
+    // 256 tokens): decayed blocks pile up fast and must be reclaimed.
+    let w = shared_prefix_workload(12, 256, kv_tokens / 3, 96, 50.0, 2, 5);
+    let rep = e.run(w);
+    assert_eq!(rep.completed + e.dropped, 12);
+    assert!(rep.completed >= 10, "most requests should finish");
+    assert!(
+        rep.prefix_evictions > 0,
+        "pressure must reclaim cached blocks: {} evictions",
+        rep.prefix_evictions
+    );
+    e.check_invariants().unwrap();
+}
