@@ -10,6 +10,15 @@
 //! With `--addr` the example skips spawning and talks to an
 //! already-running `serve-http` instead (it will drain that server at
 //! the end).
+//!
+//! With `--keep-alive N` the example instead runs N sequential
+//! non-streaming completions over ONE kept-alive socket
+//! (`Content-Length`-framed responses, no reconnect) and leaves the
+//! server running — the CI soak uses this against a live `serve-http`
+//! to drive a reused connection across engine-clock epochs. Optional
+//! `--arrival-step S` stamps request i with an explicit engine-clock
+//! arrival of `(i + 1) * S` seconds, and `--max-tokens K` sets the
+//! per-request decode budget (default 6).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -27,8 +36,10 @@ fn connect(addr: SocketAddr) -> anyhow::Result<TcpStream> {
     Ok(s)
 }
 
-/// One full request/response exchange (`Connection: close` semantics);
-/// returns (status, body).
+/// One full request/response exchange (`Connection: close` semantics —
+/// stated explicitly, so the keep-alive front door closes after the
+/// response instead of parking the socket until idle-timeout); returns
+/// (status, body).
 fn exchange(
     addr: SocketAddr,
     method: &str,
@@ -36,7 +47,7 @@ fn exchange(
     body: Option<&str>,
 ) -> anyhow::Result<(u16, String)> {
     let mut s = connect(addr)?;
-    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\n");
+    let mut req = format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n");
     if let Some(b) = body {
         req.push_str(&format!(
             "Content-Type: application/json\r\nContent-Length: {}\r\n",
@@ -62,6 +73,90 @@ fn exchange(
     Ok((status, payload))
 }
 
+/// Read one `Content-Length`-framed response off a kept-alive socket;
+/// returns (status, raw head, body).
+fn read_framed(r: &mut BufReader<TcpStream>) -> anyhow::Result<(u16, String, String)> {
+    let mut head = String::new();
+    loop {
+        let mut line = String::new();
+        if r.read_line(&mut line)? == 0 {
+            anyhow::bail!("server closed the kept-alive socket mid-head");
+        }
+        if line == "\r\n" {
+            break;
+        }
+        head.push_str(&line);
+    }
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("no status line in framed response: {head}"))?;
+    let len: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length")
+                .then(|| v.trim().parse().ok())?
+        })
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok((status, head, String::from_utf8_lossy(&body).into_owned()))
+}
+
+/// `--keep-alive N`: N sequential non-streaming completions over one
+/// reused socket. Every response must come back `Connection:
+/// keep-alive` and fully framed — one reconnect or short read fails the
+/// run. `arrival_step > 0` stamps request i with an explicit
+/// engine-clock arrival of `(i + 1) * arrival_step` seconds, which the
+/// CI soak uses to march one socket across engine-clock epochs.
+fn keep_alive_run(
+    addr: SocketAddr,
+    n: usize,
+    arrival_step: f64,
+    max_tokens: usize,
+) -> anyhow::Result<()> {
+    let s = connect(addr)?;
+    s.set_nodelay(true).ok();
+    let mut r = BufReader::new(s);
+    for i in 0..n {
+        let arrival = if arrival_step > 0.0 {
+            format!(",\"arrival\":{}", (i as f64 + 1.0) * arrival_step)
+        } else {
+            String::new()
+        };
+        let body = format!("{{\"prompt\":[1,2,3,4],\"max_tokens\":{max_tokens}{arrival}}}");
+        let req = format!(
+            "POST /v1/completions HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        r.get_mut().write_all(req.as_bytes())?;
+        let (status, head, resp) = read_framed(&mut r)?;
+        if status != 200 {
+            anyhow::bail!("keep-alive request {i} failed ({status}): {resp}");
+        }
+        if !head.to_ascii_lowercase().contains("connection: keep-alive") {
+            anyhow::bail!("keep-alive request {i} was not kept alive:\n{head}");
+        }
+        let v = json::parse(&resp).map_err(|e| anyhow::anyhow!("bad completion body: {e}"))?;
+        let done = v
+            .get("usage")
+            .and_then(|u| u.get("completion_tokens"))
+            .and_then(|c| c.as_u64())
+            .unwrap_or(0);
+        if done != max_tokens as u64 {
+            anyhow::bail!("keep-alive request {i}: {done} of {max_tokens} tokens: {resp}");
+        }
+        println!(
+            "  keep-alive request {} of {n}: {done} tokens on the same socket",
+            i + 1
+        );
+    }
+    println!("keep-alive socket served {n} completions without reconnecting");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     // Spawn serve-http in-process unless --addr points at a live one.
@@ -76,6 +171,22 @@ fn main() -> anyhow::Result<()> {
             (Some(http), addr)
         }
     };
+
+    // Keep-alive repeat mode: exercise socket reuse and return without
+    // draining the target server (the caller owns its lifecycle).
+    if let Some(n) = args.usize_opt("keep-alive").map_err(|e| anyhow::anyhow!(e))? {
+        keep_alive_run(
+            addr,
+            n,
+            args.f64_or("arrival-step", 0.0),
+            args.usize_or("max-tokens", 6),
+        )?;
+        if let Some(http) = spawned {
+            let rep = http.shutdown()?;
+            println!("drained spawned server: {} completed", rep.completed);
+        }
+        return Ok(());
+    }
 
     // 1. Streaming completion: raw socket, SSE frames as they arrive.
     let body = r#"{"prompt":"duetserve streaming demo","max_tokens":10,"stream":true}"#;

@@ -7,8 +7,13 @@
 //! per PR.
 //!
 //!     cargo bench --bench bench_ci
+//!
+//! The connection-churn section opens ~1k concurrent sockets (plus the
+//! server's own); run it under `ulimit -n 8192` (the CI workflow does).
 
-use std::time::Instant;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
 
 use duetserve::config::{Policy, ServingConfig};
 use duetserve::engine::{
@@ -17,6 +22,8 @@ use duetserve::engine::{
 };
 use duetserve::metrics::{Recorder, RecorderMode};
 use duetserve::request::Request;
+use duetserve::server::http::{HttpConfig, HttpServer};
+use duetserve::server::{Server, ServerCore};
 use duetserve::util::json::Json;
 use duetserve::util::tablefmt::banner;
 use duetserve::workload::sessions::shared_prefix_workload;
@@ -102,6 +109,115 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
     }
     let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
     sorted[idx]
+}
+
+/// HTTP front door over a 1-replica sim engine for the connection-churn
+/// rows. `pool_workers = 0` selects the thread-per-connection baseline.
+fn churn_server(pool_workers: usize) -> HttpServer {
+    let cfg = ServingConfig::default_8b().with_policy(Policy::VllmChunked);
+    let server = Server::start(move || Ok(ServerCore::sim(cfg, 0xD00D).with_queue_depth(64)))
+        .expect("engine server for churn bench");
+    HttpServer::start(
+        "127.0.0.1:0",
+        server,
+        HttpConfig {
+            pool_workers,
+            ..Default::default()
+        },
+    )
+    .expect("http server for churn bench")
+}
+
+/// Read one `Content-Length`-framed response off a kept-alive socket.
+fn churn_read_response(r: &mut BufReader<TcpStream>) -> std::io::Result<()> {
+    let mut content_len = 0usize;
+    loop {
+        let mut line = String::new();
+        if r.read_line(&mut line)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed inside response head",
+            ));
+        }
+        let t = line.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    r.read_exact(&mut body)?;
+    Ok(())
+}
+
+/// Drive `GET /healthz` from `threads` client threads holding
+/// `per_thread` concurrent connections each. With `keep_alive` every
+/// socket is opened once and reused across `rounds` (one in-flight
+/// request per socket per round, written as a batch so the server sees
+/// all connections active at once); without it every request pays a
+/// fresh TCP connect + `Connection: close` — the churn the pooled front
+/// door is built to avoid. Returns (requests/s, p99 latency ms, count).
+fn conn_churn_run(
+    addr: SocketAddr,
+    threads: usize,
+    per_thread: usize,
+    rounds: usize,
+    keep_alive: bool,
+) -> (f64, f64, usize) {
+    let t0 = Instant::now();
+    let joins: Vec<_> = (0..threads)
+        .map(|_| {
+            std::thread::spawn(move || -> Vec<f64> {
+                let mut lat = Vec::with_capacity(per_thread * rounds);
+                if keep_alive {
+                    let req: &[u8] = b"GET /healthz HTTP/1.1\r\nHost: bench\r\n\r\n";
+                    let mut socks: Vec<(BufReader<TcpStream>, Instant)> = (0..per_thread)
+                        .map(|_| {
+                            let s = TcpStream::connect(addr).expect("churn connect");
+                            s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+                            s.set_nodelay(true).ok();
+                            (BufReader::new(s), Instant::now())
+                        })
+                        .collect();
+                    for _ in 0..rounds {
+                        for (s, t) in socks.iter_mut() {
+                            *t = Instant::now();
+                            s.get_mut().write_all(req).expect("churn write");
+                        }
+                        for (s, t) in socks.iter_mut() {
+                            churn_read_response(s).expect("churn framed response");
+                            lat.push(t.elapsed().as_secs_f64());
+                        }
+                    }
+                } else {
+                    let req: &[u8] =
+                        b"GET /healthz HTTP/1.1\r\nHost: bench\r\nConnection: close\r\n\r\n";
+                    for _ in 0..rounds * per_thread {
+                        let t = Instant::now();
+                        let mut s = TcpStream::connect(addr).expect("churn connect");
+                        s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+                        s.write_all(req).expect("churn write");
+                        let mut buf = Vec::new();
+                        s.read_to_end(&mut buf).expect("churn read");
+                        lat.push(t.elapsed().as_secs_f64());
+                    }
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut lats: Vec<f64> = joins
+        .into_iter()
+        .flat_map(|j| j.join().expect("churn client thread"))
+        .collect();
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort_by(f64::total_cmp);
+    let n = lats.len();
+    (n as f64 / wall.max(1e-9), percentile(&lats, 0.99) * 1e3, n)
 }
 
 /// One prefix-cache hit-rate sweep point: 48 shared-prefix requests
@@ -203,6 +319,29 @@ fn main() {
         }
     }
 
+    // Connection churn: ~1k concurrent keep-alive sockets against the
+    // readiness-polled pool vs a fresh TCP connect + `Connection: close`
+    // per request against the thread-per-connection baseline. Unix-only:
+    // elsewhere the pool front door falls back to thread-per-connection
+    // and there is no contrast to measure.
+    let churn_threads = 16usize;
+    let churn_per_thread = 64usize;
+    let churn_concurrent = churn_threads * churn_per_thread;
+    let (pool_rps, pool_p99_ms, pool_n, base_rps, base_p99_ms, base_n) = if cfg!(unix) {
+        let pooled = churn_server(4);
+        let (rps, p99, n) =
+            conn_churn_run(pooled.addr(), churn_threads, churn_per_thread, 4, true);
+        pooled.shutdown().expect("pooled churn shutdown");
+        let baseline = churn_server(0);
+        let (brps, bp99, bn) =
+            conn_churn_run(baseline.addr(), churn_threads, churn_per_thread, 1, false);
+        baseline.shutdown().expect("baseline churn shutdown");
+        (rps, p99, n, brps, bp99, bn)
+    } else {
+        (0.0, 0.0, 0, 0.0, 0.0, 0)
+    };
+    let churn_speedup = pool_rps / base_rps.max(1e-9);
+
     println!(
         "agg 2x vLLM @qps {qps}: {:.0} tok/s, tbt-p99 {:.1} ms | duet: {:.0} it/s, {:.1} µs sched",
         ra.token_throughput,
@@ -226,6 +365,11 @@ fn main() {
         overlap_points[2].1 * 1e3,
         overlap_points[0].2,
         overlap_points[2].2,
+    );
+    println!(
+        "conn churn @{churn_concurrent} conns — pool: {pool_rps:.0} req/s \
+         (p99 {pool_p99_ms:.2} ms, n={pool_n}) vs thread-per-conn: {base_rps:.0} req/s \
+         (p99 {base_p99_ms:.2} ms, n={base_n}), x{churn_speedup:.1}"
     );
 
     let out = Json::obj(vec![
@@ -268,6 +412,19 @@ fn main() {
             ]),
         ),
         (
+            "conn_churn",
+            Json::obj(vec![
+                ("concurrent", Json::Num(churn_concurrent as f64)),
+                ("pool_rps", Json::Num(pool_rps)),
+                ("pool_p99_ms", Json::Num(pool_p99_ms)),
+                ("pool_requests", Json::Num(pool_n as f64)),
+                ("baseline_rps", Json::Num(base_rps)),
+                ("baseline_p99_ms", Json::Num(base_p99_ms)),
+                ("baseline_requests", Json::Num(base_n as f64)),
+                ("speedup", Json::Num(churn_speedup)),
+            ]),
+        ),
+        (
             "prefix_sweep",
             Json::obj(vec![("rows", Json::arr(sweep_rows))]),
         ),
@@ -305,6 +462,20 @@ fn main() {
         fleet_speedup_n256 >= 5.0,
         "N=256 fleet event loop only x{fleet_speedup_n256:.1} over naive scan (need >= 5)"
     );
+
+    // Keep-alive front-door guardrail (unix only — elsewhere the pool
+    // falls back to thread-per-connection and the contrast vanishes): at
+    // ~1k concurrent connections the readiness-polled pool must serve at
+    // least 5× the requests/s of per-request connection churn. The
+    // measured gap is far larger (no connect, teardown, or thread spawn
+    // per request, and ~1k requests in flight at once vs at most one per
+    // client thread), so CI noise cannot trip this.
+    if cfg!(unix) {
+        assert!(
+            churn_speedup >= 5.0,
+            "pool only x{churn_speedup:.1} over per-request connection churn (need >= 5)"
+        );
+    }
 
     // Prefix-cache guardrails (engine-clock metrics, so CI wall-clock
     // noise cannot touch them): with 90% of every prompt cacheable and

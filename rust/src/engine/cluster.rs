@@ -64,7 +64,7 @@ use super::backend::ExecutionBackend;
 use super::clockheap::MinClockHeap;
 use super::core::{CoreStep, EngineCore, REBASE_FRACTION};
 use super::router::{RouteCandidate, Router};
-use super::topology::{ServingTopology, TopologyStep};
+use super::topology::{ServingTopology, TopologyLoad, TopologyStep};
 
 /// Clock nudge when a worker parks with nothing to do, so the min-clock
 /// selection always makes progress.
@@ -1343,12 +1343,23 @@ impl ServingTopology for ClusterEngine {
         }
     }
 
-    fn fold_report(&mut self) -> Report {
+    fn drain_recorder(&mut self) -> Recorder {
         self.fold_workers();
-        let mut rep = self.metrics.report(&self.system_name());
-        rep.engine_epoch = self.epoch;
-        rep.engine_uptime_s = self.epoch_offset + ClusterEngine::clock(self);
-        rep
+        self.metrics.clone()
+    }
+
+    fn load(&self) -> TopologyLoad {
+        // The queue aggregate is maintained incrementally; the token/KV
+        // sums are O(workers), read once per shard submission.
+        TopologyLoad {
+            queue_len: ServingTopology::queued(self),
+            outstanding_tokens: self
+                .workers
+                .iter()
+                .map(|w| w.core.outstanding_tokens())
+                .sum(),
+            kv_free_tokens: self.workers.iter().map(|w| w.core.kv_free_tokens()).sum(),
+        }
     }
 
     fn snapshot_recorder(&self) -> Recorder {

@@ -67,10 +67,10 @@ pub use disagg::DisaggEngine;
 pub use events::{IterEvent, IterKind};
 pub use replicated::ReplicatedEngine;
 pub use router::{
-    router_by_name, KvOverlapRouter, KvPressureRouter, LeastOutstandingRouter, RoundRobinRouter,
-    Router,
+    router_by_name, KvOverlapRouter, KvPressureRouter, LeastOutstandingRouter, RouteCandidate,
+    RoundRobinRouter, Router,
 };
-pub use topology::{ServingTopology, TopologyStep};
+pub use topology::{ServingTopology, TopologyLoad, TopologyStep};
 
 use std::collections::VecDeque;
 use std::ops::{Deref, DerefMut};

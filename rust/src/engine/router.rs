@@ -165,7 +165,7 @@ impl Router for KvOverlapRouter {
 }
 
 /// Router factory by name (CLI / bench surface).
-pub fn router_by_name(name: &str) -> Option<Box<dyn Router>> {
+pub fn router_by_name(name: &str) -> Option<Box<dyn Router + Send>> {
     match name {
         "round-robin" | "rr" => Some(Box::new(RoundRobinRouter::new())),
         "least-outstanding" | "least-loaded" | "ll" => {

@@ -45,6 +45,21 @@ use super::core::{CoreStep, EngineCore};
 /// serving-path ≡ simulation property holds even in this state.
 pub(crate) const IDLE_NUDGE: f64 = 1e-3;
 
+/// Point-in-time load signals for submit-time shard routing: what the
+/// sharded front door feeds the [`Router`](super::router::Router) seam
+/// as a [`RouteCandidate`](super::router::RouteCandidate), at topology
+/// granularity. O(1) for a single core (the incremental counters from
+/// the scheduling hot path); O(workers) for a cluster.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TopologyLoad {
+    /// Requests queued but not yet admitted.
+    pub queue_len: usize,
+    /// Remaining prompt + output tokens across all queues.
+    pub outstanding_tokens: u64,
+    /// Free KV-cache tokens.
+    pub kv_free_tokens: u64,
+}
+
 /// What one [`ServingTopology::step`] call did.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TopologyStep {
@@ -152,8 +167,30 @@ pub trait ServingTopology {
     /// visited exactly once across calls.
     fn pump(&mut self, f: &mut dyn FnMut(&[Request], &mut dyn ExecutionBackend, bool));
 
-    /// Fold per-worker state into the final merged [`Report`].
-    fn fold_report(&mut self) -> Report;
+    /// Fold per-worker recorder state into one drain-time [`Recorder`],
+    /// `duration` set to the activity horizon. Destructive — the cluster
+    /// implementation retires worker history while folding; call once,
+    /// at drain. [`fold_report`](Self::fold_report) renders it into a
+    /// [`Report`]; a sharded front door instead merges N of these across
+    /// engines (via [`Recorder::merge`]) exactly as the cluster merges
+    /// its workers here.
+    fn drain_recorder(&mut self) -> Recorder;
+
+    /// Cheap submit-time load signals for shard routing.
+    fn load(&self) -> TopologyLoad;
+
+    /// Fold per-worker state into the final merged [`Report`]: the
+    /// drain-time recorder rendered under this topology's label, stamped
+    /// with the epoch counter and absolute engine uptime.
+    fn fold_report(&mut self) -> Report {
+        let label = self.label();
+        let epoch = self.epoch();
+        let uptime = self.epoch_offset() + self.clock();
+        let mut rep = self.drain_recorder().report(&label);
+        rep.engine_epoch = epoch;
+        rep.engine_uptime_s = uptime;
+        rep
+    }
 
     /// Non-destructive recorder snapshot for live metrics endpoints:
     /// everything recorded so far, merged across workers, with
@@ -280,12 +317,20 @@ impl ServingTopology for EngineCore {
         self.pump_local(f);
     }
 
-    fn fold_report(&mut self) -> Report {
+    fn drain_recorder(&mut self) -> Recorder {
         self.metrics.duration = self.total_time();
-        let mut rep = self.metrics.report(&ServingTopology::label(self));
-        rep.engine_epoch = self.epoch;
-        rep.engine_uptime_s = self.total_time();
-        rep
+        self.metrics.clone()
+    }
+
+    fn load(&self) -> TopologyLoad {
+        // All three counters are maintained incrementally on the
+        // scheduling hot path — a shard's load board can be refreshed
+        // every engine-loop iteration for free.
+        TopologyLoad {
+            queue_len: self.queue_len(),
+            outstanding_tokens: self.outstanding_tokens(),
+            kv_free_tokens: self.kv_free_tokens(),
+        }
     }
 
     fn snapshot_recorder(&self) -> Recorder {

@@ -21,6 +21,8 @@
 //!   duetserve partition --decode 64 --ctx 8192 --prefill 8192
 //!   duetserve e2e --requests 16 --max-new 24
 
+use std::time::Duration;
+
 use duetserve::cli::Args;
 use duetserve::config::{ModelSpec, Policy, ServingConfig};
 use duetserve::engine::{engine_for, router_by_name, ClusterEngine, DisaggEngine, ReplicatedEngine};
@@ -29,8 +31,11 @@ use duetserve::model::AttnShape;
 use duetserve::roofline::{BatchShape, Predictor};
 use duetserve::runtime::{artifacts, PjrtBackend};
 use duetserve::sched::{optimize_partition, scheduler_for};
-use duetserve::server::http::{HttpConfig, HttpServer, DEFAULT_MAX_BODY};
-use duetserve::server::{Server, ServerCore, SubmitOptions, DEFAULT_QUEUE_DEPTH};
+use duetserve::server::http::{
+    HttpConfig, HttpServer, DEFAULT_IDLE_TIMEOUT, DEFAULT_MAX_BODY, DEFAULT_MAX_CONNS,
+    DEFAULT_POOL_WORKERS,
+};
+use duetserve::server::{Server, ServerCore, ShardedServer, SubmitOptions, DEFAULT_QUEUE_DEPTH};
 use duetserve::util::tablefmt::Table;
 use duetserve::workload::sessions::{session_workload, SessionProfile};
 use duetserve::workload::synthetic::fixed_workload;
@@ -333,6 +338,69 @@ fn start_front_server(
     }
 }
 
+/// Start `shards` independent engine shards behind one submit surface
+/// (`serve-http --shards N`). Each shard is a full front-end server —
+/// its own topology slice (replicas/topology flags apply *per shard*)
+/// and engine thread — with submissions routed across shards through
+/// the same `Router` seam the cluster uses, against each shard's live
+/// load board. Request ids are strided so they stay globally unique.
+fn start_front_sharded(
+    kind: &str,
+    cfg: ServingConfig,
+    seed: u64,
+    fleet: &FleetOpts,
+    depth: usize,
+    shards: usize,
+) -> anyhow::Result<ShardedServer> {
+    if shards <= 1 {
+        return Ok(start_front_server(kind, cfg, seed, fleet, depth)?.into());
+    }
+    if kind != "sim" {
+        anyhow::bail!("--shards needs simulated engines (use --backend sim)");
+    }
+    let shard_router = fleet
+        .router
+        .clone()
+        .unwrap_or_else(|| default_router(&fleet.topology).to_string());
+    let multi = fleet.replicas > 1 || fleet.topology == "disagg";
+    let replicas = fleet.replicas;
+    let topo = fleet.topology.clone();
+    println!(
+        "front-end shards: {shards} engine shards ({} per shard, {topo}), \
+         {shard_router} shard routing",
+        if multi {
+            format!("{replicas} sim workers")
+        } else {
+            "1 sim worker".to_string()
+        }
+    );
+    let stride = shards as u64;
+    let inner_router = shard_router.clone();
+    ShardedServer::start(shards, &shard_router, |i| {
+        let cfg = cfg.clone();
+        let topo = topo.clone();
+        let router_name = inner_router.clone();
+        let shard_seed = seed.wrapping_add(i as u64);
+        move || {
+            let core = if multi {
+                let r = router_by_name(&router_name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown router `{router_name}`"))?;
+                if topo == "disagg" {
+                    let (p, d) = disagg_split(replicas);
+                    ServerCore::sim_disagg(cfg, p, d, shard_seed, r)
+                } else {
+                    ServerCore::sim_replicated(cfg, replicas, shard_seed, r)
+                }
+            } else {
+                ServerCore::sim(cfg, shard_seed)
+            };
+            Ok(core
+                .with_queue_depth(depth)
+                .with_id_stride(i as u64 + 1, stride))
+        }
+    })
+}
+
 /// Serve the workload through the unified streaming front-end: a
 /// `ServingTopology` (one `EngineCore`, or a `ClusterEngine` of sim
 /// workers routed at submit time) behind `server::Server`.
@@ -430,7 +498,19 @@ fn cmd_serve_http(args: &Args) {
     };
     let queue_cap = numeric("queue-cap", DEFAULT_QUEUE_DEPTH).max(1);
     let max_body = numeric("max-body", DEFAULT_MAX_BODY);
-    let server = match start_front_server(&backend, cfg.clone(), seed, &fleet, queue_cap) {
+    let shards = numeric("shards", 1).max(1);
+    let http_workers = numeric("http-workers", DEFAULT_POOL_WORKERS);
+    let max_conns = numeric("max-conns", DEFAULT_MAX_CONNS);
+    let idle_timeout = numeric("idle-timeout", DEFAULT_IDLE_TIMEOUT.as_secs() as usize).max(1);
+    if backend == "pjrt-stub" && shards > 1 {
+        eprintln!(
+            "error: --shards needs simulated engines; the pjrt backend owns \
+             one real device (use --backend sim)"
+        );
+        std::process::exit(2);
+    }
+    let server = match start_front_sharded(&backend, cfg.clone(), seed, &fleet, queue_cap, shards)
+    {
         Ok(s) => s,
         Err(e) => {
             // Mirror `serve --backend pjrt-stub`: report and exit cleanly
@@ -443,6 +523,9 @@ fn cmd_serve_http(args: &Args) {
         model: format!("duetserve/{}", cfg.policy.name()),
         max_body,
         handle_signals: true,
+        pool_workers: http_workers,
+        max_conns,
+        idle_timeout: Duration::from_secs(idle_timeout as u64),
     };
     let http = match HttpServer::start(&addr, server, http_cfg) {
         Ok(h) => h,
@@ -451,8 +534,14 @@ fn cmd_serve_http(args: &Args) {
             std::process::exit(1);
         }
     };
+    let front_door = if cfg!(unix) && http_workers > 0 {
+        format!("{http_workers}-worker keep-alive pool")
+    } else {
+        "thread-per-connection".to_string()
+    };
     println!(
-        "serve-http: listening on http://{} ({backend} backend, {} policy, queue-cap {queue_cap})",
+        "serve-http: listening on http://{} ({backend} backend, {} policy, queue-cap \
+         {queue_cap}, {shards} shard(s), {front_door})",
         http.addr(),
         cfg.policy.name()
     );
@@ -615,6 +704,18 @@ serve-http: --addr HOST:PORT (default 127.0.0.1:8080)
             --backend sim|pjrt-stub (default sim) --queue-cap N
             --max-body BYTES --seed N
             --replicas N --router R --topology unified|disagg
+            --shards N                (independent engine shards behind one
+                                       submit surface; requests routed by
+                                       --router against live shard load;
+                                       sim backend only)
+            --http-workers N          (keep-alive connection-pool size;
+                                       0 = thread-per-connection baseline
+                                       with Connection: close; default 4)
+            --max-conns N             (concurrent-connection cap; excess
+                                       accepts get 503 + Connection: close;
+                                       0 = unlimited; default 4096)
+            --idle-timeout SECS       (close kept-alive connections idle
+                                       this long; default 30)
             plus the serve model/policy flags; exposes the
             OpenAI-compatible endpoint (see docs/http_api.md):
             POST /v1/completions (JSON, SSE with \"stream\":true),

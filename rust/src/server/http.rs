@@ -1,16 +1,31 @@
-//! HTTP/OpenAI-compatible streaming transport over [`Server`].
+//! HTTP/OpenAI-compatible streaming transport over [`ShardedServer`].
 //!
 //! The offline image has no crates.io, so this is a dependency-free
-//! HTTP/1.1 server on `std::net`: a non-blocking accept loop polling a
-//! shutdown flag, one thread per connection, `Connection: close`
-//! semantics (each request rides its own connection), and the in-crate
-//! [`crate::util::json`] module as the wire format. It is the network
-//! front door to the one request lifecycle in this crate — every
-//! completion goes through [`Server::submit`] into [`ServerCore`] over
-//! whatever [`ServingTopology`](crate::engine::ServingTopology) the
-//! server was started with, so the transport composes with the sim
-//! backend, the PJRT backend, and replicated/disaggregated clusters
-//! without any special cases.
+//! HTTP/1.1 server on `std::net` with the in-crate
+//! [`crate::util::json`] module as the wire format. Two accept paths
+//! share every handler, parser and response builder:
+//!
+//! - **pooled** (default, unix): [`HttpConfig::pool_workers`] threads
+//!   run a `poll(2)` readiness loop over non-blocking sockets
+//!   ([`crate::server::pool`]). Connections are HTTP/1.1 **keep-alive**:
+//!   parsed incrementally per readiness event ([`parse_buffered`]) and
+//!   served repeatedly on the same socket until the peer sends
+//!   `Connection: close`, goes idle past [`HttpConfig::idle_timeout`],
+//!   or the server drains. SSE rides the same non-blocking write path
+//!   with per-connection output buffers, so a slow reader stalls only
+//!   its own connection, never a worker.
+//! - **thread-per-connection** (`pool_workers = 0`, and non-unix): the
+//!   retained baseline — blocking sockets, one thread per accepted
+//!   connection, `Connection: close` per request.
+//!
+//! It is the network front door to the one request lifecycle in this
+//! crate — every completion goes through [`ShardedServer::submit`]
+//! (routing across N engine shards, each a full [`Server`]) into
+//! [`ServerCore`] over whatever
+//! [`ServingTopology`](crate::engine::ServingTopology) each shard was
+//! started with, so the transport composes with the sim backend, the
+//! PJRT backend, and replicated/disaggregated clusters without any
+//! special cases.
 //!
 //! # Endpoints
 //!
@@ -36,7 +51,9 @@
 //! There is no authentication anywhere on this surface — `/shutdown`
 //! in particular is a one-request kill switch. The transport assumes a
 //! trusted network; bind loopback (the CLI default) unless the whole
-//! segment is trusted.
+//! segment is trusted. [`HttpConfig::max_conns`] bounds concurrent
+//! connections (excess accepts get `503` + `Connection: close`), so one
+//! misbehaving client pool cannot pin every worker.
 //!
 //! # Error mapping
 //!
@@ -51,10 +68,13 @@
 //!
 //! A client that disconnects mid-request cancels its request
 //! server-side, so abandoned requests release their slot and KV instead
-//! of decoding to completion: on the SSE path the next write fails and
-//! triggers [`RequestHandle::cancel`]; on the non-streaming path the
-//! handler probes the socket every [`DISCONNECT_PROBE`] while waiting
-//! (note: a half-closed write side reads as a disconnect).
+//! of decoding to completion. On the pooled path the readiness loop
+//! observes the hangup directly (`POLLHUP`/EOF on read) — no probing,
+//! no per-write socket-mode flips. On the baseline path: the SSE path's
+//! next write fails and triggers [`RequestHandle::cancel`]; the
+//! non-streaming path probes the socket every [`DISCONNECT_PROBE`]
+//! while waiting (note: a half-closed write side reads as a
+//! disconnect).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -67,9 +87,12 @@ use anyhow::{anyhow, Result};
 
 use crate::metrics::Report;
 use crate::server::{
-    FinishReason, HandlePoll, RequestHandle, Server, SubmitError, SubmitOptions, TokenEvent,
+    FinishReason, HandlePoll, RequestHandle, ShardedServer, SubmitError, SubmitOptions, TokenEvent,
 };
 use crate::util::json::{self, Json};
+
+#[allow(unused_imports)]
+use crate::server::{Server, ServerCore}; // doc links
 
 /// Default cap on one request body (413 beyond it).
 pub const DEFAULT_MAX_BODY: usize = 1 << 20;
@@ -90,16 +113,27 @@ const ACCEPT_POLL: Duration = Duration::from_millis(5);
 
 /// How long the accept thread waits for in-flight connection handlers
 /// after the engine has drained (they only need to flush final writes).
-const CONN_LINGER: Duration = Duration::from_secs(30);
+pub(crate) const CONN_LINGER: Duration = Duration::from_secs(30);
 
 /// Per-socket IO timeouts, so a stalled peer cannot pin a handler thread
-/// forever.
-const IO_TIMEOUT: Duration = Duration::from_secs(60);
+/// forever. The pooled path applies the same bound to write *progress*:
+/// a connection whose output buffer advances nothing for this long is
+/// reaped.
+pub(crate) const IO_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// How often a non-streaming handler probes its socket for a client
 /// disconnect while the completion is still generating. (The SSE path
 /// needs no probe: its per-token writes fail fast on a dead peer.)
 const DISCONNECT_PROBE: Duration = Duration::from_millis(250);
+
+/// Default size of the readiness-polled worker pool.
+pub const DEFAULT_POOL_WORKERS: usize = 4;
+
+/// Default cap on concurrently handled connections (`--max-conns`).
+pub const DEFAULT_MAX_CONNS: usize = 4096;
+
+/// Default keep-alive idle timeout on the pooled path.
+pub const DEFAULT_IDLE_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Transport configuration.
 #[derive(Debug, Clone)]
@@ -112,6 +146,16 @@ pub struct HttpConfig {
     /// same graceful drain as `POST /shutdown`. The CLI turns this on;
     /// tests and examples leave it off.
     pub handle_signals: bool,
+    /// Readiness-polled worker pool size (`--http-workers`). `0` selects
+    /// the thread-per-connection `Connection: close` baseline; non-unix
+    /// targets always use the baseline.
+    pub pool_workers: usize,
+    /// Concurrent-connection cap (`--max-conns`); excess accepts are
+    /// answered `503` + `Connection: close`. `0` means unlimited.
+    pub max_conns: usize,
+    /// Pooled path: close a kept-alive connection idle (no request in
+    /// progress, nothing buffered) for this long.
+    pub idle_timeout: Duration,
 }
 
 impl Default for HttpConfig {
@@ -120,6 +164,9 @@ impl Default for HttpConfig {
             model: "duetserve".to_string(),
             max_body: DEFAULT_MAX_BODY,
             handle_signals: false,
+            pool_workers: DEFAULT_POOL_WORKERS,
+            max_conns: DEFAULT_MAX_CONNS,
+            idle_timeout: DEFAULT_IDLE_TIMEOUT,
         }
     }
 }
@@ -141,12 +188,17 @@ pub struct HttpStats {
     pub active_streams: AtomicU64,
     /// Connections currently being handled.
     pub active_connections: AtomicU64,
+    /// Requests served on an already-used keep-alive connection (the
+    /// 2nd, 3rd, … request on one socket).
+    pub keepalive_reuse_total: AtomicU64,
+    /// Accepted connections waiting for a pool worker to register them.
+    pub pool_queue_depth: AtomicU64,
 }
 
-struct Shared {
+pub(crate) struct Shared {
     /// The engine transport; taken (→ `None`) by whichever path drains
     /// first. Submissions hold the read side only long enough to enqueue.
-    server: RwLock<Option<Server>>,
+    pub(crate) server: RwLock<Option<ShardedServer>>,
     /// Serializes [`Shared::drain`] end to end, so a racing second
     /// caller blocks until the report is published instead of observing
     /// the taken-but-not-yet-drained window.
@@ -154,20 +206,20 @@ struct Shared {
     /// The final drained report, published exactly once.
     report: Mutex<Option<Report>>,
     /// Set once the drain has been triggered; the accept loop exits on it.
-    shutdown: AtomicBool,
-    stats: HttpStats,
-    cfg: HttpConfig,
+    pub(crate) shutdown: AtomicBool,
+    pub(crate) stats: HttpStats,
+    pub(crate) cfg: HttpConfig,
 }
 
 impl Shared {
-    fn server_read(&self) -> std::sync::RwLockReadGuard<'_, Option<Server>> {
+    pub(crate) fn server_read(&self) -> std::sync::RwLockReadGuard<'_, Option<ShardedServer>> {
         match self.server.read() {
             Ok(g) => g,
             Err(poisoned) => poisoned.into_inner(),
         }
     }
 
-    fn report_lock(&self) -> std::sync::MutexGuard<'_, Option<Report>> {
+    pub(crate) fn report_lock(&self) -> std::sync::MutexGuard<'_, Option<Report>> {
         match self.report.lock() {
             Ok(g) => g,
             Err(poisoned) => poisoned.into_inner(),
@@ -179,7 +231,7 @@ impl Shared {
     /// (completing all accepted work), publish the report, then raise the
     /// shutdown flag. Idempotent — concurrent and later callers block on
     /// `drain_lock` until the report is published, then get it.
-    fn drain(&self) -> Option<Report> {
+    pub(crate) fn drain(&self) -> Option<Report> {
         let _serialized = match self.drain_lock.lock() {
             Ok(g) => g,
             Err(poisoned) => poisoned.into_inner(),
@@ -209,8 +261,16 @@ pub struct HttpServer {
 
 impl HttpServer {
     /// Bind `addr` (use port 0 for an ephemeral port) and serve `server`
-    /// on a background accept thread.
-    pub fn start(addr: &str, server: Server, cfg: HttpConfig) -> Result<HttpServer> {
+    /// — a [`Server`] (via `Into`) or an N-shard [`ShardedServer`] — on
+    /// a background accept thread. [`HttpConfig::pool_workers`] selects
+    /// the keep-alive pool (default) or the thread-per-connection
+    /// baseline.
+    pub fn start(
+        addr: &str,
+        server: impl Into<ShardedServer>,
+        cfg: HttpConfig,
+    ) -> Result<HttpServer> {
+        let server = server.into();
         let listener = TcpListener::bind(addr).map_err(|e| anyhow!("bind {addr}: {e}"))?;
         listener
             .set_nonblocking(true)
@@ -229,8 +289,7 @@ impl HttpServer {
             cfg,
         });
         let loop_shared = Arc::clone(&shared);
-        let accept =
-            std::thread::spawn(move || accept_loop(listener, loop_shared, handle_signals));
+        let accept = std::thread::spawn(move || run_accept(listener, loop_shared, handle_signals));
         Ok(HttpServer {
             addr: local,
             shared,
@@ -278,6 +337,20 @@ impl Drop for HttpServer {
     }
 }
 
+/// Pick the accept path: the readiness-polled keep-alive pool when
+/// configured and supported, else the thread-per-connection baseline.
+fn run_accept(listener: TcpListener, shared: Arc<Shared>, handle_signals: bool) {
+    #[cfg(unix)]
+    {
+        let workers = shared.cfg.pool_workers;
+        if workers > 0 {
+            return crate::server::pool::pool_accept_loop(listener, shared, handle_signals, workers);
+        }
+    }
+    accept_loop(listener, shared, handle_signals);
+}
+
+/// Thread-per-connection baseline accept loop (`Connection: close`).
 fn accept_loop(listener: TcpListener, shared: Arc<Shared>, handle_signals: bool) {
     loop {
         if shared.shutdown.load(Ordering::SeqCst) || (handle_signals && sig::triggered()) {
@@ -285,6 +358,11 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, handle_signals: bool)
         }
         match listener.accept() {
             Ok((stream, _peer)) => {
+                let cap = shared.cfg.max_conns as u64;
+                if cap > 0 && shared.stats.active_connections.load(Ordering::SeqCst) >= cap {
+                    refuse_over_capacity(&shared, stream);
+                    continue;
+                }
                 shared.stats.active_connections.fetch_add(1, Ordering::SeqCst);
                 let conn_shared = Arc::clone(&shared);
                 std::thread::spawn(move || {
@@ -310,6 +388,26 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, handle_signals: bool)
     }
 }
 
+/// Answer an accept beyond [`HttpConfig::max_conns`]: `503` with
+/// `Connection: close`, then a short bounded read-drain so closing our
+/// side does not turn into a RST racing the response.
+pub(crate) fn refuse_over_capacity(shared: &Shared, mut stream: TcpStream) {
+    shared.stats.rejected_total.fetch_add(1, Ordering::Relaxed);
+    let body = error_json(503, "connection limit reached (--max-conns); retry later");
+    let bytes = response_bytes(
+        503,
+        "Service Unavailable",
+        "application/json",
+        body.dump().as_bytes(),
+        &[("Retry-After", "1".to_string())],
+        "close",
+    );
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let _ = stream.write_all(&bytes).and_then(|()| stream.flush());
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let _ = std::io::copy(&mut Read::take(&stream, 1 << 16), &mut std::io::sink());
+}
+
 // ---------------------------------------------------------------------
 // Request parsing (pure, unit-tested).
 // ---------------------------------------------------------------------
@@ -332,6 +430,8 @@ pub(crate) struct HttpRequest {
     /// Names lowercased; obs-fold continuation lines joined with a space.
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
+    /// False only for `HTTP/1.0` (keep-alive defaults differ).
+    pub http11: bool,
 }
 
 impl HttpRequest {
@@ -368,16 +468,11 @@ fn read_crlf_line(r: &mut impl BufRead, budget: &mut usize) -> Result<Option<Str
         .map_err(|_| ReadError::Malformed("non-UTF-8 header bytes".to_string()))
 }
 
-/// Parse one HTTP/1.x request (start line, headers with obs-fold
-/// support, and a `Content-Length` body). `w` carries the interim
-/// `100 Continue` when the client sent `Expect: 100-continue` — without
-/// it, standards-following clients (curl adds the header for bodies
-/// over ~1 KiB) stall before transmitting the body.
-pub(crate) fn read_request(
-    r: &mut impl BufRead,
-    w: &mut impl Write,
-    max_body: usize,
-) -> Result<HttpRequest, ReadError> {
+/// Parse the start line + headers of one HTTP/1.x request (obs-fold
+/// support, header budget, leading-blank-line leniency). Body handling
+/// is the caller's: [`read_request`] blocks for it, the pooled path
+/// checks buffered completeness via [`parse_buffered`].
+fn read_head(r: &mut impl BufRead) -> Result<HttpRequest, ReadError> {
     let mut budget = MAX_HEADER_BYTES;
     // RFC 9112 §2.2: be lenient about stray blank lines before the
     // request line.
@@ -398,6 +493,7 @@ pub(crate) fn read_request(
             "unsupported protocol `{version}`"
         )));
     }
+    let http11 = version != "HTTP/1.0";
     let mut headers: Vec<(String, String)> = Vec::new();
     loop {
         let line = read_crlf_line(r, &mut budget)?
@@ -424,25 +520,73 @@ pub(crate) fn read_request(
         }
         headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
     }
-    let mut req = HttpRequest {
+    Ok(HttpRequest {
         method,
         path,
         headers,
         body: Vec::new(),
-    };
+        http11,
+    })
+}
+
+/// Declared body length after framing validation: rejects
+/// `Transfer-Encoding`, parses `Content-Length`, enforces `max_body`.
+fn body_len(req: &HttpRequest, max_body: usize) -> Result<usize, ReadError> {
     if let Some(te) = req.header("transfer-encoding") {
         return Err(ReadError::Malformed(format!(
             "transfer-encoding `{te}` not supported; send a content-length body"
         )));
     }
-    if let Some(cl) = req.header("content-length") {
-        let len: usize = cl
-            .trim()
-            .parse()
-            .map_err(|_| ReadError::Malformed(format!("bad content-length `{cl}`")))?;
-        if len > max_body {
-            return Err(ReadError::TooLarge { limit: max_body });
+    match req.header("content-length") {
+        None => Ok(0),
+        Some(cl) => {
+            let len: usize = cl
+                .trim()
+                .parse()
+                .map_err(|_| ReadError::Malformed(format!("bad content-length `{cl}`")))?;
+            if len > max_body {
+                return Err(ReadError::TooLarge { limit: max_body });
+            }
+            Ok(len)
         }
+    }
+}
+
+/// Does the client want the connection kept open after this response?
+/// `Connection: close` always wins; `keep-alive` opts an HTTP/1.0 peer
+/// in; otherwise the HTTP/1.1 default (keep) applies.
+pub(crate) fn wants_keep_alive(req: &HttpRequest) -> bool {
+    match req.header("connection") {
+        None => req.http11,
+        Some(v) => {
+            let mut keep = req.http11;
+            for tok in v.split(',') {
+                let t = tok.trim();
+                if t.eq_ignore_ascii_case("close") {
+                    return false;
+                }
+                if t.eq_ignore_ascii_case("keep-alive") {
+                    keep = true;
+                }
+            }
+            keep
+        }
+    }
+}
+
+/// Parse one HTTP/1.x request (start line, headers with obs-fold
+/// support, and a `Content-Length` body). `w` carries the interim
+/// `100 Continue` when the client sent `Expect: 100-continue` — without
+/// it, standards-following clients (curl adds the header for bodies
+/// over ~1 KiB) stall before transmitting the body.
+pub(crate) fn read_request(
+    r: &mut impl BufRead,
+    w: &mut impl Write,
+    max_body: usize,
+) -> Result<HttpRequest, ReadError> {
+    let mut req = read_head(r)?;
+    let len = body_len(&req, max_body)?;
+    if req.header("content-length").is_some() {
         if req
             .header("expect")
             .is_some_and(|v| v.eq_ignore_ascii_case("100-continue"))
@@ -460,9 +604,102 @@ pub(crate) fn read_request(
     Ok(req)
 }
 
+/// One incremental parse step over a connection's accumulated read
+/// buffer (the pooled path; pure, unit-tested).
+#[derive(Debug)]
+pub(crate) enum BufParse {
+    /// The head is incomplete: wait for more bytes.
+    Partial,
+    /// Head parsed, body bytes still in flight. `expect_continue` asks
+    /// the caller to send the interim `100 Continue` (exactly once).
+    PartialBody { expect_continue: bool },
+    /// One full request; `usize` is the bytes consumed from the buffer
+    /// (pipelined followers remain past it).
+    Complete(HttpRequest, usize),
+    /// Protocol violation / over-limit: respond and close.
+    Fail(ReadError),
+}
+
+/// Find the end of the header block: one past the blank line. Accepts
+/// CRLF and bare-LF line endings (mixed, like the streaming parser).
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    for i in 0..buf.len() {
+        if buf[i] == b'\n' {
+            if buf[i + 1..].starts_with(b"\r\n") {
+                return Some(i + 3);
+            }
+            if buf[i + 1..].starts_with(b"\n") {
+                return Some(i + 2);
+            }
+        }
+    }
+    None
+}
+
+/// Try to parse one complete request out of `buf` without consuming it.
+/// Grammar and limits are shared with the blocking path ([`read_head`] +
+/// [`body_len`] run over the buffered head), so both accept paths parse
+/// identically by construction.
+pub(crate) fn parse_buffered(buf: &[u8], max_body: usize) -> BufParse {
+    // RFC 9112 §2.2 leniency: skip stray blank lines between requests.
+    let mut start = 0usize;
+    loop {
+        if buf[start..].starts_with(b"\r\n") {
+            start += 2;
+        } else if buf[start..].starts_with(b"\n") {
+            start += 1;
+        } else {
+            break;
+        }
+    }
+    let rest = &buf[start..];
+    let head_len = match find_head_end(rest) {
+        Some(n) => n,
+        None => {
+            if rest.len() > MAX_HEADER_BYTES {
+                return BufParse::Fail(ReadError::Malformed("headers exceed 32 KiB".to_string()));
+            }
+            return BufParse::Partial;
+        }
+    };
+    let mut head = std::io::Cursor::new(&rest[..head_len]);
+    let req = match read_head(&mut head) {
+        Ok(r) => r,
+        Err(e) => return BufParse::Fail(e),
+    };
+    let len = match body_len(&req, max_body) {
+        Ok(n) => n,
+        Err(e) => return BufParse::Fail(e),
+    };
+    let body_start = start + head_len;
+    if buf.len() < body_start + len {
+        let expect_continue = req
+            .header("expect")
+            .is_some_and(|v| v.eq_ignore_ascii_case("100-continue"));
+        return BufParse::PartialBody { expect_continue };
+    }
+    let mut req = req;
+    req.body = buf[body_start..body_start + len].to_vec();
+    BufParse::Complete(req, body_start + len)
+}
+
 // ---------------------------------------------------------------------
 // Responses.
 // ---------------------------------------------------------------------
+
+fn write_head_conn(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    headers: &[(&str, String)],
+    conn: &str,
+) -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {status} {reason}\r\n")?;
+    for (k, v) in headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "Connection: {conn}\r\n\r\n")
+}
 
 fn write_head(
     w: &mut impl Write,
@@ -470,11 +707,41 @@ fn write_head(
     reason: &str,
     headers: &[(&str, String)],
 ) -> std::io::Result<()> {
-    write!(w, "HTTP/1.1 {status} {reason}\r\n")?;
-    for (k, v) in headers {
-        write!(w, "{k}: {v}\r\n")?;
-    }
-    write!(w, "Connection: close\r\n\r\n")
+    write_head_conn(w, status, reason, headers, "close")
+}
+
+/// Render one full response (head + body) into bytes. Header order and
+/// framing are identical on both accept paths — the keep-alive tests pin
+/// byte-equality against the fresh-connection baseline.
+pub(crate) fn response_bytes(
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &[u8],
+    extra: &[(&str, String)],
+    conn: &str,
+) -> Vec<u8> {
+    let mut headers = vec![
+        ("Content-Type", content_type.to_string()),
+        ("Content-Length", body.len().to_string()),
+    ];
+    headers.extend(extra.iter().map(|(k, v)| (*k, v.clone())));
+    let mut out = Vec::with_capacity(body.len() + 256);
+    write_head_conn(&mut out, status, reason, &headers, conn).expect("write to Vec");
+    out.extend_from_slice(body);
+    out
+}
+
+/// JSON response as bytes (the pooled path's buffered writes).
+pub(crate) fn json_response_bytes(status: u16, reason: &str, value: &Json, conn: &str) -> Vec<u8> {
+    response_bytes(
+        status,
+        reason,
+        "application/json",
+        value.dump().as_bytes(),
+        &[],
+        conn,
+    )
 }
 
 fn respond(
@@ -485,13 +752,7 @@ fn respond(
     body: &[u8],
     extra: &[(&str, String)],
 ) -> std::io::Result<()> {
-    let mut headers = vec![
-        ("Content-Type", content_type.to_string()),
-        ("Content-Length", body.len().to_string()),
-    ];
-    headers.extend(extra.iter().map(|(k, v)| (*k, v.clone())));
-    write_head(w, status, reason, &headers)?;
-    w.write_all(body)?;
+    w.write_all(&response_bytes(status, reason, content_type, body, extra, "close"))?;
     w.flush()
 }
 
@@ -505,7 +766,7 @@ fn respond_json(
 }
 
 /// OpenAI-style error body.
-fn error_json(status: u16, message: &str) -> Json {
+pub(crate) fn error_json(status: u16, message: &str) -> Json {
     let kind = if status < 500 {
         "invalid_request_error"
     } else {
@@ -618,6 +879,20 @@ pub(crate) fn render_prometheus(rep: Option<&Report>, stats: &HttpStats) -> Stri
         "gauge",
         "Connections currently being handled",
         stats.active_connections.load(Ordering::SeqCst) as f64,
+    );
+    prom_metric(
+        &mut out,
+        "duetserve_http_keepalive_reuse_total",
+        "counter",
+        "Requests served on an already-used keep-alive connection",
+        stats.keepalive_reuse_total.load(Ordering::Relaxed) as f64,
+    );
+    prom_metric(
+        &mut out,
+        "duetserve_http_pool_queue_depth",
+        "gauge",
+        "Accepted connections waiting for a pool worker to register them",
+        stats.pool_queue_depth.load(Ordering::SeqCst) as f64,
     );
     if let Some(r) = rep {
         if let Some(cap) = r.queue_cap {
@@ -784,22 +1059,10 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
     shared.stats.requests_total.fetch_add(1, Ordering::Relaxed);
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
-            let draining =
-                shared.shutdown.load(Ordering::SeqCst) || shared.server_read().is_none();
-            let status = if draining { "draining" } else { "ok" };
-            let body = Json::obj(vec![
-                ("status", Json::string(status)),
-                ("model", Json::string(shared.cfg.model.clone())),
-            ]);
-            let _ = respond_json(&mut writer, 200, "OK", &body);
+            let _ = respond_json(&mut writer, 200, "OK", &healthz_json(shared));
         }
         ("GET", "/metrics") => {
-            let snapshot = shared
-                .server_read()
-                .as_ref()
-                .and_then(|s| s.report_snapshot())
-                .or_else(|| shared.report_lock().clone());
-            let body = render_prometheus(snapshot.as_ref(), &shared.stats);
+            let body = metrics_body(shared);
             let _ = respond(
                 &mut writer,
                 200,
@@ -842,6 +1105,27 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
             );
         }
     }
+}
+
+/// The `/healthz` body (shared by both accept paths).
+pub(crate) fn healthz_json(shared: &Shared) -> Json {
+    let draining = shared.shutdown.load(Ordering::SeqCst) || shared.server_read().is_none();
+    let status = if draining { "draining" } else { "ok" };
+    Json::obj(vec![
+        ("status", Json::string(status)),
+        ("model", Json::string(shared.cfg.model.clone())),
+    ])
+}
+
+/// The `/metrics` body (shared by both accept paths): transport counters
+/// plus a live engine snapshot, or the stored drain report after drain.
+pub(crate) fn metrics_body(shared: &Shared) -> String {
+    let snapshot = shared
+        .server_read()
+        .as_ref()
+        .and_then(|s| s.report_snapshot())
+        .or_else(|| shared.report_lock().clone());
+    render_prometheus(snapshot.as_ref(), &shared.stats)
 }
 
 /// After refusing a request whose body was never read (413/400), consume
@@ -916,7 +1200,7 @@ fn parse_completion(v: &Json) -> Result<CompletionParams, String> {
     })
 }
 
-fn finish_reason_str(reason: FinishReason) -> &'static str {
+pub(crate) fn finish_reason_str(reason: FinishReason) -> &'static str {
     match reason {
         // Generation always ends at `max_tokens` in this reproduction, so
         // the OpenAI name for that outcome is `length`.
@@ -936,7 +1220,7 @@ fn token_text(tokens: &[i32]) -> String {
         .join(" ")
 }
 
-fn completion_json(
+pub(crate) fn completion_json(
     id: u64,
     model: &str,
     tokens: &[i32],
@@ -974,24 +1258,44 @@ fn completion_json(
     ])
 }
 
-fn handle_completion(shared: &Shared, w: &mut TcpStream, req: &HttpRequest) {
+/// Outcome of validating + submitting one `/v1/completions` request —
+/// the seam both accept paths share, so error mapping, limits and
+/// transport counters stay identical by construction.
+pub(crate) enum CompletionStart {
+    /// Terminal (error) response, rendered with the caller's
+    /// `Connection` token, ready to write.
+    Respond(Vec<u8>),
+    /// Accepted into the engine; the caller owns delivery.
+    Accepted {
+        handle: RequestHandle,
+        prompt_tokens: usize,
+        stream: bool,
+    },
+}
+
+/// Parse, validate and submit a completion request. `conn` is the
+/// `Connection` token for any error response (`close` on the baseline
+/// path; the connection's keep-alive decision on the pooled path).
+pub(crate) fn start_completion(shared: &Shared, req: &HttpRequest, conn: &str) -> CompletionStart {
+    let fail = |status: u16, reason: &str, msg: &str| {
+        shared.stats.rejected_total.fetch_add(1, Ordering::Relaxed);
+        CompletionStart::Respond(json_response_bytes(
+            status,
+            reason,
+            &error_json(status, msg),
+            conn,
+        ))
+    };
     let Ok(body) = std::str::from_utf8(&req.body) else {
-        reject(shared, w, 400, "Bad Request", "body is not UTF-8");
-        return;
+        return fail(400, "Bad Request", "body is not UTF-8");
     };
     let parsed = match json::parse(body) {
         Ok(v) => v,
-        Err(e) => {
-            reject(shared, w, 400, "Bad Request", &format!("malformed JSON: {e}"));
-            return;
-        }
+        Err(e) => return fail(400, "Bad Request", &format!("malformed JSON: {e}")),
     };
     let params = match parse_completion(&parsed) {
         Ok(p) => p,
-        Err(msg) => {
-            reject(shared, w, 400, "Bad Request", &msg);
-            return;
-        }
+        Err(msg) => return fail(400, "Bad Request", &msg),
     };
     let CompletionParams {
         prompt,
@@ -1006,41 +1310,55 @@ fn handle_completion(shared: &Shared, w: &mut TcpStream, req: &HttpRequest) {
         guard.as_ref().map(|server| server.submit(prompt, opts))
     };
     let Some(submitted) = submitted else {
-        reject(shared, w, 503, "Service Unavailable", "server is draining");
-        return;
+        return fail(503, "Service Unavailable", "server is draining");
     };
-    let handle = match submitted {
-        Ok(h) => h,
+    match submitted {
+        Ok(handle) => {
+            shared.stats.completions_total.fetch_add(1, Ordering::Relaxed);
+            CompletionStart::Accepted {
+                handle,
+                prompt_tokens,
+                stream,
+            }
+        }
         Err(SubmitError::QueueFull { depth }) => {
             shared.stats.rejected_total.fetch_add(1, Ordering::Relaxed);
             let body = error_json(
                 429,
                 &format!("submission queue full (queue-cap {depth}); retry later"),
             );
-            let _ = respond(
-                w,
+            CompletionStart::Respond(response_bytes(
                 429,
                 "Too Many Requests",
                 "application/json",
                 body.dump().as_bytes(),
                 &[("Retry-After", "1".to_string())],
-            );
-            return;
+                conn,
+            ))
         }
-        Err(SubmitError::Rejected(why)) => {
-            reject(shared, w, 400, "Bad Request", &why);
-            return;
-        }
+        Err(SubmitError::Rejected(why)) => fail(400, "Bad Request", &why),
         Err(SubmitError::ShuttingDown) => {
-            reject(shared, w, 503, "Service Unavailable", "server is shutting down");
-            return;
+            fail(503, "Service Unavailable", "server is shutting down")
         }
-    };
-    shared.stats.completions_total.fetch_add(1, Ordering::Relaxed);
-    if stream {
-        stream_completion(shared, w, handle, prompt_tokens);
-    } else {
-        blocking_completion(shared, w, handle, prompt_tokens);
+    }
+}
+
+fn handle_completion(shared: &Shared, w: &mut TcpStream, req: &HttpRequest) {
+    match start_completion(shared, req, "close") {
+        CompletionStart::Respond(bytes) => {
+            let _ = w.write_all(&bytes).and_then(|()| w.flush());
+        }
+        CompletionStart::Accepted {
+            handle,
+            prompt_tokens,
+            stream,
+        } => {
+            if stream {
+                stream_completion(shared, w, handle, prompt_tokens);
+            } else {
+                blocking_completion(shared, w, handle, prompt_tokens);
+            }
+        }
     }
 }
 
@@ -1128,21 +1446,93 @@ fn sse_chunk(w: &mut impl Write, payload: &str) -> std::io::Result<()> {
     w.flush()
 }
 
-fn stream_events(
-    shared: &Shared,
-    w: &mut TcpStream,
-    handle: &RequestHandle,
-    prompt_tokens: usize,
-) -> std::io::Result<()> {
+/// One SSE `data:` frame as bytes (the pooled path appends these to a
+/// connection's output buffer).
+pub(crate) fn sse_frame(payload: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + 8);
+    out.extend_from_slice(b"data: ");
+    out.extend_from_slice(payload.as_bytes());
+    out.extend_from_slice(b"\n\n");
+    out
+}
+
+/// The SSE response head (status line + stream headers), as bytes.
+pub(crate) fn sse_head_bytes() -> Vec<u8> {
+    let mut out = Vec::with_capacity(128);
     write_head(
-        w,
+        &mut out,
         200,
         "OK",
         &[
             ("Content-Type", "text/event-stream".to_string()),
             ("Cache-Control", "no-cache".to_string()),
         ],
-    )?;
+    )
+    .expect("write to Vec");
+    out
+}
+
+/// One streamed-token SSE chunk (shared by both accept paths).
+pub(crate) fn sse_token_json(id: u64, model: &str, value: i32, at: f64) -> Json {
+    Json::obj(vec![
+        ("id", Json::string(format!("cmpl-{id}"))),
+        ("object", Json::string("text_completion")),
+        ("model", Json::string(model)),
+        (
+            "choices",
+            Json::arr(vec![Json::obj(vec![
+                ("index", Json::Num(0.0)),
+                ("text", Json::string(format!("{value} "))),
+                ("token_id", Json::Num(f64::from(value))),
+                ("at", Json::Num(at)),
+                ("finish_reason", Json::Null),
+            ])]),
+        ),
+    ])
+}
+
+/// The terminal SSE chunk with finish reason + usage (shared by both
+/// accept paths).
+pub(crate) fn sse_finish_json(
+    id: u64,
+    model: &str,
+    reason: FinishReason,
+    prompt_tokens: usize,
+    generated: usize,
+) -> Json {
+    Json::obj(vec![
+        ("id", Json::string(format!("cmpl-{id}"))),
+        ("object", Json::string("text_completion")),
+        ("model", Json::string(model)),
+        (
+            "choices",
+            Json::arr(vec![Json::obj(vec![
+                ("index", Json::Num(0.0)),
+                ("text", Json::string("")),
+                ("finish_reason", Json::string(finish_reason_str(reason))),
+            ])]),
+        ),
+        (
+            "usage",
+            Json::obj(vec![
+                ("prompt_tokens", Json::Num(prompt_tokens as f64)),
+                ("completion_tokens", Json::Num(generated as f64)),
+                (
+                    "total_tokens",
+                    Json::Num((prompt_tokens + generated) as f64),
+                ),
+            ]),
+        ),
+    ])
+}
+
+fn stream_events(
+    shared: &Shared,
+    w: &mut TcpStream,
+    handle: &RequestHandle,
+    prompt_tokens: usize,
+) -> std::io::Result<()> {
+    w.write_all(&sse_head_bytes())?;
     w.flush()?;
     let id = handle.id();
     let model = shared.cfg.model.as_str();
@@ -1167,50 +1557,12 @@ fn stream_events(
         };
         match ev {
             TokenEvent::Token { value, at } => {
-                let chunk = Json::obj(vec![
-                    ("id", Json::string(format!("cmpl-{id}"))),
-                    ("object", Json::string("text_completion")),
-                    ("model", Json::string(model)),
-                    (
-                        "choices",
-                        Json::arr(vec![Json::obj(vec![
-                            ("index", Json::Num(0.0)),
-                            ("text", Json::string(format!("{value} "))),
-                            ("token_id", Json::Num(f64::from(value))),
-                            ("at", Json::Num(at)),
-                            ("finish_reason", Json::Null),
-                        ])]),
-                    ),
-                ]);
-                sse_chunk(w, &chunk.dump())?;
+                sse_chunk(w, &sse_token_json(id, model, value, at).dump())?;
                 generated += 1;
                 shared.stats.tokens_streamed_total.fetch_add(1, Ordering::Relaxed);
             }
             TokenEvent::Done { reason } => {
-                let fin = Json::obj(vec![
-                    ("id", Json::string(format!("cmpl-{id}"))),
-                    ("object", Json::string("text_completion")),
-                    ("model", Json::string(model)),
-                    (
-                        "choices",
-                        Json::arr(vec![Json::obj(vec![
-                            ("index", Json::Num(0.0)),
-                            ("text", Json::string("")),
-                            ("finish_reason", Json::string(finish_reason_str(reason))),
-                        ])]),
-                    ),
-                    (
-                        "usage",
-                        Json::obj(vec![
-                            ("prompt_tokens", Json::Num(prompt_tokens as f64)),
-                            ("completion_tokens", Json::Num(generated as f64)),
-                            (
-                                "total_tokens",
-                                Json::Num((prompt_tokens + generated) as f64),
-                            ),
-                        ]),
-                    ),
-                ]);
+                let fin = sse_finish_json(id, model, reason, prompt_tokens, generated);
                 sse_chunk(w, &fin.dump())?;
                 return sse_chunk(w, "[DONE]");
             }
@@ -1226,7 +1578,7 @@ fn stream_events(
 // ---------------------------------------------------------------------
 
 #[cfg(unix)]
-mod sig {
+pub(crate) mod sig {
     use std::sync::atomic::{AtomicBool, Ordering};
 
     static TRIGGERED: AtomicBool = AtomicBool::new(false);
@@ -1258,7 +1610,7 @@ mod sig {
 }
 
 #[cfg(not(unix))]
-mod sig {
+pub(crate) mod sig {
     pub fn install() {}
 
     pub fn triggered() -> bool {
@@ -1496,5 +1848,153 @@ mod tests {
         assert!(err.contains("max_tokens"), "{err}");
         let v = json::parse(&format!(r#"{{"prompt":[1],"max_tokens":{MAX_TOKENS_CAP}}}"#)).unwrap();
         assert!(parse_completion(&v).is_ok());
+    }
+
+    #[test]
+    fn parse_buffered_walks_through_incremental_states() {
+        // Not even a full head yet.
+        assert!(matches!(parse_buffered(b"GET /hea", 1024), BufParse::Partial));
+        assert!(matches!(
+            parse_buffered(b"GET /healthz HTTP/1.1\r\nHost: x\r\n", 1024),
+            BufParse::Partial
+        ));
+        // Complete body-less request; consumed covers head exactly.
+        let wire = b"GET /healthz HTTP/1.1\r\n\r\n";
+        match parse_buffered(wire, 1024) {
+            BufParse::Complete(req, used) => {
+                assert_eq!(req.path, "/healthz");
+                assert!(req.http11);
+                assert_eq!(used, wire.len());
+            }
+            other => panic!("expected Complete, got {other:?}"),
+        }
+        // Head done, body still arriving.
+        assert!(matches!(
+            parse_buffered(b"POST /x HTTP/1.1\r\nContent-Length: 5\r\n\r\nab", 1024),
+            BufParse::PartialBody {
+                expect_continue: false
+            }
+        ));
+        assert!(matches!(
+            parse_buffered(
+                b"POST /x HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 5\r\n\r\n",
+                1024
+            ),
+            BufParse::PartialBody {
+                expect_continue: true
+            }
+        ));
+        // Full request with body.
+        match parse_buffered(b"POST /x HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello", 1024) {
+            BufParse::Complete(req, used) => {
+                assert_eq!(req.body, b"hello");
+                assert_eq!(used, 44);
+            }
+            other => panic!("expected Complete, got {other:?}"),
+        }
+        // Protocol violations fail (and map to the blocking parser's
+        // errors).
+        assert!(matches!(
+            parse_buffered(b"GARBAGE\r\n\r\n", 1024),
+            BufParse::Fail(ReadError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse_buffered(b"POST /x HTTP/1.1\r\nContent-Length: 9999\r\n\r\n", 64),
+            BufParse::Fail(ReadError::TooLarge { limit: 64 })
+        ));
+    }
+
+    #[test]
+    fn parse_buffered_handles_pipelined_requests_and_leading_blanks() {
+        let wire: Vec<u8> =
+            b"GET /healthz HTTP/1.1\r\n\r\nPOST /x HTTP/1.1\r\nContent-Length: 2\r\n\r\nok"
+                .to_vec();
+        let (first, used) = match parse_buffered(&wire, 1024) {
+            BufParse::Complete(req, used) => (req, used),
+            other => panic!("expected Complete, got {other:?}"),
+        };
+        assert_eq!(first.path, "/healthz");
+        let (second, used2) = match parse_buffered(&wire[used..], 1024) {
+            BufParse::Complete(req, u) => (req, u),
+            other => panic!("expected Complete, got {other:?}"),
+        };
+        assert_eq!(second.path, "/x");
+        assert_eq!(second.body, b"ok");
+        assert_eq!(used + used2, wire.len());
+        // Stray blank lines between requests are skipped and counted as
+        // consumed.
+        let wire = b"\r\n\nGET /metrics HTTP/1.1\n\n";
+        match parse_buffered(wire, 1024) {
+            BufParse::Complete(req, used) => {
+                assert_eq!(req.path, "/metrics");
+                assert_eq!(used, wire.len());
+            }
+            other => panic!("expected Complete, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_buffered_endless_header_stream_fails() {
+        let mut wire = b"GET / HTTP/1.1\r\n".to_vec();
+        while wire.len() <= MAX_HEADER_BYTES {
+            wire.extend_from_slice(b"X-Pad: aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa\r\n");
+        }
+        assert!(matches!(
+            parse_buffered(&wire, 1024),
+            BufParse::Fail(ReadError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn keep_alive_negotiation_follows_http11_rules() {
+        let req = |wire: &str| match parse_buffered(wire.as_bytes(), 1024) {
+            BufParse::Complete(r, _) => r,
+            other => panic!("expected Complete, got {other:?}"),
+        };
+        assert!(wants_keep_alive(&req("GET / HTTP/1.1\r\n\r\n")));
+        assert!(!wants_keep_alive(&req(
+            "GET / HTTP/1.1\r\nConnection: close\r\n\r\n"
+        )));
+        assert!(!wants_keep_alive(&req("GET / HTTP/1.0\r\n\r\n")));
+        assert!(wants_keep_alive(&req(
+            "GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n"
+        )));
+        // `close` wins over any other token, case-insensitively.
+        assert!(!wants_keep_alive(&req(
+            "GET / HTTP/1.1\r\nConnection: keep-alive, Close\r\n\r\n"
+        )));
+    }
+
+    #[test]
+    fn response_bytes_matches_blocking_respond_output() {
+        let v = error_json(400, "nope");
+        let bytes = json_response_bytes(400, "Bad Request", &v, "close");
+        let mut legacy = Vec::new();
+        respond(
+            &mut legacy,
+            400,
+            "Bad Request",
+            "application/json",
+            v.dump().as_bytes(),
+            &[],
+        )
+        .unwrap();
+        assert_eq!(bytes, legacy);
+        // Keep-alive variant differs only in the Connection header.
+        let ka = json_response_bytes(400, "Bad Request", &v, "keep-alive");
+        let s = String::from_utf8(ka).unwrap();
+        assert!(s.contains("Connection: keep-alive\r\n"));
+        assert!(!s.contains("Connection: close"));
+    }
+
+    #[test]
+    fn sse_frame_matches_sse_chunk_output() {
+        let mut legacy = Vec::new();
+        sse_chunk(&mut legacy, "[DONE]").unwrap();
+        assert_eq!(sse_frame("[DONE]"), legacy);
+        let head = String::from_utf8(sse_head_bytes()).unwrap();
+        assert!(head.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(head.contains("Content-Type: text/event-stream\r\n"));
+        assert!(head.ends_with("\r\n\r\n"));
     }
 }

@@ -59,10 +59,14 @@
 //! before the engine thread exits, returning the final [`Report`].
 
 pub mod http;
+#[cfg(unix)]
+pub(crate) mod pool;
 
 use std::cmp::Ordering;
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -70,8 +74,8 @@ use anyhow::{anyhow, Result};
 
 use crate::config::ServingConfig;
 use crate::engine::{
-    ClusterEngine, EngineCore, ExecutionBackend, Router, ServingTopology, SimBackend,
-    TopologyStep,
+    router_by_name, ClusterEngine, EngineCore, ExecutionBackend, RouteCandidate, Router,
+    ServingTopology, SimBackend, TopologyLoad, TopologyStep,
 };
 use crate::metrics::{Recorder, RecorderMode, Report};
 use crate::request::{Request, RequestId};
@@ -152,6 +156,58 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// The mergeable pieces of a serving report, before rendering into a
+/// [`Report`]. Single-shard servers convert straight through
+/// [`into_report`](ReportParts::into_report); a [`ShardedServer`] merges
+/// per-shard parts first — the recorders fold exactly as cluster workers
+/// fold at drain ([`Recorder::merge`] + max-duration), so an N-shard
+/// drain report aggregates identically to an N-worker cluster's.
+#[derive(Debug, Clone)]
+pub struct ReportParts {
+    pub recorder: Recorder,
+    /// Topology label (`Report::system` becomes `server/<label>`).
+    pub label: String,
+    pub engine_epoch: u64,
+    pub engine_uptime_s: f64,
+    /// Backpressure bound; summed across shards on merge.
+    pub queue_cap: Option<usize>,
+    /// True when the engine loop aborted on a backend panic.
+    pub aborted: bool,
+}
+
+impl ReportParts {
+    /// Render into the final [`Report`] (same rendering the unsharded
+    /// server always did).
+    pub fn into_report(self) -> Report {
+        let mut rep = self.recorder.report(&self.label);
+        rep.system = if self.aborted {
+            "server/aborted".to_string()
+        } else {
+            format!("server/{}", self.label)
+        };
+        rep.queue_cap = self.queue_cap;
+        rep.engine_epoch = self.engine_epoch;
+        rep.engine_uptime_s = self.engine_uptime_s;
+        rep
+    }
+
+    /// Fold `other` into `self`, mirroring the cluster's worker fold:
+    /// recorders merge, duration/epoch/uptime take the max, queue caps
+    /// sum, and an abort anywhere taints the whole report.
+    pub fn merge(&mut self, other: &ReportParts) {
+        let dur = self.recorder.duration.max(other.recorder.duration);
+        self.recorder.merge(&other.recorder);
+        self.recorder.duration = dur;
+        self.engine_epoch = self.engine_epoch.max(other.engine_epoch);
+        self.engine_uptime_s = self.engine_uptime_s.max(other.engine_uptime_s);
+        self.queue_cap = match (self.queue_cap, other.queue_cap) {
+            (Some(a), Some(b)) => Some(a + b),
+            (a, b) => a.or(b),
+        };
+        self.aborted |= other.aborted;
+    }
+}
+
 enum Control {
     Submit {
         prompt: Vec<i32>,
@@ -161,7 +217,7 @@ enum Control {
     Cancel(RequestId),
     /// Live, non-destructive metrics snapshot (the HTTP transport's
     /// `/metrics` endpoint).
-    Report(Sender<Report>),
+    Report(Sender<ReportParts>),
     Shutdown,
 }
 
@@ -275,6 +331,9 @@ pub struct ServerCore {
     streams: HashMap<RequestId, StreamState>,
     queue_depth: usize,
     next_id: RequestId,
+    /// Request-id increment: 1 standalone; the shard count under a
+    /// [`ShardedServer`], so shard id spaces interleave disjointly.
+    id_stride: u64,
     /// Requests cancelled by the client.
     pub cancelled: u64,
 }
@@ -305,6 +364,7 @@ impl ServerCore {
             streams: HashMap::new(),
             queue_depth: DEFAULT_QUEUE_DEPTH,
             next_id: 0,
+            id_stride: 1,
             cancelled: 0,
         }
     }
@@ -353,6 +413,15 @@ impl ServerCore {
     /// Set the backpressure bound (accepted-but-not-admitted requests).
     pub fn with_queue_depth(mut self, depth: usize) -> ServerCore {
         self.queue_depth = depth.max(1);
+        self
+    }
+
+    /// Assign this core a disjoint request-id space: ids start at `base`
+    /// and advance by `stride`. Shard *i* of an N-shard server uses
+    /// `(i, N)`, so ids stay globally unique across shards.
+    pub fn with_id_stride(mut self, base: u64, stride: u64) -> ServerCore {
+        self.next_id = base;
+        self.id_stride = stride.max(1);
         self
     }
 
@@ -440,7 +509,7 @@ impl ServerCore {
             });
         }
         let id = self.next_id;
-        self.next_id += 1;
+        self.next_id += self.id_stride;
         // "Now" on the absolute timeline; converted back to the owning
         // epoch's local coordinates at injection time.
         let arrival = opts.arrival.unwrap_or_else(|| self.clock());
@@ -573,9 +642,18 @@ impl ServerCore {
     /// structs (same `Recorder`/`Report` as the simulated engines; merged
     /// across workers for a cluster). The engine invariants are checked
     /// on this path too, not just the batch runs.
-    pub fn finish(mut self) -> Report {
+    pub fn finish(self) -> Report {
+        self.finish_parts().into_report()
+    }
+
+    /// Drain-time report pieces, pre-rendering — what a
+    /// [`ShardedServer`] merges across shards.
+    pub fn finish_parts(mut self) -> ReportParts {
         self.run_to_idle();
-        let mut rep = self.topology.fold_report();
+        let label = self.topology.label();
+        let epoch = self.topology.epoch();
+        let uptime = self.clock();
+        let recorder = self.topology.drain_recorder();
         if let Err(e) = self.topology.check_invariants() {
             // Print before panicking: on the threaded path the panic
             // unwinds the engine thread and `shutdown` only reports "the
@@ -583,9 +661,14 @@ impl ServerCore {
             eprintln!("serving invariants violated at drain: {e}");
             panic!("serving invariants violated at drain: {e}");
         }
-        rep.system = format!("server/{}", rep.system);
-        rep.queue_cap = Some(self.queue_depth);
-        rep
+        ReportParts {
+            recorder,
+            label,
+            engine_epoch: epoch,
+            engine_uptime_s: uptime,
+            queue_cap: Some(self.queue_depth),
+            aborted: false,
+        }
     }
 
     /// Live, non-destructive metrics snapshot: what has been recorded so
@@ -595,13 +678,27 @@ impl ServerCore {
     /// [`snapshot_recorder`](ServingTopology::snapshot_recorder) seam
     /// instead. Powers the HTTP transport's `/metrics` endpoint.
     pub fn report_snapshot(&self) -> Report {
-        let rec = self.topology.snapshot_recorder();
-        let mut rep = rec.report(&self.topology.label());
-        rep.system = format!("server/{}", rep.system);
-        rep.queue_cap = Some(self.queue_depth);
-        rep.engine_epoch = self.topology.epoch();
-        rep.engine_uptime_s = self.clock();
-        rep
+        self.snapshot_parts().into_report()
+    }
+
+    /// Live snapshot pieces, pre-rendering (mergeable across shards).
+    pub fn snapshot_parts(&self) -> ReportParts {
+        ReportParts {
+            recorder: self.topology.snapshot_recorder(),
+            label: self.topology.label(),
+            engine_epoch: self.topology.epoch(),
+            engine_uptime_s: self.clock(),
+            queue_cap: Some(self.queue_depth),
+            aborted: false,
+        }
+    }
+
+    /// O(1) load signals for submit-time routing: the topology's
+    /// incremental counters plus this core's not-yet-injected backlog.
+    pub fn load(&self) -> TopologyLoad {
+        let mut l = self.topology.load();
+        l.queue_len += self.pending.len();
+        l
     }
 
     fn admit_pending(&mut self) {
@@ -698,15 +795,22 @@ impl ServerCore {
     /// so far. The transport calls this when a backend failure (panic)
     /// aborts the engine loop: clients must observe an explicit `Done`
     /// rather than a silently truncated stream.
-    fn into_aborted_report(mut self) -> Report {
+    fn into_aborted_parts(mut self) -> ReportParts {
         let ids: Vec<RequestId> = self.streams.keys().copied().collect();
         for id in ids {
             self.finish_stream(id, FinishReason::Dropped);
         }
-        let mut rep = self.topology.fold_report();
-        rep.system = "server/aborted".to_string();
-        rep.queue_cap = Some(self.queue_depth);
-        rep
+        let label = self.topology.label();
+        let epoch = self.topology.epoch();
+        let uptime = self.clock();
+        ReportParts {
+            recorder: self.topology.drain_recorder(),
+            label,
+            engine_epoch: epoch,
+            engine_uptime_s: uptime,
+            queue_cap: Some(self.queue_depth),
+            aborted: true,
+        }
     }
 }
 
@@ -729,10 +833,45 @@ fn apply_control(core: &mut ServerCore, ctl: Control, handle_ctl: &Sender<Contro
             false
         }
         Control::Report(reply) => {
-            let _ = reply.send(core.report_snapshot());
+            let _ = reply.send(core.snapshot_parts());
             false
         }
         Control::Shutdown => true,
+    }
+}
+
+/// Lock-free per-shard load signals, published by the engine thread once
+/// per loop iteration and read by [`ShardedServer::submit`] to build
+/// [`RouteCandidate`]s without a control-channel round trip. All loads
+/// are `Relaxed`: routing is heuristic, and a slightly stale signal only
+/// costs placement quality, never correctness.
+#[derive(Debug, Default)]
+pub struct LoadBoard {
+    queue_len: AtomicUsize,
+    outstanding_tokens: AtomicU64,
+    kv_free_tokens: AtomicU64,
+}
+
+impl LoadBoard {
+    fn publish(&self, load: &TopologyLoad) {
+        self.queue_len.store(load.queue_len, AtomicOrdering::Relaxed);
+        self.outstanding_tokens
+            .store(load.outstanding_tokens, AtomicOrdering::Relaxed);
+        self.kv_free_tokens
+            .store(load.kv_free_tokens, AtomicOrdering::Relaxed);
+    }
+
+    /// Render as a routing candidate for shard index `worker`. Prefix
+    /// signals are per-request and not tracked across shards: 0.
+    fn candidate(&self, worker: usize) -> RouteCandidate {
+        RouteCandidate {
+            worker,
+            queue_len: self.queue_len.load(AtomicOrdering::Relaxed),
+            outstanding_tokens: self.outstanding_tokens.load(AtomicOrdering::Relaxed),
+            kv_free_tokens: self.kv_free_tokens.load(AtomicOrdering::Relaxed),
+            prefix_resident_tokens: 0,
+            prefix_overlap_tokens: 0,
+        }
     }
 }
 
@@ -740,7 +879,8 @@ fn apply_control(core: &mut ServerCore, ctl: Control, handle_ctl: &Sender<Contro
 /// thread, stream tokens back.
 pub struct Server {
     tx: Sender<Control>,
-    engine_thread: Option<JoinHandle<Report>>,
+    engine_thread: Option<JoinHandle<ReportParts>>,
+    load: Arc<LoadBoard>,
 }
 
 impl Server {
@@ -755,7 +895,9 @@ impl Server {
         let (tx, rx) = channel::<Control>();
         let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
         let handle_ctl = tx.clone();
-        let engine_thread = std::thread::spawn(move || -> Report {
+        let load = Arc::new(LoadBoard::default());
+        let board = Arc::clone(&load);
+        let engine_thread = std::thread::spawn(move || -> ReportParts {
             let mut core = match make_core() {
                 Ok(c) => {
                     let _ = ready_tx.send(Ok(()));
@@ -763,7 +905,14 @@ impl Server {
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e.to_string()));
-                    return Recorder::new().report("server/failed");
+                    return ReportParts {
+                        recorder: Recorder::new(),
+                        label: "failed".to_string(),
+                        engine_epoch: 0,
+                        engine_uptime_s: 0.0,
+                        queue_cap: None,
+                        aborted: false,
+                    };
                 }
             };
             let mut draining = false;
@@ -782,6 +931,7 @@ impl Server {
                         }
                     }
                 }
+                board.publish(&core.load());
                 // Contain backend failures (the PJRT adapter surfaces
                 // runtime errors as panics): close every stream with a
                 // terminal event instead of unwinding the whole thread.
@@ -789,7 +939,7 @@ impl Server {
                     std::panic::AssertUnwindSafe(|| core.step()),
                 ) {
                     Ok(p) => p,
-                    Err(_) => return core.into_aborted_report(),
+                    Err(_) => return core.into_aborted_parts(),
                 };
                 if !progressed {
                     if draining {
@@ -806,12 +956,13 @@ impl Server {
                     }
                 }
             }
-            core.finish()
+            core.finish_parts()
         });
         match ready_rx.recv() {
             Ok(Ok(())) => Ok(Server {
                 tx,
                 engine_thread: Some(engine_thread),
+                load,
             }),
             Ok(Err(msg)) => {
                 let _ = engine_thread.join();
@@ -877,14 +1028,29 @@ impl Server {
     /// ([`ServerCore::report_snapshot`]). `None` when the engine thread
     /// is gone.
     pub fn report_snapshot(&self) -> Option<Report> {
+        Some(self.snapshot_parts()?.into_report())
+    }
+
+    /// Live snapshot pieces (pre-rendering; mergeable across shards).
+    pub fn snapshot_parts(&self) -> Option<ReportParts> {
         let (reply, reply_rx) = channel();
         self.tx.send(Control::Report(reply)).ok()?;
         reply_rx.recv().ok()
     }
 
+    /// This server's live load board (engine-thread-published signals).
+    pub fn load_board(&self) -> &Arc<LoadBoard> {
+        &self.load
+    }
+
     /// Drain in-flight and queued work, stop the engine thread, and
     /// return the final report.
-    pub fn shutdown(mut self) -> Result<Report> {
+    pub fn shutdown(self) -> Result<Report> {
+        Ok(self.shutdown_parts()?.into_report())
+    }
+
+    /// Drain and return the report pieces (pre-rendering).
+    pub fn shutdown_parts(mut self) -> Result<ReportParts> {
         let _ = self.tx.send(Control::Shutdown);
         let h = self.engine_thread.take().expect("engine thread already joined");
         h.join().map_err(|_| anyhow!("engine thread panicked"))
@@ -897,6 +1063,144 @@ impl Drop for Server {
         if let Some(h) = self.engine_thread.take() {
             let _ = h.join();
         }
+    }
+}
+
+/// N independent engine shards behind one submit surface.
+///
+/// Each shard is a full [`Server`] — its own topology slice and engine
+/// thread behind its own bounded control queue — so N shards give N
+/// concurrent engine loops instead of one serialized control channel.
+/// Submissions are routed at submit time through the same
+/// [`Router`] seam the cluster uses for worker dispatch, against each
+/// shard's live [`LoadBoard`]; `report_snapshot`/`shutdown` merge the
+/// per-shard [`ReportParts`] exactly as cluster workers merge at drain.
+///
+/// A 1-shard instance (also via `From<Server>`) adds no overhead beyond
+/// a vector index — the HTTP transport always runs over this type.
+pub struct ShardedServer {
+    shards: Vec<Server>,
+    router: Mutex<Box<dyn Router + Send>>,
+}
+
+impl From<Server> for ShardedServer {
+    fn from(server: Server) -> ShardedServer {
+        ShardedServer::single(server)
+    }
+}
+
+impl ShardedServer {
+    /// Wrap one server; routing is trivial (everything goes to shard 0).
+    pub fn single(server: Server) -> ShardedServer {
+        ShardedServer {
+            shards: vec![server],
+            router: Mutex::new(router_by_name("round-robin").expect("built-in router")),
+        }
+    }
+
+    /// Start `shards` engine shards. `make(i)` builds shard *i*'s core
+    /// constructor (run on that shard's engine thread); give each shard
+    /// a distinct seed and `ServerCore::with_id_stride(i, shards)` so
+    /// request ids stay globally unique. `router` is a
+    /// [`router_by_name`] name.
+    pub fn start<G>(
+        shards: usize,
+        router: &str,
+        make: impl Fn(usize) -> G,
+    ) -> Result<ShardedServer>
+    where
+        G: FnOnce() -> Result<ServerCore> + Send + 'static,
+    {
+        let n = shards.max(1);
+        let router =
+            router_by_name(router).ok_or_else(|| anyhow!("unknown router `{router}`"))?;
+        let mut servers = Vec::with_capacity(n);
+        for i in 0..n {
+            servers.push(Server::start(make(i))?);
+        }
+        Ok(ShardedServer {
+            shards: servers,
+            router: Mutex::new(router),
+        })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard a routing decision would pick right now (index into the
+    /// shard list). Single shard short-circuits without touching the
+    /// router.
+    fn pick_shard(&self, prompt_len: usize, opts: &SubmitOptions) -> usize {
+        if self.shards.len() == 1 {
+            return 0;
+        }
+        let candidates: Vec<RouteCandidate> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| s.load.candidate(i))
+            .collect();
+        // Probe request for the router's load heuristics. Clamped to the
+        // constructor's ≥1 invariants; id/arrival are never read by the
+        // built-in routers and never reach an engine.
+        let probe = Request::new(
+            u64::MAX,
+            0.0,
+            prompt_len.max(1) as u64,
+            opts.max_new_tokens.max(1),
+        );
+        let mut router = self.router.lock().unwrap_or_else(|e| e.into_inner());
+        router.route(&probe, &candidates).min(self.shards.len() - 1)
+    }
+
+    /// Route and submit: picks a shard against live load signals, then
+    /// applies that shard's validation + backpressure.
+    pub fn submit(
+        &self,
+        prompt: Vec<i32>,
+        opts: SubmitOptions,
+    ) -> std::result::Result<RequestHandle, SubmitError> {
+        let shard = self.pick_shard(prompt.len(), &opts);
+        self.shards[shard].submit(prompt, opts)
+    }
+
+    /// Live merged snapshot across all shards. `None` when any shard's
+    /// engine thread is gone.
+    pub fn report_snapshot(&self) -> Option<Report> {
+        let mut acc: Option<ReportParts> = None;
+        for s in &self.shards {
+            let p = s.snapshot_parts()?;
+            match &mut acc {
+                None => acc = Some(p),
+                Some(a) => a.merge(&p),
+            }
+        }
+        let mut p = acc?;
+        if self.shards.len() > 1 {
+            p.label = format!("{}x{}", self.shards.len(), p.label);
+        }
+        Some(p.into_report())
+    }
+
+    /// Drain every shard and merge the final reports (same fold as the
+    /// cluster's worker merge: recorders sum, duration/uptime max,
+    /// queue caps sum).
+    pub fn shutdown(self) -> Result<Report> {
+        let n = self.shards.len();
+        let mut acc: Option<ReportParts> = None;
+        for s in self.shards {
+            let p = s.shutdown_parts()?;
+            match &mut acc {
+                None => acc = Some(p),
+                Some(a) => a.merge(&p),
+            }
+        }
+        let mut p = acc.expect("at least one shard");
+        if n > 1 {
+            p.label = format!("{n}x{}", p.label);
+        }
+        Ok(p.into_report())
     }
 }
 

@@ -1,0 +1,753 @@
+//! Keep-alive front door: a fixed pool of readiness-polled connection
+//! workers (unix only; gated at the declaration site).
+//!
+//! The thread-per-connection baseline in [`super::http`] spawns a thread
+//! and burns a connect/close round trip per request — fine for a
+//! handful of clients, a bottleneck long before the engine saturates.
+//! This module multiplexes every connection over
+//! [`HttpConfig::pool_workers`](super::http::HttpConfig) worker threads
+//! instead:
+//!
+//! - sockets are non-blocking and registered with a `poll(2)` readiness
+//!   loop (declared directly against libc, like the `signal(2)` binding
+//!   in [`super::http::sig`] — the crate stays dependency-free);
+//! - requests are parsed *incrementally* per readiness event
+//!   ([`parse_buffered`]) and served repeatedly on the same socket
+//!   (HTTP/1.1 keep-alive, pipelining included) until `Connection:
+//!   close`, the idle timeout, or drain;
+//! - responses and SSE frames go through per-connection output buffers
+//!   flushed on `POLLOUT`, so a slow reader back-pressures its own
+//!   connection and *never* wedges a worker — the disconnect probes and
+//!   per-write `set_nonblocking` flips of the baseline path do not
+//!   exist here, the readiness loop observes hangups directly.
+//!
+//! Every handler, parser, limit and response builder is shared with the
+//! baseline path (`start_completion`, `parse_buffered` runs the same
+//! `read_head`/`body_len` grammar, `response_bytes`), so the two paths
+//! answer byte-identically for a `Connection: close` request — the
+//! keep-alive tests pin that.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::http::{
+    completion_json, error_json, finish_reason_str, healthz_json, json_response_bytes,
+    metrics_body, parse_buffered, refuse_over_capacity, report_json, response_bytes, sig,
+    sse_finish_json, sse_frame, sse_head_bytes, sse_token_json, start_completion,
+    wants_keep_alive, BufParse, CompletionStart, HttpRequest, ReadError, Shared, CONN_LINGER,
+    IO_TIMEOUT,
+};
+use super::{FinishReason, HandlePoll, RequestHandle, TokenEvent};
+
+/// Poll timeout when every connection is idle (keep-alive parked): new
+/// intake pickup latency is bounded by this.
+const IDLE_POLL_MS: i32 = 10;
+
+/// Poll timeout while any request is in flight: the token pump runs at
+/// this cadence even with no socket readiness.
+const ACTIVE_POLL_MS: i32 = 2;
+
+/// Accept-loop sleep while the listener has nothing (mirrors the
+/// baseline's poll interval).
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Read chunk per readiness event.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Stop pulling token events for a connection whose un-flushed output
+/// exceeds this — the peer reads too slowly; events stay queued in the
+/// request's channel instead of our memory.
+const MAX_OUTBUF: usize = 4 << 20;
+
+/// Read-buffer cap beyond one max-size request's worth of headers+body;
+/// past it we stop reading (level-triggered poll re-arms when the
+/// parser catches up), bounding pipelining memory per connection.
+const RBUF_SLACK: usize = 64 * 1024;
+
+/// Minimal `poll(2)` surface. std links libc on every unix target, so
+/// declaring the symbol directly keeps the crate offline-buildable.
+mod sys {
+    use std::os::unix::io::RawFd;
+
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: RawFd,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: std::os::raw::c_ulong, timeout: i32) -> i32;
+    }
+
+    /// Block up to `timeout_ms` for readiness. Errors (EINTR included)
+    /// report zero ready fds — the caller's loop re-polls.
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> usize {
+        if fds.is_empty() {
+            return 0;
+        }
+        let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as std::os::raw::c_ulong, timeout_ms) };
+        if n < 0 {
+            0
+        } else {
+            n as usize
+        }
+    }
+}
+
+/// What one connection is doing between readiness events.
+enum ConnState {
+    /// Waiting for (more of) a request.
+    Idle,
+    /// A non-streaming completion is generating; tokens accumulate until
+    /// the terminal event, then one JSON response is queued.
+    Waiting {
+        handle: RequestHandle,
+        tokens: Vec<i32>,
+        prompt_tokens: usize,
+        keep_alive: bool,
+    },
+    /// An SSE stream: each token event becomes a frame in the output
+    /// buffer. SSE has no length framing, so the connection closes after
+    /// the terminal `[DONE]` flushes.
+    Streaming {
+        handle: RequestHandle,
+        prompt_tokens: usize,
+        generated: usize,
+    },
+}
+
+struct Conn {
+    stream: TcpStream,
+    /// Accumulated unparsed request bytes.
+    rbuf: Vec<u8>,
+    /// Un-flushed response bytes (`wpos` is the flushed prefix).
+    wbuf: Vec<u8>,
+    wpos: usize,
+    state: ConnState,
+    /// Last socket read/write progress (keep-alive idle timeout base).
+    last_activity: Instant,
+    /// Last write progress while output is pending (slow-reader reap).
+    last_write_progress: Instant,
+    /// Requests served on this connection (reuse metric).
+    served: u64,
+    /// `100 Continue` already queued for the in-flight partial body.
+    sent_continue: bool,
+    /// Cancel already sent for the in-flight request (peer vanished).
+    cancel_sent: bool,
+    /// Close once the output buffer drains and the state is idle.
+    close_after_flush: bool,
+    /// Peer sent EOF (half-close); no further requests can arrive.
+    peer_eof: bool,
+    /// Reap at the next sweep, unconditionally.
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        let now = Instant::now();
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            state: ConnState::Idle,
+            last_activity: now,
+            last_write_progress: now,
+            served: 0,
+            sent_continue: false,
+            cancel_sent: false,
+            close_after_flush: false,
+            peer_eof: false,
+            dead: false,
+        }
+    }
+
+    fn queue(&mut self, bytes: Vec<u8>) {
+        if self.wbuf.len() == self.wpos {
+            self.wbuf = bytes;
+            self.wpos = 0;
+        } else {
+            self.wbuf.extend_from_slice(&bytes);
+        }
+        self.last_write_progress = Instant::now();
+    }
+
+    fn pending(&self) -> bool {
+        self.wpos < self.wbuf.len()
+    }
+
+    fn is_idle(&self) -> bool {
+        matches!(self.state, ConnState::Idle)
+    }
+}
+
+/// Accept loop for the pooled path: accepts, applies `--max-conns`, and
+/// hands sockets to the least-loaded worker. On shutdown it drops the
+/// intake channels (workers observe and drain), drains the engine, and
+/// joins the pool.
+pub(crate) fn pool_accept_loop(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    handle_signals: bool,
+    workers: usize,
+) {
+    let workers = workers.max(1);
+    let assigned: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..workers).map(|_| AtomicUsize::new(0)).collect());
+    let mut txs = Vec::with_capacity(workers);
+    let mut joins = Vec::with_capacity(workers);
+    for i in 0..workers {
+        let (tx, rx) = channel::<TcpStream>();
+        let shared_w = Arc::clone(&shared);
+        let assigned_w = Arc::clone(&assigned);
+        joins.push(std::thread::spawn(move || {
+            worker_loop(rx, shared_w, assigned_w, i, handle_signals)
+        }));
+        txs.push(tx);
+    }
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) || (handle_signals && sig::triggered()) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let cap = shared.cfg.max_conns as u64;
+                let in_flight = shared.stats.active_connections.load(Ordering::SeqCst)
+                    + shared.stats.pool_queue_depth.load(Ordering::SeqCst);
+                if cap > 0 && in_flight >= cap {
+                    refuse_over_capacity(&shared, stream);
+                    continue;
+                }
+                let (mut best, mut best_n) = (0usize, usize::MAX);
+                for (i, a) in assigned.iter().enumerate() {
+                    let n = a.load(Ordering::SeqCst);
+                    if n < best_n {
+                        best = i;
+                        best_n = n;
+                    }
+                }
+                assigned[best].fetch_add(1, Ordering::SeqCst);
+                shared.stats.pool_queue_depth.fetch_add(1, Ordering::SeqCst);
+                if txs[best].send(stream).is_err() {
+                    assigned[best].fetch_sub(1, Ordering::SeqCst);
+                    shared.stats.pool_queue_depth.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(ACCEPT_POLL),
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+    // Close intakes first (workers flip to draining), then drain the
+    // engine so every in-flight request gets its terminal event, then
+    // wait for the workers to flush and exit.
+    drop(txs);
+    shared.drain();
+    for j in joins {
+        let _ = j.join();
+    }
+}
+
+fn register(shared: &Shared, conns: &mut Vec<Conn>, assigned: &AtomicUsize, stream: TcpStream) {
+    shared.stats.pool_queue_depth.fetch_sub(1, Ordering::SeqCst);
+    if stream.set_nonblocking(true).is_err() {
+        assigned.fetch_sub(1, Ordering::SeqCst);
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    shared.stats.active_connections.fetch_add(1, Ordering::SeqCst);
+    conns.push(Conn::new(stream));
+}
+
+fn worker_loop(
+    intake: Receiver<TcpStream>,
+    shared: Arc<Shared>,
+    assigned: Arc<Vec<AtomicUsize>>,
+    me: usize,
+    handle_signals: bool,
+) {
+    let max_body = shared.cfg.max_body;
+    let idle_timeout = shared.cfg.idle_timeout;
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut intake_open = true;
+    let mut drain_started: Option<Instant> = None;
+    let mut fds: Vec<sys::PollFd> = Vec::new();
+    loop {
+        // 1) Pick up newly accepted connections.
+        while intake_open {
+            match intake.try_recv() {
+                Ok(stream) => register(&shared, &mut conns, &assigned[me], stream),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    intake_open = false;
+                }
+            }
+        }
+        let draining = !intake_open
+            || shared.shutdown.load(Ordering::SeqCst)
+            || (handle_signals && sig::triggered());
+        if draining && drain_started.is_none() {
+            drain_started = Some(Instant::now());
+        }
+        if conns.is_empty() {
+            if draining {
+                break;
+            }
+            // Nothing to poll: block on intake instead of spinning.
+            match intake.recv_timeout(Duration::from_millis(50)) {
+                Ok(stream) => register(&shared, &mut conns, &assigned[me], stream),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => intake_open = false,
+            }
+            continue;
+        }
+        // 2) Readiness: POLLIN always (EOF/hangup detection is how
+        // disconnect-cancel works), POLLOUT only with pending output.
+        fds.clear();
+        for c in &conns {
+            let mut ev = sys::POLLIN;
+            if c.pending() {
+                ev |= sys::POLLOUT;
+            }
+            fds.push(sys::PollFd {
+                fd: c.stream.as_raw_fd(),
+                events: ev,
+                revents: 0,
+            });
+        }
+        let any_active = conns.iter().any(|c| !c.is_idle());
+        let timeout = if any_active || draining {
+            ACTIVE_POLL_MS
+        } else {
+            IDLE_POLL_MS
+        };
+        sys::poll_fds(&mut fds, timeout);
+        // 3) IO + state machine per connection.
+        for (c, fd) in conns.iter_mut().zip(&fds) {
+            let re = fd.revents;
+            if re & (sys::POLLERR | sys::POLLNVAL) != 0 {
+                c.dead = true;
+                continue;
+            }
+            if re & (sys::POLLIN | sys::POLLHUP) != 0
+                && !c.peer_eof
+                && c.rbuf.len() < max_body + RBUF_SLACK
+            {
+                read_some(c);
+            }
+        }
+        for c in conns.iter_mut() {
+            if c.dead {
+                continue;
+            }
+            step_conn(&shared, c, max_body);
+            flush_some(c);
+        }
+        // 4) Reap.
+        let now = Instant::now();
+        let linger_over = drain_started.is_some_and(|t| t.elapsed() > CONN_LINGER);
+        let mut i = 0;
+        while i < conns.len() {
+            let c = &mut conns[i];
+            let flushed = !c.pending();
+            let idle = c.is_idle();
+            let reap = c.dead
+                || linger_over
+                || (flushed && idle && c.close_after_flush)
+                || (flushed && idle && c.peer_eof)
+                || (flushed && idle && draining)
+                || (flushed
+                    && idle
+                    && now.duration_since(c.last_activity) > idle_timeout)
+                || (c.pending() && now.duration_since(c.last_write_progress) > IO_TIMEOUT);
+            if reap {
+                let c = conns.swap_remove(i);
+                assigned[me].fetch_sub(1, Ordering::SeqCst);
+                finalize(&shared, c);
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Drop a connection: cancel any in-flight request so abandoned work
+/// releases its slot and KV, and settle the gauges.
+fn finalize(shared: &Shared, c: Conn) {
+    match c.state {
+        ConnState::Idle => {}
+        ConnState::Waiting { handle, .. } => {
+            if !c.cancel_sent {
+                handle.cancel();
+            }
+        }
+        ConnState::Streaming { handle, .. } => {
+            if !c.cancel_sent {
+                handle.cancel();
+            }
+            shared.stats.active_streams.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+    shared.stats.active_connections.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// Non-blocking read into the connection's buffer. EOF marks
+/// `peer_eof`; hard errors mark the connection dead.
+fn read_some(c: &mut Conn) {
+    let mut chunk = [0u8; READ_CHUNK];
+    loop {
+        match c.stream.read(&mut chunk) {
+            Ok(0) => {
+                c.peer_eof = true;
+                return;
+            }
+            Ok(n) => {
+                c.last_activity = Instant::now();
+                c.rbuf.extend_from_slice(&chunk[..n]);
+                if n < chunk.len() {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.dead = true;
+                return;
+            }
+        }
+    }
+}
+
+/// Non-blocking flush of the output buffer; stops on `WouldBlock` (the
+/// poll loop re-arms with POLLOUT).
+fn flush_some(c: &mut Conn) {
+    while c.pending() {
+        match c.stream.write(&c.wbuf[c.wpos..]) {
+            Ok(0) => {
+                c.dead = true;
+                return;
+            }
+            Ok(n) => {
+                c.wpos += n;
+                let now = Instant::now();
+                c.last_write_progress = now;
+                c.last_activity = now;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.dead = true;
+                return;
+            }
+        }
+    }
+    c.wbuf.clear();
+    c.wpos = 0;
+}
+
+/// Advance one connection's request/response state machine as far as it
+/// can go without blocking: parse buffered requests (pipelining
+/// included), dispatch them, and pump token events into the output
+/// buffer.
+fn step_conn(shared: &Shared, c: &mut Conn, max_body: usize) {
+    loop {
+        match std::mem::replace(&mut c.state, ConnState::Idle) {
+            ConnState::Idle => {
+                if c.close_after_flush || c.rbuf.is_empty() {
+                    return;
+                }
+                match parse_buffered(&c.rbuf, max_body) {
+                    BufParse::Partial => {
+                        if c.peer_eof {
+                            // EOF mid-head: same 400 the blocking reader
+                            // produces when the line read hits EOF.
+                            fail_request(shared, c, "connection closed inside headers");
+                        }
+                        return;
+                    }
+                    BufParse::PartialBody { expect_continue } => {
+                        if c.peer_eof {
+                            fail_request(
+                                shared,
+                                c,
+                                "content-length mismatch: body ended before the declared length",
+                            );
+                            return;
+                        }
+                        if expect_continue && !c.sent_continue {
+                            c.sent_continue = true;
+                            c.queue(b"HTTP/1.1 100 Continue\r\n\r\n".to_vec());
+                        }
+                        return;
+                    }
+                    BufParse::Complete(req, used) => {
+                        c.rbuf.drain(..used);
+                        c.sent_continue = false;
+                        dispatch(shared, c, &req);
+                        if c.close_after_flush || !c.is_idle() {
+                            return;
+                        }
+                        // Pipelined follower may already be buffered.
+                        continue;
+                    }
+                    BufParse::Fail(err) => {
+                        match err {
+                            ReadError::Malformed(m) => fail_request(shared, c, &m),
+                            ReadError::TooLarge { limit } => {
+                                shared.stats.rejected_total.fetch_add(1, Ordering::Relaxed);
+                                let msg = format!("request body exceeds {limit} bytes");
+                                c.queue(json_response_bytes(
+                                    413,
+                                    "Payload Too Large",
+                                    &error_json(413, &msg),
+                                    "close",
+                                ));
+                                c.close_after_flush = true;
+                                c.rbuf.clear();
+                            }
+                            ReadError::Closed => c.dead = true,
+                        }
+                        return;
+                    }
+                }
+            }
+            ConnState::Waiting {
+                handle,
+                mut tokens,
+                prompt_tokens,
+                keep_alive,
+            } => {
+                if c.peer_eof && !c.cancel_sent {
+                    c.cancel_sent = true;
+                    handle.cancel();
+                }
+                let done = loop {
+                    match handle.next_event_timeout(Duration::ZERO) {
+                        HandlePoll::Event(TokenEvent::Token { value, .. }) => tokens.push(value),
+                        HandlePoll::Event(TokenEvent::Done { reason }) => break Some(reason),
+                        HandlePoll::TimedOut => break None,
+                        // Channel gone without a terminal event (engine
+                        // abort): report what we have as dropped.
+                        HandlePoll::Closed => break Some(FinishReason::Dropped),
+                    }
+                };
+                let Some(reason) = done else {
+                    c.state = ConnState::Waiting {
+                        handle,
+                        tokens,
+                        prompt_tokens,
+                        keep_alive,
+                    };
+                    return;
+                };
+                shared
+                    .stats
+                    .tokens_streamed_total
+                    .fetch_add(tokens.len() as u64, Ordering::Relaxed);
+                let conn_tok = if keep_alive { "keep-alive" } else { "close" };
+                let body = completion_json(
+                    handle.id(),
+                    &shared.cfg.model,
+                    &tokens,
+                    finish_reason_str(reason),
+                    prompt_tokens,
+                );
+                c.queue(json_response_bytes(200, "OK", &body, conn_tok));
+                if !keep_alive {
+                    c.close_after_flush = true;
+                }
+                c.cancel_sent = false;
+                // Back to Idle: a pipelined follower may be waiting.
+            }
+            ConnState::Streaming {
+                handle,
+                prompt_tokens,
+                mut generated,
+            } => {
+                if c.peer_eof && !c.cancel_sent {
+                    c.cancel_sent = true;
+                    handle.cancel();
+                }
+                let id = handle.id();
+                let done = loop {
+                    if c.wbuf.len() - c.wpos > MAX_OUTBUF {
+                        // Slow reader: stop pulling; events wait in the
+                        // request channel, not our memory.
+                        break None;
+                    }
+                    match handle.next_event_timeout(Duration::ZERO) {
+                        HandlePoll::Event(TokenEvent::Token { value, at }) => {
+                            let chunk = sse_token_json(id, &shared.cfg.model, value, at);
+                            c.queue(sse_frame(&chunk.dump()));
+                            generated += 1;
+                            shared
+                                .stats
+                                .tokens_streamed_total
+                                .fetch_add(1, Ordering::Relaxed);
+                        }
+                        HandlePoll::Event(TokenEvent::Done { reason }) => break Some(Some(reason)),
+                        HandlePoll::TimedOut => break None,
+                        HandlePoll::Closed => break Some(None),
+                    }
+                };
+                match done {
+                    None => {
+                        c.state = ConnState::Streaming {
+                            handle,
+                            prompt_tokens,
+                            generated,
+                        };
+                        return;
+                    }
+                    Some(reason_opt) => {
+                        if let Some(reason) = reason_opt {
+                            let fin = sse_finish_json(
+                                id,
+                                &shared.cfg.model,
+                                reason,
+                                prompt_tokens,
+                                generated,
+                            );
+                            c.queue(sse_frame(&fin.dump()));
+                        }
+                        c.queue(sse_frame("[DONE]"));
+                        shared.stats.active_streams.fetch_sub(1, Ordering::SeqCst);
+                        // SSE is connection-delimited: close once flushed.
+                        c.close_after_flush = true;
+                        c.cancel_sent = false;
+                        return;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Queue a `400` for an unparsable (or truncated) request and poison the
+/// connection: after a framing error the byte stream is unsynchronized,
+/// so it must close (mirrors the blocking path's `reject` + close).
+fn fail_request(shared: &Shared, c: &mut Conn, msg: &str) {
+    shared.stats.rejected_total.fetch_add(1, Ordering::Relaxed);
+    c.queue(json_response_bytes(
+        400,
+        "Bad Request",
+        &error_json(400, msg),
+        "close",
+    ));
+    c.close_after_flush = true;
+    c.rbuf.clear();
+}
+
+/// Route one parsed request — the same table as the baseline path's
+/// `handle_connection`, writing into the connection's output buffer.
+fn dispatch(shared: &Shared, c: &mut Conn, req: &HttpRequest) {
+    shared.stats.requests_total.fetch_add(1, Ordering::Relaxed);
+    c.served += 1;
+    if c.served >= 2 {
+        shared
+            .stats
+            .keepalive_reuse_total
+            .fetch_add(1, Ordering::Relaxed);
+    }
+    let keep = wants_keep_alive(req) && !shared.shutdown.load(Ordering::SeqCst);
+    let conn_tok = if keep { "keep-alive" } else { "close" };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            c.queue(json_response_bytes(200, "OK", &healthz_json(shared), conn_tok));
+            c.close_after_flush |= !keep;
+        }
+        ("GET", "/metrics") => {
+            let body = metrics_body(shared);
+            c.queue(response_bytes(
+                200,
+                "OK",
+                "text/plain; version=0.0.4",
+                body.as_bytes(),
+                &[],
+                conn_tok,
+            ));
+            c.close_after_flush |= !keep;
+        }
+        ("POST", "/v1/completions") => match start_completion(shared, req, conn_tok) {
+            CompletionStart::Respond(bytes) => {
+                c.queue(bytes);
+                c.close_after_flush |= !keep;
+            }
+            CompletionStart::Accepted {
+                handle,
+                prompt_tokens,
+                stream,
+            } => {
+                if stream {
+                    shared.stats.active_streams.fetch_add(1, Ordering::SeqCst);
+                    c.queue(sse_head_bytes());
+                    c.state = ConnState::Streaming {
+                        handle,
+                        prompt_tokens,
+                        generated: 0,
+                    };
+                } else {
+                    c.state = ConnState::Waiting {
+                        handle,
+                        tokens: Vec::new(),
+                        prompt_tokens,
+                        keep_alive: keep,
+                    };
+                }
+            }
+        },
+        ("POST", "/shutdown") => {
+            match shared.drain() {
+                Some(rep) => {
+                    c.queue(json_response_bytes(200, "OK", &report_json(&rep), "close"));
+                }
+                None => {
+                    c.queue(json_response_bytes(
+                        500,
+                        "Internal Server Error",
+                        &error_json(500, "engine drain produced no report"),
+                        "close",
+                    ));
+                }
+            }
+            c.close_after_flush = true;
+        }
+        (_, "/healthz" | "/metrics" | "/v1/completions" | "/shutdown") => {
+            shared.stats.rejected_total.fetch_add(1, Ordering::Relaxed);
+            c.queue(json_response_bytes(
+                405,
+                "Method Not Allowed",
+                &error_json(
+                    405,
+                    &format!("{} not allowed on {}", req.method, req.path),
+                ),
+                conn_tok,
+            ));
+            c.close_after_flush |= !keep;
+        }
+        _ => {
+            shared.stats.rejected_total.fetch_add(1, Ordering::Relaxed);
+            c.queue(json_response_bytes(
+                404,
+                "Not Found",
+                &error_json(
+                    404,
+                    &format!("unknown route {} {}", req.method, req.path),
+                ),
+                conn_tok,
+            ));
+            c.close_after_flush |= !keep;
+        }
+    }
+}

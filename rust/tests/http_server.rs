@@ -1,17 +1,20 @@
 //! HTTP transport integration: real sockets against a spawned
 //! `serve-http`-equivalent server. Covers the acceptance criterion that
 //! the drained `metrics::Report` of an HTTP-served run matches an
-//! equivalent in-process `ServerCore` run (same trace + seed), plus the
-//! error-code mapping, queue-cap backpressure over the wire,
-//! client-disconnect cancellation, and the cluster-backed front door.
+//! equivalent in-process `ServerCore` run (same trace + seed) — on both
+//! the readiness-polled keep-alive pool and the thread-per-connection
+//! baseline — plus the error-code mapping, queue-cap backpressure over
+//! the wire, client-disconnect cancellation, keep-alive reuse semantics
+//! (sequential, pipelined, malformed, idle-timeout, `--max-conns`), and
+//! the cluster- and shard-backed front doors.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpStream};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use duetserve::config::{Policy, ServingConfig};
 use duetserve::server::http::{HttpConfig, HttpServer};
-use duetserve::server::{Server, ServerCore, SubmitOptions};
+use duetserve::server::{Server, ServerCore, ShardedServer, SubmitOptions};
 use duetserve::util::json::{self, Json};
 use duetserve::workload::synthetic::jittered_workload;
 
@@ -19,7 +22,17 @@ fn cfg() -> ServingConfig {
     ServingConfig::default_8b().with_policy(Policy::VllmChunked)
 }
 
-fn start_http(c: ServingConfig, seed: u64, queue_cap: usize, max_body: usize) -> HttpServer {
+/// Both accept paths, by pool size: `0` is the thread-per-connection
+/// baseline, anything else the readiness-polled keep-alive pool.
+const BOTH_PATHS: [usize; 2] = [0, 2];
+
+fn start_http_with(
+    c: ServingConfig,
+    seed: u64,
+    queue_cap: usize,
+    max_body: usize,
+    pool_workers: usize,
+) -> HttpServer {
     let server =
         Server::start(move || Ok(ServerCore::sim(c, seed).with_queue_depth(queue_cap))).unwrap();
     HttpServer::start(
@@ -27,10 +40,15 @@ fn start_http(c: ServingConfig, seed: u64, queue_cap: usize, max_body: usize) ->
         server,
         HttpConfig {
             max_body,
+            pool_workers,
             ..Default::default()
         },
     )
     .unwrap()
+}
+
+fn start_http(c: ServingConfig, seed: u64, queue_cap: usize, max_body: usize) -> HttpServer {
+    start_http_with(c, seed, queue_cap, max_body, 2)
 }
 
 fn connect(addr: SocketAddr) -> TcpStream {
@@ -39,10 +57,11 @@ fn connect(addr: SocketAddr) -> TcpStream {
     s
 }
 
-/// One request/response exchange over a fresh connection.
-fn exchange(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
-    let mut s = connect(addr);
+fn request_bytes(method: &str, path: &str, body: Option<&str>, close: bool) -> String {
     let mut req = format!("{method} {path} HTTP/1.1\r\nHost: x\r\n");
+    if close {
+        req.push_str("Connection: close\r\n");
+    }
     if let Some(b) = body {
         req.push_str(&format!(
             "Content-Type: application/json\r\nContent-Length: {}\r\n",
@@ -53,19 +72,76 @@ fn exchange(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (
     if let Some(b) = body {
         req.push_str(b);
     }
-    s.write_all(req.as_bytes()).unwrap();
-    let mut resp = String::new();
-    s.read_to_string(&mut resp).unwrap();
-    let status: u16 = resp
-        .split_whitespace()
+    req
+}
+
+fn parse_status(resp: &str) -> u16 {
+    resp.split_whitespace()
         .nth(1)
         .and_then(|c| c.parse().ok())
-        .unwrap_or_else(|| panic!("no status line in `{resp}`"));
+        .unwrap_or_else(|| panic!("no status line in `{resp}`"))
+}
+
+/// One `Connection: close` request/response exchange over a fresh
+/// connection; the server's close is the response delimiter, which is
+/// why the helper works identically on both accept paths.
+fn exchange(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let (status, resp) = exchange_raw(addr, method, path, body);
     let payload = resp
         .split_once("\r\n\r\n")
         .map(|(_, b)| b.to_string())
         .unwrap_or_default();
     (status, payload)
+}
+
+/// Like [`exchange`] but returns the whole raw response (status line,
+/// headers and body) for byte-level comparisons.
+fn exchange_raw(addr: SocketAddr, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+    let mut s = connect(addr);
+    s.write_all(request_bytes(method, path, body, true).as_bytes())
+        .unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    (parse_status(&resp), resp)
+}
+
+/// One request/response exchange on an already-open keep-alive socket:
+/// the response is read by its `Content-Length` framing (not EOF), so
+/// the socket stays usable for the next call.
+fn keep_alive_exchange(
+    r: &mut BufReader<TcpStream>,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> (u16, String, String) {
+    r.get_mut()
+        .write_all(request_bytes(method, path, body, false).as_bytes())
+        .unwrap();
+    read_framed_response(r)
+}
+
+/// Read one `Content-Length`-framed response; returns (status, raw head
+/// + body, body).
+fn read_framed_response(r: &mut BufReader<TcpStream>) -> (u16, String, String) {
+    let mut head = String::new();
+    loop {
+        let mut line = String::new();
+        assert!(r.read_line(&mut line).unwrap() > 0, "EOF inside head");
+        head.push_str(&line);
+        if line == "\r\n" || line == "\n" {
+            break;
+        }
+    }
+    let status = parse_status(&head);
+    let len: usize = head
+        .lines()
+        .find_map(|l| l.to_ascii_lowercase().strip_prefix("content-length:").map(str::to_string))
+        .and_then(|v| v.trim().parse().ok())
+        .expect("framed response needs a content-length");
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).unwrap();
+    let body = String::from_utf8(body).unwrap();
+    (status, format!("{head}{body}"), body)
 }
 
 /// Open a streaming completion and return the reader once the 200
@@ -74,7 +150,7 @@ fn open_sse(addr: SocketAddr, body: &str) -> BufReader<TcpStream> {
     let mut s = connect(addr);
     write!(
         s,
-        "POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        "POST /v1/completions HTTP/1.1\r\nHost: x\r\nConnection: close\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
         body.len()
     )
     .unwrap();
@@ -135,55 +211,11 @@ fn completion_body(prompt: &[i32], max_tokens: u64, arrival: f64, stream: bool) 
 /// streaming and non-streaming, sequential so the interaction order is
 /// deterministic) produces the same token values and the same drained
 /// `Report` as an equivalent in-process `ServerCore` run with the same
-/// trace and seed.
+/// trace and seed — on *both* accept paths (pool and baseline).
 #[test]
 fn http_run_matches_in_process_server_core() {
     let seed = 11;
     let w = jittered_workload(8, 900, 12, 0.3, 5.0, seed).sorted_by_arrival();
-
-    // HTTP path: every request fully drained before the next (the
-    // response/[DONE] is the barrier), so the engine sees the same
-    // submit→idle sequence the in-process mirror replays below.
-    let http = start_http(cfg(), seed, 64, 1 << 20);
-    let addr = http.addr();
-    let mut http_tokens: Vec<Vec<i64>> = Vec::new();
-    for (i, r) in w.requests.iter().enumerate() {
-        let prompt = prompt_tokens(r.prompt_len as usize);
-        let body = completion_body(&prompt, r.output_len, r.arrival, i % 2 == 0);
-        if i % 2 == 0 {
-            let (toks, finish) = sse_completion(addr, &body);
-            assert_eq!(finish, "length", "request {i}");
-            http_tokens.push(toks);
-        } else {
-            let (status, resp) = exchange(addr, "POST", "/v1/completions", Some(&body));
-            assert_eq!(status, 200, "request {i}: {resp}");
-            let v = json::parse(&resp).unwrap();
-            let choice = &v.get("choices").unwrap().as_array().unwrap()[0];
-            assert_eq!(
-                choice.get("finish_reason").and_then(|f| f.as_str()),
-                Some("length")
-            );
-            let toks: Vec<i64> = choice
-                .get("token_ids")
-                .unwrap()
-                .as_array()
-                .unwrap()
-                .iter()
-                .map(|t| t.as_i64().unwrap())
-                .collect();
-            let usage = v.get("usage").unwrap();
-            assert_eq!(
-                usage.get("prompt_tokens").and_then(|p| p.as_u64()),
-                Some(r.prompt_len)
-            );
-            assert_eq!(
-                usage.get("completion_tokens").and_then(|c| c.as_u64()),
-                Some(toks.len() as u64)
-            );
-            http_tokens.push(toks);
-        }
-    }
-    let http_rep = http.shutdown().unwrap();
 
     // In-process mirror: same trace, same seed, same submit→drain
     // interaction pattern.
@@ -205,31 +237,80 @@ fn http_run_matches_in_process_server_core() {
     }
     let mirror_rep = mirror.finish();
 
-    assert_eq!(http_tokens, mirror_tokens, "token values must match");
-    let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()));
-    assert_eq!(http_rep.completed, mirror_rep.completed);
-    assert_eq!(http_rep.iterations, mirror_rep.iterations);
-    assert_eq!(http_rep.queue_cap, Some(64));
-    assert_eq!(mirror_rep.queue_cap, Some(64));
-    assert!(
-        close(http_rep.ttft.mean, mirror_rep.ttft.mean),
-        "ttft {} != {}",
-        http_rep.ttft.mean,
-        mirror_rep.ttft.mean
-    );
-    assert!(
-        close(http_rep.tbt.mean, mirror_rep.tbt.mean),
-        "tbt {} != {}",
-        http_rep.tbt.mean,
-        mirror_rep.tbt.mean
-    );
-    assert!(
-        close(http_rep.duration, mirror_rep.duration),
-        "duration {} != {}",
-        http_rep.duration,
-        mirror_rep.duration
-    );
-    assert_eq!(http_rep.system, mirror_rep.system);
+    for pool_workers in BOTH_PATHS {
+        // HTTP path: every request fully drained before the next (the
+        // response/[DONE] is the barrier), so the engine sees the same
+        // submit→idle sequence the in-process mirror replayed above.
+        let http = start_http_with(cfg(), seed, 64, 1 << 20, pool_workers);
+        let addr = http.addr();
+        let mut http_tokens: Vec<Vec<i64>> = Vec::new();
+        for (i, r) in w.requests.iter().enumerate() {
+            let prompt = prompt_tokens(r.prompt_len as usize);
+            let body = completion_body(&prompt, r.output_len, r.arrival, i % 2 == 0);
+            if i % 2 == 0 {
+                let (toks, finish) = sse_completion(addr, &body);
+                assert_eq!(finish, "length", "request {i} (pool {pool_workers})");
+                http_tokens.push(toks);
+            } else {
+                let (status, resp) = exchange(addr, "POST", "/v1/completions", Some(&body));
+                assert_eq!(status, 200, "request {i} (pool {pool_workers}): {resp}");
+                let v = json::parse(&resp).unwrap();
+                let choice = &v.get("choices").unwrap().as_array().unwrap()[0];
+                assert_eq!(
+                    choice.get("finish_reason").and_then(|f| f.as_str()),
+                    Some("length")
+                );
+                let toks: Vec<i64> = choice
+                    .get("token_ids")
+                    .unwrap()
+                    .as_array()
+                    .unwrap()
+                    .iter()
+                    .map(|t| t.as_i64().unwrap())
+                    .collect();
+                let usage = v.get("usage").unwrap();
+                assert_eq!(
+                    usage.get("prompt_tokens").and_then(|p| p.as_u64()),
+                    Some(r.prompt_len)
+                );
+                assert_eq!(
+                    usage.get("completion_tokens").and_then(|c| c.as_u64()),
+                    Some(toks.len() as u64)
+                );
+                http_tokens.push(toks);
+            }
+        }
+        let http_rep = http.shutdown().unwrap();
+
+        assert_eq!(
+            http_tokens, mirror_tokens,
+            "token values must match (pool {pool_workers})"
+        );
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()));
+        assert_eq!(http_rep.completed, mirror_rep.completed);
+        assert_eq!(http_rep.iterations, mirror_rep.iterations);
+        assert_eq!(http_rep.queue_cap, Some(64));
+        assert_eq!(mirror_rep.queue_cap, Some(64));
+        assert!(
+            close(http_rep.ttft.mean, mirror_rep.ttft.mean),
+            "ttft {} != {} (pool {pool_workers})",
+            http_rep.ttft.mean,
+            mirror_rep.ttft.mean
+        );
+        assert!(
+            close(http_rep.tbt.mean, mirror_rep.tbt.mean),
+            "tbt {} != {} (pool {pool_workers})",
+            http_rep.tbt.mean,
+            mirror_rep.tbt.mean
+        );
+        assert!(
+            close(http_rep.duration, mirror_rep.duration),
+            "duration {} != {} (pool {pool_workers})",
+            http_rep.duration,
+            mirror_rep.duration
+        );
+        assert_eq!(http_rep.system, mirror_rep.system);
+    }
 }
 
 #[test]
@@ -408,4 +489,237 @@ fn http_over_replicated_cluster() {
     let rep = http.join().unwrap();
     assert_eq!(rep.completed, 6);
     assert!(rep.system.contains("x2"));
+}
+
+#[cfg(unix)]
+fn start_http_cfg(c: ServingConfig, seed: u64, http_cfg: HttpConfig) -> HttpServer {
+    let server = Server::start(move || Ok(ServerCore::sim(c, seed).with_queue_depth(64))).unwrap();
+    HttpServer::start("127.0.0.1:0", server, http_cfg).unwrap()
+}
+
+/// Keep-alive reuse: N sequential completions on one socket produce the
+/// same responses as N fresh-connection completions against an
+/// identically-seeded server — and the final (`Connection: close`)
+/// response is *byte-identical* between the two, pinning that both
+/// accept paths share one response builder.
+#[cfg(unix)]
+#[test]
+fn keep_alive_socket_matches_fresh_connections_byte_for_byte() {
+    let seed = 21;
+    let reused = start_http(cfg(), seed, 32, 1 << 20);
+    let fresh = start_http(cfg(), seed, 32, 1 << 20);
+
+    let bodies: Vec<String> = (0..3)
+        .map(|i| completion_body(&prompt_tokens(300 + 50 * i), 6, 0.0, false))
+        .collect();
+
+    // One kept-alive socket, requests 1..N framed by Content-Length;
+    // the last request asks to close, so its response is EOF-delimited.
+    let mut r = BufReader::new(connect(reused.addr()));
+    let mut reused_bodies = Vec::new();
+    for body in &bodies[..bodies.len() - 1] {
+        let (status, _raw, payload) =
+            keep_alive_exchange(&mut r, "POST", "/v1/completions", Some(body));
+        assert_eq!(status, 200, "{payload}");
+        reused_bodies.push(payload);
+    }
+    let last = bodies.last().unwrap();
+    r.get_mut()
+        .write_all(request_bytes("POST", "/v1/completions", Some(last), true).as_bytes())
+        .unwrap();
+    let mut reused_last_raw = String::new();
+    r.read_to_string(&mut reused_last_raw).unwrap();
+    assert_eq!(parse_status(&reused_last_raw), 200);
+
+    // Fresh connection per request against the twin server.
+    let mut fresh_bodies = Vec::new();
+    for body in &bodies[..bodies.len() - 1] {
+        let (status, payload) = exchange(fresh.addr(), "POST", "/v1/completions", Some(body));
+        assert_eq!(status, 200, "{payload}");
+        fresh_bodies.push(payload);
+    }
+    let (_, fresh_last_raw) = exchange_raw(fresh.addr(), "POST", "/v1/completions", Some(last));
+
+    assert_eq!(reused_bodies, fresh_bodies, "kept-alive responses must match fresh ones");
+    assert_eq!(
+        reused_last_raw, fresh_last_raw,
+        "Connection: close responses must be byte-identical across reuse patterns"
+    );
+
+    assert!(
+        reused
+            .stats()
+            .keepalive_reuse_total
+            .load(std::sync::atomic::Ordering::Relaxed)
+            >= 2,
+        "reused socket must count keep-alive reuse"
+    );
+    assert_eq!(reused.shutdown().unwrap().completed, 3);
+    assert_eq!(fresh.shutdown().unwrap().completed, 3);
+}
+
+/// Two requests written in a single TCP segment are parsed and answered
+/// in order off the same buffered read (HTTP/1.1 pipelining).
+#[cfg(unix)]
+#[test]
+fn pipelined_requests_in_one_write_are_served_in_order() {
+    let http = start_http(cfg(), 23, 8, 1 << 20);
+    let mut s = connect(http.addr());
+    let mut wire = request_bytes("GET", "/healthz", None, false);
+    wire.push_str(&request_bytes("GET", "/healthz", None, true));
+    s.write_all(wire.as_bytes()).unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    assert_eq!(resp.matches("HTTP/1.1 200 OK").count(), 2, "{resp}");
+    assert!(resp.contains("Connection: keep-alive"), "{resp}");
+    assert!(resp.contains("Connection: close"), "{resp}");
+    assert_eq!(http.shutdown().unwrap().completed, 0);
+}
+
+/// A malformed request on a kept-alive socket gets `400` and closes that
+/// connection — without disturbing other connections multiplexed on the
+/// same pool worker.
+#[cfg(unix)]
+#[test]
+fn malformed_request_closes_only_its_own_connection() {
+    // One pool worker, so both sockets share a readiness loop.
+    let http = start_http_with(cfg(), 25, 8, 1 << 20, 1);
+    let mut a = BufReader::new(connect(http.addr()));
+    let mut b = BufReader::new(connect(http.addr()));
+    let (st, _, _) = keep_alive_exchange(&mut a, "GET", "/healthz", None);
+    assert_eq!(st, 200);
+    let (st, _, _) = keep_alive_exchange(&mut b, "GET", "/healthz", None);
+    assert_eq!(st, 200);
+
+    // Garbage on A: 400 then EOF.
+    a.get_mut().write_all(b"GARBAGE\r\n\r\n").unwrap();
+    let mut resp = String::new();
+    a.read_to_string(&mut resp).unwrap();
+    assert_eq!(parse_status(&resp), 400, "{resp}");
+
+    // B is untouched: still serving on the same worker.
+    let (st, _, _) = keep_alive_exchange(&mut b, "GET", "/healthz", None);
+    assert_eq!(st, 200);
+    drop(a);
+    drop(b);
+    assert_eq!(http.shutdown().unwrap().completed, 0);
+}
+
+/// `--max-conns`: accepts beyond the cap are answered `503` +
+/// `Connection: close` without touching a pool worker; closing a held
+/// connection frees the slot.
+#[cfg(unix)]
+#[test]
+fn max_conns_cap_refuses_excess_accepts_with_503() {
+    let http = start_http_cfg(
+        cfg(),
+        27,
+        HttpConfig {
+            max_conns: 1,
+            pool_workers: 1,
+            ..Default::default()
+        },
+    );
+    let addr = http.addr();
+    // Register one kept-alive connection (the exchange proves it's in).
+    let mut held = BufReader::new(connect(addr));
+    let (st, _, _) = keep_alive_exchange(&mut held, "GET", "/healthz", None);
+    assert_eq!(st, 200);
+
+    // The next accept must bounce with 503 + close.
+    let (status, raw) = exchange_raw(addr, "GET", "/healthz", None);
+    assert_eq!(status, 503, "{raw}");
+    assert!(raw.contains("Connection: close"), "{raw}");
+    assert!(raw.contains("max-conns"), "{raw}");
+    assert!(raw.contains("Retry-After"), "{raw}");
+
+    // Release the held slot; the cap admits a new connection again
+    // (registration is asynchronous, so poll briefly).
+    drop(held);
+    let t0 = Instant::now();
+    loop {
+        let (status, _) = exchange_raw(addr, "GET", "/healthz", None);
+        if status == 200 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "slot never freed after closing the held connection"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(http.shutdown().unwrap().completed, 0);
+}
+
+/// A kept-alive connection idle past the configured timeout is closed by
+/// the server (counted reap, not a hang).
+#[cfg(unix)]
+#[test]
+fn idle_keep_alive_connection_times_out() {
+    let http = start_http_cfg(
+        cfg(),
+        29,
+        HttpConfig {
+            idle_timeout: Duration::from_millis(200),
+            pool_workers: 1,
+            ..Default::default()
+        },
+    );
+    let mut s = BufReader::new(connect(http.addr()));
+    let (st, _, _) = keep_alive_exchange(&mut s, "GET", "/healthz", None);
+    assert_eq!(st, 200);
+    // Park the socket: the server must close it around the idle timeout.
+    let t0 = Instant::now();
+    let mut rest = String::new();
+    s.read_to_string(&mut rest).unwrap();
+    assert!(rest.is_empty(), "no further bytes expected, got `{rest}`");
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "idle close took {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(http.shutdown().unwrap().completed, 0);
+}
+
+/// Sharded submission: N engine shards behind one HTTP front door, with
+/// round-robin shard routing, strided globally-unique request ids, and a
+/// merged drain report.
+#[test]
+fn sharded_front_door_routes_and_merges_reports() {
+    let sharded = ShardedServer::start(2, "round-robin", |i| {
+        let c = cfg();
+        move || {
+            Ok(ServerCore::sim(c, 31 + i as u64)
+                .with_queue_depth(32)
+                .with_id_stride(i as u64 + 1, 2))
+        }
+    })
+    .unwrap();
+    let http = HttpServer::start("127.0.0.1:0", sharded, HttpConfig::default()).unwrap();
+    let addr = http.addr();
+
+    let mut ids = std::collections::BTreeSet::new();
+    for i in 0..6 {
+        let body = completion_body(&prompt_tokens(256 + 64 * (i % 2)), 4, 0.0, false);
+        let (status, resp) = exchange(addr, "POST", "/v1/completions", Some(&body));
+        assert_eq!(status, 200, "{resp}");
+        let v = json::parse(&resp).unwrap();
+        let id = v.get("id").and_then(|x| x.as_str()).unwrap().to_string();
+        assert!(ids.insert(id), "request ids must be globally unique across shards");
+        let choice = &v.get("choices").unwrap().as_array().unwrap()[0];
+        assert_eq!(choice.get("token_ids").unwrap().as_array().unwrap().len(), 4);
+    }
+    assert_eq!(ids.len(), 6);
+
+    // Live merged snapshot across shards.
+    let (status, metrics) = exchange(addr, "GET", "/metrics", None);
+    assert_eq!(status, 200);
+    assert!(
+        metrics.contains("duetserve_engine_completed_total 6"),
+        "{metrics}"
+    );
+
+    let rep = http.shutdown().unwrap();
+    assert_eq!(rep.completed, 6);
+    assert!(rep.system.contains("2x"), "shard label missing: {}", rep.system);
 }
