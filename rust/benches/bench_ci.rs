@@ -21,13 +21,14 @@ use duetserve::engine::{
     ServingTopology, TopologyStep,
 };
 use duetserve::metrics::{Recorder, RecorderMode};
-use duetserve::request::Request;
+use duetserve::request::{Request, SloClass};
 use duetserve::server::http::{HttpConfig, HttpServer};
 use duetserve::server::{Server, ServerCore};
 use duetserve::util::json::Json;
 use duetserve::util::tablefmt::banner;
 use duetserve::workload::sessions::shared_prefix_workload;
 use duetserve::workload::synthetic::fixed_workload;
+use duetserve::workload::Workload;
 
 /// Mean µs per call of `f` over `iters` runs (after `warmup`).
 fn time_us<T>(warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> f64 {
@@ -256,6 +257,36 @@ fn prefix_sweep_point(shared: u64, unique: u64, router: &str) -> (Json, f64, u64
     (row, p50, rep.prefilled_tokens)
 }
 
+/// Mixed-class goodput workload for the QoS guardrail: a burst of long
+/// batch-class prompts contending with a stream of short latency-class
+/// requests that declare a 40 ms TBT SLO. The SLO sits between the
+/// decode-only iteration time (a few ms) and the 100 ms mixed-iteration
+/// bound the config allows, so FCFS scheduling violates it whenever a
+/// batch prefill chunk shares the iteration, while QoS preemption
+/// (tightened effective SLO + lower-class prefill shed) keeps latency
+/// decodes under it.
+fn goodput_workload() -> Workload {
+    let mut requests = Vec::new();
+    let mut id = 0u64;
+    for i in 0..40u64 {
+        requests.push(Request::new(id, i as f64 * 0.15, 4096, 32).with_class(SloClass::Batch));
+        id += 1;
+    }
+    for i in 0..24u64 {
+        requests.push(
+            Request::new(id, 0.05 + i as f64 * 0.25, 256, 64)
+                .with_class(SloClass::Latency)
+                .with_slo_tbt(0.040),
+        );
+        id += 1;
+    }
+    Workload {
+        name: "goodput-mix".into(),
+        requests,
+    }
+    .sorted_by_arrival()
+}
+
 fn main() {
     banner("CI bench: throughput row + scrape-cost demonstration");
 
@@ -319,6 +350,25 @@ fn main() {
         }
     }
 
+    // Per-class goodput: the same mixed-class burst served by the duet
+    // scheduler with QoS preemption on vs off (off = the class-blind
+    // FCFS baseline, the pre-QoS behavior). Engine-clock metrics only, so
+    // CI wall-clock noise cannot touch the guardrails.
+    let gw = goodput_workload();
+    let mut qos_engine = engine_for(ServingConfig::default_8b().with_policy(Policy::Duet), 11);
+    let rq = qos_engine.run(gw.clone());
+    let mut fcfs_engine = engine_for(
+        ServingConfig::default_8b()
+            .with_policy(Policy::Duet)
+            .with_qos(false),
+        11,
+    );
+    let rf = fcfs_engine.run(gw);
+    assert_eq!(rq.completed, 64, "goodput QoS run did not complete");
+    assert_eq!(rf.completed, 64, "goodput FCFS run did not complete");
+    let qos_lat_att = rq.class(SloClass::Latency).attainment().unwrap_or(0.0);
+    let fcfs_lat_att = rf.class(SloClass::Latency).attainment().unwrap_or(0.0);
+
     // Connection churn: ~1k concurrent keep-alive sockets against the
     // readiness-polled pool vs a fresh TCP connect + `Connection: close`
     // per request against the thread-per-connection baseline. Unix-only:
@@ -370,6 +420,15 @@ fn main() {
         "conn churn @{churn_concurrent} conns — pool: {pool_rps:.0} req/s \
          (p99 {pool_p99_ms:.2} ms, n={pool_n}) vs thread-per-conn: {base_rps:.0} req/s \
          (p99 {base_p99_ms:.2} ms, n={base_n}), x{churn_speedup:.1}"
+    );
+    println!(
+        "goodput (latency-class attainment) — qos: {:.0}% vs fcfs: {:.0}%; \
+         tok/s {:.0} vs {:.0}; {} qos preemptions",
+        qos_lat_att * 100.0,
+        fcfs_lat_att * 100.0,
+        rq.token_throughput,
+        rf.token_throughput,
+        rq.qos_preemptions,
     );
 
     let out = Json::obj(vec![
@@ -429,6 +488,20 @@ fn main() {
             Json::obj(vec![("rows", Json::arr(sweep_rows))]),
         ),
         (
+            "goodput",
+            Json::obj(vec![
+                ("qos_latency_attainment", Json::Num(qos_lat_att)),
+                ("fcfs_latency_attainment", Json::Num(fcfs_lat_att)),
+                ("qos_token_throughput", Json::Num(rq.token_throughput)),
+                ("fcfs_token_throughput", Json::Num(rf.token_throughput)),
+                ("qos_preemptions", Json::Num(rq.qos_preemptions as f64)),
+                (
+                    "qos_batch_completed",
+                    Json::Num(rq.class(SloClass::Batch).completed as f64),
+                ),
+            ]),
+        ),
+        (
             "scrape_latency",
             Json::obj(vec![
                 ("n_small", Json::Num(n_small as f64)),
@@ -483,6 +556,24 @@ fn main() {
     // disjoint-prompt baseline, and the prefill volume actually computed
     // must drop by at least the cached-prefix fraction (here: to ≤25%,
     // leaving generous room for the per-tenant cold misses).
+    // Goodput guardrails (engine-clock, deterministic workload + seed, so
+    // CI noise cannot trip them): QoS preemption must strictly improve
+    // latency-class SLO attainment over the class-blind FCFS baseline —
+    // the 40 ms TBT SLO is violated by 100 ms mixed iterations and
+    // protected by the tightened effective SLO — while total token
+    // throughput stays within 10% (deferred batch prefill catches up in
+    // the latency-free tail).
+    assert!(
+        qos_lat_att > fcfs_lat_att,
+        "QoS latency-class attainment {qos_lat_att:.3} must strictly beat FCFS {fcfs_lat_att:.3}"
+    );
+    assert!(
+        rq.token_throughput >= 0.9 * rf.token_throughput,
+        "QoS token throughput {:.0} fell more than 10% below FCFS {:.0}",
+        rq.token_throughput,
+        rf.token_throughput
+    );
+
     let (_, p50_cold, prefilled_cold) = overlap_points[0];
     let (_, p50_hot, prefilled_hot) = overlap_points[2];
     assert!(

@@ -88,6 +88,14 @@ pub struct ServingConfig {
     /// — reuse only helps when prompts actually overlap, and the
     /// zero-overlap equivalence tests pin the off-path behavior.
     pub prefix_cache: bool,
+    /// Class-aware QoS preemption in the duet scheduler: when a
+    /// latency-class decode faces a predicted TBT violation that even
+    /// Algorithm 1 cannot solve, shed lower-class prefill chunks before
+    /// shedding everything. On by default; with a single class or no SLO
+    /// pressure the scheduler's decisions are bitwise-unchanged, so the
+    /// flag only matters for mixed-class traffic (and for pinning the
+    /// FCFS baseline in benches).
+    pub qos_preemption: bool,
 }
 
 impl ServingConfig {
@@ -107,6 +115,7 @@ impl ServingConfig {
             kv_watermark: 0.02,
             max_engine_time: DEFAULT_MAX_ENGINE_TIME,
             prefix_cache: false,
+            qos_preemption: true,
         }
     }
 
@@ -123,6 +132,11 @@ impl ServingConfig {
 
     pub fn with_prefix_cache(mut self, on: bool) -> ServingConfig {
         self.prefix_cache = on;
+        self
+    }
+
+    pub fn with_qos(mut self, on: bool) -> ServingConfig {
+        self.qos_preemption = on;
         self
     }
 

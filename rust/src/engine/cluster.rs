@@ -817,8 +817,16 @@ impl ClusterEngine {
     /// Route every arrival with `arrival ≤ now` to a worker, at arrival
     /// time, through the pluggable router.
     fn dispatch_arrivals(&mut self, now: f64) {
-        while self.pending.front().is_some_and(|r| r.arrival <= now) {
-            let req = self.pending.pop_front().unwrap();
+        let due = self.pending.partition_point(|r| r.arrival <= now);
+        if due == 0 {
+            return;
+        }
+        let mut batch: Vec<Request> = self.pending.drain(..due).collect();
+        // Class-aware dispatch: more urgent classes route first within the
+        // due cohort. The sort is stable, so single-class traffic keeps
+        // pure arrival order and the legacy trajectory is unchanged.
+        batch.sort_by_key(|r| r.class);
+        for req in batch {
             // Cache-aware dispatch signal: with prefix caching on, probe
             // every eligible worker's index for this prompt once and fill
             // the per-decision candidate copies (the board keeps overlap

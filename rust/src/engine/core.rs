@@ -516,6 +516,7 @@ impl EngineCore {
         let plan = self.scheduler.plan(&input);
         let sched_s = sched_start.elapsed().as_secs_f64();
         self.metrics.sched_overhead += sched_s;
+        self.metrics.qos_preemptions += self.scheduler.take_qos_preemptions();
 
         match plan {
             IterationPlan::Idle => {
@@ -590,6 +591,7 @@ impl EngineCore {
                             let _ = self.kv.release(v.id);
                             self.backend.release(v.id);
                             self.preemptions += 1;
+                            self.metrics.preemptions += 1;
                             self.outstanding -= work_of(&v);
                             // Recompute preemption: progress is lost.
                             let fresh = v.reset_for_retry();

@@ -9,6 +9,9 @@
 //!                GET /metrics, POST /shutdown)
 //!   traces     — print Table-1 statistics of the calibrated traces
 //!   partition  — inspect the Algorithm-1 optimizer for a batch shape
+//!   plan       — capacity planning: sweep topology x replicas x router x
+//!                scheduler against a declared per-class traffic-and-SLO
+//!                mix; prints the cheapest config attaining every target
 //!   e2e        — serve the real AOT-compiled tiny model via PJRT
 //!                (unified front-end + PjrtBackend)
 //!   config     — dump the effective serving configuration
@@ -19,6 +22,7 @@
 //!   duetserve serve --backend sim --policy duet --n 50 --qps 8
 //!   duetserve serve-http --addr 127.0.0.1:8080 --backend sim --queue-cap 256
 //!   duetserve partition --decode 64 --ctx 8192 --prefill 8192
+//!   duetserve plan --mix interactive --n 120
 //!   duetserve e2e --requests 16 --max-new 24
 
 use std::time::Duration;
@@ -28,6 +32,7 @@ use duetserve::config::{ModelSpec, Policy, ServingConfig};
 use duetserve::engine::{engine_for, router_by_name, ClusterEngine, DisaggEngine, ReplicatedEngine};
 use duetserve::metrics::Report;
 use duetserve::model::AttnShape;
+use duetserve::request::{Request, SloClass};
 use duetserve::roofline::{BatchShape, Predictor};
 use duetserve::runtime::{artifacts, PjrtBackend};
 use duetserve::sched::{optimize_partition, scheduler_for};
@@ -608,6 +613,265 @@ fn cmd_partition(args: &Args) {
     }
 }
 
+/// One class slice of a declared traffic mix: what fraction of the load it
+/// carries, its request shape, its SLO, and the attainment bar it must meet.
+struct ClassMix {
+    class: SloClass,
+    share: f64,
+    isl: u64,
+    osl: u64,
+    slo_tbt: Option<f64>,
+    slo_ttft: Option<f64>,
+    target: f64,
+}
+
+struct TrafficMix {
+    name: &'static str,
+    qps: f64,
+    n: usize,
+    classes: Vec<ClassMix>,
+}
+
+/// Built-in traffic-and-SLO declarations for `plan`. Shapes follow the
+/// paper's trace statistics: interactive turns are short-prompt/short-output
+/// under a tight TBT, batch jobs are long-prompt/short-output under a loose
+/// one.
+fn builtin_mixes() -> Vec<TrafficMix> {
+    let latency = |share| ClassMix {
+        class: SloClass::Latency,
+        share,
+        isl: 512,
+        osl: 64,
+        slo_tbt: Some(0.040),
+        slo_ttft: Some(2.0),
+        target: 0.90,
+    };
+    let standard = |share| ClassMix {
+        class: SloClass::Standard,
+        share,
+        isl: 2048,
+        osl: 128,
+        slo_tbt: Some(0.150),
+        slo_ttft: None,
+        target: 0.80,
+    };
+    let batch = |share, isl| ClassMix {
+        class: SloClass::Batch,
+        share,
+        isl,
+        osl: 32,
+        slo_tbt: Some(1.0),
+        slo_ttft: None,
+        target: 0.50,
+    };
+    vec![
+        TrafficMix {
+            name: "interactive",
+            qps: 8.0,
+            n: 120,
+            classes: vec![latency(0.6), standard(0.3), batch(0.1, 6000)],
+        },
+        TrafficMix {
+            name: "batch-heavy",
+            qps: 4.0,
+            n: 100,
+            classes: vec![latency(0.2), standard(0.2), batch(0.6, 8000)],
+        },
+    ]
+}
+
+/// Materialize a mix into a concrete workload: each class arrives at its
+/// share of the total rate on a deterministic grid, phase-shifted per class
+/// so arrivals interleave rather than tie.
+fn mix_workload(mix: &TrafficMix, n: usize, qps: f64) -> Workload {
+    let mut requests = Vec::new();
+    let mut id = 0u64;
+    for (ci, c) in mix.classes.iter().enumerate() {
+        let n_c = ((n as f64) * c.share).round().max(1.0) as usize;
+        let rate = (qps * c.share).max(1e-9);
+        for i in 0..n_c {
+            let arrival = (i as f64 + 0.31 * (ci as f64 + 1.0)) / rate;
+            let mut r = Request::new(id, arrival, c.isl, c.osl).with_class(c.class);
+            if let Some(s) = c.slo_tbt {
+                r = r.with_slo_tbt(s);
+            }
+            if let Some(s) = c.slo_ttft {
+                r = r.with_slo_ttft(s);
+            }
+            requests.push(r);
+            id += 1;
+        }
+    }
+    Workload {
+        name: format!("mix-{}", mix.name),
+        requests,
+    }
+    .sorted_by_arrival()
+}
+
+/// One point of the `plan` sweep. `replicas` is the GPU cost; the scheduler
+/// axis doubles as the SM-partition axis (duet multiplexes prefill and
+/// decode on adaptively partitioned SMs, vllm time-shares the whole GPU).
+struct PlanCandidate {
+    label: &'static str,
+    policy: Policy,
+    topology: &'static str,
+    replicas: u32,
+    router: Option<&'static str>,
+}
+
+fn plan_candidates() -> Vec<PlanCandidate> {
+    vec![
+        PlanCandidate {
+            label: "vllm x1",
+            policy: Policy::VllmChunked,
+            topology: "unified",
+            replicas: 1,
+            router: None,
+        },
+        PlanCandidate {
+            label: "duet x1",
+            policy: Policy::Duet,
+            topology: "unified",
+            replicas: 1,
+            router: None,
+        },
+        PlanCandidate {
+            label: "duet x2 rr",
+            policy: Policy::Duet,
+            topology: "unified",
+            replicas: 2,
+            router: Some("round-robin"),
+        },
+        PlanCandidate {
+            label: "duet 1P+1D",
+            policy: Policy::Duet,
+            topology: "disagg",
+            replicas: 2,
+            router: Some("least-outstanding"),
+        },
+        PlanCandidate {
+            label: "duet x4 rr",
+            policy: Policy::Duet,
+            topology: "unified",
+            replicas: 4,
+            router: Some("round-robin"),
+        },
+    ]
+}
+
+fn run_plan_candidate(c: &PlanCandidate, base: &ServingConfig, w: Workload, seed: u64) -> Report {
+    let mut cfg = base.clone();
+    cfg.policy = c.policy;
+    if c.topology == "disagg" {
+        let (p, d) = disagg_split(c.replicas);
+        let mut e = ClusterEngine::disagg(
+            cfg,
+            p,
+            d,
+            seed,
+            router_by_name(c.router.unwrap_or("least-outstanding")).unwrap(),
+        );
+        e.run(w)
+    } else if c.replicas > 1 {
+        let mut e = ReplicatedEngine::new(cfg, c.replicas, seed);
+        if let Some(r) = c.router {
+            e = e.with_router(router_by_name(r).unwrap());
+        }
+        e.run(w)
+    } else {
+        engine_for(cfg, seed).run(w)
+    }
+}
+
+fn attains_targets(rep: &Report, mix: &TrafficMix) -> bool {
+    mix.classes.iter().all(|c| {
+        let cr = rep.class(c.class);
+        cr.completed > 0 && cr.attainment().map_or(false, |a| a >= c.target)
+    })
+}
+
+fn fmt_attainment(rep: &Report, class: SloClass) -> String {
+    match rep.class(class).attainment() {
+        Some(a) => format!("{:.0}%", a * 100.0),
+        None => "-".to_string(),
+    }
+}
+
+/// Capacity planning: run every candidate deployment against each declared
+/// traffic mix, report per-class attainment, and name the cheapest (fewest
+/// GPUs, then highest token throughput) config that attains every target.
+fn cmd_plan(args: &Args) {
+    let base = build_config(args);
+    let seed = args.usize_or("seed", 1) as u64;
+    let which = match args.one_of("mix", &["interactive", "batch-heavy", "all"]) {
+        Ok(choice) => choice.unwrap_or("all").to_string(),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    for mix in builtin_mixes() {
+        if which != "all" && which != mix.name {
+            continue;
+        }
+        let n = args.usize_or("n", mix.n);
+        let qps = args.f64_or("qps", mix.qps);
+        let w = mix_workload(&mix, n, qps);
+        println!(
+            "mix `{}`: {} requests at {qps} req/s ({})",
+            mix.name,
+            w.requests.len(),
+            mix.classes
+                .iter()
+                .map(|c| format!(
+                    "{} {:.0}% target {:.0}%",
+                    c.class.name(),
+                    c.share * 100.0,
+                    c.target * 100.0
+                ))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+        let mut t = Table::new(vec![
+            "config", "gpus", "tok/s", "latency", "standard", "batch", "attains",
+        ]);
+        let mut best: Option<(u32, f64, &'static str)> = None;
+        for c in plan_candidates() {
+            let rep = run_plan_candidate(&c, &base, w.clone(), seed);
+            let ok = attains_targets(&rep, &mix);
+            t.row(vec![
+                c.label.to_string(),
+                format!("{}", c.replicas),
+                format!("{:.0}", rep.token_throughput),
+                fmt_attainment(&rep, SloClass::Latency),
+                fmt_attainment(&rep, SloClass::Standard),
+                fmt_attainment(&rep, SloClass::Batch),
+                if ok { "yes" } else { "no" }.to_string(),
+            ]);
+            if ok {
+                let better = match best {
+                    None => true,
+                    Some((g, tput, _)) => {
+                        c.replicas < g || (c.replicas == g && rep.token_throughput > tput)
+                    }
+                };
+                if better {
+                    best = Some((c.replicas, rep.token_throughput, c.label));
+                }
+            }
+        }
+        t.print();
+        match best {
+            Some((g, _, label)) => {
+                println!("cheapest attaining config: `{label}` ({g} GPU(s))")
+            }
+            None => println!("no candidate attains every class target at this load"),
+        }
+        println!();
+    }
+}
+
 fn cmd_e2e(args: &Args) -> anyhow::Result<()> {
     if !artifacts::artifacts_available() {
         anyhow::bail!("artifacts not found — run `make artifacts` first");
@@ -669,7 +933,7 @@ fn cmd_config(args: &Args) {
 const USAGE: &str = "\
 duetserve — adaptive prefill/decode GPU multiplexing (paper reproduction)
 
-USAGE: duetserve <serve|serve-http|traces|partition|e2e|config> [--options]
+USAGE: duetserve <serve|serve-http|traces|partition|plan|e2e|config> [--options]
 
 serve:      --policy vllm|sglang|sglang-chunked|duet|dynamo
             --trace azure-code|azure-conv|mooncake | --isl N --osl N
@@ -721,6 +985,12 @@ serve-http: --addr HOST:PORT (default 127.0.0.1:8080)
             POST /v1/completions (JSON, SSE with \"stream\":true),
             GET /healthz, GET /metrics, POST /shutdown
 partition:  --decode N --ctx N --prefill N [--tbt-slo F]
+plan:       --mix interactive|batch-heavy|all (default all)
+            [--n N --qps F --seed N] plus the serve model flags;
+            sweeps topology x replicas x router x scheduler (duet's
+            adaptive SM partition vs time-shared chunking) against the
+            declared per-class traffic-and-SLO mix and prints the
+            cheapest config attaining every class target
 e2e:        --requests N --max-new N   (needs `make artifacts`)
 ";
 
@@ -731,6 +1001,7 @@ fn main() {
         Some("serve-http") => cmd_serve_http(&args),
         Some("traces") => cmd_traces(),
         Some("partition") => cmd_partition(&args),
+        Some("plan") => cmd_plan(&args),
         Some("e2e") => {
             if let Err(e) = cmd_e2e(&args) {
                 eprintln!("error: {e}");

@@ -22,7 +22,7 @@
 
 pub mod sketch;
 
-use crate::request::Request;
+use crate::request::{Request, SloClass};
 use crate::util::stats::Summary;
 
 pub use sketch::QuantileSketch;
@@ -219,6 +219,47 @@ impl SeriesStat {
     }
 }
 
+/// Per-SLO-class goodput accounting: request count, SLO-attained count
+/// (the DistServe goodput numerator), and the class's own TBT series.
+/// Indexed by [`SloClass::index`] inside [`Recorder`]; merges across
+/// shards and cluster workers like every other recorder field.
+#[derive(Debug, Clone)]
+pub struct ClassStat {
+    /// Requests of this class completed.
+    pub completed: u64,
+    /// Of those, requests that met every SLO they declared
+    /// ([`Request::slo_attained`]); requests declaring none count as
+    /// attained, so goodput degrades to throughput for SLO-free classes.
+    pub attained: u64,
+    /// Inter-token gaps of this class's requests (per-class tbt-p99).
+    pub tbt: SeriesStat,
+}
+
+impl ClassStat {
+    fn with_mode(mode: RecorderMode) -> ClassStat {
+        ClassStat {
+            completed: 0,
+            attained: 0,
+            tbt: SeriesStat::with_mode(mode),
+        }
+    }
+
+    fn merge(&mut self, other: &ClassStat) {
+        self.completed += other.completed;
+        self.attained += other.attained;
+        self.tbt.merge(&other.tbt);
+    }
+
+    /// Attained fraction; `None` until a request of this class finished.
+    pub fn attainment(&self) -> Option<f64> {
+        if self.completed == 0 {
+            None
+        } else {
+            Some(self.attained as f64 / self.completed as f64)
+        }
+    }
+}
+
 /// Per-run metrics recorder. Engines feed it finished requests and
 /// iteration-level utilization samples; benches read the report.
 #[derive(Debug, Clone)]
@@ -244,7 +285,7 @@ pub struct Recorder {
     /// worker count × duration for average device utilization).
     pub busy_time: f64,
     /// Inter-token gaps checked against a per-request TBT SLO
-    /// (requests submitted with `SubmitOptions::slo_tbt_ms`).
+    /// (requests submitted with `QosSpec::slo_tbt_ms`).
     pub slo_checked: u64,
     /// Of those, gaps that exceeded the request's SLO.
     pub slo_violations: u64,
@@ -260,6 +301,15 @@ pub struct Recorder {
     /// prompt volume minus cache hits; the prefix bench's compute-drop
     /// signal).
     pub prefilled_tokens: u64,
+    /// Per-SLO-class goodput accounting, indexed by [`SloClass::index`].
+    pub classes: [ClassStat; SloClass::COUNT],
+    /// KV-pressure recompute preemptions: running requests evicted back
+    /// to the waiting queue because an allocation failed.
+    pub preemptions: u64,
+    /// QoS preemptions: lower-class prefill chunks the duet scheduler
+    /// shed because the roofline forecast predicted a latency-class
+    /// decode TBT violation (one count per chunk per iteration).
+    pub qos_preemptions: u64,
 }
 
 impl Default for Recorder {
@@ -301,7 +351,15 @@ impl Recorder {
             prefix_cached_tokens: 0,
             prefix_evictions: 0,
             prefilled_tokens: 0,
+            classes: std::array::from_fn(|_| ClassStat::with_mode(mode)),
+            preemptions: 0,
+            qos_preemptions: 0,
         }
+    }
+
+    /// The accounting bucket for one SLO class.
+    pub fn class(&self, class: SloClass) -> &ClassStat {
+        &self.classes[class.index()]
     }
 
     pub fn mode(&self) -> RecorderMode {
@@ -321,16 +379,26 @@ impl Recorder {
                 self.ttft.drop_samples();
                 self.tbt.drop_samples();
                 self.e2e.drop_samples();
+                for c in &mut self.classes {
+                    c.tbt.drop_samples();
+                }
                 self.mode = RecorderMode::Streaming;
             }
             RecorderMode::Exact => {
                 // Reattach empty histories only — iteration-level state
                 // (util sums, counters, duration) already recorded must
                 // survive the mode switch.
-                if self.ttft.n == 0 && self.tbt.n == 0 && self.e2e.n == 0 {
+                if self.ttft.n == 0
+                    && self.tbt.n == 0
+                    && self.e2e.n == 0
+                    && self.classes.iter().all(|c| c.tbt.n == 0)
+                {
                     self.ttft = SeriesStat::with_mode(RecorderMode::Exact);
                     self.tbt = SeriesStat::with_mode(RecorderMode::Exact);
                     self.e2e = SeriesStat::with_mode(RecorderMode::Exact);
+                    for c in &mut self.classes {
+                        c.tbt = SeriesStat::with_mode(RecorderMode::Exact);
+                    }
                     self.mode = RecorderMode::Exact;
                 }
             }
@@ -354,6 +422,14 @@ impl Recorder {
             let gaps = r.tbt_samples();
             self.slo_checked += gaps.len() as u64;
             self.slo_violations += gaps.iter().filter(|&&g| g > slo).count() as u64;
+        }
+        let class = &mut self.classes[r.class.index()];
+        class.completed += 1;
+        if r.slo_attained() {
+            class.attained += 1;
+        }
+        for g in r.tbt_samples() {
+            class.tbt.push(g);
         }
     }
 
@@ -390,11 +466,19 @@ impl Recorder {
         self.prefix_cached_tokens += other.prefix_cached_tokens;
         self.prefix_evictions += other.prefix_evictions;
         self.prefilled_tokens += other.prefilled_tokens;
+        for (c, oc) in self.classes.iter_mut().zip(other.classes.iter()) {
+            c.merge(oc);
+        }
+        self.preemptions += other.preemptions;
+        self.qos_preemptions += other.qos_preemptions;
         // An exact recorder that absorbed a streaming one lost its
         // sample history for the merged series: keep the mode accessor
         // truthful about what report() will answer from.
         if self.mode == RecorderMode::Exact
-            && !(self.ttft.has_samples() && self.tbt.has_samples() && self.e2e.has_samples())
+            && !(self.ttft.has_samples()
+                && self.tbt.has_samples()
+                && self.e2e.has_samples()
+                && self.classes.iter().all(|c| c.tbt.has_samples()))
         {
             self.mode = RecorderMode::Streaming;
         }
@@ -409,6 +493,14 @@ impl Recorder {
 
     pub fn report(&self, system: &str) -> Report {
         let tbt = self.tbt.summary();
+        let classes = std::array::from_fn(|i| {
+            let c = &self.classes[i];
+            ClassReport {
+                completed: c.completed,
+                attained: c.attained,
+                tbt_p99: if c.tbt.n == 0 { 0.0 } else { c.tbt.summary().p99 },
+            }
+        });
         Report {
             system: system.to_string(),
             completed: self.completed,
@@ -440,6 +532,32 @@ impl Recorder {
             prefix_cached_tokens: self.prefix_cached_tokens,
             prefix_evictions: self.prefix_evictions,
             prefilled_tokens: self.prefilled_tokens,
+            classes,
+            preemptions: self.preemptions,
+            qos_preemptions: self.qos_preemptions,
+        }
+    }
+}
+
+/// Per-class slice of a [`Report`], indexed by [`SloClass::index`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ClassReport {
+    /// Requests of this class completed.
+    pub completed: u64,
+    /// Of those, requests that met every SLO they declared.
+    pub attained: u64,
+    /// p99 inter-token gap of this class (0 when the class produced no
+    /// multi-token request).
+    pub tbt_p99: f64,
+}
+
+impl ClassReport {
+    /// Attained fraction; `None` until a request of this class finished.
+    pub fn attainment(&self) -> Option<f64> {
+        if self.completed == 0 {
+            None
+        } else {
+            Some(self.attained as f64 / self.completed as f64)
         }
     }
 }
@@ -489,9 +607,20 @@ pub struct Report {
     pub prefix_evictions: u64,
     /// Prompt tokens actually computed by prefill iterations.
     pub prefilled_tokens: u64,
+    /// Per-SLO-class goodput slices, indexed by [`SloClass::index`].
+    pub classes: [ClassReport; SloClass::COUNT],
+    /// KV-pressure recompute preemptions.
+    pub preemptions: u64,
+    /// Lower-class prefill chunks shed under latency-class TBT pressure.
+    pub qos_preemptions: u64,
 }
 
 impl Report {
+    /// The per-class slice for one SLO class.
+    pub fn class(&self, class: SloClass) -> &ClassReport {
+        &self.classes[class.index()]
+    }
+
     pub fn header() -> Vec<&'static str> {
         vec![
             "system", "qps", "done", "thpt(req/s)", "tok/s", "ttft-mean(s)", "tbt-mean(ms)",
@@ -518,7 +647,7 @@ impl Report {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::request::Request;
+    use crate::request::{Request, SloClass};
 
     fn finished_request() -> Request {
         let mut r = Request::new(1, 0.0, 100, 3);
@@ -650,6 +779,76 @@ mod tests {
         assert_eq!(rep.prefix_cached_tokens, 160);
         assert_eq!(rep.prefix_evictions, 5);
         assert_eq!(rep.prefilled_tokens, 1200);
+    }
+
+    /// A finished request of `class`, with inter-token gaps of `gap`
+    /// seconds and an optional TBT SLO.
+    fn classed_request(id: u64, class: SloClass, gap: f64, slo: Option<f64>) -> Request {
+        let mut r = Request::new(id, 0.0, 10, 3).with_class(class);
+        if let Some(s) = slo {
+            r = r.with_slo_tbt(s);
+        }
+        r.advance_prefill(10);
+        r.advance_decode(1.0);
+        r.advance_decode(1.0 + gap);
+        r.advance_decode(1.0 + 2.0 * gap);
+        r
+    }
+
+    #[test]
+    fn per_class_attainment_and_tbt_recorded() {
+        let mut m = Recorder::new();
+        m.record_finished(&classed_request(1, SloClass::Latency, 0.02, Some(0.05)));
+        m.record_finished(&classed_request(2, SloClass::Latency, 0.10, Some(0.05)));
+        m.record_finished(&classed_request(3, SloClass::Batch, 0.30, None));
+        m.duration = 2.0;
+        let rep = m.report("c");
+        let lat = rep.class(SloClass::Latency);
+        assert_eq!(lat.completed, 2);
+        assert_eq!(lat.attained, 1);
+        assert!((lat.attainment().unwrap() - 0.5).abs() < 1e-9);
+        assert!(lat.tbt_p99 > 0.0);
+        // No declared SLO: batch goodput equals its throughput.
+        let batch = rep.class(SloClass::Batch);
+        assert_eq!(batch.completed, 1);
+        assert_eq!(batch.attained, 1);
+        assert_eq!(rep.class(SloClass::Standard).completed, 0);
+        assert!(rep.class(SloClass::Standard).attainment().is_none());
+    }
+
+    #[test]
+    fn merge_preserves_per_class_attainment_streaming() {
+        // Two streaming (serving-path) recorders with different per-class
+        // outcomes must merge into exact per-class counts — the sharded
+        // `/metrics` fold and the cluster worker fold both ride this.
+        let mut a = Recorder::streaming();
+        a.record_finished(&classed_request(1, SloClass::Latency, 0.02, Some(0.05)));
+        a.record_finished(&classed_request(2, SloClass::Batch, 0.40, None));
+        a.preemptions = 2;
+        a.qos_preemptions = 5;
+        let mut b = Recorder::streaming();
+        b.record_finished(&classed_request(3, SloClass::Latency, 0.09, Some(0.05)));
+        b.record_finished(&classed_request(4, SloClass::Standard, 0.10, None));
+        b.preemptions = 1;
+        b.qos_preemptions = 3;
+        a.merge(&b);
+        a.duration = 2.0;
+        assert_eq!(a.preemptions, 3);
+        assert_eq!(a.qos_preemptions, 8);
+        let rep = a.report("m");
+        let lat = rep.class(SloClass::Latency);
+        assert_eq!(lat.completed, 2);
+        assert_eq!(lat.attained, 1);
+        // The class TBT series carries both workers' gaps: p99 lands in
+        // the violating worker's gap range.
+        assert!(lat.tbt_p99 >= 0.08, "p99 {} lost worker B's gaps", lat.tbt_p99);
+        assert_eq!(rep.class(SloClass::Standard).completed, 1);
+        assert_eq!(rep.class(SloClass::Batch).completed, 1);
+        assert_eq!(rep.preemptions, 3);
+        assert_eq!(rep.qos_preemptions, 8);
+        // Per-class completions always partition total completions.
+        let sum: u64 = rep.classes.iter().map(|c| c.completed).sum();
+        assert_eq!(sum, rep.completed);
     }
 
     #[test]

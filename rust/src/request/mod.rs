@@ -3,6 +3,62 @@
 /// Unique request id.
 pub type RequestId = u64;
 
+/// SLO class of a request — the QoS tier the scheduler orders and
+/// preempts by. Ordered by urgency: `Latency < Standard < Batch`, so
+/// sorting ascending puts the most latency-sensitive work first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum SloClass {
+    /// Interactive traffic: admission front-of-cohort; the duet
+    /// scheduler tightens its TBT forecast to this class's declared SLO
+    /// and preempts lower-class prefill on predicted violation.
+    Latency,
+    /// The default tier; legacy submissions without a class land here.
+    #[default]
+    Standard,
+    /// Throughput work: admitted last within a cohort (subject to
+    /// aging), first to be preempted under latency-class TBT pressure.
+    Batch,
+}
+
+impl SloClass {
+    /// Number of classes (per-class metric arrays are indexed by
+    /// [`SloClass::index`]).
+    pub const COUNT: usize = 3;
+
+    /// Dense index for per-class accounting arrays.
+    pub fn index(self) -> usize {
+        match self {
+            SloClass::Latency => 0,
+            SloClass::Standard => 1,
+            SloClass::Batch => 2,
+        }
+    }
+
+    /// Wire / display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::Latency => "latency",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    /// Strict wire-name parse (unknown names are the caller's 400).
+    pub fn parse(s: &str) -> Option<SloClass> {
+        match s {
+            "latency" => Some(SloClass::Latency),
+            "standard" => Some(SloClass::Standard),
+            "batch" => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+
+    /// All classes in urgency order (index order).
+    pub fn all() -> [SloClass; SloClass::COUNT] {
+        [SloClass::Latency, SloClass::Standard, SloClass::Batch]
+    }
+}
+
 /// Lifecycle of a request inside an engine.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
@@ -47,6 +103,12 @@ pub struct Request {
     /// Per-request decode TBT SLO in seconds, when the submitter set one
     /// (attainment is accounted in `metrics::Recorder`).
     pub slo_tbt: Option<f64>,
+    /// Per-request TTFT SLO in seconds, when the submitter set one
+    /// (feeds per-class attainment accounting only).
+    pub slo_ttft: Option<f64>,
+    /// QoS tier: orders admission within an arrival-due cohort and
+    /// selects preemption victims under latency-class TBT pressure.
+    pub class: SloClass,
     /// Synthetic prefix identity (tenant / shared-system-prompt class)
     /// for workloads that carry no real token payload: two requests with
     /// the same `prefix_id` are treated as sharing their entire common
@@ -72,6 +134,8 @@ impl Request {
             token_times: Vec::new(),
             prompt_tokens: None,
             slo_tbt: None,
+            slo_ttft: None,
+            class: SloClass::default(),
             prefix_id: None,
         }
     }
@@ -94,6 +158,18 @@ impl Request {
         self
     }
 
+    /// Attach a per-request TTFT SLO (seconds).
+    pub fn with_slo_ttft(mut self, slo: f64) -> Request {
+        self.slo_ttft = Some(slo);
+        self
+    }
+
+    /// Set the request's SLO class (defaults to [`SloClass::Standard`]).
+    pub fn with_class(mut self, class: SloClass) -> Request {
+        self.class = class;
+        self
+    }
+
     /// Attach a synthetic prefix identity (see [`Request::prefix_id`]).
     pub fn with_prefix_id(mut self, prefix_id: u64) -> Request {
         self.prefix_id = Some(prefix_id);
@@ -107,8 +183,27 @@ impl Request {
         let mut fresh = Request::new(self.id, self.arrival, self.prompt_len, self.output_len);
         fresh.prompt_tokens = self.prompt_tokens.clone();
         fresh.slo_tbt = self.slo_tbt;
+        fresh.slo_ttft = self.slo_ttft;
+        fresh.class = self.class;
         fresh.prefix_id = self.prefix_id;
         fresh
+    }
+
+    /// Has this request met every SLO it declared? Requests that declared
+    /// none are trivially attained (their class's goodput equals its
+    /// throughput). Meaningful once finished.
+    pub fn slo_attained(&self) -> bool {
+        if let Some(slo) = self.slo_tbt {
+            if self.tbt_samples().iter().any(|&gap| gap > slo) {
+                return false;
+            }
+        }
+        if let (Some(slo), Some(ttft)) = (self.slo_ttft, self.ttft()) {
+            if ttft > slo {
+                return false;
+            }
+        }
+        true
     }
 
     /// Prompt tokens not yet prefilled.
@@ -231,12 +326,16 @@ mod tests {
         let mut r = Request::new(3, 1.5, 4, 8)
             .with_prompt_tokens(vec![9, 8, 7, 6])
             .with_slo_tbt(0.1)
+            .with_slo_ttft(0.5)
+            .with_class(SloClass::Latency)
             .with_prefix_id(42);
         r.advance_prefill(4);
         r.advance_decode(2.0);
         let fresh = r.reset_for_retry();
         assert_eq!(fresh.id, 3);
         assert_eq!(fresh.prefix_id, Some(42));
+        assert_eq!(fresh.slo_ttft, Some(0.5));
+        assert_eq!(fresh.class, SloClass::Latency);
         assert_eq!(fresh.arrival, 1.5);
         assert_eq!(fresh.prompt_len, 4);
         assert_eq!(fresh.output_len, 8);
@@ -251,6 +350,38 @@ mod tests {
     #[should_panic(expected = "prompt payload length must match")]
     fn prompt_payload_length_mismatch_panics() {
         let _ = Request::new(1, 0.0, 3, 1).with_prompt_tokens(vec![1, 2]);
+    }
+
+    #[test]
+    fn slo_class_parse_roundtrip_and_order() {
+        for c in SloClass::all() {
+            assert_eq!(SloClass::parse(c.name()), Some(c));
+        }
+        assert_eq!(SloClass::parse("gold"), None);
+        assert_eq!(SloClass::parse("Latency"), None); // strict: lowercase only
+        assert!(SloClass::Latency < SloClass::Standard);
+        assert!(SloClass::Standard < SloClass::Batch);
+        assert_eq!(SloClass::default(), SloClass::Standard);
+        assert_eq!(SloClass::Batch.index(), 2);
+    }
+
+    #[test]
+    fn slo_attained_checks_declared_gates_only() {
+        let mut r = Request::new(1, 0.0, 4, 3);
+        r.advance_prefill(4);
+        r.advance_decode(1.0);
+        r.advance_decode(1.2);
+        r.advance_decode(1.4);
+        // No declared SLO: trivially attained.
+        assert!(r.slo_attained());
+        // TBT gate: gaps are 0.2s.
+        assert!(r.clone().with_slo_tbt(0.25).slo_attained());
+        assert!(!r.clone().with_slo_tbt(0.1).slo_attained());
+        // TTFT gate: first token at 1.0s after arrival 0.0.
+        assert!(r.clone().with_slo_ttft(1.5).slo_attained());
+        assert!(!r.clone().with_slo_ttft(0.5).slo_attained());
+        // Both gates must hold.
+        assert!(!r.clone().with_slo_tbt(0.25).with_slo_ttft(0.5).slo_attained());
     }
 
     #[test]

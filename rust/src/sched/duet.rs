@@ -5,7 +5,7 @@ use super::optimizer::optimize_partition_verbatim;
 use super::{build_chunked_batch, optimize_partition, IterationPlan, SchedInput, Scheduler};
 use crate::hw::PartitionPlan;
 use crate::model::AttnShape;
-use crate::request::{Request, RequestId};
+use crate::request::{Phase, Request, RequestId, SloClass};
 use crate::roofline::{BatchShape, Predictor};
 
 /// Build the (decode, prefill) batch shapes for a candidate plan, looking
@@ -65,6 +65,13 @@ pub struct DuetScheduler {
     /// Ablation switch: run Algorithm 1 exactly as printed (no
     /// realized-gap constraint). See `bench ablation_design`.
     pub verbatim_alg1: bool,
+    /// Class-aware QoS: tighten the effective TBT SLO to the strictest
+    /// latency-class decode request and, when no partition is feasible,
+    /// shed lower-class prefill chunks before shedding everything.
+    pub qos_preemption: bool,
+    /// Prefill chunks shed specifically to protect a latency-class
+    /// decode (drained by [`Scheduler::take_qos_preemptions`]).
+    qos_preempted: u64,
 }
 
 impl DuetScheduler {
@@ -86,8 +93,47 @@ impl DuetScheduler {
             spatial_iterations: 0,
             total_iterations: 0,
             verbatim_alg1: false,
+            qos_preemption: true,
+            qos_preempted: 0,
         }
     }
+
+    pub fn with_qos(mut self, on: bool) -> DuetScheduler {
+        self.qos_preemption = on;
+        self
+    }
+
+    /// The SLO the iteration must meet: the configured TBT SLO, tightened
+    /// to the strictest per-request SLO among latency-class decodes when
+    /// QoS is on. Standard/batch-class SLOs never tighten scheduling —
+    /// they are recorded, not enforced — so legacy (classless) traffic
+    /// schedules exactly as before.
+    fn effective_slo(&self, input: &SchedInput<'_>) -> f64 {
+        let mut slo = self.tbt_slo;
+        if self.qos_preemption {
+            for r in input.running.iter().filter(|r| {
+                r.phase == Phase::Decode && r.class == SloClass::Latency
+            }) {
+                if let Some(s) = r.slo_tbt {
+                    if s < slo {
+                        slo = s;
+                    }
+                }
+            }
+        }
+        slo
+    }
+}
+
+/// Class of the request behind a scheduled id (Standard when unknown).
+fn class_of(input: &SchedInput<'_>, id: RequestId) -> SloClass {
+    input
+        .running
+        .iter()
+        .chain(input.waiting.iter())
+        .find(|r| r.id == id)
+        .map(|r| r.class)
+        .unwrap_or_default()
 }
 
 impl Scheduler for DuetScheduler {
@@ -100,13 +146,16 @@ impl Scheduler for DuetScheduler {
         self.total_iterations += 1;
 
         let (dec_shape, pre_shape) = shapes_of(input, &decode, &prefill);
+        // The SLO this iteration must meet (== tbt_slo for classless
+        // traffic, tightened by latency-class decode SLOs under QoS).
+        let eff_slo = self.effective_slo(input);
         // Line 2-4: predict the mixed batch on the full device.
         let mut mixed = dec_shape.shapes.clone();
         mixed.extend(pre_shape.shapes.iter().copied());
         let t_mixed = self
             .predictor
             .predict_full(&BatchShape::from_shapes(mixed));
-        if t_mixed <= self.tbt_slo || decode.is_empty() || prefill.is_empty() {
+        if t_mixed <= eff_slo || decode.is_empty() || prefill.is_empty() {
             return IterationPlan::Aggregated { decode, prefill };
         }
 
@@ -120,7 +169,7 @@ impl Scheduler for DuetScheduler {
             &self.predictor,
             &dec_shape,
             &pre_shape,
-            self.tbt_slo,
+            eff_slo,
             self.max_lookahead,
         ) {
             Some(plan) => {
@@ -132,15 +181,54 @@ impl Scheduler for DuetScheduler {
                 }
             }
             // No feasible split: protect decode TBT by postponing prefill.
-            None => IterationPlan::Aggregated {
-                decode,
-                prefill: Vec::new(),
-            },
+            // Under QoS with a latency-class decode present, lower-class
+            // chunks are shed *first* (counted as qos preemptions); the
+            // surviving latency-class prefill rides along only if the
+            // roofline says the combined batch still meets the SLO.
+            None => {
+                let mut kept: Vec<super::PrefillChunk> = Vec::new();
+                if self.qos_preemption {
+                    let latency_decode = input.running.iter().any(|r| {
+                        r.phase == Phase::Decode && r.class == SloClass::Latency
+                    });
+                    let lower = prefill
+                        .iter()
+                        .filter(|c| class_of(input, c.id) != SloClass::Latency)
+                        .count();
+                    if latency_decode && lower > 0 {
+                        self.qos_preempted += lower as u64;
+                        kept = prefill
+                            .iter()
+                            .copied()
+                            .filter(|c| class_of(input, c.id) == SloClass::Latency)
+                            .collect();
+                        if !kept.is_empty() {
+                            let (_, kept_shape) = shapes_of(input, &[], &kept);
+                            let mut m = dec_shape.shapes.clone();
+                            m.extend(kept_shape.shapes.iter().copied());
+                            let t_kept = self
+                                .predictor
+                                .predict_full(&BatchShape::from_shapes(m));
+                            if t_kept > eff_slo {
+                                kept.clear();
+                            }
+                        }
+                    }
+                }
+                IterationPlan::Aggregated {
+                    decode,
+                    prefill: kept,
+                }
+            }
         }
     }
 
     fn name(&self) -> String {
         "DuetServe".into()
+    }
+
+    fn take_qos_preemptions(&mut self) -> u64 {
+        std::mem::take(&mut self.qos_preempted)
     }
 }
 
@@ -310,6 +398,99 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn qos_sheds_lower_class_prefill_and_counts() {
+        // Infeasible SLO with a latency-class decode present: the batch-
+        // class prefill chunk is shed and counted as a qos preemption.
+        let mut s = DuetScheduler::new(predictor(), 8192, 1024, 0.0, 1e-6, 16);
+        let running: Vec<_> = (0..8)
+            .map(|i| decoding(i, 8192).with_class(SloClass::Latency))
+            .collect();
+        let waiting = vec![Request::new(99, 0.0, 8192, 10).with_class(SloClass::Batch)];
+        let plan = s.plan(&SchedInput {
+            running: &running,
+            waiting: &waiting,
+            kv_free_tokens: 10_000_000,
+            kv_total_tokens: 10_000_000,
+        });
+        match plan {
+            IterationPlan::Aggregated { decode, prefill } => {
+                assert_eq!(decode.len(), 8);
+                assert!(prefill.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.take_qos_preemptions(), 1);
+        assert_eq!(s.take_qos_preemptions(), 0, "counter drains");
+    }
+
+    #[test]
+    fn qos_counter_stays_zero_without_latency_decode_or_with_qos_off() {
+        // Same pressure, but every request is batch-class: the shed is the
+        // pre-existing protect-decode behavior, not a qos preemption.
+        let running: Vec<_> = (0..8)
+            .map(|i| decoding(i, 8192).with_class(SloClass::Batch))
+            .collect();
+        let waiting = vec![Request::new(99, 0.0, 8192, 10).with_class(SloClass::Batch)];
+        let input = SchedInput {
+            running: &running,
+            waiting: &waiting,
+            kv_free_tokens: 10_000_000,
+            kv_total_tokens: 10_000_000,
+        };
+        let mut s = DuetScheduler::new(predictor(), 8192, 1024, 0.0, 1e-6, 16);
+        let plan = s.plan(&input);
+        assert!(plan.prefill_chunks().is_empty());
+        assert_eq!(s.take_qos_preemptions(), 0);
+
+        // Latency decode present but qos disabled: also zero.
+        let running: Vec<_> = (0..8)
+            .map(|i| decoding(i, 8192).with_class(SloClass::Latency))
+            .collect();
+        let input = SchedInput {
+            running: &running,
+            waiting: &waiting,
+            kv_free_tokens: 10_000_000,
+            kv_total_tokens: 10_000_000,
+        };
+        let mut s =
+            DuetScheduler::new(predictor(), 8192, 1024, 0.0, 1e-6, 16).with_qos(false);
+        let plan = s.plan(&input);
+        assert!(plan.prefill_chunks().is_empty());
+        assert_eq!(s.take_qos_preemptions(), 0);
+    }
+
+    #[test]
+    fn latency_slo_tightens_effective_slo() {
+        // A latency-class decode declaring a 1ms TBT SLO forces the
+        // scheduler off the aggregated path even though the configured SLO
+        // (100ms) would have allowed it.
+        let running = vec![
+            decoding(0, 512).with_class(SloClass::Latency).with_slo_tbt(1e-6),
+        ];
+        let waiting = vec![Request::new(1, 0.0, 256, 10).with_class(SloClass::Batch)];
+        let input = SchedInput {
+            running: &running,
+            waiting: &waiting,
+            kv_free_tokens: 1_000_000,
+            kv_total_tokens: 1_000_000,
+        };
+        let mut s = DuetScheduler::new(predictor(), 8192, 1024, 0.0, 0.100, 16);
+        let plan = s.plan(&input);
+        assert!(
+            plan.prefill_chunks().is_empty(),
+            "batch prefill shed under tightened SLO: {plan:?}"
+        );
+        assert_eq!(s.take_qos_preemptions(), 1);
+
+        // Identical input with qos off reproduces today's aggregated plan.
+        let mut base =
+            DuetScheduler::new(predictor(), 8192, 1024, 0.0, 0.100, 16).with_qos(false);
+        let plan = base.plan(&input);
+        assert!(matches!(plan, IterationPlan::Aggregated { .. }));
+        assert_eq!(plan.prefill_chunks().len(), 1);
     }
 
     #[test]

@@ -114,6 +114,13 @@ impl IterationPlan {
 pub trait Scheduler {
     fn plan(&mut self, input: &SchedInput<'_>) -> IterationPlan;
     fn name(&self) -> String;
+    /// Drain the count of prefill chunks shed by class-aware QoS
+    /// preemption since the last call. Engines fold this into
+    /// `Recorder::qos_preemptions` after each `plan`. Schedulers without
+    /// QoS awareness report zero.
+    fn take_qos_preemptions(&mut self) -> u64 {
+        0
+    }
 }
 
 /// Build the scheduler for a config's policy. Shared by the single-GPU
@@ -149,14 +156,17 @@ pub fn scheduler_for(cfg: &crate::config::ServingConfig) -> Box<dyn Scheduler> {
             2 * cfg.token_budget as u64,
             cfg.max_batch as usize,
         )),
-        Policy::Duet => Box::new(DuetScheduler::new(
-            pred,
-            cfg.token_budget as u64,
-            cfg.max_batch as usize,
-            cfg.kv_watermark,
-            cfg.tbt_slo,
-            cfg.max_lookahead,
-        )),
+        Policy::Duet => Box::new(
+            DuetScheduler::new(
+                pred,
+                cfg.token_budget as u64,
+                cfg.max_batch as usize,
+                cfg.kv_watermark,
+                cfg.tbt_slo,
+                cfg.max_lookahead,
+            )
+            .with_qos(cfg.qos_preemption),
+        ),
         Policy::StaticPartition {
             decode_tpcs,
             prefill_tpcs,

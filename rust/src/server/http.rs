@@ -37,8 +37,10 @@
 //!   (mapped byte-per-token, verbatim byte values), and completion
 //!   "text" is the generated token ids space-joined, with the raw ids
 //!   in `token_ids`.
-//!   Trace-replay extensions: `arrival` (engine-clock seconds),
-//!   `slo_tbt_ms`, `priority`.
+//!   Trace-replay / QoS extensions: `arrival` (engine-clock seconds),
+//!   `slo_class` (`"latency"|"standard"|"batch"`, strict — unknown
+//!   values are a 400; absent maps to `standard`, byte-identical to the
+//!   pre-QoS behavior), `slo_tbt_ms`, `slo_ttft_ms`, `priority`.
 //! - `GET /healthz` — liveness.
 //! - `GET /metrics` — Prometheus text: transport counters plus a live,
 //!   non-destructive engine snapshot ([`Server::report_snapshot`]).
@@ -86,6 +88,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::metrics::Report;
+use crate::request::SloClass;
 use crate::server::{
     FinishReason, HandlePoll, RequestHandle, ShardedServer, SubmitError, SubmitOptions, TokenEvent,
 };
@@ -821,7 +824,36 @@ pub(crate) fn report_json(rep: &Report) -> Json {
         ("prefix_cached_tokens", Json::Num(rep.prefix_cached_tokens as f64)),
         ("prefix_evictions", Json::Num(rep.prefix_evictions as f64)),
         ("prefilled_tokens", Json::Num(rep.prefilled_tokens as f64)),
+        ("preemptions", Json::Num(rep.preemptions as f64)),
+        ("qos_preemptions", Json::Num(rep.qos_preemptions as f64)),
+        ("classes", classes_json(rep)),
     ])
+}
+
+/// Per-class goodput series keyed by class name:
+/// `{"latency": {"completed": …, "attained": …, "attainment": …,
+/// "tbt_p99_s": …}, …}`.
+fn classes_json(rep: &Report) -> Json {
+    Json::obj(
+        SloClass::all()
+            .into_iter()
+            .map(|class| {
+                let c = rep.class(class);
+                (
+                    class.name(),
+                    Json::obj(vec![
+                        ("completed", Json::Num(c.completed as f64)),
+                        ("attained", Json::Num(c.attained as f64)),
+                        (
+                            "attainment",
+                            c.attainment().map(Json::Num).unwrap_or(Json::Null),
+                        ),
+                        ("tbt_p99_s", Json::Num(c.tbt_p99)),
+                    ]),
+                )
+            })
+            .collect(),
+    )
 }
 
 fn prom_metric(out: &mut String, name: &str, kind: &str, help: &str, value: f64) {
@@ -829,6 +861,29 @@ fn prom_metric(out: &mut String, name: &str, kind: &str, help: &str, value: f64)
     let _ = writeln!(out, "# HELP {name} {help}");
     let _ = writeln!(out, "# TYPE {name} {kind}");
     let _ = writeln!(out, "{name} {value}");
+}
+
+/// One metric family with a `class="latency|standard|batch"` label per
+/// SLO class (the `duetserve_class_*` families).
+fn prom_class_family(
+    out: &mut String,
+    name: &str,
+    kind: &str,
+    help: &str,
+    rep: &Report,
+    value: impl Fn(&crate::metrics::ClassReport) -> f64,
+) {
+    use std::fmt::Write as _;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    for class in SloClass::all() {
+        let _ = writeln!(
+            out,
+            "{name}{{class=\"{}\"}} {}",
+            class.name(),
+            value(rep.class(class))
+        );
+    }
 }
 
 /// Render the `/metrics` payload: transport counters plus (when the
@@ -1019,6 +1074,44 @@ pub(crate) fn render_prometheus(rep: Option<&Report>, stats: &HttpStats) -> Stri
             "Prompt tokens actually computed by prefill",
             r.prefilled_tokens as f64,
         );
+        prom_metric(
+            &mut out,
+            "duetserve_preemptions_total",
+            "counter",
+            "Running requests recompute-preempted under KV exhaustion",
+            r.preemptions as f64,
+        );
+        prom_metric(
+            &mut out,
+            "duetserve_qos_preemptions_total",
+            "counter",
+            "Lower-class prefill chunks shed to protect a latency-class decode TBT",
+            r.qos_preemptions as f64,
+        );
+        prom_class_family(
+            &mut out,
+            "duetserve_class_completed_total",
+            "counter",
+            "Requests completed, by SLO class",
+            r,
+            |c| c.completed as f64,
+        );
+        prom_class_family(
+            &mut out,
+            "duetserve_class_attained_total",
+            "counter",
+            "Completed requests that met every declared SLO, by class",
+            r,
+            |c| c.attained as f64,
+        );
+        prom_class_family(
+            &mut out,
+            "duetserve_class_tbt_p99_seconds",
+            "gauge",
+            "p99 time between tokens, by SLO class",
+            r,
+            |c| c.tbt_p99,
+        );
     }
     out
 }
@@ -1170,17 +1263,33 @@ fn parse_completion(v: &Json) -> Result<CompletionParams, String> {
             return Err(format!("`max_tokens` must be <= {MAX_TOKENS_CAP}"));
         }
     }
+    if let Some(x) = v.get("slo_class") {
+        let s = match x {
+            Json::Str(s) => s.as_str(),
+            _ => return Err("`slo_class` must be a string".to_string()),
+        };
+        opts.qos.class = SloClass::parse(s).ok_or_else(|| {
+            format!("`slo_class` must be one of \"latency\", \"standard\", \"batch\" (got \"{s}\")")
+        })?;
+    }
     if let Some(x) = v.get("slo_tbt_ms") {
-        opts.slo_tbt_ms = Some(
+        opts.qos.slo_tbt_ms = Some(
             x.as_f64()
                 .ok_or_else(|| "`slo_tbt_ms` must be a number".to_string())?,
+        );
+    }
+    if let Some(x) = v.get("slo_ttft_ms") {
+        opts.qos.slo_ttft_ms = Some(
+            x.as_f64()
+                .ok_or_else(|| "`slo_ttft_ms` must be a number".to_string())?,
         );
     }
     if let Some(x) = v.get("priority") {
         let p = x
             .as_i64()
             .ok_or_else(|| "`priority` must be an integer".to_string())?;
-        opts.priority = i32::try_from(p).map_err(|_| "`priority` out of range".to_string())?;
+        opts.qos.priority =
+            i32::try_from(p).map_err(|_| "`priority` out of range".to_string())?;
     }
     if let Some(x) = v.get("arrival") {
         opts.arrival = Some(
@@ -1765,9 +1874,11 @@ mod tests {
         assert_eq!(p.prompt, vec![1, 2, 3]);
         assert_eq!(p.opts.max_new_tokens, 7);
         assert!(p.stream);
-        assert_eq!(p.opts.slo_tbt_ms, Some(50.0));
-        assert_eq!(p.opts.priority, 2);
+        assert_eq!(p.opts.qos.slo_tbt_ms, Some(50.0));
+        assert_eq!(p.opts.qos.priority, 2);
         assert_eq!(p.opts.arrival, Some(1.5));
+        // Legacy body without `slo_class`: standard, the pre-QoS default.
+        assert_eq!(p.opts.qos.class, SloClass::Standard);
 
         // String prompts map byte-per-token.
         let v = json::parse(r#"{"prompt":"AB"}"#).unwrap();
@@ -1785,6 +1896,30 @@ mod tests {
             r#"{"prompt":[1],"max_tokens":"x"}"#,
             r#"{"prompt":[1],"stream":1}"#,
             r#"{"prompt":[1],"priority":4000000000}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(parse_completion(&v).is_err(), "`{bad}` must be rejected");
+        }
+    }
+
+    #[test]
+    fn slo_class_parses_strictly() {
+        for (body, class) in [
+            (r#"{"prompt":[1],"slo_class":"latency"}"#, SloClass::Latency),
+            (r#"{"prompt":[1],"slo_class":"standard"}"#, SloClass::Standard),
+            (r#"{"prompt":[1],"slo_class":"batch"}"#, SloClass::Batch),
+        ] {
+            let v = json::parse(body).unwrap();
+            assert_eq!(parse_completion(&v).unwrap().opts.qos.class, class);
+        }
+        let v = json::parse(r#"{"prompt":[1],"slo_class":"latency","slo_ttft_ms":250}"#).unwrap();
+        assert_eq!(parse_completion(&v).unwrap().opts.qos.slo_ttft_ms, Some(250.0));
+        // Unknown or mistyped classes are a 400, not a silent default.
+        for bad in [
+            r#"{"prompt":[1],"slo_class":"gold"}"#,
+            r#"{"prompt":[1],"slo_class":"Latency"}"#,
+            r#"{"prompt":[1],"slo_class":3}"#,
+            r#"{"prompt":[1],"slo_ttft_ms":"x"}"#,
         ] {
             let v = json::parse(bad).unwrap();
             assert!(parse_completion(&v).is_err(), "`{bad}` must be rejected");
@@ -1834,11 +1969,35 @@ mod tests {
         assert!(text.contains("duetserve_prefix_cached_tokens_total 96"));
         assert!(text.contains("duetserve_prefix_evictions_total 0"));
         assert!(text.contains("# TYPE duetserve_prefilled_tokens_total counter"));
+        assert!(text.contains("duetserve_preemptions_total 0"));
+        assert!(text.contains("duetserve_qos_preemptions_total 0"));
+        // Per-class families render one labeled sample per SLO class.
+        assert!(text.contains("# TYPE duetserve_class_completed_total counter"));
+        assert!(text.contains("duetserve_class_completed_total{class=\"latency\"} 0"));
+        assert!(text.contains("duetserve_class_attained_total{class=\"standard\"} 0"));
+        assert!(text.contains("duetserve_class_tbt_p99_seconds{class=\"batch\"} 0"));
         // Without a snapshot, only transport metrics render.
         let text = render_prometheus(None, &stats);
         assert!(!text.contains("duetserve_engine_completed_total"));
         assert!(!text.contains("duetserve_queue_cap"));
         assert!(!text.contains("duetserve_prefix_hits_total"));
+        assert!(!text.contains("duetserve_class_completed_total"));
+    }
+
+    #[test]
+    fn report_json_carries_classes_and_preemption_counters() {
+        let rep = crate::metrics::Recorder::new().report("unit");
+        let v = report_json(&rep);
+        assert_eq!(v.get("preemptions").and_then(|x| x.as_f64()), Some(0.0));
+        assert_eq!(v.get("qos_preemptions").and_then(|x| x.as_f64()), Some(0.0));
+        let classes = v.get("classes").expect("classes object");
+        for class in SloClass::all() {
+            let c = classes.get(class.name()).expect("per-class entry");
+            assert_eq!(c.get("completed").and_then(|x| x.as_f64()), Some(0.0));
+            assert_eq!(c.get("attainment"), Some(&Json::Null));
+        }
+        // Valid JSON end to end.
+        assert_eq!(json::parse(&v.dump()).unwrap(), v);
     }
 
     #[test]

@@ -50,10 +50,12 @@
 //! [`ServerCore::submit`] applies bounded-queue backpressure: beyond the
 //! configured depth of not-yet-admitted requests it returns
 //! [`SubmitError::QueueFull`] instead of queueing unboundedly. Admission
-//! out of the submission queue is FCFS in arrival order (priority breaks
-//! ties among equal arrivals); under slot/KV exhaustion the scheduler
+//! out of the submission queue orders each arrival-due cohort by
+//! (aged [`SloClass`] rank, priority desc, arrival, submission order) —
+//! for single-class equal-priority traffic that degenerates to pure
+//! FCFS in arrival order. Under slot/KV exhaustion the scheduler
 //! blocks the head rather than skipping ahead, so first-token order
-//! follows submission order (regression-tested). `cancel` removes a
+//! follows admission order (regression-tested). `cancel` removes a
 //! request at any stage and closes its stream with
 //! [`FinishReason::Cancelled`]; shutdown drains in-flight and queued work
 //! before the engine thread exits, returning the final [`Report`].
@@ -78,7 +80,7 @@ use crate::engine::{
     ServingTopology, SimBackend, TopologyLoad, TopologyStep,
 };
 use crate::metrics::{Recorder, RecorderMode, Report};
-use crate::request::{Request, RequestId};
+use crate::request::{Request, RequestId, SloClass};
 use crate::sched::{scheduler_for, Scheduler};
 
 /// Default bound on accepted-but-not-yet-admitted requests.
@@ -106,28 +108,93 @@ pub enum TokenEvent {
     Done { reason: FinishReason },
 }
 
+/// Typed QoS envelope for one submission: the request's SLO class plus
+/// its intra-class priority and per-request SLO targets. Replaces the
+/// loose `slo_tbt_ms`/`priority` field bag that used to live directly on
+/// [`SubmitOptions`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct QosSpec {
+    /// Scheduling class ([`SloClass::Standard`] when unspecified — the
+    /// pre-QoS behavior).
+    pub class: SloClass,
+    /// Larger runs earlier within the same class among submissions whose
+    /// arrivals are due together.
+    pub priority: i32,
+    /// Per-request decode TBT SLO in milliseconds; attainment is
+    /// accounted in the shared metrics ([`Report::slo_attainment`] and
+    /// the per-class series). For latency-class requests it also
+    /// tightens the duet scheduler's effective iteration SLO.
+    pub slo_tbt_ms: Option<f64>,
+    /// Per-request TTFT SLO in milliseconds (attainment gate only).
+    pub slo_ttft_ms: Option<f64>,
+}
+
+impl Default for QosSpec {
+    fn default() -> QosSpec {
+        QosSpec {
+            class: SloClass::Standard,
+            priority: 0,
+            slo_tbt_ms: None,
+            slo_ttft_ms: None,
+        }
+    }
+}
+
 /// Per-request submission options.
 #[derive(Debug, Clone)]
 pub struct SubmitOptions {
     /// Generation bound (≥ 1).
     pub max_new_tokens: u64,
-    /// Per-request decode TBT SLO in milliseconds; attainment is
-    /// accounted in the shared metrics ([`Report::slo_attainment`]).
-    pub slo_tbt_ms: Option<f64>,
-    /// Larger runs earlier among submissions with the same arrival time.
-    pub priority: i32,
     /// Engine-clock arrival override (trace replay); `None` means "now".
     pub arrival: Option<f64>,
+    /// QoS envelope (class, priority, SLO targets).
+    pub qos: QosSpec,
 }
 
 impl Default for SubmitOptions {
     fn default() -> SubmitOptions {
         SubmitOptions {
             max_new_tokens: 16,
-            slo_tbt_ms: None,
-            priority: 0,
             arrival: None,
+            qos: QosSpec::default(),
         }
+    }
+}
+
+impl SubmitOptions {
+    pub fn with_max_new_tokens(mut self, n: u64) -> SubmitOptions {
+        self.max_new_tokens = n;
+        self
+    }
+
+    pub fn with_arrival(mut self, arrival: f64) -> SubmitOptions {
+        self.arrival = Some(arrival);
+        self
+    }
+
+    pub fn with_qos(mut self, qos: QosSpec) -> SubmitOptions {
+        self.qos = qos;
+        self
+    }
+
+    pub fn with_class(mut self, class: SloClass) -> SubmitOptions {
+        self.qos.class = class;
+        self
+    }
+
+    pub fn with_priority(mut self, priority: i32) -> SubmitOptions {
+        self.qos.priority = priority;
+        self
+    }
+
+    pub fn with_slo_tbt_ms(mut self, ms: f64) -> SubmitOptions {
+        self.qos.slo_tbt_ms = Some(ms);
+        self
+    }
+
+    pub fn with_slo_ttft_ms(mut self, ms: f64) -> SubmitOptions {
+        self.qos.slo_ttft_ms = Some(ms);
+        self
     }
 }
 
@@ -308,6 +375,34 @@ pub enum HandlePoll {
 struct PendingEntry {
     req: Request,
     priority: i32,
+    /// Submission order, the final admission tie-break (FCFS).
+    seq: u64,
+}
+
+/// Engine-clock seconds of waiting that promote a request one class rank
+/// toward `latency` during admission ordering — the starvation bound:
+/// a `batch` submission outranks fresh latency traffic after at most
+/// `2 × CLASS_AGING_S` of queueing (then priority/arrival decide).
+pub const CLASS_AGING_S: f64 = 30.0;
+
+/// Class rank after aging: the class index, promoted one step toward 0
+/// per [`CLASS_AGING_S`] of queue wait. Within one class, rank is
+/// non-increasing in waited time — so for single-class traffic, rank
+/// order degenerates to arrival order and admission stays pure FCFS.
+fn aged_class_rank(class: SloClass, waited_s: f64) -> i64 {
+    let promote = (waited_s.max(0.0) / CLASS_AGING_S) as i64;
+    (class.index() as i64) - promote.min(SloClass::COUNT as i64)
+}
+
+/// Admission order within an arrival-due cohort:
+/// (aged class rank, priority desc, arrival, submission order).
+fn cohort_order(a: &PendingEntry, b: &PendingEntry, now_abs: f64) -> Ordering {
+    let ra = aged_class_rank(a.req.class, now_abs - a.req.arrival);
+    let rb = aged_class_rank(b.req.class, now_abs - b.req.arrival);
+    ra.cmp(&rb)
+        .then(b.priority.cmp(&a.priority))
+        .then(a.req.arrival.total_cmp(&b.req.arrival))
+        .then(a.seq.cmp(&b.seq))
 }
 
 struct StreamState {
@@ -334,6 +429,8 @@ pub struct ServerCore {
     /// Request-id increment: 1 standalone; the shard count under a
     /// [`ShardedServer`], so shard id spaces interleave disjointly.
     id_stride: u64,
+    /// Monotone submission counter (admission FCFS tie-break).
+    next_seq: u64,
     /// Requests cancelled by the client.
     pub cancelled: u64,
 }
@@ -365,6 +462,7 @@ impl ServerCore {
             queue_depth: DEFAULT_QUEUE_DEPTH,
             next_id: 0,
             id_stride: 1,
+            next_seq: 0,
             cancelled: 0,
         }
     }
@@ -514,9 +612,13 @@ impl ServerCore {
         // epoch's local coordinates at injection time.
         let arrival = opts.arrival.unwrap_or_else(|| self.clock());
         let mut req = Request::new(id, arrival, prompt.len() as u64, opts.max_new_tokens)
-            .with_prompt_tokens(prompt);
-        if let Some(ms) = opts.slo_tbt_ms {
+            .with_prompt_tokens(prompt)
+            .with_class(opts.qos.class);
+        if let Some(ms) = opts.qos.slo_tbt_ms {
             req = req.with_slo_tbt(ms / 1e3);
+        }
+        if let Some(ms) = opts.qos.slo_ttft_ms {
+            req = req.with_slo_ttft(ms / 1e3);
         }
         let (tx, rx) = channel();
         self.streams.insert(
@@ -528,19 +630,24 @@ impl ServerCore {
                 first_at: f64::NAN,
             },
         );
-        // Sorted insert by (arrival, priority desc); equal keys keep
-        // submission order (FCFS).
-        let priority = opts.priority;
+        // Sorted insert by arrival; equal arrivals keep submission order.
+        // Class/priority ordering happens at admission time, across the
+        // whole arrival-due cohort ([`cohort_order`]), not here.
+        let seq = self.next_seq;
+        self.next_seq += 1;
         let pos = self.pending.make_contiguous().partition_point(|e| {
             // total_cmp: a NaN arrival (impossible, but defensively) sorts
             // last instead of panicking the serving thread.
-            match e.req.arrival.total_cmp(&arrival) {
-                Ordering::Less => true,
-                Ordering::Greater => false,
-                Ordering::Equal => e.priority >= priority,
-            }
+            e.req.arrival.total_cmp(&arrival) != Ordering::Greater
         });
-        self.pending.insert(pos, PendingEntry { req, priority });
+        self.pending.insert(
+            pos,
+            PendingEntry {
+                req,
+                priority: opts.qos.priority,
+                seq,
+            },
+        );
         Ok(RequestHandle {
             id,
             submitted_at: Instant::now(),
@@ -709,15 +816,26 @@ impl ServerCore {
         // arrival due on the next admit pass (no float drift between
         // the two conversions).
         let off = self.topology.epoch_offset();
-        while let Some(e) = self.pending.front() {
-            let local = (e.req.arrival - off).max(0.0);
-            if local <= self.topology.clock() {
-                let mut e = self.pending.pop_front().unwrap();
-                e.req.arrival = local;
-                self.topology.inject(e.req);
-            } else {
-                break;
-            }
+        let clock = self.topology.clock();
+        let due = self
+            .pending
+            .make_contiguous()
+            .partition_point(|e| (e.req.arrival - off).max(0.0) <= clock);
+        if due == 0 {
+            return;
+        }
+        // The whole arrival-due cohort admits together, ordered by
+        // (aged class rank, priority desc, arrival, submission order) —
+        // not pure FCFS. Aging bounds starvation: a batch-class entry
+        // promotes one rank per CLASS_AGING_S of queueing. For
+        // single-class equal-priority traffic the key degenerates to
+        // (arrival, seq), i.e. exactly the old FCFS order.
+        let mut batch: Vec<PendingEntry> = self.pending.drain(..due).collect();
+        let now_abs = off + clock;
+        batch.sort_by(|a, b| cohort_order(a, b, now_abs));
+        for mut e in batch {
+            e.req.arrival = (e.req.arrival - off).max(0.0);
+            self.topology.inject(e.req);
         }
     }
 
@@ -1407,11 +1525,13 @@ mod tests {
     #[test]
     fn priority_breaks_ties_among_equal_arrivals() {
         let mut s = ServerCore::sim(cfg(), 1);
-        let mk = |priority| SubmitOptions {
-            max_new_tokens: 4,
-            priority,
-            arrival: Some(0.0),
-            ..Default::default()
+        let mk = |priority| {
+            SubmitOptions {
+                max_new_tokens: 4,
+                arrival: Some(0.0),
+                ..Default::default()
+            }
+            .with_priority(priority)
         };
         let low = s.submit(prompt(64), mk(0)).unwrap();
         let high = s.submit(prompt(64), mk(5)).unwrap();
@@ -1425,6 +1545,135 @@ mod tests {
             t_high <= t_low,
             "high priority ({t_high}) must not start after low ({t_low})"
         );
+    }
+
+    #[test]
+    fn cohort_orders_by_class_then_priority_then_arrival() {
+        let entry = |id, class, priority, arrival, seq| PendingEntry {
+            req: Request::new(id, arrival, 8, 4).with_class(class),
+            priority,
+            seq,
+        };
+        // Priority orders the due cohort even across distinct arrivals
+        // (the old dequeue only honored it on exact arrival ties).
+        let low_early = entry(0, SloClass::Standard, 0, 1.0, 0);
+        let high_late = entry(1, SloClass::Standard, 5, 2.0, 1);
+        assert_eq!(cohort_order(&high_late, &low_early, 3.0), Ordering::Less);
+        // Class outranks priority.
+        let lat = entry(2, SloClass::Latency, -3, 2.0, 2);
+        assert_eq!(cohort_order(&lat, &high_late, 3.0), Ordering::Less);
+        // Single class + equal priority: arrival, then submission order —
+        // pure FCFS, so legacy traffic admits exactly as before.
+        let a = entry(3, SloClass::Batch, 0, 1.0, 3);
+        let b = entry(4, SloClass::Batch, 0, 1.0, 4);
+        assert_eq!(cohort_order(&a, &b, 3.0), Ordering::Less);
+        assert_eq!(cohort_order(&b, &a, 3.0), Ordering::Greater);
+    }
+
+    #[test]
+    fn aging_promotes_batch_class_past_fresh_latency() {
+        let entry = |id, class, arrival, seq| PendingEntry {
+            req: Request::new(id, arrival, 8, 4).with_class(class),
+            priority: 0,
+            seq,
+        };
+        let stale_batch = entry(0, SloClass::Batch, 0.0, 0);
+        // Freshly queued: latency outranks batch.
+        let fresh_latency = entry(1, SloClass::Latency, 9.0, 1);
+        assert_eq!(
+            cohort_order(&fresh_latency, &stale_batch, 10.0),
+            Ordering::Less
+        );
+        // After 2×CLASS_AGING_S of queueing the batch entry has promoted
+        // to latency rank; the arrival tie-break then favors it — the
+        // starvation bound: batch work always eventually admits first.
+        let later_latency = entry(2, SloClass::Latency, 2.0 * CLASS_AGING_S + 4.0, 2);
+        assert_eq!(
+            cohort_order(&stale_batch, &later_latency, 2.0 * CLASS_AGING_S + 5.0),
+            Ordering::Less
+        );
+    }
+
+    #[test]
+    fn priority_orders_admission_within_due_cohort() {
+        // The filler's first prefill iteration advances the clock past
+        // both later arrivals, so they become due *together* — the old
+        // dequeue would admit strictly by arrival, ignoring priority.
+        let mut c = cfg();
+        c.token_budget = 64;
+        let mut s = ServerCore::sim(c, 1);
+        let _filler = s
+            .submit(
+                prompt(256),
+                SubmitOptions {
+                    max_new_tokens: 4,
+                    arrival: Some(0.0),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let mk = |arrival: f64, priority: i32| {
+            SubmitOptions {
+                max_new_tokens: 2,
+                arrival: Some(arrival),
+                ..Default::default()
+            }
+            .with_priority(priority)
+        };
+        let low = s.submit(prompt(64), mk(1e-6, 0)).unwrap();
+        let high = s.submit(prompt(64), mk(2e-6, 7)).unwrap();
+        s.run_to_idle();
+        let first_of = |h: RequestHandle| match h.collect_events().first().cloned() {
+            Some(TokenEvent::Token { at, .. }) => at,
+            other => panic!("expected a token, got {other:?}"),
+        };
+        let (t_low, t_high) = (first_of(low), first_of(high));
+        assert!(
+            t_high < t_low,
+            "high priority ({t_high}) must beat low ({t_low}) within the due cohort"
+        );
+    }
+
+    #[test]
+    fn class_orders_admission_within_due_cohort() {
+        let mut c = cfg();
+        c.token_budget = 64;
+        let mut s = ServerCore::sim(c, 1);
+        let _filler = s
+            .submit(
+                prompt(256),
+                SubmitOptions {
+                    max_new_tokens: 4,
+                    arrival: Some(0.0),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let mk = |arrival: f64, class: SloClass| {
+            SubmitOptions {
+                max_new_tokens: 2,
+                arrival: Some(arrival),
+                ..Default::default()
+            }
+            .with_class(class)
+        };
+        // Batch-class submitted (and arriving) first, latency second.
+        let batch = s.submit(prompt(64), mk(1e-6, SloClass::Batch)).unwrap();
+        let latency = s.submit(prompt(64), mk(2e-6, SloClass::Latency)).unwrap();
+        s.run_to_idle();
+        let first_of = |h: RequestHandle| match h.collect_events().first().cloned() {
+            Some(TokenEvent::Token { at, .. }) => at,
+            other => panic!("expected a token, got {other:?}"),
+        };
+        let (t_batch, t_latency) = (first_of(batch), first_of(latency));
+        assert!(
+            t_latency < t_batch,
+            "latency class ({t_latency}) must beat batch ({t_batch}) within the due cohort"
+        );
+        let rep = s.finish();
+        assert_eq!(rep.class(SloClass::Latency).completed, 1);
+        assert_eq!(rep.class(SloClass::Batch).completed, 1);
+        assert_eq!(rep.class(SloClass::Standard).completed, 1, "filler");
     }
 
     #[test]
@@ -1452,9 +1701,9 @@ mod tests {
                 prompt(256),
                 SubmitOptions {
                     max_new_tokens: 8,
-                    slo_tbt_ms: Some(1e-6), // impossibly tight: all violate
                     ..Default::default()
-                },
+                }
+                .with_slo_tbt_ms(1e-6), // impossibly tight: all violate
             )
             .unwrap();
         s.run_to_idle();

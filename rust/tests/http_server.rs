@@ -343,6 +343,16 @@ fn http_error_code_mapping() {
         400
     );
 
+    // Unknown SLO class is rejected strictly, not coerced to a default.
+    let (status, body) = exchange(
+        addr,
+        "POST",
+        "/v1/completions",
+        Some(r#"{"prompt":[1,2],"slo_class":"gold"}"#),
+    );
+    assert_eq!(status, 400);
+    assert!(body.contains("slo_class"), "{body}");
+
     // Body over the configured cap → 413.
     let big = completion_body(&[7; 2000], 4, 0.0, false);
     assert!(big.len() > 4096);
@@ -452,6 +462,54 @@ fn http_backpressure_and_disconnect_cancel() {
     // Only r1 and r2 completed; r0 was cancelled, r3 never accepted.
     let rep = http.shutdown().unwrap();
     assert_eq!(rep.completed, 2);
+}
+
+/// QoS API compatibility: a pre-QoS request body (no `slo_class`,
+/// `priority`, or SLO fields) and the same request re-expressed through
+/// the new surface with its documented defaults (`"slo_class":
+/// "standard"`, `"priority": 0`) must produce byte-identical responses
+/// from identically-seeded servers — the redesigned submission API maps
+/// legacy bodies onto the standard class with no behavioral drift.
+#[test]
+fn legacy_body_matches_explicit_standard_class_byte_for_byte() {
+    let seed = 33;
+    let legacy_srv = start_http(cfg(), seed, 32, 1 << 20);
+    let explicit_srv = start_http(cfg(), seed, 32, 1 << 20);
+
+    for i in 0..3 {
+        let prompt = prompt_tokens(300 + 64 * i);
+        let legacy_body = completion_body(&prompt, 6, 0.0, false);
+        let explicit_body = Json::obj(vec![
+            (
+                "prompt",
+                Json::arr(prompt.iter().map(|t| Json::Num(f64::from(*t))).collect()),
+            ),
+            ("max_tokens", Json::Num(6.0)),
+            ("arrival", Json::Num(0.0)),
+            ("stream", Json::Bool(false)),
+            ("slo_class", Json::string("standard")),
+            ("priority", Json::Num(0.0)),
+        ])
+        .dump();
+        let (ls, legacy_raw) =
+            exchange_raw(legacy_srv.addr(), "POST", "/v1/completions", Some(&legacy_body));
+        let (es, explicit_raw) = exchange_raw(
+            explicit_srv.addr(),
+            "POST",
+            "/v1/completions",
+            Some(&explicit_body),
+        );
+        assert_eq!((ls, es), (200, 200), "request {i}");
+        assert_eq!(
+            legacy_raw, explicit_raw,
+            "request {i}: legacy and explicit-standard responses must be byte-identical"
+        );
+    }
+
+    let legacy_rep = legacy_srv.shutdown().unwrap();
+    let explicit_rep = explicit_srv.shutdown().unwrap();
+    assert_eq!(legacy_rep.completed, 3);
+    assert_eq!(format!("{legacy_rep:?}"), format!("{explicit_rep:?}"));
 }
 
 /// The transport composes with a routed multi-worker cluster: the same

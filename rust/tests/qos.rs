@@ -1,0 +1,156 @@
+//! QoS/SLO-class integration properties.
+//!
+//! The load-bearing guarantee of the SLO-class redesign: with every
+//! request in one class and no SLO pressure (nothing declares a TBT
+//! SLO), the QoS-aware scheduler and admission path must be a strict
+//! no-op — reports and per-token emission times byte-identical to the
+//! pre-QoS (`with_qos(false)`) scheduler, on both the single-GPU engine
+//! and a routed 2-worker cluster. Plus: per-class goodput accounting
+//! must survive the cluster's cross-worker recorder fold.
+
+use duetserve::config::{Policy, ServingConfig};
+use duetserve::engine::{engine_for, router_by_name, ClusterEngine};
+use duetserve::request::{Request, SloClass};
+use duetserve::util::proptest::check;
+use duetserve::workload::synthetic::jittered_workload;
+use duetserve::workload::Workload;
+
+fn duet_cfg(qos: bool) -> ServingConfig {
+    ServingConfig::default_8b()
+        .with_policy(Policy::Duet)
+        .with_qos(qos)
+}
+
+/// Every finished request's id and full token-emission timeline, sorted
+/// by id so cross-run comparison is order-independent.
+fn token_timelines(finished: &[Request]) -> Vec<(u64, Vec<f64>)> {
+    let mut t: Vec<(u64, Vec<f64>)> = finished
+        .iter()
+        .map(|r| (r.id, r.token_times.clone()))
+        .collect();
+    t.sort_by_key(|(id, _)| *id);
+    t
+}
+
+/// Single class, no SLO pressure, single-GPU engine: QoS on vs off must
+/// be trajectory-identical — same report (field-for-field via Debug) and
+/// same per-token emission times.
+#[test]
+fn qos_is_noop_for_single_class_engine() {
+    check(10, |g| {
+        let n = g.usize_range(6, 24);
+        let isl = g.u64_range(64, 9000);
+        let osl = g.u64_range(2, 64);
+        let qps = g.f64_range(1.0, 12.0);
+        let class = *g.choose(&SloClass::all());
+        let mut w = jittered_workload(n, isl, osl, 0.3, qps, g.case_seed);
+        w.requests = w.requests.into_iter().map(|r| r.with_class(class)).collect();
+
+        let mut on = engine_for(duet_cfg(true), g.case_seed);
+        let rep_on = on.run(w.clone());
+        let mut off = engine_for(duet_cfg(false), g.case_seed);
+        let rep_off = off.run(w);
+
+        if format!("{rep_on:?}") != format!("{rep_off:?}") {
+            return Err(format!(
+                "{class:?}: reports diverged:\n  qos-on:  {rep_on:?}\n  qos-off: {rep_off:?}"
+            ));
+        }
+        if rep_on.qos_preemptions != 0 {
+            return Err(format!(
+                "{class:?}: {} qos preemptions without SLO pressure",
+                rep_on.qos_preemptions
+            ));
+        }
+        if token_timelines(&on.finished) != token_timelines(&off.finished) {
+            return Err(format!("{class:?}: token emission times diverged"));
+        }
+        Ok(())
+    });
+}
+
+/// The same no-op property across a routed 2-worker cluster: the QoS
+/// class sort at dispatch is stable, so a single-class cohort keeps its
+/// arrival order and the whole trajectory is unchanged.
+#[test]
+fn qos_is_noop_for_single_class_cluster() {
+    check(6, |g| {
+        let n = g.usize_range(8, 24);
+        let isl = g.u64_range(64, 6000);
+        let osl = g.u64_range(2, 48);
+        let qps = g.f64_range(1.0, 10.0);
+        let class = *g.choose(&SloClass::all());
+        let routers = ["round-robin", "least-outstanding"];
+        let router = *g.choose(&routers);
+        let mut w = jittered_workload(n, isl, osl, 0.3, qps, g.case_seed);
+        w.requests = w.requests.into_iter().map(|r| r.with_class(class)).collect();
+
+        let mut on = ClusterEngine::replicated(
+            duet_cfg(true),
+            2,
+            g.case_seed,
+            router_by_name(router).expect("known router"),
+        );
+        let rep_on = on.run(w.clone());
+        let mut off = ClusterEngine::replicated(
+            duet_cfg(false),
+            2,
+            g.case_seed,
+            router_by_name(router).expect("known router"),
+        );
+        let rep_off = off.run(w);
+
+        let label = format!("{class:?}/{router}");
+        if format!("{rep_on:?}") != format!("{rep_off:?}") {
+            return Err(format!(
+                "{label}: cluster reports diverged:\n  qos-on:  {rep_on:?}\n  qos-off: {rep_off:?}"
+            ));
+        }
+        if token_timelines(&on.finished) != token_timelines(&off.finished) {
+            return Err(format!("{label}: cluster token emission times diverged"));
+        }
+        Ok(())
+    });
+}
+
+/// Mixed-class workload over a 2-worker cluster: the per-class goodput
+/// slices must survive the cross-worker recorder fold — counts sum to
+/// the per-class totals regardless of which worker served each request.
+#[test]
+fn per_class_attainment_survives_cluster_fold() {
+    let mut requests = Vec::new();
+    for i in 0..18u64 {
+        let class = SloClass::all()[(i % 3) as usize];
+        let mut r = Request::new(i, i as f64 * 0.12, 512 + 64 * (i % 4), 8).with_class(class);
+        if class == SloClass::Latency {
+            // A loose declared SLO: attained, and checked per class.
+            r = r.with_slo_tbt(10.0);
+        }
+        requests.push(r);
+    }
+    let w = Workload {
+        name: "mixed-classes".into(),
+        requests,
+    }
+    .sorted_by_arrival();
+
+    let mut e = ClusterEngine::replicated(
+        duet_cfg(true),
+        2,
+        7,
+        router_by_name("round-robin").expect("known router"),
+    );
+    let rep = e.run(w);
+
+    assert_eq!(rep.completed, 18);
+    for class in SloClass::all() {
+        let c = rep.class(class);
+        assert_eq!(c.completed, 6, "{class:?} count lost in the cluster fold");
+        assert!(c.attained <= c.completed);
+    }
+    // The latency class declared a 10 s TBT SLO nothing violates: fully
+    // attained. The SLO-free classes degrade to throughput (attained ==
+    // completed by definition).
+    assert_eq!(rep.class(SloClass::Latency).attainment(), Some(1.0));
+    assert_eq!(rep.class(SloClass::Batch).attainment(), Some(1.0));
+}
