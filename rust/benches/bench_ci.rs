@@ -17,17 +17,17 @@ use std::time::{Duration, Instant};
 
 use duetserve::config::{Policy, ServingConfig};
 use duetserve::engine::{
-    engine_for, router_by_name, ClusterEngine, ReplicatedEngine, RoundRobinRouter,
+    engine_for, router_by_name, ClusterEngine, PlannerMode, ReplicatedEngine, RoundRobinRouter,
     ServingTopology, TopologyStep,
 };
-use duetserve::metrics::{Recorder, RecorderMode};
+use duetserve::metrics::{Recorder, RecorderMode, Report};
 use duetserve::request::{Request, SloClass};
 use duetserve::server::http::{HttpConfig, HttpServer};
 use duetserve::server::{Server, ServerCore};
 use duetserve::util::json::Json;
 use duetserve::util::tablefmt::banner;
 use duetserve::workload::sessions::shared_prefix_workload;
-use duetserve::workload::synthetic::fixed_workload;
+use duetserve::workload::synthetic::{burst_mix_workload, fixed_workload, BurstProfile};
 use duetserve::workload::Workload;
 
 /// Mean µs per call of `f` over `iters` runs (after `warmup`).
@@ -287,6 +287,70 @@ fn goodput_workload() -> Workload {
     .sorted_by_arrival()
 }
 
+/// Burst-mix profile for the elastic-planner rows: a 40 s stream of short
+/// latency-class chats overlaid with 10 s windows of 12k-token batch
+/// prefills every 25 s. Both static shapes lose somewhere: the unified
+/// fleet inflates short-request TBT whenever a long chunk shares an
+/// iteration, the static disagg fleet queues shorts' prefills behind the
+/// burst on its two permanent prefill workers.
+fn elastic_bench_profile() -> BurstProfile {
+    BurstProfile {
+        shorts: 200,
+        short_isl: 256,
+        short_osl: 64,
+        short_qps: 5.0,
+        short_slo_ttft: 2.0,
+        short_slo_tbt: 0.05,
+        longs: 40,
+        long_isl: 12_000,
+        long_osl: 8,
+        long_qps: 3.0,
+        period_s: 25.0,
+        burst_s: 10.0,
+        diurnal: false,
+    }
+}
+
+/// Serve the burst mix on a 4-GPU fleet of the named shape and return its
+/// report. All three shapes run the identical workload, policy, seed and
+/// (conditional) router — only the role topology and the planner differ,
+/// so the contrast isolates what elastic re-roling buys. Engine-clock
+/// metrics only; CI wall-clock noise cannot touch the guardrails.
+fn elastic_bench_fleet(kind: &str) -> Report {
+    let cfg = ServingConfig::default_8b().with_policy(Policy::VllmChunked);
+    let p = elastic_bench_profile();
+    let w = burst_mix_workload(&p, 0xE1A5);
+    let n = w.requests.len() as u64;
+    let router = router_by_name("conditional").expect("conditional router");
+    let mut cluster = match kind {
+        "static-unified" => ClusterEngine::replicated(cfg, 4, 0xE1A5, router),
+        "static-disagg" => ClusterEngine::disagg(cfg, 2, 2, 0xE1A5, router),
+        "elastic" => {
+            let mut c = ClusterEngine::replicated(cfg, 4, 0xE1A5, router);
+            // Fast flips on a short bench horizon: plan every 2 s, 1 s of
+            // re-role downtime (the CLI defaults are sized for minutes).
+            c.reconfig_s = 1.0;
+            c.set_planner(PlannerMode::Elastic);
+            c.set_planner_interval(2.0);
+            c
+        }
+        _ => unreachable!("unknown fleet kind {kind}"),
+    };
+    let rep = cluster.run(w);
+    assert_eq!(
+        rep.completed, n,
+        "elastic bench fleet `{kind}` did not complete its workload"
+    );
+    rep
+}
+
+/// DistServe-style goodput: latency-class requests per engine-second that
+/// met every declared SLO.
+fn elastic_goodput(rep: &Report) -> f64 {
+    let c = rep.class(SloClass::Latency);
+    c.attainment().unwrap_or(0.0) * c.completed as f64 / rep.duration.max(1e-9)
+}
+
 fn main() {
     banner("CI bench: throughput row + scrape-cost demonstration");
 
@@ -369,6 +433,14 @@ fn main() {
     let qos_lat_att = rq.class(SloClass::Latency).attainment().unwrap_or(0.0);
     let fcfs_lat_att = rf.class(SloClass::Latency).attainment().unwrap_or(0.0);
 
+    // Elastic role planning: the same burst mix on three same-size fleets.
+    let re_uni = elastic_bench_fleet("static-unified");
+    let re_dis = elastic_bench_fleet("static-disagg");
+    let re_ela = elastic_bench_fleet("elastic");
+    let gp_uni = elastic_goodput(&re_uni);
+    let gp_dis = elastic_goodput(&re_dis);
+    let gp_ela = elastic_goodput(&re_ela);
+
     // Connection churn: ~1k concurrent keep-alive sockets against the
     // readiness-polled pool vs a fresh TCP connect + `Connection: close`
     // per request against the thread-per-connection baseline. Unix-only:
@@ -429,6 +501,15 @@ fn main() {
         rq.token_throughput,
         rf.token_throughput,
         rq.qos_preemptions,
+    );
+    println!(
+        "elastic burst mix (latency goodput req/s) — elastic: {gp_ela:.2} \
+         ({} reconfigs, occupancy u/p/d {:.0}/{:.0}/{:.0}s) vs \
+         static-unified: {gp_uni:.2} vs static-disagg: {gp_dis:.2}",
+        re_ela.reconfigs,
+        re_ela.role_occupancy[0],
+        re_ela.role_occupancy[1],
+        re_ela.role_occupancy[2],
     );
 
     let out = Json::obj(vec![
@@ -498,6 +579,35 @@ fn main() {
                 (
                     "qos_batch_completed",
                     Json::Num(rq.class(SloClass::Batch).completed as f64),
+                ),
+            ]),
+        ),
+        (
+            "elastic",
+            Json::obj(vec![
+                ("elastic_goodput", Json::Num(gp_ela)),
+                ("static_unified_goodput", Json::Num(gp_uni)),
+                ("static_disagg_goodput", Json::Num(gp_dis)),
+                (
+                    "elastic_latency_attainment",
+                    Json::Num(re_ela.class(SloClass::Latency).attainment().unwrap_or(0.0)),
+                ),
+                ("reconfigs", Json::Num(re_ela.reconfigs as f64)),
+                (
+                    "prefill_occupancy_s",
+                    Json::Num(re_ela.role_occupancy[1]),
+                ),
+                (
+                    "decode_occupancy_s",
+                    Json::Num(re_ela.role_occupancy[2]),
+                ),
+                (
+                    "advantage_vs_unified",
+                    Json::Num(gp_ela / gp_uni.max(1e-9)),
+                ),
+                (
+                    "advantage_vs_disagg",
+                    Json::Num(gp_ela / gp_dis.max(1e-9)),
                 ),
             ]),
         ),
@@ -572,6 +682,26 @@ fn main() {
         "QoS token throughput {:.0} fell more than 10% below FCFS {:.0}",
         rq.token_throughput,
         rf.token_throughput
+    );
+
+    // Elastic-planner guardrails (engine-clock, deterministic workload +
+    // seed): on the burst mix, elastic re-roling must strictly beat both
+    // same-size static fleets on latency-class goodput — the unified
+    // fleet pollutes short-request TBT with long prefill chunks, the
+    // static disagg fleet strands half its GPUs between bursts and queues
+    // short prefills behind the burst during them — and it must actually
+    // have re-roled workers to get there.
+    assert!(
+        gp_ela > gp_uni,
+        "elastic goodput {gp_ela:.3} must strictly beat static-unified {gp_uni:.3}"
+    );
+    assert!(
+        gp_ela > gp_dis,
+        "elastic goodput {gp_ela:.3} must strictly beat static-disagg {gp_dis:.3}"
+    );
+    assert!(
+        re_ela.reconfigs > 0,
+        "elastic fleet never re-roled a worker on the burst mix"
     );
 
     let (_, p50_cold, prefilled_cold) = overlap_points[0];

@@ -52,7 +52,7 @@
 
 use std::collections::VecDeque;
 
-use crate::config::{GpuSpec, ServingConfig};
+use crate::config::{GpuSpec, Policy, ServingConfig};
 use crate::metrics::{Recorder, RecorderMode, Report};
 use crate::request::{Phase, Request, RequestId};
 use crate::sched::{
@@ -63,6 +63,7 @@ use crate::workload::Workload;
 use super::backend::ExecutionBackend;
 use super::clockheap::MinClockHeap;
 use super::core::{CoreStep, EngineCore, REBASE_FRACTION};
+use super::elastic::{ElasticPlanner, FleetSignals, PlannerMode, LONG_PROMPT_TOKENS};
 use super::router::{RouteCandidate, Router};
 use super::topology::{ServingTopology, TopologyLoad, TopologyStep};
 
@@ -82,12 +83,35 @@ pub enum WorkerRole {
     Decode,
 }
 
+impl WorkerRole {
+    /// Index into per-role arrays (the [`crate::metrics::ROLE_NAMES`]
+    /// order: unified, prefill, decode).
+    pub fn index(&self) -> usize {
+        match self {
+            WorkerRole::Unified => 0,
+            WorkerRole::Prefill => 1,
+            WorkerRole::Decode => 2,
+        }
+    }
+
+    pub fn role_name(&self) -> &'static str {
+        match self {
+            WorkerRole::Unified => "unified",
+            WorkerRole::Prefill => "prefill",
+            WorkerRole::Decode => "decode",
+        }
+    }
+}
+
 /// One GPU group inside the cluster.
 pub struct Worker {
     pub core: EngineCore,
     pub role: WorkerRole,
     /// Worker is reconfiguring (role switch) until this time.
     pub offline_until: f64,
+    /// Absolute engine time (`epoch_offset + clock`) the worker entered
+    /// its current role — per-role occupancy accounting.
+    pub role_since: f64,
 }
 
 impl Worker {
@@ -120,6 +144,11 @@ impl Scheduler for RoleScheduler {
     fn name(&self) -> String {
         "role-worker".to_string()
     }
+
+    /// A decode-role worker has no prompt capacity to spare.
+    fn prefill_headroom(&self) -> f64 {
+        0.0
+    }
 }
 
 /// The event-driven cluster core.
@@ -145,6 +174,17 @@ pub struct ClusterEngine {
     pub planner_interval: f64,
     next_planner_check: f64,
     pub reconfigs: u64,
+    /// Planner mode. [`PlannerMode::Off`] preserves the legacy behaviour
+    /// (the `reconfigurable` flag alone selects the static Dynamo-style
+    /// planner); `Static`/`Elastic` select a planner explicitly.
+    planner: PlannerMode,
+    /// Goodput-forecast planner state, built lazily by
+    /// [`set_planner`](ClusterEngine::set_planner).
+    elastic: Option<ElasticPlanner>,
+    /// Completed per-role occupancy seconds (unified/prefill/decode),
+    /// accumulated at each role change; live intervals are added by
+    /// [`role_occupancy`](ClusterEngine::role_occupancy).
+    role_occupancy_acc: [f64; 3],
     /// Report label for homogeneous (all-unified) clusters.
     name: String,
     /// Worker state was already folded into `metrics`/`finished`
@@ -217,6 +257,7 @@ impl ClusterEngine {
                 core: EngineCore::new(cfg.clone(), scheduler_for(&cfg), seed + i as u64),
                 role: WorkerRole::Unified,
                 offline_until: 0.0,
+                role_since: 0.0,
             })
             .collect();
         let name = format!("{}x{}", workers[0].core.policy_name(), replicas);
@@ -270,6 +311,7 @@ impl ClusterEngine {
                 core: EngineCore::new(wcfg, sched, seed + i as u64),
                 role,
                 offline_until: 0.0,
+                role_since: 0.0,
             }
         };
         let mut workers = Vec::new();
@@ -300,6 +342,7 @@ impl ClusterEngine {
                 kv_free_tokens: w.core.kv_free_tokens(),
                 prefix_resident_tokens: w.core.prefix_resident_tokens(),
                 prefix_overlap_tokens: 0,
+                prefill_only: w.role == WorkerRole::Prefill,
             })
             .collect();
         ClusterEngine {
@@ -316,6 +359,9 @@ impl ClusterEngine {
             planner_interval: 30.0,
             next_planner_check: 30.0,
             reconfigs: 0,
+            planner: PlannerMode::Off,
+            elastic: None,
+            role_occupancy_acc: [0.0; 3],
             name,
             folded: false,
             stepped_worker: None,
@@ -355,6 +401,7 @@ impl ClusterEngine {
     /// Re-sync worker `i`'s entry on the incremental load board and the
     /// busy/queue counters after an event touched it.
     fn sync_worker(&mut self, i: usize) {
+        let prefill_only = self.workers[i].role == WorkerRole::Prefill;
         let core = &self.workers[i].core;
         let q = core.queue_len();
         self.total_queue = self.total_queue + q - self.loads[i].queue_len;
@@ -367,6 +414,7 @@ impl ClusterEngine {
             // Per-request overlap is a dispatch-time signal, filled into
             // the per-decision candidate copies, never the board.
             prefix_overlap_tokens: 0,
+            prefill_only,
         };
         let b = core.has_local_work();
         if b != self.busy[i] {
@@ -426,6 +474,10 @@ impl ClusterEngine {
         let (_, p, d) = self.role_counts();
         if p + d > 0 {
             format!("Dynamo-{p}P{d}D")
+        } else if self.name.is_empty() {
+            // A disagg-born cluster the elastic planner collapsed to
+            // all-unified has no prebuilt label.
+            format!("{}x{}", self.workers[0].core.policy_name(), self.workers.len())
         } else {
             self.name.clone()
         }
@@ -528,6 +580,8 @@ impl ClusterEngine {
             return;
         }
         self.folded = true;
+        self.metrics.reconfigs = self.reconfigs;
+        self.metrics.role_occupancy = self.role_occupancy();
         let mut duration = 0.0f64;
         for w in &mut self.workers {
             self.metrics.merge(&w.core.metrics);
@@ -572,6 +626,7 @@ impl ClusterEngine {
                 kv_free_tokens: w.core.kv_free_tokens(),
                 prefix_resident_tokens: w.core.prefix_resident_tokens(),
                 prefix_overlap_tokens: 0,
+                prefill_only: w.role == WorkerRole::Prefill,
             };
             if self.loads[i] != fresh {
                 return Err(format!(
@@ -732,8 +787,13 @@ impl ClusterEngine {
         self.dispatch_arrivals(now);
         self.route_transfers(now);
 
-        if self.reconfigurable && now >= self.next_planner_check {
-            self.plan_reconfig(now);
+        let planner = self.effective_planner();
+        if planner != PlannerMode::Off && now >= self.next_planner_check {
+            match planner {
+                PlannerMode::Static => self.plan_reconfig(now),
+                PlannerMode::Elastic => self.plan_elastic(now),
+                PlannerMode::Off => unreachable!(),
+            }
             self.next_planner_check = now + self.planner_interval;
         }
 
@@ -795,6 +855,7 @@ impl ClusterEngine {
             kv_free_tokens: w.core.kv_free_tokens(),
             prefix_resident_tokens: w.core.prefix_resident_tokens(),
             prefix_overlap_tokens: 0,
+            prefill_only: w.role == WorkerRole::Prefill,
         };
         let online: Vec<RouteCandidate> = self
             .workers
@@ -1142,7 +1203,7 @@ impl ClusterEngine {
                         t.assigned = None;
                     }
                 }
-                self.workers[v].role = WorkerRole::Prefill;
+                self.note_role_change(v, WorkerRole::Prefill);
                 self.workers[v].offline_until = now + self.reconfig_s;
                 self.reconfigs += 1;
                 for r in drained {
@@ -1164,7 +1225,7 @@ impl ClusterEngine {
                 // (partially prefilled) ones — prefill progress is lost.
                 let mut moved: Vec<Request> = Vec::new();
                 self.workers[v].core.displace_all(&mut moved);
-                self.workers[v].role = WorkerRole::Decode;
+                self.note_role_change(v, WorkerRole::Decode);
                 self.workers[v].offline_until = now + self.reconfig_s;
                 self.reconfigs += 1;
                 for r in moved {
@@ -1193,6 +1254,270 @@ impl ClusterEngine {
         pick(true)
             .or_else(|| pick(false))
             .expect("topology lost its last prefill worker")
+    }
+
+    /// Select the planner. [`PlannerMode::Elastic`] lazily builds the
+    /// goodput-forecast planner from this cluster's serving config.
+    pub fn set_planner(&mut self, mode: PlannerMode) {
+        self.planner = mode;
+        if mode == PlannerMode::Elastic && self.elastic.is_none() {
+            let predictor = crate::roofline::Predictor::new(
+                self.cfg.model.clone(),
+                self.cfg.gpu.clone(),
+                self.cfg.tp,
+            );
+            self.elastic = Some(ElasticPlanner::new(
+                predictor,
+                self.cfg.token_budget as u64,
+                self.cfg.tbt_slo,
+                self.reconfig_s,
+            ));
+        }
+    }
+
+    pub fn planner_mode(&self) -> PlannerMode {
+        self.planner
+    }
+
+    /// Mutable access to the elastic planner's knobs (hysteresis dwell,
+    /// margin), once [`set_planner`](ClusterEngine::set_planner) built it.
+    pub fn elastic_planner_mut(&mut self) -> Option<&mut ElasticPlanner> {
+        self.elastic.as_mut()
+    }
+
+    /// Change the planner check interval and pull the next check forward
+    /// if it is already scheduled further out than one new interval.
+    pub fn set_planner_interval(&mut self, s: f64) {
+        self.planner_interval = s;
+        self.next_planner_check = self.next_planner_check.min(s);
+    }
+
+    /// The planner that actually runs each tick: an explicit mode wins;
+    /// with the mode [`PlannerMode::Off`] the legacy `reconfigurable`
+    /// flag still selects the static Dynamo-style planner, so existing
+    /// callers keep their exact trajectories.
+    fn effective_planner(&self) -> PlannerMode {
+        if self.planner == PlannerMode::Off && self.reconfigurable {
+            PlannerMode::Static
+        } else {
+            self.planner
+        }
+    }
+
+    /// Fleet-wide load snapshot for the elastic planner. Reads only
+    /// dispatched state (worker queues, running sets, in-flight
+    /// transfers) — never `pending` — so a live caller that injects
+    /// submissions as they become due sees the same signals as the batch
+    /// replay (the live ≡ batch trajectory property).
+    fn gather_signals(&self) -> FleetSignals {
+        let (u, p, d) = self.role_counts();
+        let mut s = FleetSignals {
+            unified: u,
+            prefill: p,
+            decode: d,
+            ..Default::default()
+        };
+        let mut ctx_sum = 0u64;
+        let mut headroom_sum = 0.0f64;
+        for w in &self.workers {
+            if w.role == WorkerRole::Unified {
+                headroom_sum += w.core.prefill_headroom();
+            }
+            s.slo_checked += w.core.metrics.slo_checked;
+            s.slo_violations += w.core.metrics.slo_violations;
+            for r in w.core.waiting.iter().chain(w.core.running.iter()) {
+                s.backlog_reqs += 1;
+                s.pre_backlog_tokens += r.remaining_prompt();
+                if r.prompt_len >= LONG_PROMPT_TOKENS {
+                    s.long_backlog_tokens += r.remaining_prompt();
+                }
+                s.dec_backlog_tokens += r.output_len.saturating_sub(r.generated);
+                ctx_sum += r.context_len().max(r.prompt_len);
+            }
+        }
+        for t in &self.transfers {
+            s.backlog_reqs += 1;
+            s.dec_backlog_tokens += t.request.output_len.saturating_sub(t.request.generated);
+            ctx_sum += t.request.context_len();
+        }
+        s.transfers_in_flight = self.transfers.len();
+        s.mean_ctx = if s.backlog_reqs > 0 {
+            ctx_sum / s.backlog_reqs
+        } else {
+            0
+        };
+        s.unified_headroom = if u > 0 { headroom_sum / u as f64 } else { 1.0 };
+        s
+    }
+
+    /// One elastic-planner tick: snapshot the fleet, ask the planner for
+    /// a role target, and move workers toward it (decode workers drain
+    /// their assigned KV transfers before they flip).
+    fn plan_elastic(&mut self, now: f64) {
+        let Some(mut planner) = self.elastic.take() else {
+            return;
+        };
+        planner.reconfig_s = self.reconfig_s;
+        let signals = self.gather_signals();
+        if let Some(target) = planner.decide(self.epoch_offset + now, &signals) {
+            let flips = self.apply_role_target(now, target);
+            if flips > 0 {
+                planner.committed(self.epoch_offset + now, flips);
+            }
+        }
+        self.elastic = Some(planner);
+    }
+
+    /// Flip workers one at a time from surplus roles to deficit roles
+    /// until the fleet matches `target` (unified, prefill, decode) or no
+    /// safe victim remains. Returns the number of flips performed.
+    fn apply_role_target(&mut self, now: f64, target: (usize, usize, usize)) -> usize {
+        let (tu, tp, td) = target;
+        let mut flips = 0;
+        loop {
+            let (u, p, d) = self.role_counts();
+            let from = if u > tu {
+                Some(WorkerRole::Unified)
+            } else if p > tp {
+                Some(WorkerRole::Prefill)
+            } else if d > td {
+                Some(WorkerRole::Decode)
+            } else {
+                None
+            };
+            // Fill decode deficits before prefill deficits: if the flip
+            // sequence stops early (no safe victim), the fleet must never
+            // hold prefill workers without a decode worker to stream
+            // their KV transfers to.
+            let to = if u < tu {
+                Some(WorkerRole::Unified)
+            } else if d < td {
+                Some(WorkerRole::Decode)
+            } else if p < tp {
+                Some(WorkerRole::Prefill)
+            } else {
+                None
+            };
+            let (Some(from), Some(to)) = (from, to) else {
+                break;
+            };
+            // Never flip the last decode worker while KV transfers are in
+            // flight — they would have nowhere to land.
+            if from == WorkerRole::Decode && d == 1 && !self.transfers.is_empty() {
+                break;
+            }
+            let Some(v) = self.flip_victim(from, now) else {
+                break;
+            };
+            self.flip_role(v, to, now);
+            flips += 1;
+        }
+        if flips > 0 {
+            self.sync_all();
+        }
+        flips
+    }
+
+    /// The lightest-loaded online worker of role `from` that is safe to
+    /// flip. Decode workers with KV transfers assigned to them are never
+    /// victims: the transfer drains first, the planner retries next tick.
+    fn flip_victim(&self, from: WorkerRole, now: f64) -> Option<usize> {
+        self.workers
+            .iter()
+            .enumerate()
+            .filter(|(i, w)| {
+                w.role == from
+                    && w.offline_until <= now
+                    && !(from == WorkerRole::Decode
+                        && self.transfers.iter().any(|t| t.assigned == Some(*i)))
+            })
+            .min_by_key(|(i, w)| (w.core.running_len() + w.core.queue_len(), *i))
+            .map(|(i, _)| i)
+    }
+
+    /// Re-role worker `v`: displace its in-flight work, swap in the
+    /// scheduler matching the new role, take `reconfig_s` of downtime,
+    /// and re-inject the displaced requests (recomputed from scratch)
+    /// into the lightest arrival-accepting worker.
+    fn flip_role(&mut self, v: usize, to: WorkerRole, now: f64) {
+        let mut drained: Vec<Request> = Vec::new();
+        self.workers[v].core.displace_all(&mut drained);
+        // Victim selection skips decode workers with assigned transfers,
+        // but invalidate any assignment defensively (e.g. a transfer
+        // routed between selection and flip).
+        for t in &mut self.transfers {
+            if t.assigned == Some(v) {
+                t.assigned = None;
+            }
+        }
+        self.note_role_change(v, to);
+        let wcfg = &self.workers[v].core.cfg;
+        let sched: Box<dyn Scheduler> = match to {
+            WorkerRole::Prefill => Box::new(PrefillOnlyScheduler::new(
+                wcfg.token_budget as u64,
+                wcfg.max_batch as usize,
+                wcfg.kv_watermark,
+            )),
+            WorkerRole::Decode => Box::new(RoleScheduler),
+            WorkerRole::Unified => {
+                // Workers born into a disagg topology carry the disagg
+                // policy in their config; a unified role needs a real
+                // iteration scheduler.
+                let mut ucfg = wcfg.clone();
+                if matches!(ucfg.policy, Policy::DisaggPD { .. }) {
+                    ucfg.policy = Policy::VllmChunked;
+                }
+                scheduler_for(&ucfg)
+            }
+        };
+        self.workers[v].core.set_scheduler(sched);
+        self.workers[v].offline_until = now + self.reconfig_s;
+        self.reconfigs += 1;
+        for r in drained {
+            let tgt = self.lightest_ingest_worker(now);
+            self.workers[tgt].core.inject(r.reset_for_retry());
+        }
+    }
+
+    /// Record a role change for per-role occupancy accounting, then
+    /// apply it. Metrics-only bookkeeping: trajectories are unchanged.
+    fn note_role_change(&mut self, v: usize, to: WorkerRole) {
+        let t = self.epoch_offset + self.workers[v].core.clock;
+        let w = &mut self.workers[v];
+        self.role_occupancy_acc[w.role.index()] += (t - w.role_since).max(0.0);
+        w.role_since = t;
+        w.role = to;
+    }
+
+    /// Per-role occupancy seconds (unified, prefill, decode): completed
+    /// intervals plus each worker's live interval in its current role.
+    /// Absolute-time based, so epoch re-bases do not distort it.
+    pub fn role_occupancy(&self) -> [f64; 3] {
+        let mut acc = self.role_occupancy_acc;
+        for w in &self.workers {
+            let t = self.epoch_offset + w.core.clock;
+            acc[w.role.index()] += (t - w.role_since).max(0.0);
+        }
+        acc
+    }
+
+    /// The arrival-accepting (unified or prefill) worker with the
+    /// shortest queue, preferring online ones. Role-target validity
+    /// guarantees at least one exists at every point of a flip sequence.
+    fn lightest_ingest_worker(&self, now: f64) -> usize {
+        let pick = |require_online: bool| {
+            self.workers
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| {
+                    w.accepts_arrivals() && (!require_online || w.offline_until <= now)
+                })
+                .min_by_key(|(i, w)| (w.core.queue_len(), *i))
+                .map(|(i, _)| i)
+        };
+        pick(true)
+            .or_else(|| pick(false))
+            .expect("topology lost every arrival-accepting worker")
     }
 }
 
@@ -1382,6 +1707,8 @@ impl ServingTopology for ClusterEngine {
             duration = duration.max(w.core.total_active());
         }
         rec.duration = duration;
+        rec.reconfigs = self.reconfigs;
+        rec.role_occupancy = self.role_occupancy();
         rec
     }
 
@@ -1505,5 +1832,140 @@ mod tests {
             );
         }
         cluster.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn elastic_planner_splits_roles_under_long_prompt_flood() {
+        let mut cfg = unified_cfg();
+        // Tight decode SLO: mixed prefill+decode batches forecast badly,
+        // so the goodput model favors isolating the long prompts.
+        cfg.tbt_slo = 0.04;
+        let mut cluster = ClusterEngine::replicated(
+            cfg,
+            4,
+            1,
+            Box::new(crate::engine::router::ConditionalRouter::default()),
+        );
+        cluster.reconfig_s = 1.0;
+        cluster.set_planner(PlannerMode::Elastic);
+        cluster.set_planner_interval(5.0);
+        let rep = cluster.run(fixed_workload(60, 12_000, 8, 12.0, 4));
+        assert_eq!(rep.completed, 60);
+        assert!(
+            cluster.reconfigs > 0,
+            "elastic planner never re-roled a worker under a long-prompt flood"
+        );
+        let occ = cluster.role_occupancy();
+        assert!(
+            occ[1] > 0.0 && occ[2] > 0.0,
+            "both disagg roles should accrue occupancy: {occ:?}"
+        );
+        assert_eq!(rep.reconfigs, cluster.reconfigs);
+        cluster.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn planner_off_is_byte_identical_to_legacy() {
+        // `set_planner(Off)` must not perturb the event trajectory of a
+        // cluster that never had a planner.
+        let w = fixed_workload(40, 4000, 32, 8.0, 9);
+        let mut base =
+            ClusterEngine::replicated(unified_cfg(), 3, 1, Box::new(RoundRobinRouter::new()));
+        let rb = base.run(w.clone());
+        let mut off =
+            ClusterEngine::replicated(unified_cfg(), 3, 1, Box::new(RoundRobinRouter::new()));
+        off.set_planner(PlannerMode::Off);
+        let ro = off.run(w);
+        assert_eq!(rb.completed, ro.completed);
+        assert_eq!(rb.iterations, ro.iterations);
+        assert_eq!(rb.duration.to_bits(), ro.duration.to_bits());
+        assert_eq!(rb.reconfigs, 0);
+    }
+
+    #[test]
+    fn static_mode_matches_reconfigurable_flag() {
+        // `set_planner(Static)` is the explicit spelling of the legacy
+        // `reconfigurable = true` flag: identical trajectories.
+        let cfg = ServingConfig::default_8b().with_policy(Policy::DisaggPD {
+            prefill_gpus: 2,
+            decode_gpus: 2,
+        });
+        let w = fixed_workload(200, 12_000, 8, 12.0, 4);
+        let mut legacy =
+            ClusterEngine::disagg(cfg.clone(), 2, 2, 1, Box::new(LeastOutstandingRouter::new()));
+        legacy.reconfigurable = true;
+        legacy.planner_interval = 10.0;
+        legacy.next_planner_check = 10.0;
+        let rl = legacy.run(w.clone());
+        let mut explicit =
+            ClusterEngine::disagg(cfg, 2, 2, 1, Box::new(LeastOutstandingRouter::new()));
+        explicit.set_planner(PlannerMode::Static);
+        explicit.planner_interval = 10.0;
+        explicit.next_planner_check = 10.0;
+        let re = explicit.run(w);
+        assert_eq!(rl.completed, re.completed);
+        assert_eq!(rl.iterations, re.iterations);
+        assert_eq!(rl.duration.to_bits(), re.duration.to_bits());
+        assert_eq!(legacy.reconfigs, explicit.reconfigs);
+    }
+
+    #[test]
+    fn flip_skips_decode_workers_with_assigned_transfers() {
+        let cfg = ServingConfig::default_8b().with_policy(Policy::DisaggPD {
+            prefill_gpus: 1,
+            decode_gpus: 2,
+        });
+        let mut cluster =
+            ClusterEngine::disagg(cfg.clone(), 1, 2, 1, Box::new(LeastOutstandingRouter::new()));
+        // KV in flight to decode worker 1 (not ready yet): it must not be
+        // flipped out from under the transfer.
+        cluster.transfers.push(Transfer {
+            request: Request::new(0, 0.0, 512, 8),
+            ready_at: 1e9,
+            assigned: Some(1),
+        });
+        let flips = cluster.apply_role_target(0.0, (0, 2, 1));
+        assert_eq!(flips, 1);
+        assert_eq!(cluster.workers[1].role, WorkerRole::Decode);
+        assert_eq!(cluster.workers[2].role, WorkerRole::Prefill);
+
+        // Both decode workers guarded: the planner must do nothing and
+        // retry after the transfers drain.
+        let mut stuck =
+            ClusterEngine::disagg(cfg, 1, 2, 1, Box::new(LeastOutstandingRouter::new()));
+        for w in [1usize, 2] {
+            stuck.transfers.push(Transfer {
+                request: Request::new(w as u64, 0.0, 512, 8),
+                ready_at: 1e9,
+                assigned: Some(w),
+            });
+        }
+        let flips = stuck.apply_role_target(0.0, (0, 2, 1));
+        assert_eq!(flips, 0);
+        assert_eq!(stuck.workers[1].role, WorkerRole::Decode);
+        assert_eq!(stuck.workers[2].role, WorkerRole::Decode);
+    }
+
+    #[test]
+    fn role_occupancy_tracks_flips() {
+        let cfg = ServingConfig::default_8b().with_policy(Policy::DisaggPD {
+            prefill_gpus: 1,
+            decode_gpus: 1,
+        });
+        let mut cluster =
+            ClusterEngine::disagg(cfg, 1, 1, 1, Box::new(LeastOutstandingRouter::new()));
+        // Advance both workers' clocks, then flip the decode worker to
+        // prefill: its decode occupancy must equal time spent in role.
+        cluster.workers[0].core.clock = 10.0;
+        cluster.workers[1].core.clock = 10.0;
+        cluster.note_role_change(1, WorkerRole::Prefill);
+        let occ = cluster.role_occupancy();
+        assert!((occ[2] - 10.0).abs() < 1e-9, "decode occupancy: {occ:?}");
+        // Live interval: both workers now prefill from t=10 to t=25.
+        cluster.workers[0].core.clock = 25.0;
+        cluster.workers[1].core.clock = 25.0;
+        let occ = cluster.role_occupancy();
+        assert!((occ[1] - 40.0).abs() < 1e-9, "prefill occupancy: {occ:?}");
+        assert_eq!(occ[0], 0.0);
     }
 }

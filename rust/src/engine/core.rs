@@ -265,6 +265,20 @@ impl EngineCore {
         self.scheduler.name()
     }
 
+    /// Spare prefill capacity the scheduler advertises (elastic planner
+    /// signal; see [`Scheduler::prefill_headroom`]).
+    pub fn prefill_headroom(&self) -> f64 {
+        self.scheduler.prefill_headroom()
+    }
+
+    /// Replace the iteration scheduler — the cluster's elastic planner
+    /// swaps a worker's policy when it flips its role. The caller drains
+    /// running/waiting requests first (`displace_all`); the new scheduler
+    /// starts from a clean queue.
+    pub fn set_scheduler(&mut self, scheduler: Box<dyn Scheduler>) {
+        self.scheduler = scheduler;
+    }
+
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }

@@ -54,6 +54,7 @@ pub mod clockheap;
 pub mod cluster;
 pub mod core;
 pub mod disagg;
+pub mod elastic;
 pub mod events;
 pub mod replicated;
 pub mod router;
@@ -64,11 +65,12 @@ pub use backend::{DecodeSlot, ExecutionBackend, IterationBatch, PrefillSlice, Si
 pub use clockheap::MinClockHeap;
 pub use cluster::{ClusterEngine, Worker, WorkerRole};
 pub use disagg::DisaggEngine;
+pub use elastic::{ElasticPlanner, FleetSignals, PlannerMode};
 pub use events::{IterEvent, IterKind};
 pub use replicated::ReplicatedEngine;
 pub use router::{
-    router_by_name, KvOverlapRouter, KvPressureRouter, LeastOutstandingRouter, RouteCandidate,
-    RoundRobinRouter, Router,
+    router_by_name, ConditionalRouter, KvOverlapRouter, KvPressureRouter,
+    LeastOutstandingRouter, RouteCandidate, RoundRobinRouter, Router, LONG_PROMPT_TOKENS,
 };
 pub use topology::{ServingTopology, TopologyLoad, TopologyStep};
 

@@ -23,6 +23,12 @@
 
 use crate::request::Request;
 
+/// Prompt length (tokens) above which a request counts as a "long
+/// prefill" for conditional disaggregation — the [`ConditionalRouter`]'s
+/// base threshold and the elastic planner's long-backlog cutoff share it
+/// so the two timescales classify requests identically.
+pub const LONG_PROMPT_TOKENS: u64 = 2048;
+
 /// Load snapshot of one eligible worker at dispatch time.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RouteCandidate {
@@ -41,6 +47,10 @@ pub struct RouteCandidate {
     /// prompt, in tokens. Filled per decision at arrival dispatch when
     /// prefix caching is enabled; 0 otherwise (including transfers).
     pub prefix_overlap_tokens: u64,
+    /// Whether this worker runs the prefill role (disaggregated prompt
+    /// processing; its output KV is handed to a decode worker). The
+    /// conditional router partitions the candidate board on this flag.
+    pub prefill_only: bool,
 }
 
 /// Picks a destination worker for each arriving request.
@@ -164,6 +174,86 @@ impl Router for KvOverlapRouter {
     }
 }
 
+/// Conditional disaggregation at the request level (the paper's per-
+/// request bet, Dynamo-style): long prefills go to prefill-role workers
+/// where they cannot stall anyone's decode; short ones stay on
+/// aggregated/duet workers and skip the KV-transfer hop entirely.
+///
+/// The length threshold is *load-adaptive*: it scales with the ratio of
+/// prefill-side to aggregated-side load (queue depth plus outstanding
+/// tokens), so a backed-up prefill tier sheds marginal requests to the
+/// aggregated workers and vice versa. Within the chosen side the pick is
+/// least-outstanding. On a homogeneous board (no prefill workers — e.g. a
+/// replicated fleet before the elastic planner splits roles — or a
+/// decode-transfer board with no aggregated workers) it degrades to plain
+/// least-outstanding, so the router is safe as a fleet-wide default.
+#[derive(Debug)]
+pub struct ConditionalRouter {
+    /// Prompt-length threshold (tokens) at neutral load.
+    pub base_threshold: u64,
+}
+
+impl Default for ConditionalRouter {
+    fn default() -> ConditionalRouter {
+        ConditionalRouter::new()
+    }
+}
+
+impl ConditionalRouter {
+    pub fn new() -> ConditionalRouter {
+        ConditionalRouter {
+            base_threshold: LONG_PROMPT_TOKENS,
+        }
+    }
+}
+
+/// Mean load of one side of the board: queue depth plus outstanding
+/// tokens normalized to request-scale units.
+fn side_load<'a>(side: impl Iterator<Item = &'a RouteCandidate>) -> Option<f64> {
+    let (mut n, mut load) = (0u64, 0.0f64);
+    for c in side {
+        n += 1;
+        load += c.queue_len as f64 + c.outstanding_tokens as f64 / 4096.0;
+    }
+    if n == 0 {
+        None
+    } else {
+        Some(load / n as f64)
+    }
+}
+
+fn least_outstanding<'a>(
+    side: impl Iterator<Item = &'a RouteCandidate>,
+) -> Option<usize> {
+    side.min_by_key(|c| (c.outstanding_tokens, c.queue_len, c.worker))
+        .map(|c| c.worker)
+}
+
+impl Router for ConditionalRouter {
+    fn name(&self) -> &'static str {
+        "conditional"
+    }
+
+    fn route(&mut self, req: &Request, candidates: &[RouteCandidate]) -> usize {
+        let pre_load = side_load(candidates.iter().filter(|c| c.prefill_only));
+        let agg_load = side_load(candidates.iter().filter(|c| !c.prefill_only));
+        let (Some(pre), Some(agg)) = (pre_load, agg_load) else {
+            // Homogeneous board: nothing to condition on.
+            return least_outstanding(candidates.iter())
+                .expect("route called with no candidates");
+        };
+        // Busier prefill tier → higher threshold (fewer requests classify
+        // as long); busier aggregated tier → lower. Clamped to 4x either
+        // way so the policy stays recognizable under extreme skew.
+        let base = self.base_threshold as f64;
+        let threshold =
+            (base * (1.0 + pre) / (1.0 + agg)).clamp(base / 4.0, base * 4.0);
+        let long = req.prompt_len as f64 >= threshold;
+        least_outstanding(candidates.iter().filter(|c| c.prefill_only == long))
+            .expect("side emptied between load scan and pick")
+    }
+}
+
 /// Router factory by name (CLI / bench surface).
 pub fn router_by_name(name: &str) -> Option<Box<dyn Router + Send>> {
     match name {
@@ -173,6 +263,7 @@ pub fn router_by_name(name: &str) -> Option<Box<dyn Router + Send>> {
         }
         "kv-pressure" | "kv" => Some(Box::new(KvPressureRouter::new())),
         "kv-overlap" | "overlap" => Some(Box::new(KvOverlapRouter::new())),
+        "conditional" | "cond" => Some(Box::new(ConditionalRouter::new())),
         _ => None,
     }
 }
@@ -189,7 +280,14 @@ mod tests {
             kv_free_tokens: kv_free,
             prefix_resident_tokens: 0,
             prefix_overlap_tokens: 0,
+            prefill_only: false,
         }
+    }
+
+    fn pre_cand(worker: usize, outstanding: u64) -> RouteCandidate {
+        let mut c = cand(worker, outstanding, 0);
+        c.prefill_only = true;
+        c
     }
 
     fn req() -> Request {
@@ -263,9 +361,57 @@ mod tests {
             ("kv", "kv-pressure"),
             ("kv-overlap", "kv-overlap"),
             ("overlap", "kv-overlap"),
+            ("conditional", "conditional"),
+            ("cond", "conditional"),
         ] {
             assert_eq!(router_by_name(name).unwrap().name(), expect);
         }
         assert!(router_by_name("nope").is_none());
+    }
+
+    fn sized_req(prompt: u64) -> Request {
+        Request::new(0, 0.0, prompt, 10)
+    }
+
+    #[test]
+    fn conditional_splits_by_prompt_length() {
+        let mut r = ConditionalRouter::new();
+        let cs = vec![cand(0, 100, 0), pre_cand(1, 100)];
+        // Short prompt stays on the aggregated worker.
+        assert_eq!(r.route(&sized_req(256), &cs), 0);
+        // Long prompt goes to the prefill worker.
+        assert_eq!(r.route(&sized_req(8192), &cs), 1);
+        // Exactly at the neutral threshold counts as long.
+        assert_eq!(r.route(&sized_req(LONG_PROMPT_TOKENS), &cs), 1);
+    }
+
+    #[test]
+    fn conditional_threshold_adapts_to_load() {
+        let mut r = ConditionalRouter::new();
+        // Prefill tier drowning, aggregated idle: a nominally-long prompt
+        // (just above base) is shed to the aggregated side.
+        let skewed = vec![cand(0, 0, 0), pre_cand(1, 400_000)];
+        assert_eq!(r.route(&sized_req(3000), &skewed), 0);
+        // Reverse skew: a nominally-short prompt is pushed to prefill.
+        let reverse = vec![cand(0, 400_000, 0), pre_cand(1, 0)];
+        assert_eq!(r.route(&sized_req(1024), &reverse), 1);
+        // But the clamp keeps a tiny prompt on the aggregated side even
+        // under extreme skew (threshold floors at base/4 = 512).
+        assert_eq!(r.route(&sized_req(100), &reverse), 0);
+    }
+
+    #[test]
+    fn conditional_degrades_on_homogeneous_board() {
+        let mut r = ConditionalRouter::new();
+        // All-aggregated (replicated fleet): least-outstanding.
+        let agg = vec![cand(0, 500, 0), cand(1, 20, 0), cand(2, 300, 0)];
+        assert_eq!(r.route(&sized_req(8192), &agg), 1);
+        // All-prefill (pure-disagg arrival board): same.
+        let pre = vec![pre_cand(0, 500), pre_cand(1, 20)];
+        assert_eq!(r.route(&sized_req(16), &pre), 1);
+        // Within-side pick is least-outstanding too.
+        let mixed = vec![cand(0, 500, 0), cand(1, 20, 0), pre_cand(2, 900), pre_cand(3, 30)];
+        assert_eq!(r.route(&sized_req(16), &mixed), 1);
+        assert_eq!(r.route(&sized_req(8192), &mixed), 3);
     }
 }

@@ -29,7 +29,9 @@ use std::time::Duration;
 
 use duetserve::cli::Args;
 use duetserve::config::{ModelSpec, Policy, ServingConfig};
-use duetserve::engine::{engine_for, router_by_name, ClusterEngine, DisaggEngine, ReplicatedEngine};
+use duetserve::engine::{
+    engine_for, router_by_name, ClusterEngine, DisaggEngine, PlannerMode, ReplicatedEngine,
+};
 use duetserve::metrics::Report;
 use duetserve::model::AttnShape;
 use duetserve::request::{Request, SloClass};
@@ -94,11 +96,37 @@ fn disagg_split(replicas: u32) -> (u32, u32) {
 /// (`ReplicatedEngine` fronts replicas with round-robin; `DisaggEngine`
 /// approximates the shared prefill queue with least-outstanding) so the
 /// batch and `--backend` front-end paths serve identical configurations.
-fn default_router(topology: &str) -> &'static str {
-    if topology == "disagg" {
+/// With the elastic planner the fleet becomes role-heterogeneous at
+/// runtime, so the conditional prefill-length router is the natural
+/// default — it degrades to least-outstanding on a homogeneous board.
+fn default_router(topology: &str, planner: PlannerMode) -> &'static str {
+    if planner == PlannerMode::Elastic {
+        "conditional"
+    } else if topology == "disagg" {
         "least-outstanding"
     } else {
         "round-robin"
+    }
+}
+
+/// Arm the role planner on a worker cluster per the `--planner` flags.
+/// A no-op when the planner is off, preserving the legacy trajectory
+/// byte-for-byte.
+fn apply_planner(
+    e: &mut ClusterEngine,
+    planner: PlannerMode,
+    interval: Option<f64>,
+    reconfig: Option<f64>,
+) {
+    if planner == PlannerMode::Off {
+        return;
+    }
+    if let Some(s) = reconfig {
+        e.reconfig_s = s;
+    }
+    e.set_planner(planner);
+    if let Some(s) = interval {
+        e.set_planner_interval(s);
     }
 }
 
@@ -132,6 +160,9 @@ struct FleetOpts {
     replicas: u32,
     router: Option<String>,
     topology: String,
+    planner: PlannerMode,
+    planner_interval: Option<f64>,
+    reconfig_s: Option<f64>,
 }
 
 fn parse_fleet_opts(args: &Args) -> FleetOpts {
@@ -152,6 +183,8 @@ fn parse_fleet_opts(args: &Args) -> FleetOpts {
             "kv",
             "kv-overlap",
             "overlap",
+            "conditional",
+            "cond",
         ],
     ) {
         Ok(choice) => choice.map(str::to_string),
@@ -174,10 +207,37 @@ fn parse_fleet_opts(args: &Args) -> FleetOpts {
         );
         std::process::exit(2);
     }
+    let planner = match args.one_of("planner", &["elastic", "static", "off"]) {
+        Ok(choice) => PlannerMode::from_name(choice.unwrap_or("off")).unwrap(),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if planner != PlannerMode::Off && replicas < 2 {
+        eprintln!(
+            "error: --planner {} needs a worker fleet to re-role; \
+             pass --replicas 2 or more",
+            planner.name()
+        );
+        std::process::exit(2);
+    }
+    let seconds_opt = |key: &str| -> Option<f64> {
+        args.get(key).map(|v| match v.parse::<f64>() {
+            Ok(s) if s > 0.0 && s.is_finite() => s,
+            _ => {
+                eprintln!("error: --{key} must be a positive number of seconds");
+                std::process::exit(2);
+            }
+        })
+    };
     FleetOpts {
         replicas,
         router,
         topology,
+        planner,
+        planner_interval: seconds_opt("planner-interval"),
+        reconfig_s: seconds_opt("reconfig-s"),
     }
 }
 
@@ -232,6 +292,9 @@ fn cmd_serve(args: &Args) {
         replicas,
         router,
         topology,
+        planner,
+        planner_interval,
+        reconfig_s,
     } = fleet;
     println!(
         "serving {} requests ({}) with {} (TP={})",
@@ -240,6 +303,9 @@ fn cmd_serve(args: &Args) {
         cfg.policy.name(),
         cfg.tp
     );
+    if planner != PlannerMode::Off {
+        println!("planner: {} role planning", planner.name());
+    }
     let prefix_cache = cfg.prefix_cache;
     let rep = if topology == "disagg" {
         // Explicit --topology disagg: split the --replicas worker budget
@@ -252,8 +318,14 @@ fn cmd_serve(args: &Args) {
             p,
             d,
             seed,
-            router_by_name(router.as_deref().unwrap_or(default_router(&topology))).unwrap(),
+            router_by_name(
+                router
+                    .as_deref()
+                    .unwrap_or(default_router(&topology, planner)),
+            )
+            .unwrap(),
         );
+        apply_planner(&mut e, planner, planner_interval, reconfig_s);
         println!("cluster: {p}P+{d}D disaggregated, {} routing", e.router_name());
         e.run(w)
     } else {
@@ -269,13 +341,16 @@ fn cmd_serve(args: &Args) {
                 if let Some(name) = &router {
                     e.set_router(router_by_name(name).unwrap());
                 }
+                apply_planner(&mut e, planner, planner_interval, reconfig_s);
                 e.run(w)
             }
             _ if replicas > 1 || router.is_some() => {
                 let mut e = ReplicatedEngine::new(cfg.clone(), replicas, seed);
-                if let Some(name) = &router {
-                    e.set_router(router_by_name(name).unwrap());
-                }
+                let router_name = router
+                    .clone()
+                    .unwrap_or_else(|| default_router(&topology, planner).to_string());
+                e.set_router(router_by_name(&router_name).unwrap());
+                apply_planner(&mut e, planner, planner_interval, reconfig_s);
                 println!("cluster: {replicas} replicas, {} routing", e.router_name());
                 e.run(w)
             }
@@ -310,20 +385,42 @@ fn start_front_server(
     fleet: &FleetOpts,
     depth: usize,
 ) -> anyhow::Result<Server> {
-    let multi = fleet.replicas > 1 || fleet.router.is_some() || fleet.topology == "disagg";
+    let multi = fleet.replicas > 1
+        || fleet.router.is_some()
+        || fleet.topology == "disagg"
+        || fleet.planner != PlannerMode::Off;
     match kind {
         "sim" if multi => {
             let replicas = fleet.replicas;
             let router_name = fleet
                 .router
                 .clone()
-                .unwrap_or_else(|| default_router(&fleet.topology).to_string());
+                .unwrap_or_else(|| default_router(&fleet.topology, fleet.planner).to_string());
             let topo = fleet.topology.clone();
-            println!("front-end cluster: {replicas} sim workers ({topo}), {router_name} routing");
+            let (planner, p_iv, p_rs) = (fleet.planner, fleet.planner_interval, fleet.reconfig_s);
+            println!(
+                "front-end cluster: {replicas} sim workers ({topo}), {router_name} routing{}",
+                if planner == PlannerMode::Off {
+                    String::new()
+                } else {
+                    format!(", {} planner", planner.name())
+                }
+            );
             Server::start(move || {
                 let r = router_by_name(&router_name)
                     .ok_or_else(|| anyhow::anyhow!("unknown router `{router_name}`"))?;
-                let core = if topo == "disagg" {
+                let core = if planner != PlannerMode::Off {
+                    // A planned fleet needs the raw cluster handle so the
+                    // role planner can be armed before serving starts.
+                    let mut cluster = if topo == "disagg" {
+                        let (p, d) = disagg_split(replicas);
+                        ClusterEngine::disagg(cfg, p, d, seed, r)
+                    } else {
+                        ClusterEngine::replicated(cfg, replicas, seed, r)
+                    };
+                    apply_planner(&mut cluster, planner, p_iv, p_rs);
+                    ServerCore::sim_cluster(cluster)
+                } else if topo == "disagg" {
                     let (p, d) = disagg_split(replicas);
                     ServerCore::sim_disagg(cfg, p, d, seed, r)
                 } else {
@@ -366,10 +463,12 @@ fn start_front_sharded(
     let shard_router = fleet
         .router
         .clone()
-        .unwrap_or_else(|| default_router(&fleet.topology).to_string());
-    let multi = fleet.replicas > 1 || fleet.topology == "disagg";
+        .unwrap_or_else(|| default_router(&fleet.topology, fleet.planner).to_string());
+    let multi =
+        fleet.replicas > 1 || fleet.topology == "disagg" || fleet.planner != PlannerMode::Off;
     let replicas = fleet.replicas;
     let topo = fleet.topology.clone();
+    let (planner, p_iv, p_rs) = (fleet.planner, fleet.planner_interval, fleet.reconfig_s);
     println!(
         "front-end shards: {shards} engine shards ({} per shard, {topo}), \
          {shard_router} shard routing",
@@ -390,7 +489,18 @@ fn start_front_sharded(
             let core = if multi {
                 let r = router_by_name(&router_name)
                     .ok_or_else(|| anyhow::anyhow!("unknown router `{router_name}`"))?;
-                if topo == "disagg" {
+                if planner != PlannerMode::Off {
+                    // Each shard runs its own elastic planner over its
+                    // own worker slice.
+                    let mut cluster = if topo == "disagg" {
+                        let (p, d) = disagg_split(replicas);
+                        ClusterEngine::disagg(cfg, p, d, shard_seed, r)
+                    } else {
+                        ClusterEngine::replicated(cfg, replicas, shard_seed, r)
+                    };
+                    apply_planner(&mut cluster, planner, p_iv, p_rs);
+                    ServerCore::sim_cluster(cluster)
+                } else if topo == "disagg" {
                     let (p, d) = disagg_split(replicas);
                     ServerCore::sim_disagg(cfg, p, d, shard_seed, r)
                 } else {
@@ -718,6 +828,7 @@ struct PlanCandidate {
     topology: &'static str,
     replicas: u32,
     router: Option<&'static str>,
+    planner: PlannerMode,
 }
 
 fn plan_candidates() -> Vec<PlanCandidate> {
@@ -728,6 +839,7 @@ fn plan_candidates() -> Vec<PlanCandidate> {
             topology: "unified",
             replicas: 1,
             router: None,
+            planner: PlannerMode::Off,
         },
         PlanCandidate {
             label: "duet x1",
@@ -735,6 +847,7 @@ fn plan_candidates() -> Vec<PlanCandidate> {
             topology: "unified",
             replicas: 1,
             router: None,
+            planner: PlannerMode::Off,
         },
         PlanCandidate {
             label: "duet x2 rr",
@@ -742,6 +855,7 @@ fn plan_candidates() -> Vec<PlanCandidate> {
             topology: "unified",
             replicas: 2,
             router: Some("round-robin"),
+            planner: PlannerMode::Off,
         },
         PlanCandidate {
             label: "duet 1P+1D",
@@ -749,6 +863,15 @@ fn plan_candidates() -> Vec<PlanCandidate> {
             topology: "disagg",
             replicas: 2,
             router: Some("least-outstanding"),
+            planner: PlannerMode::Off,
+        },
+        PlanCandidate {
+            label: "duet x2 elastic",
+            policy: Policy::Duet,
+            topology: "unified",
+            replicas: 2,
+            router: Some("conditional"),
+            planner: PlannerMode::Elastic,
         },
         PlanCandidate {
             label: "duet x4 rr",
@@ -756,6 +879,15 @@ fn plan_candidates() -> Vec<PlanCandidate> {
             topology: "unified",
             replicas: 4,
             router: Some("round-robin"),
+            planner: PlannerMode::Off,
+        },
+        PlanCandidate {
+            label: "duet x4 elastic",
+            policy: Policy::Duet,
+            topology: "unified",
+            replicas: 4,
+            router: Some("conditional"),
+            planner: PlannerMode::Elastic,
         },
     ]
 }
@@ -772,6 +904,20 @@ fn run_plan_candidate(c: &PlanCandidate, base: &ServingConfig, w: Workload, seed
             seed,
             router_by_name(c.router.unwrap_or("least-outstanding")).unwrap(),
         );
+        apply_planner(&mut e, c.planner, None, None);
+        e.run(w)
+    } else if c.planner != PlannerMode::Off {
+        // Elastic candidates: start unified and let the planner re-role
+        // workers under the declared mix. The sweep's horizon is short
+        // (tens of engine-seconds), so plan on a tight cadence with a
+        // fast flip.
+        let mut e = ClusterEngine::replicated(
+            cfg,
+            c.replicas,
+            seed,
+            router_by_name(c.router.unwrap_or("conditional")).unwrap(),
+        );
+        apply_planner(&mut e, c.planner, Some(5.0), Some(1.0));
         e.run(w)
     } else if c.replicas > 1 {
         let mut e = ReplicatedEngine::new(cfg, c.replicas, seed);
@@ -952,9 +1098,21 @@ serve:      --policy vllm|sglang|sglang-chunked|duet|dynamo
                                   kv-overlap (cache-aware: prefers the
                                        worker holding the longest cached
                                        prefix of the arriving prompt)
+                                  conditional (length-conditional
+                                       disaggregation: long prefills go to
+                                       prefill-role workers under a
+                                       load-adaptive threshold)
             --topology unified|disagg (disagg splits --replicas into
                                        prefill + decode role workers;
                                        needs --replicas >= 2)
+            --planner elastic|static|off (default off; elastic re-roles
+                                       workers online toward the forecast
+                                       goodput-best role split, static is
+                                       the legacy threshold planner;
+                                       needs --replicas >= 2; see
+                                       docs/elastic_roles.md)
+            --planner-interval SECS   (planner tick cadence, default 30)
+            --reconfig-s SECS         (worker re-role downtime, default 40)
             --backend sim|pjrt-stub   (stream through the unified
                                        front-end; with --replicas/--router/
                                        --topology the sim front-end serves
@@ -968,6 +1126,8 @@ serve-http: --addr HOST:PORT (default 127.0.0.1:8080)
             --backend sim|pjrt-stub (default sim) --queue-cap N
             --max-body BYTES --seed N
             --replicas N --router R --topology unified|disagg
+            --planner elastic|static|off [--planner-interval SECS
+                                       --reconfig-s SECS]
             --shards N                (independent engine shards behind one
                                        submit surface; requests routed by
                                        --router against live shard load;
@@ -988,9 +1148,10 @@ partition:  --decode N --ctx N --prefill N [--tbt-slo F]
 plan:       --mix interactive|batch-heavy|all (default all)
             [--n N --qps F --seed N] plus the serve model flags;
             sweeps topology x replicas x router x scheduler (duet's
-            adaptive SM partition vs time-shared chunking) against the
-            declared per-class traffic-and-SLO mix and prints the
-            cheapest config attaining every class target
+            adaptive SM partition vs time-shared chunking, plus
+            elastic-planner configs that re-role workers under the mix)
+            against the declared per-class traffic-and-SLO mix and
+            prints the cheapest config attaining every class target
 e2e:        --requests N --max-new N   (needs `make artifacts`)
 ";
 

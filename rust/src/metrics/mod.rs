@@ -310,7 +310,18 @@ pub struct Recorder {
     /// shed because the roofline forecast predicted a latency-class
     /// decode TBT violation (one count per chunk per iteration).
     pub qos_preemptions: u64,
+    /// Worker role reconfigurations the cluster planner performed
+    /// (static Dynamo-style or elastic goodput-forecast).
+    pub reconfigs: u64,
+    /// Per-role worker occupancy seconds, in [`ROLE_NAMES`] order
+    /// (unified, prefill, decode). Absolute engine time, summed over
+    /// workers.
+    pub role_occupancy: [f64; 3],
 }
+
+/// Labels for [`Recorder::role_occupancy`] /
+/// [`Report::role_occupancy`], in index order.
+pub const ROLE_NAMES: [&str; 3] = ["unified", "prefill", "decode"];
 
 impl Default for Recorder {
     fn default() -> Recorder {
@@ -354,6 +365,8 @@ impl Recorder {
             classes: std::array::from_fn(|_| ClassStat::with_mode(mode)),
             preemptions: 0,
             qos_preemptions: 0,
+            reconfigs: 0,
+            role_occupancy: [0.0; 3],
         }
     }
 
@@ -471,6 +484,10 @@ impl Recorder {
         }
         self.preemptions += other.preemptions;
         self.qos_preemptions += other.qos_preemptions;
+        self.reconfigs += other.reconfigs;
+        for (a, b) in self.role_occupancy.iter_mut().zip(other.role_occupancy.iter()) {
+            *a += b;
+        }
         // An exact recorder that absorbed a streaming one lost its
         // sample history for the merged series: keep the mode accessor
         // truthful about what report() will answer from.
@@ -535,6 +552,8 @@ impl Recorder {
             classes,
             preemptions: self.preemptions,
             qos_preemptions: self.qos_preemptions,
+            reconfigs: self.reconfigs,
+            role_occupancy: self.role_occupancy,
         }
     }
 }
@@ -613,6 +632,10 @@ pub struct Report {
     pub preemptions: u64,
     /// Lower-class prefill chunks shed under latency-class TBT pressure.
     pub qos_preemptions: u64,
+    /// Worker role reconfigurations performed by the cluster planner.
+    pub reconfigs: u64,
+    /// Per-role worker occupancy seconds, in [`ROLE_NAMES`] order.
+    pub role_occupancy: [f64; 3],
 }
 
 impl Report {
@@ -826,15 +849,21 @@ mod tests {
         a.record_finished(&classed_request(2, SloClass::Batch, 0.40, None));
         a.preemptions = 2;
         a.qos_preemptions = 5;
+        a.reconfigs = 1;
+        a.role_occupancy = [10.0, 2.0, 0.0];
         let mut b = Recorder::streaming();
         b.record_finished(&classed_request(3, SloClass::Latency, 0.09, Some(0.05)));
         b.record_finished(&classed_request(4, SloClass::Standard, 0.10, None));
         b.preemptions = 1;
         b.qos_preemptions = 3;
+        b.reconfigs = 2;
+        b.role_occupancy = [1.0, 0.0, 4.0];
         a.merge(&b);
         a.duration = 2.0;
         assert_eq!(a.preemptions, 3);
         assert_eq!(a.qos_preemptions, 8);
+        assert_eq!(a.reconfigs, 3);
+        assert_eq!(a.role_occupancy, [11.0, 2.0, 4.0]);
         let rep = a.report("m");
         let lat = rep.class(SloClass::Latency);
         assert_eq!(lat.completed, 2);
@@ -846,6 +875,8 @@ mod tests {
         assert_eq!(rep.class(SloClass::Batch).completed, 1);
         assert_eq!(rep.preemptions, 3);
         assert_eq!(rep.qos_preemptions, 8);
+        assert_eq!(rep.reconfigs, 3);
+        assert_eq!(rep.role_occupancy, [11.0, 2.0, 4.0]);
         // Per-class completions always partition total completions.
         let sum: u64 = rep.classes.iter().map(|c| c.completed).sum();
         assert_eq!(sum, rep.completed);

@@ -72,6 +72,10 @@ pub struct DuetScheduler {
     /// Prefill chunks shed specifically to protect a latency-class
     /// decode (drained by [`Scheduler::take_qos_preemptions`]).
     qos_preempted: u64,
+    /// Running average of the token-budget fraction left unclaimed by
+    /// prefill chunks — the spare prefill capacity this worker advertises
+    /// to the elastic planner via [`Scheduler::prefill_headroom`].
+    headroom_ema: f64,
 }
 
 impl DuetScheduler {
@@ -95,6 +99,7 @@ impl DuetScheduler {
             verbatim_alg1: false,
             qos_preemption: true,
             qos_preempted: 0,
+            headroom_ema: 1.0,
         }
     }
 
@@ -141,9 +146,14 @@ impl Scheduler for DuetScheduler {
         let (decode, prefill) =
             build_chunked_batch(input, self.token_budget, self.max_batch, self.kv_watermark);
         if decode.is_empty() && prefill.is_empty() {
+            self.headroom_ema = 0.9 * self.headroom_ema + 0.1;
             return IterationPlan::Idle;
         }
         self.total_iterations += 1;
+        let claimed: u64 = prefill.iter().map(|c| c.tokens).sum();
+        let spare =
+            1.0 - (claimed as f64 / self.token_budget.max(1) as f64).min(1.0);
+        self.headroom_ema = 0.9 * self.headroom_ema + 0.1 * spare;
 
         let (dec_shape, pre_shape) = shapes_of(input, &decode, &prefill);
         // The SLO this iteration must meet (== tbt_slo for classless
@@ -229,6 +239,10 @@ impl Scheduler for DuetScheduler {
 
     fn take_qos_preemptions(&mut self) -> u64 {
         std::mem::take(&mut self.qos_preempted)
+    }
+
+    fn prefill_headroom(&self) -> f64 {
+        self.headroom_ema
     }
 }
 
@@ -518,5 +532,33 @@ mod tests {
     #[should_panic(expected = "static split exceeds device")]
     fn static_oversub_panics() {
         StaticPartitionScheduler::new(predictor(), 8192, 1024, 40, 40);
+    }
+
+    #[test]
+    fn headroom_tracks_spare_prefill_budget() {
+        let mut s = DuetScheduler::new(predictor(), 8192, 1024, 0.0, 0.100, 16);
+        assert!((s.prefill_headroom() - 1.0).abs() < 1e-12, "idle start = full headroom");
+        // A prompt far larger than the budget claims the whole budget each
+        // iteration: headroom decays toward zero.
+        let waiting = vec![Request::new(0, 0.0, 100_000, 10)];
+        for _ in 0..50 {
+            s.plan(&SchedInput {
+                running: &[],
+                waiting: &waiting,
+                kv_free_tokens: 10_000_000,
+                kv_total_tokens: 10_000_000,
+            });
+        }
+        assert!(s.prefill_headroom() < 0.1, "{}", s.prefill_headroom());
+        // Idle iterations recover it.
+        for _ in 0..50 {
+            s.plan(&SchedInput {
+                running: &[],
+                waiting: &[],
+                kv_free_tokens: 10_000_000,
+                kv_total_tokens: 10_000_000,
+            });
+        }
+        assert!(s.prefill_headroom() > 0.9, "{}", s.prefill_headroom());
     }
 }

@@ -121,6 +121,14 @@ pub trait Scheduler {
     fn take_qos_preemptions(&mut self) -> u64 {
         0
     }
+    /// Spare prefill capacity this worker advertises to the elastic
+    /// planner, as a fraction of its token budget (1.0 = fully idle for
+    /// prompt work, 0.0 = saturated / decode-only). Duet workers track a
+    /// running average of unclaimed budget; pure-decode role schedulers
+    /// report 0. The neutral default assumes half the budget is spare.
+    fn prefill_headroom(&self) -> f64 {
+        0.5
+    }
 }
 
 /// Build the scheduler for a config's policy. Shared by the single-GPU

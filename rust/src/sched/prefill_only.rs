@@ -51,6 +51,11 @@ impl Scheduler for PrefillOnlyScheduler {
     fn name(&self) -> String {
         "prefill-only".to_string()
     }
+
+    /// A prefill-role worker's whole budget is prompt capacity.
+    fn prefill_headroom(&self) -> f64 {
+        1.0
+    }
 }
 
 #[cfg(test)]

@@ -826,8 +826,22 @@ pub(crate) fn report_json(rep: &Report) -> Json {
         ("prefilled_tokens", Json::Num(rep.prefilled_tokens as f64)),
         ("preemptions", Json::Num(rep.preemptions as f64)),
         ("qos_preemptions", Json::Num(rep.qos_preemptions as f64)),
+        ("reconfigs", Json::Num(rep.reconfigs as f64)),
+        ("role_occupancy_seconds", role_occupancy_json(rep)),
         ("classes", classes_json(rep)),
     ])
+}
+
+/// Per-role worker occupancy keyed by role name:
+/// `{"unified": …, "prefill": …, "decode": …}` (seconds).
+fn role_occupancy_json(rep: &Report) -> Json {
+    Json::obj(
+        crate::metrics::ROLE_NAMES
+            .iter()
+            .zip(rep.role_occupancy.iter())
+            .map(|(name, &s)| (*name, Json::Num(s)))
+            .collect(),
+    )
 }
 
 /// Per-class goodput series keyed by class name:
@@ -1112,6 +1126,28 @@ pub(crate) fn render_prometheus(rep: Option<&Report>, stats: &HttpStats) -> Stri
             r,
             |c| c.tbt_p99,
         );
+        prom_metric(
+            &mut out,
+            "duetserve_reconfigs_total",
+            "counter",
+            "Worker role reconfigurations performed by the cluster planner",
+            r.reconfigs as f64,
+        );
+        {
+            use std::fmt::Write as _;
+            let name = "duetserve_role_occupancy_seconds";
+            let _ = writeln!(
+                &mut out,
+                "# HELP {name} Worker-seconds spent in each cluster role"
+            );
+            let _ = writeln!(&mut out, "# TYPE {name} counter");
+            for (role, &s) in crate::metrics::ROLE_NAMES
+                .iter()
+                .zip(r.role_occupancy.iter())
+            {
+                let _ = writeln!(&mut out, "{name}{{role=\"{role}\"}} {s}");
+            }
+        }
     }
     out
 }
@@ -1956,6 +1992,8 @@ mod tests {
         rep.queue_cap = Some(64);
         rep.prefix_hits = 3;
         rep.prefix_cached_tokens = 96;
+        rep.reconfigs = 2;
+        rep.role_occupancy = [12.0, 3.5, 0.0];
         let text = render_prometheus(Some(&rep), &stats);
         assert!(text.contains("duetserve_http_requests_total 4"));
         assert!(text.contains("duetserve_http_tokens_streamed_total 17"));
@@ -1976,20 +2014,34 @@ mod tests {
         assert!(text.contains("duetserve_class_completed_total{class=\"latency\"} 0"));
         assert!(text.contains("duetserve_class_attained_total{class=\"standard\"} 0"));
         assert!(text.contains("duetserve_class_tbt_p99_seconds{class=\"batch\"} 0"));
+        // Reconfiguration + per-role occupancy families.
+        assert!(text.contains("duetserve_reconfigs_total 2"));
+        assert!(text.contains("# TYPE duetserve_role_occupancy_seconds counter"));
+        assert!(text.contains("duetserve_role_occupancy_seconds{role=\"unified\"} 12"));
+        assert!(text.contains("duetserve_role_occupancy_seconds{role=\"prefill\"} 3.5"));
+        assert!(text.contains("duetserve_role_occupancy_seconds{role=\"decode\"} 0"));
         // Without a snapshot, only transport metrics render.
         let text = render_prometheus(None, &stats);
         assert!(!text.contains("duetserve_engine_completed_total"));
         assert!(!text.contains("duetserve_queue_cap"));
         assert!(!text.contains("duetserve_prefix_hits_total"));
         assert!(!text.contains("duetserve_class_completed_total"));
+        assert!(!text.contains("duetserve_reconfigs_total"));
     }
 
     #[test]
     fn report_json_carries_classes_and_preemption_counters() {
-        let rep = crate::metrics::Recorder::new().report("unit");
+        let mut rep = crate::metrics::Recorder::new().report("unit");
+        rep.reconfigs = 4;
+        rep.role_occupancy = [1.0, 2.0, 3.0];
         let v = report_json(&rep);
         assert_eq!(v.get("preemptions").and_then(|x| x.as_f64()), Some(0.0));
         assert_eq!(v.get("qos_preemptions").and_then(|x| x.as_f64()), Some(0.0));
+        assert_eq!(v.get("reconfigs").and_then(|x| x.as_f64()), Some(4.0));
+        let occ = v.get("role_occupancy_seconds").expect("occupancy object");
+        assert_eq!(occ.get("unified").and_then(|x| x.as_f64()), Some(1.0));
+        assert_eq!(occ.get("prefill").and_then(|x| x.as_f64()), Some(2.0));
+        assert_eq!(occ.get("decode").and_then(|x| x.as_f64()), Some(3.0));
         let classes = v.get("classes").expect("classes object");
         for class in SloClass::all() {
             let c = classes.get(class.name()).expect("per-class entry");

@@ -491,6 +491,14 @@ impl ServerCore {
         )))
     }
 
+    /// Cluster-backed core over an arbitrary prebuilt [`ClusterEngine`]
+    /// (e.g. a replicated fleet with the elastic role planner enabled) —
+    /// the general spelling of [`sim_replicated`](ServerCore::sim_replicated)
+    /// / [`sim_disagg`](ServerCore::sim_disagg).
+    pub fn sim_cluster(cluster: ClusterEngine) -> ServerCore {
+        ServerCore::over(Box::new(cluster))
+    }
+
     /// Cluster-backed core over a disaggregated prefill/decode fleet.
     pub fn sim_disagg(
         cfg: ServingConfig,
@@ -989,6 +997,9 @@ impl LoadBoard {
             kv_free_tokens: self.kv_free_tokens.load(AtomicOrdering::Relaxed),
             prefix_resident_tokens: 0,
             prefix_overlap_tokens: 0,
+            // Shards are whole engines, never single prefill-role
+            // workers.
+            prefill_only: false,
         }
     }
 }

@@ -22,6 +22,68 @@ pub fn uniform_arrivals(n: usize, qps: f64) -> Vec<f64> {
     (0..n).map(|i| (i + 1) as f64 / qps).collect()
 }
 
+/// Non-homogeneous Poisson arrivals by thinning (Lewis–Shedler): draw
+/// candidate events at the bounding rate `peak` and accept each with
+/// probability `rate(t) / peak`. `rate` must satisfy
+/// `0 ≤ rate(t) ≤ peak` for all `t`.
+pub fn thinned_arrivals(
+    rng: &mut Rng,
+    n: usize,
+    peak: f64,
+    mut rate: impl FnMut(f64) -> f64,
+) -> Vec<f64> {
+    assert!(peak > 0.0);
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        t += rng.exponential(peak);
+        if rng.f64() * peak < rate(t) {
+            out.push(t);
+        }
+    }
+    out
+}
+
+/// Square-wave burst arrivals: `burst_qps` during the first `burst_s`
+/// seconds of every `period_s` window, `base_qps` (may be 0) otherwise.
+/// The load shape where a statically-roled fleet loses: each burst wants
+/// prefill capacity the inter-burst lull wants back.
+pub fn burst_arrivals(
+    rng: &mut Rng,
+    n: usize,
+    base_qps: f64,
+    burst_qps: f64,
+    period_s: f64,
+    burst_s: f64,
+) -> Vec<f64> {
+    assert!(period_s > 0.0 && burst_s > 0.0 && burst_s <= period_s);
+    let peak = base_qps.max(burst_qps);
+    thinned_arrivals(rng, n, peak, |t| {
+        if t % period_s < burst_s {
+            burst_qps
+        } else {
+            base_qps
+        }
+    })
+}
+
+/// Diurnal arrivals: the rate swings sinusoidally between `low_qps` and
+/// `high_qps` with period `period_s` (a compressed day).
+pub fn diurnal_arrivals(
+    rng: &mut Rng,
+    n: usize,
+    low_qps: f64,
+    high_qps: f64,
+    period_s: f64,
+) -> Vec<f64> {
+    assert!(low_qps >= 0.0 && high_qps > low_qps && period_s > 0.0);
+    let mid = 0.5 * (low_qps + high_qps);
+    let amp = 0.5 * (high_qps - low_qps);
+    thinned_arrivals(rng, n, high_qps, |t| {
+        mid + amp * (std::f64::consts::TAU * t / period_s).sin()
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -46,5 +108,46 @@ mod tests {
     fn uniform_is_evenly_spaced() {
         let ts = uniform_arrivals(4, 2.0);
         assert_eq!(ts, vec![0.5, 1.0, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn burst_arrivals_land_inside_burst_windows() {
+        let mut rng = Rng::new(7);
+        // Zero base rate: every accepted arrival must fall in a window.
+        let ts = burst_arrivals(&mut rng, 500, 0.0, 20.0, 60.0, 15.0);
+        assert_eq!(ts.len(), 500);
+        assert!(ts.windows(2).all(|w| w[1] > w[0]));
+        for &t in &ts {
+            assert!(t % 60.0 < 15.0, "arrival {t} outside burst window");
+        }
+    }
+
+    #[test]
+    fn diurnal_rate_tracks_the_sinusoid() {
+        let mut rng = Rng::new(11);
+        let n = 40_000;
+        let ts = diurnal_arrivals(&mut rng, n, 2.0, 18.0, 600.0);
+        assert!(ts.windows(2).all(|w| w[1] > w[0]));
+        // Mean rate over whole periods ≈ midpoint of the swing.
+        let span = ts[n - 1];
+        let mean_qps = n as f64 / span;
+        assert!(
+            (mean_qps - 10.0).abs() < 1.0,
+            "mean qps {mean_qps} should sit near the 10 qps midpoint"
+        );
+        // Peak half-periods must be denser than trough half-periods.
+        let period = 600.0;
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for &t in &ts {
+            if t % period < period / 2.0 {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak > trough * 2,
+            "peak half {peak} vs trough half {trough}"
+        );
     }
 }

@@ -13,9 +13,9 @@ pub mod sessions;
 pub mod synthetic;
 pub mod traces;
 
-pub use arrivals::poisson_arrivals;
+pub use arrivals::{burst_arrivals, diurnal_arrivals, poisson_arrivals, thinned_arrivals};
 pub use sessions::{session_workload, shared_prefix_workload, SessionProfile};
-pub use synthetic::fixed_workload;
+pub use synthetic::{burst_mix_workload, fixed_workload, BurstProfile};
 pub use traces::{trace_by_name, TraceKind, TraceStats};
 
 use crate::request::Request;

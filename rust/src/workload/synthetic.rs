@@ -1,8 +1,9 @@
-//! Fixed-length synthetic workloads (Table 2, Fig. 2's 8000/200 demo).
+//! Fixed-length synthetic workloads (Table 2, Fig. 2's 8000/200 demo)
+//! and the burst/diurnal mix the elastic role planner is evaluated on.
 
-use crate::request::Request;
+use crate::request::{Request, SloClass};
 use crate::util::rng::Rng;
-use crate::workload::arrivals::poisson_arrivals;
+use crate::workload::arrivals::{burst_arrivals, diurnal_arrivals, poisson_arrivals};
 use crate::workload::Workload;
 
 /// `n` requests with fixed ISL/OSL arriving as a Poisson process at `qps`.
@@ -55,6 +56,102 @@ pub fn jittered_workload(
     }
 }
 
+/// Shape of the burst/diurnal mixed workload: a steady stream of short
+/// latency-class chats overlaid with periodic bursts of very long
+/// batch-class prompts. This is the arrival pattern where any *static*
+/// fleet loses: during a burst the prefill side saturates (a unified
+/// fleet inflates decode TBT; a static disagg fleet has too few prefill
+/// workers), between bursts dedicated prefill workers sit idle.
+#[derive(Debug, Clone)]
+pub struct BurstProfile {
+    /// Short interactive requests (latency class, TTFT + TBT SLOs).
+    pub shorts: usize,
+    pub short_isl: u64,
+    pub short_osl: u64,
+    /// Mean short-request rate.
+    pub short_qps: f64,
+    pub short_slo_ttft: f64,
+    pub short_slo_tbt: f64,
+    /// Long-prompt requests (batch class, no SLO), arriving only inside
+    /// burst windows.
+    pub longs: usize,
+    pub long_isl: u64,
+    pub long_osl: u64,
+    /// Long-request rate *inside* a burst window.
+    pub long_qps: f64,
+    /// Burst window cadence: `burst_s` of longs every `period_s`.
+    pub period_s: f64,
+    pub burst_s: f64,
+    /// Modulate the short stream diurnally (sinusoid between
+    /// `0.3 × short_qps` and `short_qps` over `2 × period_s`) instead of
+    /// holding it at a flat Poisson rate.
+    pub diurnal: bool,
+}
+
+impl Default for BurstProfile {
+    fn default() -> BurstProfile {
+        BurstProfile {
+            shorts: 160,
+            short_isl: 256,
+            short_osl: 64,
+            short_qps: 8.0,
+            short_slo_ttft: 2.5,
+            short_slo_tbt: 0.05,
+            longs: 48,
+            long_isl: 12_000,
+            long_osl: 8,
+            long_qps: 4.0,
+            period_s: 120.0,
+            burst_s: 30.0,
+            diurnal: false,
+        }
+    }
+}
+
+/// Generate the [`BurstProfile`] mix: sorted merge of the short
+/// latency-class stream and the bursty long batch-class stream. Ids are
+/// assigned shorts-first, so equal-arrival ties keep a deterministic
+/// order.
+pub fn burst_mix_workload(p: &BurstProfile, seed: u64) -> Workload {
+    let mut rng = Rng::new(seed ^ 0xB005_7B00);
+    let short_ts = if p.diurnal {
+        diurnal_arrivals(
+            &mut rng,
+            p.shorts,
+            0.3 * p.short_qps,
+            p.short_qps,
+            2.0 * p.period_s,
+        )
+    } else {
+        poisson_arrivals(&mut rng, p.shorts, p.short_qps)
+    };
+    let long_ts = burst_arrivals(&mut rng, p.longs, 0.0, p.long_qps, p.period_s, p.burst_s);
+    let mut requests: Vec<Request> = Vec::with_capacity(p.shorts + p.longs);
+    for (i, &t) in short_ts.iter().enumerate() {
+        requests.push(
+            Request::new(i as u64, t, p.short_isl, p.short_osl)
+                .with_class(SloClass::Latency)
+                .with_slo_ttft(p.short_slo_ttft)
+                .with_slo_tbt(p.short_slo_tbt),
+        );
+    }
+    for (i, &t) in long_ts.iter().enumerate() {
+        requests.push(
+            Request::new((p.shorts + i) as u64, t, p.long_isl, p.long_osl)
+                .with_class(SloClass::Batch),
+        );
+    }
+    Workload {
+        name: if p.diurnal {
+            "diurnal-burst-mix".into()
+        } else {
+            "burst-mix".into()
+        },
+        requests,
+    }
+    .sorted_by_arrival()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,5 +180,59 @@ mod tests {
             .requests
             .windows(2)
             .all(|p| p[0].arrival <= p[1].arrival));
+    }
+
+    #[test]
+    fn burst_mix_interleaves_classes_in_windows() {
+        let p = BurstProfile::default();
+        let w = burst_mix_workload(&p, 5);
+        assert_eq!(w.requests.len(), p.shorts + p.longs);
+        assert!(w
+            .requests
+            .windows(2)
+            .all(|q| q[0].arrival <= q[1].arrival));
+        let longs: Vec<_> = w
+            .requests
+            .iter()
+            .filter(|r| r.prompt_len == p.long_isl)
+            .collect();
+        assert_eq!(longs.len(), p.longs);
+        for r in &longs {
+            assert_eq!(r.class, crate::request::SloClass::Batch);
+            assert!(
+                r.arrival % p.period_s < p.burst_s,
+                "long request at {} outside burst window",
+                r.arrival
+            );
+        }
+        let shorts = w.requests.len() - longs.len();
+        assert_eq!(shorts, p.shorts);
+        assert!(w
+            .requests
+            .iter()
+            .filter(|r| r.prompt_len == p.short_isl)
+            .all(|r| r.class == crate::request::SloClass::Latency
+                && r.slo_tbt.is_some()
+                && r.slo_ttft.is_some()));
+    }
+
+    #[test]
+    fn diurnal_variant_changes_short_arrivals_only_in_rate() {
+        let mut p = BurstProfile::default();
+        p.diurnal = true;
+        let w = burst_mix_workload(&p, 5);
+        assert_eq!(w.requests.len(), p.shorts + p.longs);
+        assert_eq!(w.name, "diurnal-burst-mix");
+        // The diurnal stream stretches over a longer horizon than the
+        // flat-rate stream at the same mean request count.
+        let flat = burst_mix_workload(&BurstProfile::default(), 5);
+        let span = |w: &Workload| {
+            w.requests
+                .iter()
+                .filter(|r| r.prompt_len == 256)
+                .map(|r| r.arrival)
+                .fold(0.0f64, f64::max)
+        };
+        assert!(span(&w) > span(&flat));
     }
 }

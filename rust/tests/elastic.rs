@@ -1,0 +1,208 @@
+//! Elastic role-planner integration properties.
+//!
+//! Three guarantees the planner must not break:
+//!
+//! 1. **Off means off, byte-for-byte.** `--planner off` (the default)
+//!    must reproduce the legacy fixed-role trajectory exactly — same
+//!    worker clocks to the bit, same report — so every existing
+//!    live ≡ batch-replay property keeps holding with the planner
+//!    compiled in.
+//! 2. **`static` is the old `reconfigurable: true`,** under a new name:
+//!    the explicit mode and the legacy flag must produce identical runs,
+//!    including the same (nonzero) reconfiguration count.
+//! 3. **Flips are safe under churn.** Hysteresis bounds the flip count
+//!    under oscillating burst load, and cancelling requests mid-run —
+//!    including ones mid-KV-transfer while workers re-role around them —
+//!    must leave every incremental invariant intact and the accounting
+//!    exact.
+
+use duetserve::config::{Policy, ServingConfig};
+use duetserve::engine::{
+    router_by_name, ClusterEngine, PlannerMode, ServingTopology, TopologyStep,
+};
+use duetserve::workload::synthetic::{burst_mix_workload, fixed_workload, BurstProfile};
+use duetserve::workload::Workload;
+
+/// Cap on events so a livelock fails loudly instead of hanging.
+const MAX_EVENTS: u64 = 2_000_000;
+
+/// Drive a cluster live: inject everything, step to exhaustion, drain.
+fn run_live(cluster: &mut ClusterEngine, w: Workload) -> duetserve::metrics::Report {
+    for r in w.requests {
+        cluster.inject(r);
+    }
+    let mut events = 0u64;
+    loop {
+        match cluster.step_next(None) {
+            TopologyStep::Exhausted => break,
+            TopologyStep::Diverged(e) => panic!("cluster diverged: {e}"),
+            _ => {
+                events += 1;
+                assert!(events < MAX_EVENTS, "event cap hit — livelock?");
+            }
+        }
+    }
+    cluster.drain()
+}
+
+#[test]
+fn planner_off_is_byte_identical_to_legacy_fleet() {
+    let cfg = ServingConfig::default_8b().with_policy(Policy::VllmChunked);
+    let w = fixed_workload(60, 4000, 32, 8.0, 17);
+
+    // Legacy cluster: planner never mentioned.
+    let mut legacy = ClusterEngine::replicated(
+        cfg.clone(),
+        3,
+        9,
+        router_by_name("round-robin").unwrap(),
+    );
+    let rep_legacy = run_live(&mut legacy, w.clone());
+
+    // Planner explicitly off, with a planner interval configured: mode
+    // off must make the interval inert.
+    let mut off = ClusterEngine::replicated(cfg, 3, 9, router_by_name("round-robin").unwrap());
+    off.set_planner(PlannerMode::Off);
+    off.set_planner_interval(5.0);
+    let rep_off = run_live(&mut off, w);
+
+    assert_eq!(rep_legacy.completed, 60);
+    assert_eq!(rep_off.completed, rep_legacy.completed);
+    assert_eq!(rep_off.iterations, rep_legacy.iterations);
+    assert_eq!(
+        rep_off.duration.to_bits(),
+        rep_legacy.duration.to_bits(),
+        "planner-off duration diverged from the legacy trajectory"
+    );
+    assert_eq!(rep_off.reconfigs, 0);
+    assert_eq!(rep_legacy.reconfigs, 0);
+    for (i, (a, b)) in legacy.workers.iter().zip(off.workers.iter()).enumerate() {
+        assert_eq!(
+            a.core.clock.to_bits(),
+            b.core.clock.to_bits(),
+            "worker {i} clock diverged with the planner off"
+        );
+    }
+}
+
+#[test]
+fn static_mode_is_the_reconfigurable_flag_by_another_name() {
+    let cfg = ServingConfig::default_8b().with_policy(Policy::DisaggPD {
+        prefill_gpus: 2,
+        decode_gpus: 2,
+    });
+    let w = fixed_workload(300, 12_000, 8, 12.0, 4);
+
+    let mut flagged =
+        ClusterEngine::disagg(cfg.clone(), 2, 2, 7, router_by_name("least-outstanding").unwrap());
+    flagged.reconfigurable = true;
+    flagged.set_planner_interval(10.0);
+    let rep_flag = flagged.run(w.clone());
+
+    let mut explicit =
+        ClusterEngine::disagg(cfg, 2, 2, 7, router_by_name("least-outstanding").unwrap());
+    explicit.set_planner(PlannerMode::Static);
+    explicit.set_planner_interval(10.0);
+    let rep_mode = explicit.run(w);
+
+    assert_eq!(rep_flag.completed, 300);
+    assert_eq!(rep_mode.completed, rep_flag.completed);
+    assert_eq!(rep_mode.iterations, rep_flag.iterations);
+    assert_eq!(rep_mode.duration.to_bits(), rep_flag.duration.to_bits());
+    assert_eq!(rep_mode.reconfigs, rep_flag.reconfigs);
+    assert!(
+        rep_mode.reconfigs > 0,
+        "the static planner never fired under the 12k-token flood"
+    );
+}
+
+#[test]
+fn hysteresis_bounds_flips_under_oscillating_load() {
+    let mut cfg = ServingConfig::default_8b().with_policy(Policy::VllmChunked);
+    cfg.tbt_slo = 0.04;
+    let p = BurstProfile::default();
+    let w = burst_mix_workload(&p, 21);
+    let total = w.requests.len() as u64;
+
+    let mut cluster =
+        ClusterEngine::replicated(cfg, 4, 3, router_by_name("conditional").unwrap());
+    cluster.reconfig_s = 1.0;
+    cluster.set_planner(PlannerMode::Elastic);
+    cluster.set_planner_interval(2.0);
+    let rep = cluster.run(w);
+
+    assert_eq!(rep.completed, total);
+    cluster.check_invariants().expect("invariants after run");
+    // The burst windows oscillate every 120 s; a thrashing planner at a
+    // 2 s cadence could re-role on every tick. The dwell gate allows at
+    // most one committed decision per 45 s window (plus the initial
+    // flip), and a decision re-roles at most all four workers.
+    let decisions = 2 + (rep.duration / 45.0) as u64;
+    assert!(
+        rep.reconfigs <= 4 * decisions,
+        "{} worker flips over {:.0}s smells like thrash (allowed {})",
+        rep.reconfigs,
+        rep.duration,
+        4 * decisions
+    );
+}
+
+#[test]
+fn mid_run_cancels_survive_flips_and_transfers() {
+    let mut cfg = ServingConfig::default_8b().with_policy(Policy::VllmChunked);
+    cfg.tbt_slo = 0.04;
+    let w = fixed_workload(60, 12_000, 8, 12.0, 4);
+
+    let mut cluster =
+        ClusterEngine::replicated(cfg, 4, 11, router_by_name("conditional").unwrap());
+    cluster.reconfig_s = 1.0;
+    cluster.set_planner(PlannerMode::Elastic);
+    cluster.set_planner_interval(5.0);
+
+    for r in w.requests {
+        cluster.inject(r);
+    }
+    // Step partway in so some requests are queued, some running, and —
+    // on a split fleet — some mid-KV-transfer.
+    let mut events = 0u64;
+    for _ in 0..400 {
+        match cluster.step_next(None) {
+            TopologyStep::Exhausted => break,
+            TopologyStep::Diverged(e) => panic!("cluster diverged early: {e}"),
+            _ => events += 1,
+        }
+    }
+    assert!(events > 0, "no events before the cancel wave");
+    // Cancel every 7th request at whatever stage it reached.
+    let mut removed = 0u64;
+    for id in (0..60).step_by(7) {
+        if cluster.cancel(id) {
+            removed += 1;
+        }
+    }
+    assert!(removed > 0, "the cancel wave removed nothing");
+    cluster
+        .check_invariants()
+        .expect("invariants right after the cancel wave");
+    loop {
+        match cluster.step_next(None) {
+            TopologyStep::Exhausted => break,
+            TopologyStep::Diverged(e) => panic!("cluster diverged after cancels: {e}"),
+            _ => {
+                events += 1;
+                assert!(events < MAX_EVENTS, "event cap hit — livelock?");
+            }
+        }
+    }
+    let rep = cluster.drain();
+    cluster.check_invariants().expect("invariants after drain");
+    assert_eq!(
+        rep.completed,
+        60 - removed,
+        "cancelled requests must be exactly the ones missing from the drain"
+    );
+    assert!(
+        cluster.reconfigs > 0,
+        "the 12k-token flood never triggered a re-role — the test lost its point"
+    );
+}
